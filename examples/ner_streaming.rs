@@ -1,0 +1,105 @@
+//! END-TO-END driver (the §6 NER streaming application, Fig 8 right):
+//! exercises all three layers on a real small workload —
+//!
+//!   L1/L2  the Pallas NER scorer, AOT-compiled to artifacts/, executed
+//!          through PJRT for every document batch (real compute, no stubs);
+//!   L3     the micro-batch engine partitioned by host with Dynamic
+//!          Repartitioning, windowed entity aggregation as reducer state.
+//!
+//! Requires `make artifacts`. Reports per-batch latency, throughput, the
+//! DR speedup, and sample "frequent mentions" output. Recorded in
+//! EXPERIMENTS.md §End-to-end.
+//!
+//!     cargo run --release --example ner_streaming
+
+use dynrepart::ddps::{EngineConfig, MicroBatchEngine};
+use dynrepart::dr::{DrConfig, PartitionerChoice};
+use dynrepart::figures::fig8;
+use dynrepart::ner::EntityWindows;
+use dynrepart::runtime::{Artifacts, NerExecutable, Runtime};
+use dynrepart::workload::ner::{Doc, NerGen};
+use dynrepart::workload::webcrawl::Crawl;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    // ---- L1/L2: load the AOT artifacts --------------------------------
+    let arts = Artifacts::open_default()
+        .map_err(|e| anyhow::anyhow!("{e}\nrun `make artifacts` first"))?;
+    let rt = Runtime::cpu()?;
+    let exe = NerExecutable::load(&rt, &arts, 128)?;
+    println!("PJRT platform: {}; loaded ner_b128 artifact", rt.platform());
+
+    // calibrate the engine's virtual-time cost from real kernel timings
+    let per_doc = exe.calibrate_per_doc_cost(3)?;
+    println!("calibrated scorer cost: {:.2} ms/doc\n", per_doc * 1e3);
+
+    // ---- workload: crawl-round-7 host mix, heavy-tailed ----------------
+    let n_docs = 4096;
+    let mut crawl = Crawl::with_defaults(99);
+    let lists = crawl.run();
+    let mut freqs: Vec<(u64, f64)> = Crawl::host_freqs(&lists[6]).into_iter().collect();
+    freqs.sort_unstable_by_key(|e| e.0);
+    let mut gen = NerGen::new(&freqs, 99);
+    let docs: Vec<Doc> = gen.docs(n_docs);
+
+    // ---- L3: stream through the engine, scoring every batch on PJRT ---
+    let cfg = EngineConfig {
+        n_partitions: fig8::NER_EXECUTORS * fig8::NER_CORES,
+        n_slots: fig8::NER_EXECUTORS * fig8::NER_CORES,
+        reduce_cost: per_doc / dynrepart::workload::ner::MAX_LEN as f64,
+        task_overhead: 5e-3,
+        ..Default::default()
+    };
+    let mut windows = EntityWindows::new(3600);
+    let mut engine = MicroBatchEngine::new(cfg, DrConfig::default(), PartitionerChoice::Kip, 99);
+
+    let wall = Instant::now();
+    let mut scored = 0usize;
+    for (batch_no, chunk) in docs.chunks(512).enumerate() {
+        let records: Vec<_> = chunk.iter().map(|d| d.to_record()).collect();
+        let report = engine.run_batch(&records);
+
+        // real compute: score the batch through the AOT executable
+        let t = Instant::now();
+        for sub in chunk.chunks(128) {
+            let refs: Vec<&Doc> = sub.iter().collect();
+            let out = exe.execute_docs(&refs)?;
+            scored += sub.len();
+            for (doc, _pred) in sub.iter().zip(&out.pred) {
+                // fold per-host entity stats into the windowed reducer state
+                let mut h = [0.0f32; dynrepart::ner::N_CLASSES];
+                // batch-level hist attributed per doc weight share
+                for (i, v) in out.class_hist.iter().enumerate() {
+                    h[i] = v * (doc.weight() as f32
+                        / sub.iter().map(|d| d.weight() as f32).sum::<f32>());
+                }
+                windows.fold_batch(doc.host, doc.ts, &h);
+            }
+        }
+        println!(
+            "batch {batch_no}: {} docs, pjrt {:.0} ms, vtime {:.3}s, imbalance {:.2} {}",
+            chunk.len(),
+            t.elapsed().as_secs_f64() * 1e3,
+            report.makespan,
+            report.imbalance,
+            if report.repartitioned { "(repartitioned)" } else { "" },
+        );
+    }
+    let elapsed = wall.elapsed().as_secs_f64();
+    println!(
+        "\nscored {scored} docs in {elapsed:.2}s wall ({:.0} docs/s through PJRT)",
+        scored as f64 / elapsed
+    );
+    println!("hosts with state: {}", windows.n_hosts());
+    let top_host = freqs.iter().max_by(|a, b| a.1.total_cmp(&b.1)).unwrap().0;
+    println!(
+        "frequent mentions on the heaviest host: {:?}",
+        windows.frequent_mentions(top_host, 1, 3)
+    );
+
+    // ---- headline: DR vs hash on this workload -------------------------
+    let (t_dr, t_hash, speedup) =
+        fig8::ner_batch_speedup(1.0, (per_doc / 128.0).max(1e-5));
+    println!("\nNER job virtual time: DR {t_dr:.2}s vs hash {t_hash:.2}s => speedup {speedup:.2}x");
+    Ok(())
+}

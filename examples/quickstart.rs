@@ -1,0 +1,44 @@
+//! Quickstart: run a skewed micro-batch stream with and without Dynamic
+//! Repartitioning and print the speedup — the paper's headline effect in
+//! ~30 lines.
+//!
+//!     cargo run --release --example quickstart
+
+use dynrepart::ddps::{EngineConfig, MicroBatchEngine};
+use dynrepart::dr::{DrConfig, PartitionerChoice};
+use dynrepart::workload::{zipf::Zipf, Generator};
+
+fn main() {
+    let cfg = EngineConfig {
+        n_partitions: 35,
+        n_slots: 40,
+        ..Default::default()
+    };
+
+    let run = |with_dr: bool| {
+        let (dr, choice) = if with_dr {
+            (DrConfig::default(), PartitionerChoice::Kip)
+        } else {
+            (DrConfig::disabled(), PartitionerChoice::Uhp)
+        };
+        let mut engine = MicroBatchEngine::new(cfg, dr, choice, 42);
+        let mut zipf = Zipf::new(100_000, 1.0, 42);
+        for batch_no in 0..10 {
+            let report = engine.run_batch(&zipf.batch(100_000));
+            println!(
+                "  [{}] batch {batch_no}: {:.3}s  imbalance {:.2}  {}",
+                if with_dr { "DR  " } else { "hash" },
+                report.makespan,
+                report.imbalance,
+                if report.repartitioned { "(repartitioned)" } else { "" },
+            );
+        }
+        engine.metrics().total_vtime
+    };
+
+    println!("== plain hash partitioning ==");
+    let t_hash = run(false);
+    println!("== with Dynamic Repartitioning (KIP) ==");
+    let t_dr = run(true);
+    println!("\ntotal: hash {t_hash:.3}s  DR {t_dr:.3}s  speedup {:.2}x", t_hash / t_dr);
+}

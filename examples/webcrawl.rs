@@ -1,0 +1,33 @@
+//! The §6 web-crawl use case: 7 crawl rounds, fetch lists partitioned by
+//! host, DR rebalancing per round (Fig 7 + Fig 8 left).
+//!
+//!     cargo run --release --example webcrawl
+
+use dynrepart::figures::{fig7, fig8};
+
+fn main() {
+    let scale = std::env::var("CRAWL_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+
+    println!("crawling 7 rounds at scale {scale} (64 seed news sites, depth 1)...\n");
+    let rounds = fig7::run_crawl(scale, fig7::EXECUTORS * fig7::CORES, 99);
+    println!("{:>5} {:>10} {:>12} {:>12} {:>9}", "round", "pages", "DR [s]", "hash [s]", "speedup");
+    for (i, (with, without)) in rounds.iter().enumerate() {
+        println!(
+            "{:>5} {:>10} {:>12.2} {:>12.2} {:>8.2}x",
+            i + 1,
+            with.record_counts.iter().sum::<u64>(),
+            with.makespan,
+            without.makespan,
+            without.makespan / with.makespan,
+        );
+    }
+    let (with, without) = &rounds[6];
+    println!(
+        "\nround 7: record imbalance {:.2} (DR) vs {:.2} (hash); replayed {} records for the repartitioning",
+        with.imbalance, without.imbalance, with.replayed_records,
+    );
+    let _ = fig8::left(scale); // exercises the Fig 8 (left) path too
+}

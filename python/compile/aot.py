@@ -1,0 +1,96 @@
+"""AOT lowering: jax → HLO *text* → artifacts/ for the rust PJRT runtime.
+
+HLO text (not `.serialize()`d protos) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` 0.1.6 crate binds) rejects; the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example/ and
+DESIGN.md.
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+Writes one `<name>.hlo.txt` per model variant plus `manifest.tsv`
+(name, input shapes/dtypes, output arity) that the rust runtime loads.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import export_params, model_variants
+
+
+def to_hlo_text(fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_str(s) -> str:
+    return f"{s.dtype}[{','.join(str(d) for d in s.shape)}]"
+
+
+def export_check_fixture(out_dir: str) -> None:
+    """Cross-language numeric fixture: a deterministic ner_b32 input batch
+    and its eager-model outputs. rust/tests/runtime_roundtrip.rs loads the
+    AOT artifact, runs the same batch through PJRT, and asserts allclose —
+    the end-to-end L1/L2/L3 numerics contract."""
+    import numpy as np
+
+    from .kernels import ner_scorer as k
+    from .model import ner_window_model
+
+    rng = np.random.default_rng(1234)
+    tokens = rng.integers(0, k.VOCAB, size=(32, k.MAX_LEN), dtype=np.int32)
+    lens = rng.integers(1, k.MAX_LEN + 1, size=(32,), dtype=np.int32)
+    for i, l in enumerate(lens):
+        tokens[i, l:] = 0
+    emb, w, b = k.make_params(seed=0)
+    logits, pred, hist = ner_window_model(tokens, lens, emb, w, b)
+
+    np.asarray(tokens, dtype="<i4").tofile(os.path.join(out_dir, "check_tokens.bin"))
+    np.asarray(lens, dtype="<i4").tofile(os.path.join(out_dir, "check_lens.bin"))
+    np.asarray(logits, dtype="<f4").tofile(os.path.join(out_dir, "check_logits.bin"))
+    np.asarray(pred, dtype="<i4").tofile(os.path.join(out_dir, "check_pred.bin"))
+    np.asarray(hist, dtype="<f4").tofile(os.path.join(out_dir, "check_hist.bin"))
+    print(f"wrote {out_dir}/check_*.bin (ner_b32 numerics fixture)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_rows = []
+    for name, fn, example_args in model_variants():
+        text = to_hlo_text(fn, example_args)
+        if "constant({...})" in text:
+            raise RuntimeError(
+                f"{name}: HLO text contains elided large constants; "
+                "large arrays must be runtime parameters (see model.py)"
+            )
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        n_outputs = len(jax.eval_shape(fn, *example_args))
+        inputs = ";".join(spec_str(s) for s in example_args)
+        manifest_rows.append(f"{name}\t{inputs}\t{n_outputs}")
+        print(f"wrote {path} ({len(text)} chars, {n_outputs} outputs)")
+
+    for name, path in export_params(args.out_dir).items():
+        print(f"wrote {path}")
+
+    export_check_fixture(args.out_dir)
+
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        f.write("# name\tinputs\tn_outputs\n")
+        f.write("\n".join(manifest_rows) + "\n")
+    print(f"wrote {args.out_dir}/manifest.tsv ({len(manifest_rows)} variants)")
+
+
+if __name__ == "__main__":
+    main()

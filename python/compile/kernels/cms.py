@@ -1,0 +1,92 @@
+"""L1 Pallas kernel: batched count-min-sketch update.
+
+DR's heavy-hitter counting runs on the DRWs (rust side, §4); this kernel is
+the *offload* variant: when the map-side UDF already runs on the
+accelerator, folding the sampling sketch into the same AOT program makes
+the DR tap free on the host. It also doubles as the paper's "sketch
+baseline" compute for the micro-benchmarks.
+
+TPU adaptation: a scatter-add over hash buckets is hostile to the MXU, so
+each sketch row is built as a one-hot matmul —
+
+    sketch[r, :] += onehot(h_r(keys)) ^T @ weights
+
+which is a `[W, n] @ [n]` product the systolic array handles natively.
+The grid runs one program instance per sketch row; `interpret=True` for
+CPU PJRT (see ner_scorer.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+N_ROWS = 4
+WIDTH = 1024
+
+# Odd 32-bit multipliers for the per-row universal hash family (32-bit
+# arithmetic: jax runs without the x64 flag in this build).
+_ROW_SALTS = jnp.array(
+    [0x9E3779B9, 0xC2B2AE3D, 0x165667B1, 0x27D4EB2F],
+    dtype=jnp.uint32,
+)
+
+
+def _hash_row(keys, salt):
+    """fmix32-style per-row hash of uint32 keys → bucket index [0, WIDTH)."""
+    h = keys * salt
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> jnp.uint32(13))
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> jnp.uint32(16))
+    return (h % jnp.uint32(WIDTH)).astype(jnp.int32)
+
+
+def _cms_kernel(keys_ref, w_ref, salt_ref, out_ref):
+    """One grid step: build one sketch row for the whole key batch."""
+    keys = keys_ref[...].astype(jnp.uint32)  # [n]
+    w = w_ref[...]  # [n] f32
+
+    idx = _hash_row(keys, salt_ref[0])  # [n]
+
+    # one-hot matmul instead of scatter-add (MXU-friendly)
+    onehot = (idx[:, None] == jnp.arange(WIDTH)[None, :]).astype(jnp.float32)
+    out_ref[...] = (w @ onehot)[None, :]  # block is [1, W]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def cms_update(keys, weights):
+    """Compute the CMS increment of a key batch.
+
+    Args:
+      keys:    [n] uint32 (hashed key ids; 32-bit to keep the artifact's
+               input layout simple for the rust caller).
+      weights: [n] f32 per-key weights (1.0 for counting).
+    Returns:
+      [N_ROWS, WIDTH] f32 sketch increments.
+    """
+    n = keys.shape[0]
+    return pl.pallas_call(
+        _cms_kernel,
+        grid=(N_ROWS,),
+        in_specs=[
+            pl.BlockSpec((n,), lambda r: (0,)),
+            pl.BlockSpec((n,), lambda r: (0,)),
+            pl.BlockSpec((1,), lambda r: (r,)),  # this row's hash salt
+        ],
+        out_specs=pl.BlockSpec((1, WIDTH), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((N_ROWS, WIDTH), jnp.float32),
+        interpret=True,
+    )(keys, weights, _ROW_SALTS)
+
+
+def cms_query(sketch, keys):
+    """Min-over-rows point query (host-side helper for tests)."""
+    keys = keys.astype(jnp.uint32)
+    ests = []
+    for r in range(N_ROWS):
+        idx = _hash_row(keys, _ROW_SALTS[r])
+        ests.append(sketch[r, idx])
+    return jnp.stack(ests).min(axis=0)

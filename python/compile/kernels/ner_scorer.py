@@ -1,0 +1,111 @@
+"""L1 Pallas kernel: the NER entity scorer — the paper's §6 reducer UDF.
+
+The §6 use case runs a named-entity-recognition model over the documents of
+each host keygroup; NER cost is ~linear in text length, which is exactly
+what makes skewed host partitions into stragglers. This kernel is that
+per-document compute: embed tokens, masked mean-pool, linear classify.
+
+    logits[b, c] = (mean_{l < len_b} emb[tok[b, l]]) @ w[:, c] + bias[c]
+
+TPU-idiomatic layout (see DESIGN.md §Hardware adaptation):
+- the grid tiles the *batch* dimension; each program instance handles a
+  `TILE_B × L` block of tokens with the embedding table resident — the
+  BlockSpec expresses the HBM→VMEM schedule;
+- pooling + classification is a `[TILE_B, D] @ [D, C]` matmul (MXU), not a
+  per-token loop;
+- `interpret=True` is REQUIRED on CPU PJRT: real-TPU lowering emits a
+  Mosaic custom-call that the CPU plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Model dimensions — must match rust/src/workload/ner.rs and runtime/.
+VOCAB = 8192
+MAX_LEN = 128
+EMBED_DIM = 64
+N_CLASSES = 9  # O + {PER, ORG, LOC, MISC} × {B, I}
+
+DEFAULT_TILE_B = 32
+
+
+def _scorer_kernel(tok_ref, len_ref, emb_ref, w_ref, b_ref, out_ref):
+    """One grid step: score a [TILE_B, L] tile of token ids."""
+    tok = tok_ref[...]  # [TB, L] int32
+    lens = len_ref[...]  # [TB] int32
+    emb = emb_ref[...]  # [V, D]
+
+    # Gather token embeddings: [TB, L, D]. (On CPU-interpret this is a
+    # plain take; on TPU Mosaic it lowers to dynamic-slice streams.)
+    vecs = jnp.take(emb, tok, axis=0)
+
+    # Masked mean-pool over the true length.
+    mask = (jnp.arange(tok.shape[1])[None, :] < lens[:, None]).astype(vecs.dtype)
+    summed = jnp.einsum("bld,bl->bd", vecs, mask)
+    denom = jnp.maximum(lens.astype(vecs.dtype), 1.0)[:, None]
+    pooled = summed / denom  # [TB, D]
+
+    # MXU matmul + bias.
+    out_ref[...] = pooled @ w_ref[...] + b_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b",))
+def ner_scorer(tokens, lens, emb, w, b, *, tile_b: int = DEFAULT_TILE_B):
+    """Score a padded batch of documents.
+
+    Args:
+      tokens: [B, MAX_LEN] int32 token ids (0-padded).
+      lens:   [B] int32 true lengths.
+      emb:    [VOCAB, EMBED_DIM] f32 embedding table.
+      w:      [EMBED_DIM, N_CLASSES] f32 classifier.
+      b:      [N_CLASSES] f32 bias.
+    Returns:
+      [B, N_CLASSES] f32 logits.
+    """
+    bsz, seq = tokens.shape
+    if bsz % tile_b != 0:
+        raise ValueError(f"batch {bsz} not divisible by tile {tile_b}")
+    grid = (bsz // tile_b,)
+    return pl.pallas_call(
+        _scorer_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, seq), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b,), lambda i: (i,)),
+            # embedding table + weights resident across grid steps
+            pl.BlockSpec(emb.shape, lambda i: (0, 0)),
+            pl.BlockSpec(w.shape, lambda i: (0, 0)),
+            pl.BlockSpec(b.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, w.shape[1]), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, w.shape[1]), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(tokens, lens, emb, w, b)
+
+
+def make_params(seed: int = 0, vocab: int = VOCAB, dim: int = EMBED_DIM,
+                classes: int = N_CLASSES):
+    """Deterministic model parameters shared by AOT lowering and tests."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    emb = jax.random.normal(k1, (vocab, dim), jnp.float32) * 0.1
+    w = jax.random.normal(k2, (dim, classes), jnp.float32) * 0.3
+    b = jax.random.normal(k3, (classes,), jnp.float32) * 0.01
+    return emb, w, b
+
+
+def vmem_estimate_bytes(tile_b: int = DEFAULT_TILE_B, seq: int = MAX_LEN,
+                        vocab: int = VOCAB, dim: int = EMBED_DIM,
+                        classes: int = N_CLASSES) -> int:
+    """Static VMEM footprint of one grid step (perf model for DESIGN.md
+    §Perf — interpret mode gives no real TPU timings)."""
+    f32 = 4
+    tok = tile_b * seq * 4
+    emb = vocab * dim * f32
+    gathered = tile_b * seq * dim * f32
+    pooled = tile_b * dim * f32
+    wgt = dim * classes * f32 + classes * f32
+    out = tile_b * classes * f32
+    return tok + emb + gathered + pooled + wgt + out

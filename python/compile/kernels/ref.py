@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+contract. pytest compares every kernel against these under hypothesis
+shape/dtype sweeps (python/tests/test_kernel.py)."""
+
+import jax.numpy as jnp
+
+from . import cms
+
+
+def ner_scorer_ref(tokens, lens, emb, w, b):
+    """Reference for kernels.ner_scorer.ner_scorer (no Pallas)."""
+    vecs = jnp.take(emb, tokens, axis=0)  # [B, L, D]
+    mask = (jnp.arange(tokens.shape[1])[None, :] < lens[:, None]).astype(vecs.dtype)
+    summed = jnp.einsum("bld,bl->bd", vecs, mask)
+    denom = jnp.maximum(lens.astype(vecs.dtype), 1.0)[:, None]
+    pooled = summed / denom
+    return pooled @ w + b[None, :]
+
+
+def cms_update_ref(keys, weights):
+    """Reference for kernels.cms.cms_update: explicit scatter-add."""
+    keys = keys.astype(jnp.uint32)
+    rows = []
+    for r in range(cms.N_ROWS):
+        idx = cms._hash_row(keys, cms._ROW_SALTS[r])
+        row = jnp.zeros((cms.WIDTH,), jnp.float32).at[idx].add(weights)
+        rows.append(row)
+    return jnp.stack(rows)

@@ -1,0 +1,89 @@
+"""L2: the jax compute graph the rust coordinator executes per reducer
+micro-batch — the §6 NER streaming application's UDF.
+
+`ner_window_model` is what gets AOT-lowered: score a padded batch of
+documents with the L1 Pallas kernel, reduce to per-document entity
+predictions plus a per-class histogram of the window. The entity histogram
+is what the §6 application aggregates per host over 60-minute windows
+("calculate frequent mentions of the recognized entities").
+
+Model parameters are runtime *parameters* of the artifact, with their
+values exported once to `artifacts/ner_{emb,w,b}.bin` (f32 row-major).
+They cannot be baked in as constants: the stablehlo→HLO-text conversion
+elides large dense literals as `constant({...})`, which would silently
+corrupt the program. The rust runtime loads the .bin files at startup and
+passes them as the trailing execute() arguments — python stays off the
+request path entirely.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import cms as cms_kernel
+from .kernels import ner_scorer as k
+
+
+def ner_window_model(tokens, lens, emb, w, b):
+    """Score a document batch and summarize the window.
+
+    Returns a 3-tuple (lowered with return_tuple=True):
+      logits:      [B, C] f32 raw scores,
+      pred:        [B] i32 argmax class per document,
+      class_hist:  [C] f32 entity-class histogram over the *valid* docs
+                   (len > 0), weighted by document length — the "frequent
+                   mentions" statistic of §6.
+    """
+    logits = k.ner_scorer(tokens, lens, emb, w, b)
+    pred = jnp.argmax(logits, axis=1).astype(jnp.int32)
+    valid = (lens > 0).astype(jnp.float32)
+    weight = valid * lens.astype(jnp.float32)
+    onehot = jax.nn.one_hot(pred, logits.shape[1], dtype=jnp.float32)
+    class_hist = (onehot * weight[:, None]).sum(axis=0)
+    return logits, pred, class_hist
+
+
+def cms_tap_model(keys, weights):
+    """The accelerator-side DR tap (see kernels/cms.py): one CMS increment
+    per micro-batch. Returns a 1-tuple for uniform artifact handling."""
+    return (cms_kernel.cms_update(keys, weights),)
+
+
+def model_variants():
+    """The artifact set: (name, fn, example_args) per compiled variant.
+
+    One executable per batch size, mirroring how serving systems compile a
+    small ladder of static shapes and bucket requests into them. NER
+    variants take (tokens, lens, emb, w, b); the parameter values live in
+    `artifacts/ner_*.bin` (see `export_params`).
+    """
+    variants = []
+    emb_s = jax.ShapeDtypeStruct((k.VOCAB, k.EMBED_DIM), jnp.float32)
+    w_s = jax.ShapeDtypeStruct((k.EMBED_DIM, k.N_CLASSES), jnp.float32)
+    b_s = jax.ShapeDtypeStruct((k.N_CLASSES,), jnp.float32)
+    for bsz in (32, 128, 512):
+        tokens = jax.ShapeDtypeStruct((bsz, k.MAX_LEN), jnp.int32)
+        lens = jax.ShapeDtypeStruct((bsz,), jnp.int32)
+        variants.append(
+            (f"ner_b{bsz}", ner_window_model, (tokens, lens, emb_s, w_s, b_s))
+        )
+
+    for n in (4096,):
+        keys = jax.ShapeDtypeStruct((n,), jnp.uint32)
+        weights = jax.ShapeDtypeStruct((n,), jnp.float32)
+        variants.append((f"cms_n{n}", cms_tap_model, (keys, weights)))
+    return variants
+
+
+def export_params(out_dir: str, seed: int = 0):
+    """Write the NER parameter values as raw little-endian f32 files."""
+    import os
+
+    import numpy as np
+
+    emb, w, b = k.make_params(seed=seed)
+    paths = {}
+    for name, arr in (("ner_emb", emb), ("ner_w", w), ("ner_b", b)):
+        path = os.path.join(out_dir, f"{name}.bin")
+        np.asarray(arr, dtype="<f4").tofile(path)
+        paths[name] = path
+    return paths

@@ -1,0 +1,131 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes and value ranges; assert_allclose against the
+reference implementation is the core build-time correctness signal for
+everything the rust runtime will execute.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import cms, ref
+from compile.kernels import ner_scorer as k
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+def make_batch(rng, bsz, seq=k.MAX_LEN, vocab=k.VOCAB):
+    tokens = rng.integers(0, vocab, size=(bsz, seq), dtype=np.int32)
+    lens = rng.integers(1, seq + 1, size=(bsz,), dtype=np.int32)
+    # zero out padding like the rust batcher does
+    for i, l in enumerate(lens):
+        tokens[i, l:] = 0
+    return jnp.asarray(tokens), jnp.asarray(lens)
+
+
+class TestNerScorer:
+    @given(bsz_tiles=st.integers(1, 4), seed=st.integers(0, 2**16))
+    def test_matches_reference(self, bsz_tiles, seed):
+        rng = np.random.default_rng(seed)
+        bsz = bsz_tiles * k.DEFAULT_TILE_B
+        tokens, lens = make_batch(rng, bsz)
+        emb, w, b = k.make_params(seed=0)
+        got = k.ner_scorer(tokens, lens, emb, w, b)
+        want = ref.ner_scorer_ref(tokens, lens, emb, w, b)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @given(tile=st.sampled_from([8, 16, 32, 64]), seed=st.integers(0, 100))
+    def test_tile_size_invariance(self, tile, seed):
+        rng = np.random.default_rng(seed)
+        bsz = 64
+        tokens, lens = make_batch(rng, bsz)
+        emb, w, b = k.make_params(seed=1)
+        got = k.ner_scorer(tokens, lens, emb, w, b, tile_b=tile)
+        want = ref.ner_scorer_ref(tokens, lens, emb, w, b)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_padding_is_ignored(self):
+        rng = np.random.default_rng(7)
+        tokens, lens = make_batch(rng, 32)
+        emb, w, b = k.make_params(seed=0)
+        base = k.ner_scorer(tokens, lens, emb, w, b)
+        # scribble on the padded region — logits must not change
+        scribbled = np.array(tokens)
+        for i, l in enumerate(np.array(lens)):
+            scribbled[i, l:] = 1234
+        got = k.ner_scorer(jnp.asarray(scribbled), lens, emb, w, b)
+        np.testing.assert_allclose(got, base, rtol=1e-5, atol=1e-5)
+
+    def test_zero_length_rows_are_safe(self):
+        emb, w, b = k.make_params(seed=0)
+        tokens = jnp.zeros((32, k.MAX_LEN), jnp.int32)
+        lens = jnp.zeros((32,), jnp.int32)
+        out = k.ner_scorer(tokens, lens, emb, w, b)
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+    def test_batch_not_divisible_raises(self):
+        emb, w, b = k.make_params(seed=0)
+        tokens = jnp.zeros((33, k.MAX_LEN), jnp.int32)
+        lens = jnp.ones((33,), jnp.int32)
+        with pytest.raises(ValueError):
+            k.ner_scorer(tokens, lens, emb, w, b)
+
+    def test_length_sensitivity(self):
+        # same tokens, different lengths → different pooling → different logits
+        rng = np.random.default_rng(11)
+        tokens = jnp.asarray(rng.integers(1, k.VOCAB, (32, k.MAX_LEN), dtype=np.int32))
+        emb, w, b = k.make_params(seed=0)
+        short = k.ner_scorer(tokens, jnp.full((32,), 4, jnp.int32), emb, w, b)
+        long = k.ner_scorer(tokens, jnp.full((32,), k.MAX_LEN, jnp.int32), emb, w, b)
+        assert not np.allclose(short, long)
+
+    def test_vmem_estimate_within_tpu_budget(self):
+        # one grid step must fit a 16 MiB VMEM comfortably (≤ 8 MiB here)
+        assert k.vmem_estimate_bytes() <= 8 * 1024 * 1024
+
+
+class TestCms:
+    @given(n_pow=st.integers(6, 12), seed=st.integers(0, 2**16))
+    def test_matches_reference(self, n_pow, seed):
+        rng = np.random.default_rng(seed)
+        n = 2**n_pow
+        keys = jnp.asarray(rng.integers(0, 2**32, size=(n,), dtype=np.uint32))
+        weights = jnp.asarray(rng.random(n, dtype=np.float32))
+        got = cms.cms_update(keys, weights)
+        want = ref.cms_update_ref(keys, weights)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_row_sums_equal_total_weight(self):
+        rng = np.random.default_rng(3)
+        keys = jnp.asarray(rng.integers(0, 2**32, size=(512,), dtype=np.uint32))
+        weights = jnp.ones((512,), jnp.float32)
+        sketch = cms.cms_update(keys, weights)
+        np.testing.assert_allclose(np.array(sketch).sum(axis=1), 512.0, rtol=1e-5)
+
+    def test_query_never_underestimates(self):
+        rng = np.random.default_rng(4)
+        keys_np = rng.integers(0, 2**32, size=(2048,), dtype=np.uint32)
+        keys = jnp.asarray(keys_np)
+        weights = jnp.ones((2048,), jnp.float32)
+        sketch = cms.cms_update(keys, weights)
+        uniq, counts = np.unique(keys_np, return_counts=True)
+        est = np.array(cms.cms_query(jnp.asarray(sketch), jnp.asarray(uniq)))
+        assert (est + 1e-5 >= counts).all()
+
+    def test_heavy_key_estimated_accurately(self):
+        keys_np = np.concatenate(
+            [np.full(5000, 42, dtype=np.uint32),
+             np.random.default_rng(5).integers(0, 2**32, 3192, dtype=np.uint32)]
+        )
+        sketch = cms.cms_update(jnp.asarray(keys_np), jnp.ones((8192,), jnp.float32))
+        est = float(cms.cms_query(jnp.asarray(sketch), jnp.asarray([42], dtype=np.uint32))[0])
+        # CMS error bound: e·N/W ≈ 2.7·8192/1024 ≈ 22
+        assert 5000 <= est <= 5000 + 50

@@ -1,0 +1,10 @@
+//! Fig 2: load imbalance vs parallelism (component experiment).
+//! Paper setup: ZIPF exp 1.0, 100K keys, avg of 100 runs, λ=2 + λ sweep.
+use dynrepart::figures::fig2;
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let (repeats, scale) = if quick { (3, 0.25) } else { (20, 1.0) };
+    fig2::left(repeats, scale).emit("fig2_left");
+    fig2::right(repeats, scale).emit("fig2_right");
+}

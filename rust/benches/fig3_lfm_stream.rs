@@ -1,0 +1,13 @@
+//! Fig 3: imbalance + relative state migration over the drifting LFM
+//! stream (20 batches × 100K, 20 partitions, state window 5, forced
+//! updates, avg of 10 iterations).
+use dynrepart::figures::fig3;
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let (iters, scale) = if quick { (2, 0.2) } else { (10, 1.0) };
+    let (left, right) = fig3::tables(iters, scale);
+    left.emit("fig3_left");
+    right.emit("fig3_right");
+    fig3::summary(iters, scale).emit("fig3_summary");
+}

@@ -1,0 +1,11 @@
+//! Fig 4: Spark ± DR over the Zipf exponent — imbalance + total time for
+//! 10M records (35 partitions, 40 slots, 1M keys).
+use dynrepart::figures::fig4;
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let scale = if quick { 0.1 } else { 1.0 };
+    let (left, right) = fig4::tables(scale);
+    left.emit("fig4_left");
+    right.emit("fig4_right");
+}

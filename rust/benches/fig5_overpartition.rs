@@ -1,0 +1,11 @@
+//! Fig 5: over-partitioning study — time + imbalance vs #partitions,
+//! Spark ± DR, 40 slots.
+use dynrepart::figures::fig5;
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let scale = if quick { 0.1 } else { 1.0 };
+    let (left, right) = fig5::tables(scale);
+    left.emit("fig5_left");
+    right.emit("fig5_right");
+}

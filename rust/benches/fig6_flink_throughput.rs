@@ -1,0 +1,11 @@
+//! Fig 6: Flink ± DR — relative throughput increase (parallelism 14/28)
+//! and running time for 10M records (parallelism 28).
+use dynrepart::figures::fig6;
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let scale = if quick { 0.1 } else { 1.0 };
+    let (left, right) = fig6::tables(scale);
+    left.emit("fig6_left");
+    right.emit("fig6_right");
+}

@@ -1,0 +1,10 @@
+//! Fig 7: web-crawl round 7 — per-partition record balance and processing
+//! time, Spark ± DR (8 executors × 8 cores).
+use dynrepart::figures::fig7;
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let scale = if quick { 0.3 } else { 1.0 };
+    fig7::left(scale).emit("fig7_left");
+    fig7::right(scale).emit("fig7_right");
+}

@@ -1,0 +1,13 @@
+//! Fig 8: DR speedup per crawl round + NER streaming processing time.
+//! The NER reduce cost is calibrated from the real PJRT scorer when
+//! artifacts are present.
+use dynrepart::figures::fig8;
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let scale = if quick { 0.3 } else { 1.0 };
+    fig8::left(scale).emit("fig8_left");
+    let cost = fig8::calibrated_reduce_cost();
+    println!("calibrated NER reduce cost: {:.3e} s/token\n", cost);
+    fig8::right(scale, cost.max(1e-5)).emit("fig8_right");
+}

@@ -1,0 +1,64 @@
+//! §5 "the cost of KIP update is significantly less than that of the other
+//! partitioning methods" + partition() hot-path latency (the per-record
+//! cost that makes DR overhead "negligible").
+use dynrepart::bench::{bench, black_box, header};
+use dynrepart::partitioner::*;
+use dynrepart::sketch::Histogram;
+use dynrepart::workload::{zipf::Zipf, Generator};
+
+fn main() {
+    let n = 20;
+    let mut z = Zipf::new(100_000, 1.0, 1);
+    let recs = z.batch(400_000);
+    let hist = Histogram::exact(&recs, 4 * n);
+
+    header("partitioner update cost (20 partitions, B=80 heavy keys)");
+    let uhp = Uhp::new(n);
+    let base = WeightedHash::with_default_hosts(n, 2);
+    let kip0 = Kip::update(&uhp, &base, &hist, KipConfig::default());
+    println!("{}", bench("KIP update (Algorithm 1)", || {
+        black_box(kip0.updated(&hist));
+    }).report());
+    for strat in [GedikStrategy::Readj, GedikStrategy::Redist, GedikStrategy::Scan] {
+        let g = GedikPartitioner::initial(strat, n, GedikConfig::default(), 3).update(&hist);
+        println!("{}", bench(&format!("{} update", strat.name()), || {
+            black_box(g.update(&hist));
+        }).report());
+    }
+    let m = Mixed::initial(n, 4).update(&hist);
+    println!("{}", bench("Mixed update (incl. theta optimization loop)", || {
+        black_box(m.update(&hist));
+    }).report());
+
+    header("partition() hot path (per record)");
+    let keys: Vec<u64> = (0..10_000u64).collect();
+    let kip = kip0.updated(&hist);
+    let meas = bench("KIP partition() x10k keys", || {
+        let mut acc = 0usize;
+        for &k in &keys {
+            acc ^= kip.partition(black_box(k));
+        }
+        black_box(acc);
+    });
+    println!("{}", meas.report());
+    println!("  => {:.1} ns/record", meas.mean_ns / keys.len() as f64);
+    let meas = bench("UHP partition() x10k keys", || {
+        let mut acc = 0usize;
+        for &k in &keys {
+            acc ^= uhp.partition(black_box(k));
+        }
+        black_box(acc);
+    });
+    println!("{}", meas.report());
+    println!("  => {:.1} ns/record", meas.mean_ns / keys.len() as f64);
+
+    header("DRW sampling tap (per record)");
+    let mut w = dynrepart::dr::DrWorker::new(160, 1.0, 7);
+    let meas = bench("DrWorker observe x10k", || {
+        for &k in &keys {
+            w.observe(black_box(k), 1.0);
+        }
+    });
+    println!("{}", meas.report());
+    println!("  => {:.1} ns/record", meas.mean_ns / keys.len() as f64);
+}

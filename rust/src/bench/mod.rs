@@ -1,0 +1,169 @@
+//! Measurement harness (criterion substitute — crates.io is unreachable
+//! in this image; see DESIGN.md "Substitutions").
+//!
+//! Implements the same discipline criterion uses: warmup iterations, then
+//! N timed iterations, reporting mean ± σ and median; `black_box` guards
+//! against the optimizer deleting the measured work.
+
+use crate::util::{percentile, Online};
+use std::time::Instant;
+
+/// Prevent the compiler from optimizing away a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Measurement {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12} {:>12} {:>12}  ({} iters)",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.std_ns),
+            fmt_ns(self.median_ns),
+            self.iters
+        )
+    }
+
+    /// Per-element throughput given elements processed per iteration.
+    pub fn throughput(&self, elems_per_iter: f64) -> f64 {
+        elems_per_iter / (self.mean_ns * 1e-9)
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark `f`, auto-scaling iteration count to a time budget.
+pub fn bench(name: &str, mut f: impl FnMut()) -> Measurement {
+    bench_with(name, BenchOpts::default(), &mut f)
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct BenchOpts {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Soft time budget for the measurement phase, seconds.
+    pub budget_s: f64,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 10_000,
+            budget_s: 2.0,
+        }
+    }
+}
+
+pub fn bench_with(name: &str, opts: BenchOpts, f: &mut dyn FnMut()) -> Measurement {
+    // warmup + calibration
+    let mut cal = Online::new();
+    for _ in 0..opts.warmup_iters.max(1) {
+        let t = Instant::now();
+        f();
+        cal.push(t.elapsed().as_nanos() as f64);
+    }
+    let est = cal.mean().max(1.0);
+    let iters = ((opts.budget_s * 1e9 / est) as usize)
+        .clamp(opts.min_iters, opts.max_iters);
+
+    let mut samples = Vec::with_capacity(iters);
+    let mut online = Online::new();
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        let ns = t.elapsed().as_nanos() as f64;
+        samples.push(ns);
+        online.push(ns);
+    }
+    Measurement {
+        name: name.to_string(),
+        iters,
+        mean_ns: online.mean(),
+        std_ns: online.std(),
+        median_ns: percentile(&samples, 50.0),
+        min_ns: online.min(),
+    }
+}
+
+/// Print the standard header for a group of measurements.
+pub fn header(group: &str) {
+    println!("\n== {group} ==");
+    println!(
+        "{:<44} {:>12} {:>12} {:>12}",
+        "benchmark", "mean", "std", "median"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let m = bench_with(
+            "spin",
+            BenchOpts {
+                warmup_iters: 1,
+                min_iters: 5,
+                max_iters: 20,
+                budget_s: 0.01,
+            },
+            &mut || {
+                let mut s = 0u64;
+                for i in 0..1000 {
+                    s = s.wrapping_add(black_box(i));
+                }
+                black_box(s);
+            },
+        );
+        assert!(m.mean_ns > 0.0);
+        assert!(m.iters >= 5 && m.iters <= 20);
+        assert!(m.median_ns > 0.0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let m = Measurement {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1e9, // 1 second per iter
+            std_ns: 0.0,
+            median_ns: 1e9,
+            min_ns: 1e9,
+        };
+        assert!((m.throughput(1000.0) - 1000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

@@ -1,0 +1,284 @@
+//! Micro-batch engine — the Spark Streaming execution model (§3, §5).
+//!
+//! "Due to the micro-batch nature of Spark Streaming, it uses the new
+//! partitioner when it generates micro-batches from the streaming DAG.
+//! Spark performs state migration automatically in the shuffle phase."
+//!
+//! Per micro-batch:
+//! 1. the DRM decision point — harvest DRW histograms from *previous*
+//!    batches, possibly install a new partitioner, migrate state;
+//! 2. map phase over the executor slots (DRW tap runs here);
+//! 3. shuffle by the current partitioner;
+//! 4. key-grouped reduce tasks, wave-scheduled over the slots (this is
+//!    where skew turns into stragglers);
+//! 5. fold into per-partition keyed state.
+
+use super::{EngineConfig, EngineMetrics};
+use crate::dr::{DrConfig, DrMaster, DrWorker, PartitionerChoice};
+use crate::partitioner::migration_plan;
+use crate::state::StateStore;
+use crate::util::{load_imbalance, wave_makespan, VTime};
+use crate::workload::Record;
+
+#[derive(Debug, Clone)]
+pub struct BatchReport {
+    pub batch_no: u64,
+    /// Wall time of this micro-batch on the virtual cluster.
+    pub makespan: VTime,
+    pub map_time: VTime,
+    pub reduce_time: VTime,
+    pub migration_time: VTime,
+    /// Reduce-side weight per partition.
+    pub loads: Vec<f64>,
+    pub imbalance: f64,
+    /// Fraction of state weight migrated at the batch boundary.
+    pub migrated_fraction: f64,
+    pub repartitioned: bool,
+}
+
+pub struct MicroBatchEngine {
+    cfg: EngineConfig,
+    drm: DrMaster,
+    workers: Vec<DrWorker>,
+    partitioner: crate::dr::master::PartitionerHandle,
+    stores: Vec<StateStore>,
+    metrics: EngineMetrics,
+    batch_no: u64,
+}
+
+impl MicroBatchEngine {
+    pub fn new(cfg: EngineConfig, dr: DrConfig, choice: PartitionerChoice, seed: u64) -> Self {
+        cfg.validate();
+        let drm = DrMaster::new(dr, choice, cfg.n_partitions, seed);
+        let workers = (0..cfg.n_slots)
+            .map(|w| DrWorker::new(drm.worker_capacity(), dr.sample_rate, seed ^ (w as u64) << 8))
+            .collect();
+        let partitioner = drm.handle();
+        let stores = (0..cfg.n_partitions).map(|_| StateStore::new()).collect();
+        Self {
+            cfg,
+            drm,
+            workers,
+            partitioner,
+            stores,
+            metrics: EngineMetrics::default(),
+            batch_no: 0,
+        }
+    }
+
+    pub fn metrics(&self) -> &EngineMetrics {
+        &self.metrics
+    }
+
+    pub fn stores(&self) -> &[StateStore] {
+        &self.stores
+    }
+
+    pub fn drm(&self) -> &DrMaster {
+        &self.drm
+    }
+
+    pub fn partitioner(&self) -> &crate::dr::master::PartitionerHandle {
+        &self.partitioner
+    }
+
+    /// The DRM decision point at a micro-batch boundary. Returns the
+    /// migration pause time and migrated state fraction.
+    fn decision_point(&mut self) -> (VTime, f64, bool) {
+        let k = self.drm.histogram_size();
+        let hists: Vec<_> = self.workers.iter_mut().map(|w| w.harvest(k)).collect();
+        let old = self.partitioner.clone();
+        let decision = self.drm.decide(hists);
+        let Some(new) = decision.new_partitioner else {
+            return (0.0, 0.0, false);
+        };
+
+        // Spark migrates state "automatically in the shuffle phase": keys
+        // whose partition changed drag their state. We account the cost
+        // explicitly against the batch makespan.
+        let mut moved_weight = 0.0;
+        let mut total_weight = 0.0;
+        for p in 0..self.cfg.n_partitions {
+            total_weight += self.stores[p].total_weight();
+        }
+        let keys: Vec<Vec<crate::workload::Key>> = self
+            .stores
+            .iter()
+            .map(|s| s.keys().collect())
+            .collect();
+        for (p, part_keys) in keys.into_iter().enumerate() {
+            let plan = migration_plan(old.as_dyn(), new.as_dyn(), part_keys.into_iter());
+            for (key, from, to) in plan {
+                debug_assert_eq!(from, p);
+                if let Some(st) = self.stores[from].extract(key) {
+                    moved_weight += st.weight;
+                    self.stores[to].install(key, st);
+                }
+            }
+        }
+        self.partitioner = new;
+        let pause = moved_weight * self.cfg.migration_cost;
+        let frac = if total_weight > 0.0 {
+            moved_weight / total_weight
+        } else {
+            0.0
+        };
+        self.metrics.state_weight_migrated += moved_weight;
+        self.metrics.repartition_count += 1;
+        (pause, frac, true)
+    }
+
+    /// Run one micro-batch through map → shuffle → reduce → state.
+    pub fn run_batch(&mut self, records: &[Record]) -> BatchReport {
+        self.batch_no += 1;
+
+        // 1. decision point (uses histograms gathered in earlier batches)
+        let (migration_time, migrated_fraction, repartitioned) = self.decision_point();
+
+        // 2. map phase: records split evenly over slots; the DRW tap runs
+        //    on the map path.
+        let per_slot = records.len().div_ceil(self.cfg.n_slots);
+        for (i, r) in records.iter().enumerate() {
+            self.workers[i / per_slot.max(1)].observe(r.key, r.weight);
+        }
+        let map_time = per_slot as f64 * (self.cfg.map_cost + self.cfg.shuffle_cost);
+
+        // 3. shuffle: route by the current partitioner; gather loads.
+        let mut loads = vec![0.0f64; self.cfg.n_partitions];
+        for r in records {
+            let p = self.partitioner.partition(r.key);
+            loads[p] += r.weight;
+            // 5. fold state as the reducer would
+            self.stores[p].fold_count(r.key, r.weight);
+        }
+
+        // 4. reduce phase: one task per partition (spill model applies),
+        //    wave-scheduled.
+        let total_load: f64 = loads.iter().sum();
+        let task_costs: Vec<VTime> = loads
+            .iter()
+            .map(|l| self.cfg.reduce_task_time(*l, total_load))
+            .collect();
+        let reduce_time = wave_makespan(&task_costs, self.cfg.n_slots);
+
+        let makespan = migration_time + map_time + reduce_time;
+        self.metrics.records_processed += records.len() as u64;
+        self.metrics.total_vtime += makespan;
+        self.metrics.map_vtime += map_time;
+        self.metrics.reduce_vtime += reduce_time;
+        self.metrics.migration_vtime += migration_time;
+
+        BatchReport {
+            batch_no: self.batch_no,
+            makespan,
+            map_time,
+            reduce_time,
+            migration_time,
+            imbalance: load_imbalance(&loads),
+            loads,
+            migrated_fraction,
+            repartitioned,
+        }
+    }
+
+    /// Total state weight currently held (all partitions).
+    pub fn total_state_weight(&self) -> f64 {
+        self.stores.iter().map(|s| s.total_weight()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{zipf::Zipf, Generator};
+
+    fn cfg(n_partitions: usize, n_slots: usize) -> EngineConfig {
+        EngineConfig {
+            n_partitions,
+            n_slots,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn first_batch_never_repartitions() {
+        let mut e = MicroBatchEngine::new(cfg(8, 4), DrConfig::default(), PartitionerChoice::Kip, 1);
+        let mut z = Zipf::new(10_000, 1.2, 1);
+        let r = e.run_batch(&z.batch(50_000));
+        assert!(!r.repartitioned, "no histogram exists before batch 1");
+        assert_eq!(r.batch_no, 1);
+        assert!(r.makespan > 0.0);
+    }
+
+    #[test]
+    fn skewed_stream_repartitions_and_improves() {
+        let mut e = MicroBatchEngine::new(cfg(8, 8), DrConfig::default(), PartitionerChoice::Kip, 2);
+        let mut z = Zipf::new(50_000, 1.4, 2);
+        let r1 = e.run_batch(&z.batch(100_000));
+        let r2 = e.run_batch(&z.batch(100_000));
+        assert!(r2.repartitioned, "skew must trigger DR at batch 2");
+        assert!(r2.imbalance < r1.imbalance, "{} vs {}", r2.imbalance, r1.imbalance);
+        assert!(r2.migrated_fraction > 0.0, "stateful keys must migrate");
+        assert_eq!(e.metrics().repartition_count, 1);
+    }
+
+    #[test]
+    fn dr_off_is_stable_hash() {
+        let mut e = MicroBatchEngine::new(cfg(8, 4), DrConfig::disabled(), PartitionerChoice::Uhp, 3);
+        let mut z = Zipf::new(50_000, 1.4, 3);
+        let r1 = e.run_batch(&z.batch(50_000));
+        let r2 = e.run_batch(&z.batch(50_000));
+        assert!(!r1.repartitioned && !r2.repartitioned);
+        assert_eq!(e.metrics().repartition_count, 0);
+        assert!((r1.imbalance - r2.imbalance).abs() < 0.2, "hash is stationary");
+    }
+
+    #[test]
+    fn state_is_conserved_across_migration() {
+        let mut e = MicroBatchEngine::new(cfg(6, 6), DrConfig::forced(), PartitionerChoice::Kip, 4);
+        let mut z = Zipf::new(1_000, 1.3, 4);
+        let mut expected = 0.0;
+        for _ in 0..5 {
+            let batch = z.batch(10_000);
+            expected += batch.iter().map(|r| r.weight).sum::<f64>();
+            e.run_batch(&batch);
+        }
+        assert!(
+            (e.total_state_weight() - expected).abs() < 1e-6,
+            "state lost or duplicated: {} vs {expected}",
+            e.total_state_weight()
+        );
+    }
+
+    #[test]
+    fn loads_sum_to_batch_weight() {
+        let mut e = MicroBatchEngine::new(cfg(8, 4), DrConfig::default(), PartitionerChoice::Kip, 5);
+        let mut z = Zipf::new(10_000, 1.0, 5);
+        let batch = z.batch(20_000);
+        let w: f64 = batch.iter().map(|r| r.weight).sum();
+        let r = e.run_batch(&batch);
+        assert!((r.loads.iter().sum::<f64>() - w).abs() < 1e-6);
+    }
+
+    #[test]
+    fn migration_pause_accounted() {
+        let mut e = MicroBatchEngine::new(cfg(6, 6), DrConfig::forced(), PartitionerChoice::Kip, 6);
+        let mut z = Zipf::new(5_000, 1.5, 6);
+        e.run_batch(&z.batch(50_000));
+        let r2 = e.run_batch(&z.batch(50_000));
+        assert!(r2.repartitioned);
+        assert!(r2.migration_time > 0.0);
+        assert!(e.metrics().migration_vtime > 0.0);
+    }
+
+    #[test]
+    fn more_slots_shorter_batches() {
+        let mut slow = MicroBatchEngine::new(cfg(16, 2), DrConfig::disabled(), PartitionerChoice::Uhp, 7);
+        let mut fast = MicroBatchEngine::new(cfg(16, 16), DrConfig::disabled(), PartitionerChoice::Uhp, 7);
+        let mut z = Zipf::new(10_000, 1.0, 7);
+        let batch = z.batch(100_000);
+        let t_slow = slow.run_batch(&batch).makespan;
+        let t_fast = fast.run_batch(&batch).makespan;
+        assert!(t_fast < t_slow, "{t_fast} vs {t_slow}");
+    }
+}

@@ -1,0 +1,152 @@
+//! The mini-DDPS substrate: the distributed data processing engines DR
+//! plugs into (the paper integrates with Spark and Flink; we build the
+//! corresponding execution models from scratch — see DESIGN.md
+//! "Substitutions" for the virtual-time rationale).
+//!
+//! - [`batch`] — one-shot batch jobs with mapper-buffer interception and
+//!   **replay** (§3: "a batch job is repartitioned only in an early stage
+//!   of the execution so that the cost of replay does not exceed the
+//!   expected gains").
+//! - [`microbatch`] — Spark-Streaming-like micro-batches: the partitioner
+//!   swaps between batches, "Spark performs state migration automatically
+//!   in the shuffle phase".
+//! - [`streaming`] — Flink-like long-running tasks with checkpoint
+//!   barriers; repartitioning rides the Asynchronous Distributed Snapshot
+//!   and migrates state explicitly.
+
+pub mod batch;
+pub mod microbatch;
+pub mod streaming;
+
+pub use batch::{BatchJob, JobReport};
+pub use microbatch::{BatchReport, MicroBatchEngine};
+pub use streaming::{IntervalReport, StreamingEngine};
+
+use crate::util::VTime;
+
+/// Cost model of one executor cluster. All costs are in virtual seconds;
+/// the NER example calibrates `reduce_cost` from real PJRT timings.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    /// Number of reduce partitions (tasks in the key-grouped stage).
+    pub n_partitions: usize,
+    /// Executor slots available to run tasks (nodes × cores).
+    pub n_slots: usize,
+    /// Map-side cost per record (parse + emit).
+    pub map_cost: VTime,
+    /// Reduce-side cost per unit of record *weight* (the key-grouped UDF —
+    /// sorting, NLP model, state update).
+    pub reduce_cost: VTime,
+    /// Scheduling overhead per launched reduce task (what makes extreme
+    /// over-partitioning costly in Fig 5).
+    pub task_overhead: VTime,
+    /// Shuffle cost per record (serialize + network).
+    pub shuffle_cost: VTime,
+    /// Cost per unit of state weight migrated at a repartitioning.
+    pub migration_cost: VTime,
+    /// Batch mode only: cost per record re-assigned during replay.
+    pub replay_cost: VTime,
+    /// Spill model: a reduce task whose load exceeds
+    /// `spill_threshold_factor × (batch load / n_slots)` — i.e. more than
+    /// its slot's memory-fair share — pays `spill_penalty ×` on the excess.
+    /// This is the superlinear straggler behaviour of real executors
+    /// (Spark spills to disk / GC-thrashes once a keygroup outgrows its
+    /// slot): it is what makes skew expensive in wall-clock, what makes
+    /// over-partitioning help plain hash (smaller tasks fit memory), and
+    /// why DR's flattening pays more than linearly (Fig 4/5/7/8).
+    pub spill_threshold_factor: f64,
+    pub spill_penalty: f64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            n_partitions: 16,
+            n_slots: 8,
+            map_cost: 1e-6,
+            reduce_cost: 10e-6,
+            task_overhead: 20e-3,
+            shuffle_cost: 0.5e-6,
+            migration_cost: 2e-6,
+            replay_cost: 0.2e-6,
+            spill_threshold_factor: 1.5,
+            spill_penalty: 2.5,
+        }
+    }
+}
+
+impl EngineConfig {
+    pub fn validate(&self) {
+        assert!(self.n_partitions > 0, "need partitions");
+        assert!(self.n_slots > 0, "need slots");
+        assert!(self.map_cost >= 0.0 && self.reduce_cost >= 0.0);
+        assert!(self.spill_threshold_factor > 0.0 && self.spill_penalty >= 1.0);
+    }
+
+    /// Reduce-task virtual time for a partition of `load` within a batch of
+    /// `total_load`, applying the spill model.
+    pub fn reduce_task_time(&self, load: f64, total_load: f64) -> VTime {
+        let budget = self.spill_threshold_factor * total_load / self.n_slots as f64;
+        let spilled = (load - budget).max(0.0);
+        (load + spilled * (self.spill_penalty - 1.0)) * self.reduce_cost + self.task_overhead
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduce_task_time_linear_below_budget() {
+        let cfg = EngineConfig::default(); // 16 partitions, 8 slots
+        let total = 800.0; // budget = 1.5*800/8 = 150
+        let t = cfg.reduce_task_time(100.0, total);
+        assert!((t - (100.0 * cfg.reduce_cost + cfg.task_overhead)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reduce_task_time_penalizes_spill() {
+        let cfg = EngineConfig::default();
+        let total = 800.0; // budget 150
+        let t_fit = cfg.reduce_task_time(150.0, total);
+        let t_spill = cfg.reduce_task_time(300.0, total);
+        // excess 150 at 2.5x ⇒ 150 + 150*2.5 = 525 weight-equivalents
+        let expect = (150.0 + 150.0 * 2.5) * cfg.reduce_cost + cfg.task_overhead;
+        assert!((t_spill - expect).abs() < 1e-12);
+        // marginal cost above the budget is spill_penalty× the linear one
+        let lin = |w: f64| w * cfg.reduce_cost + cfg.task_overhead;
+        assert!(t_spill - t_fit > 2.0 * (lin(300.0) - lin(150.0)));
+    }
+
+    #[test]
+    fn more_slots_raise_budget() {
+        let mut cfg = EngineConfig::default();
+        let t8 = cfg.reduce_task_time(400.0, 800.0);
+        cfg.n_slots = 32;
+        let t32 = cfg.reduce_task_time(400.0, 800.0);
+        assert!(t32 > t8, "smaller budget per slot spills more: {t32} vs {t8}");
+    }
+}
+
+/// Cumulative engine metrics across batches/intervals.
+#[derive(Debug, Clone, Default)]
+pub struct EngineMetrics {
+    pub records_processed: u64,
+    pub total_vtime: VTime,
+    pub map_vtime: VTime,
+    pub reduce_vtime: VTime,
+    pub migration_vtime: VTime,
+    pub replay_vtime: VTime,
+    pub state_weight_migrated: f64,
+    pub repartition_count: u64,
+}
+
+impl EngineMetrics {
+    pub fn throughput(&self) -> f64 {
+        if self.total_vtime <= 0.0 {
+            0.0
+        } else {
+            self.records_processed as f64 / self.total_vtime
+        }
+    }
+}

@@ -1,0 +1,276 @@
+//! Continuous streaming engine — the Flink execution model (§3, §5).
+//!
+//! Long-running source and reducer tasks connected by keyed channels.
+//! Unlike the micro-batch engine there is no wave scheduling: each
+//! partition is pinned to a long-running task ("Flink deploys long-running
+//! tasks that cannot be scheduled one after another", which is why
+//! over-partitioning does not help in Flink — §5). Throughput is gated by
+//! the *bottleneck* reducer through backpressure; repartitioning happens
+//! at checkpoint barriers, riding the Asynchronous Distributed Snapshot
+//! mechanism, with explicit operator-state migration.
+
+use super::{EngineConfig, EngineMetrics};
+use crate::dr::{DrConfig, DrMaster, DrWorker, PartitionerChoice};
+use crate::partitioner::migration_plan;
+use crate::state::{Checkpoint, CheckpointStore, StateStore};
+use crate::util::{load_imbalance, VTime};
+use crate::workload::Record;
+
+#[derive(Debug, Clone)]
+pub struct IntervalReport {
+    pub interval_no: u64,
+    /// Virtual time this checkpoint interval took to process.
+    pub elapsed: VTime,
+    /// Records per virtual second in this interval.
+    pub throughput: f64,
+    pub imbalance: f64,
+    pub migrated_fraction: f64,
+    pub migration_pause: VTime,
+    pub repartitioned: bool,
+    /// Utilisation of the bottleneck reducer relative to the mean — how
+    /// hard backpressure bites.
+    pub bottleneck_ratio: f64,
+}
+
+pub struct StreamingEngine {
+    cfg: EngineConfig,
+    drm: DrMaster,
+    /// One DRW per source task (sources tap keys before the key-grouping).
+    workers: Vec<DrWorker>,
+    partitioner: crate::dr::master::PartitionerHandle,
+    stores: Vec<StateStore>,
+    checkpoints: CheckpointStore,
+    metrics: EngineMetrics,
+    interval_no: u64,
+    vtime: VTime,
+}
+
+impl StreamingEngine {
+    /// In the streaming engine every partition is a pinned long-running
+    /// task, so `cfg.n_slots` must be ≥ `cfg.n_partitions` (the paper runs
+    /// them equal: parallelism 14 / 28).
+    pub fn new(cfg: EngineConfig, dr: DrConfig, choice: PartitionerChoice, seed: u64) -> Self {
+        cfg.validate();
+        assert!(
+            cfg.n_slots >= cfg.n_partitions,
+            "streaming tasks are pinned: need slots >= partitions"
+        );
+        let drm = DrMaster::new(dr, choice, cfg.n_partitions, seed);
+        let workers = (0..cfg.n_partitions)
+            .map(|w| DrWorker::new(drm.worker_capacity(), dr.sample_rate, seed ^ (w as u64) << 8))
+            .collect();
+        let partitioner = drm.handle();
+        let stores = (0..cfg.n_partitions).map(|_| StateStore::new()).collect();
+        Self {
+            cfg,
+            drm,
+            workers,
+            partitioner,
+            stores,
+            checkpoints: CheckpointStore::new(3),
+            metrics: EngineMetrics::default(),
+            interval_no: 0,
+            vtime: 0.0,
+        }
+    }
+
+    pub fn metrics(&self) -> &EngineMetrics {
+        &self.metrics
+    }
+
+    pub fn vtime(&self) -> VTime {
+        self.vtime
+    }
+
+    pub fn stores(&self) -> &[StateStore] {
+        &self.stores
+    }
+
+    pub fn checkpoints(&self) -> &CheckpointStore {
+        &self.checkpoints
+    }
+
+    pub fn drm(&self) -> &DrMaster {
+        &self.drm
+    }
+
+    pub fn total_state_weight(&self) -> f64 {
+        self.stores.iter().map(|s| s.total_weight()).sum()
+    }
+
+    /// Process one checkpoint interval of records, then take the barrier:
+    /// snapshot, DRM decision, possible state migration.
+    pub fn run_interval(&mut self, records: &[Record]) -> IntervalReport {
+        self.interval_no += 1;
+        let n = self.cfg.n_partitions;
+
+        // Sources tap the stream (round-robin source assignment).
+        for (i, r) in records.iter().enumerate() {
+            self.workers[i % n].observe(r.key, r.weight);
+        }
+
+        // Key-grouped routing to the pinned reducers.
+        let mut loads = vec![0.0f64; n];
+        for r in records {
+            let p = self.partitioner.partition(r.key);
+            loads[p] += r.weight;
+            self.stores[p].fold_count(r.key, r.weight);
+        }
+
+        // Backpressure model: all channels drain at the pace of the
+        // bottleneck reducer; the interval completes when the most loaded
+        // task has processed its share. Source/shuffle work is spread over
+        // the (parallel) source tasks.
+        let source_time =
+            records.len() as f64 / n as f64 * (self.cfg.map_cost + self.cfg.shuffle_cost);
+        let bottleneck = loads.iter().cloned().fold(0.0, f64::max);
+        let reduce_time = bottleneck * self.cfg.reduce_cost;
+        let mean_load = loads.iter().sum::<f64>() / n as f64;
+
+        // Barrier: snapshot.
+        self.checkpoints.save(Checkpoint {
+            id: self.interval_no,
+            records_at: vec![records.len() as u64; n],
+            stores: self.stores.clone(),
+        });
+
+        // Barrier: DRM decision + state migration.
+        let k = self.drm.histogram_size();
+        let hists: Vec<_> = self.workers.iter_mut().map(|w| w.harvest(k)).collect();
+        let old = self.partitioner.clone();
+        let decision = self.drm.decide(hists);
+        let (mut migration_pause, mut migrated_fraction, mut repartitioned) = (0.0, 0.0, false);
+        if let Some(new) = decision.new_partitioner {
+            let total_weight: f64 = self.total_state_weight();
+            let mut moved = 0.0;
+            let keys: Vec<Vec<crate::workload::Key>> =
+                self.stores.iter().map(|s| s.keys().collect()).collect();
+            for part_keys in keys {
+                for (key, from, to) in
+                    migration_plan(old.as_dyn(), new.as_dyn(), part_keys.into_iter())
+                {
+                    if let Some(st) = self.stores[from].extract(key) {
+                        moved += st.weight;
+                        self.stores[to].install(key, st);
+                    }
+                }
+            }
+            self.partitioner = new;
+            migration_pause = moved * self.cfg.migration_cost;
+            migrated_fraction = if total_weight > 0.0 { moved / total_weight } else { 0.0 };
+            repartitioned = true;
+            self.metrics.state_weight_migrated += moved;
+            self.metrics.repartition_count += 1;
+        }
+
+        let elapsed = source_time.max(reduce_time) + migration_pause;
+        self.vtime += elapsed;
+        self.metrics.records_processed += records.len() as u64;
+        self.metrics.total_vtime += elapsed;
+        self.metrics.reduce_vtime += reduce_time;
+        self.metrics.migration_vtime += migration_pause;
+
+        IntervalReport {
+            interval_no: self.interval_no,
+            elapsed,
+            throughput: if elapsed > 0.0 {
+                records.len() as f64 / elapsed
+            } else {
+                0.0
+            },
+            imbalance: load_imbalance(&loads),
+            migrated_fraction,
+            migration_pause,
+            repartitioned,
+            bottleneck_ratio: if mean_load > 0.0 { bottleneck / mean_load } else { 1.0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{lfm::Lfm, zipf::Zipf, Generator};
+
+    fn cfg(n: usize) -> EngineConfig {
+        EngineConfig {
+            n_partitions: n,
+            n_slots: n,
+            task_overhead: 0.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn throughput_improves_after_repartition() {
+        let mut e = StreamingEngine::new(cfg(8), DrConfig::default(), PartitionerChoice::Kip, 1);
+        let mut z = Zipf::new(50_000, 1.3, 1);
+        let r1 = e.run_interval(&z.batch(100_000));
+        let r2 = e.run_interval(&z.batch(100_000));
+        assert!(r2.repartitioned || r1.repartitioned);
+        let r3 = e.run_interval(&z.batch(100_000));
+        assert!(
+            r3.throughput > r1.throughput,
+            "{} vs {}",
+            r3.throughput,
+            r1.throughput
+        );
+        assert!(r3.imbalance < r1.imbalance);
+    }
+
+    #[test]
+    fn state_conserved_across_barriers() {
+        let mut e = StreamingEngine::new(cfg(6), DrConfig::forced(), PartitionerChoice::Kip, 2);
+        let mut l = Lfm::with_defaults(2);
+        let mut expected = 0.0;
+        for _ in 0..6 {
+            let batch = l.next_batch(20_000);
+            expected += batch.iter().map(|r| r.weight).sum::<f64>();
+            e.run_interval(&batch);
+        }
+        assert!((e.total_state_weight() - expected).abs() < 1e-6);
+        assert!(e.metrics().repartition_count >= 4);
+    }
+
+    #[test]
+    fn checkpoints_snapshot_pre_migration_state() {
+        let mut e = StreamingEngine::new(cfg(4), DrConfig::forced(), PartitionerChoice::Kip, 3);
+        let mut z = Zipf::new(1_000, 1.2, 3);
+        e.run_interval(&z.batch(10_000));
+        let w_after_1 = e.total_state_weight();
+        let cp = e.checkpoints().latest().unwrap();
+        assert_eq!(cp.id, 1);
+        assert!((cp.total_state_weight() - w_after_1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn backpressure_ratio_tracks_skew() {
+        let mut skewed = StreamingEngine::new(cfg(8), DrConfig::disabled(), PartitionerChoice::Uhp, 4);
+        let mut uniform = StreamingEngine::new(cfg(8), DrConfig::disabled(), PartitionerChoice::Uhp, 4);
+        let mut zs = Zipf::new(50_000, 1.8, 4);
+        let mut zu = Zipf::new(50_000, 0.0, 5);
+        let rs = skewed.run_interval(&zs.batch(50_000));
+        let ru = uniform.run_interval(&zu.batch(50_000));
+        assert!(rs.bottleneck_ratio > ru.bottleneck_ratio + 0.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn overpartitioning_streaming_rejected() {
+        let bad = EngineConfig {
+            n_partitions: 16,
+            n_slots: 8,
+            ..Default::default()
+        };
+        StreamingEngine::new(bad, DrConfig::default(), PartitionerChoice::Kip, 5);
+    }
+
+    #[test]
+    fn vtime_accumulates() {
+        let mut e = StreamingEngine::new(cfg(4), DrConfig::default(), PartitionerChoice::Kip, 6);
+        let mut z = Zipf::new(10_000, 1.0, 6);
+        let a = e.run_interval(&z.batch(10_000));
+        let b = e.run_interval(&z.batch(10_000));
+        assert!((e.vtime() - (a.elapsed + b.elapsed)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,379 @@
+//! DRM — the Dynamic Repartitioning Master (§3, Figure 1).
+//!
+//! Integrated into the DDPS driver. At each decision point (micro-batch
+//! boundary in Spark, checkpoint barrier in Flink, mid-map in batch jobs)
+//! it merges the DRWs' local histograms, blends them with the recent past,
+//! constructs a candidate partitioner, and issues a [`DrDecision`]:
+//! repartition (with the new function) or keep the current one.
+
+use super::DrConfig;
+use crate::partitioner::{
+    GedikConfig, GedikPartitioner, GedikStrategy, Kip, KipConfig, Mixed, Partitioner, Uhp,
+};
+use crate::sketch::Histogram;
+use crate::workload::Key;
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+/// Which partitioning function family DR maintains. KIP is the paper's
+/// contribution; the others are the Fig 2/3 baselines, runnable inside the
+/// full system for end-to-end ablations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionerChoice {
+    Kip,
+    Gedik(GedikStrategy),
+    Mixed,
+    /// Static uniform hashing — never repartitions (the no-DR baseline).
+    Uhp,
+}
+
+impl PartitionerChoice {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartitionerChoice::Kip => "KIP",
+            PartitionerChoice::Gedik(s) => s.name(),
+            PartitionerChoice::Mixed => "Mixed",
+            PartitionerChoice::Uhp => "Hash",
+        }
+    }
+}
+
+/// The partitioner state the DRM evolves. Concrete (not boxed) so updates
+/// can use each family's own update rule.
+#[derive(Debug, Clone)]
+enum DynPartitioner {
+    Kip(Kip),
+    Gedik(GedikPartitioner),
+    Mixed(Mixed),
+    Uhp(Uhp),
+}
+
+impl DynPartitioner {
+    fn as_dyn(&self) -> &dyn Partitioner {
+        match self {
+            DynPartitioner::Kip(p) => p,
+            DynPartitioner::Gedik(p) => p,
+            DynPartitioner::Mixed(p) => p,
+            DynPartitioner::Uhp(p) => p,
+        }
+    }
+}
+
+/// A cheaply-cloneable handle the engines route records through.
+#[derive(Clone)]
+pub struct PartitionerHandle(Arc<DynPartitioner>);
+
+impl PartitionerHandle {
+    #[inline]
+    pub fn partition(&self, key: Key) -> usize {
+        self.0.as_dyn().partition(key)
+    }
+
+    pub fn n_partitions(&self) -> usize {
+        self.0.as_dyn().n_partitions()
+    }
+
+    pub fn explicit_routes(&self) -> usize {
+        self.0.as_dyn().explicit_routes()
+    }
+
+    pub fn as_dyn(&self) -> &dyn Partitioner {
+        self.0.as_dyn()
+    }
+}
+
+impl std::fmt::Debug for PartitionerHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "PartitionerHandle(n={}, explicit={})",
+            self.n_partitions(),
+            self.explicit_routes()
+        )
+    }
+}
+
+/// Outcome of a DRM decision point.
+#[derive(Debug, Clone)]
+pub struct DrDecision {
+    /// New partitioner to install, or None to keep the current one.
+    pub new_partitioner: Option<PartitionerHandle>,
+    /// Estimated max load share under the current partitioner.
+    pub current_max_share: f64,
+    /// Planned max load share under the candidate.
+    pub planned_max_share: f64,
+    /// The merged histogram the decision was based on.
+    pub histogram: Histogram,
+}
+
+#[derive(Debug)]
+pub struct DrMaster {
+    cfg: DrConfig,
+    choice: PartitionerChoice,
+    n_partitions: usize,
+    current: DynPartitioner,
+    /// Record of past histograms (§3) blended into each decision.
+    past: VecDeque<Histogram>,
+    updates_issued: u64,
+    decisions_made: u64,
+}
+
+impl DrMaster {
+    pub fn new(cfg: DrConfig, choice: PartitionerChoice, n_partitions: usize, seed: u64) -> Self {
+        let kip_cfg = KipConfig {
+            lambda: cfg.lambda,
+            epsilon: cfg.epsilon,
+            ..Default::default()
+        };
+        let current = match choice {
+            PartitionerChoice::Kip => DynPartitioner::Kip(Kip::initial(n_partitions, kip_cfg, seed)),
+            PartitionerChoice::Gedik(s) => DynPartitioner::Gedik(GedikPartitioner::initial(
+                s,
+                n_partitions,
+                GedikConfig::default(),
+                seed,
+            )),
+            PartitionerChoice::Mixed => DynPartitioner::Mixed(Mixed::initial(n_partitions, seed)),
+            PartitionerChoice::Uhp => DynPartitioner::Uhp(Uhp::with_seed(n_partitions, seed)),
+        };
+        Self {
+            cfg,
+            choice,
+            n_partitions,
+            current,
+            past: VecDeque::new(),
+            updates_issued: 0,
+            decisions_made: 0,
+        }
+    }
+
+    pub fn config(&self) -> &DrConfig {
+        &self.cfg
+    }
+
+    pub fn choice(&self) -> PartitionerChoice {
+        self.choice
+    }
+
+    pub fn histogram_size(&self) -> usize {
+        self.cfg.lambda * self.n_partitions
+    }
+
+    /// Per-worker counter capacity the DRWs should be created with.
+    pub fn worker_capacity(&self) -> usize {
+        self.cfg.counter_capacity_factor * self.histogram_size()
+    }
+
+    pub fn handle(&self) -> PartitionerHandle {
+        PartitionerHandle(Arc::new(self.current.clone()))
+    }
+
+    pub fn updates_issued(&self) -> u64 {
+        self.updates_issued
+    }
+
+    pub fn decisions_made(&self) -> u64 {
+        self.decisions_made
+    }
+
+    /// Blend the incoming merged histogram with the recorded past ones.
+    fn blended(&mut self, merged: Histogram) -> Histogram {
+        self.past.push_back(merged);
+        while self.past.len() > self.cfg.histogram_memory.max(1) {
+            self.past.pop_front();
+        }
+        let locals: Vec<Histogram> = self.past.iter().cloned().collect();
+        Histogram::merge(&locals, self.histogram_size())
+    }
+
+    /// Estimated max load share of `p` under `hist`: tracked heavy keys at
+    /// their explicit/hashed locations plus the residual mass spread by the
+    /// function's own tail routing (`tail_shares`) — the same model the
+    /// partitioners plan with.
+    fn max_share(p: &dyn Partitioner, hist: &Histogram) -> f64 {
+        let residual = (1.0 - hist.heavy_mass()).max(0.0);
+        let mut load: Vec<f64> = p.tail_shares().iter().map(|s| s * residual).collect();
+        for e in hist.entries() {
+            load[p.partition(e.key)] += e.freq;
+        }
+        load.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// The DRM decision point: merge worker histograms, maybe construct and
+    /// install a new partitioner. This is the paper's central control loop.
+    pub fn decide(&mut self, worker_histograms: Vec<Histogram>) -> DrDecision {
+        self.decisions_made += 1;
+        let merged = Histogram::merge(&worker_histograms, self.histogram_size());
+        let hist = self.blended(merged);
+
+        let current_max = Self::max_share(self.current.as_dyn(), &hist);
+
+        if !self.cfg.enabled || matches!(self.choice, PartitionerChoice::Uhp) {
+            return DrDecision {
+                new_partitioner: None,
+                current_max_share: current_max,
+                planned_max_share: current_max,
+                histogram: hist,
+            };
+        }
+
+        // Construct the candidate with the family's own update rule.
+        let candidate = match &self.current {
+            DynPartitioner::Kip(kip) => DynPartitioner::Kip(kip.updated(&hist)),
+            DynPartitioner::Gedik(g) => DynPartitioner::Gedik(g.update(&hist)),
+            DynPartitioner::Mixed(m) => DynPartitioner::Mixed(m.update(&hist)),
+            DynPartitioner::Uhp(_) => unreachable!("handled above"),
+        };
+        let planned_max = Self::max_share(candidate.as_dyn(), &hist);
+
+        // Decision: is the gain worth it? (Forced in Fig 3's methodology.)
+        let worth_it = self.cfg.force_updates
+            || planned_max < current_max * (1.0 - self.cfg.min_gain);
+
+        if worth_it {
+            self.current = candidate;
+            self.updates_issued += 1;
+            DrDecision {
+                new_partitioner: Some(self.handle()),
+                current_max_share: current_max,
+                planned_max_share: planned_max,
+                histogram: hist,
+            }
+        } else {
+            DrDecision {
+                new_partitioner: None,
+                current_max_share: current_max,
+                planned_max_share: planned_max,
+                histogram: hist,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partitioner::partition_loads;
+    use crate::util::load_imbalance;
+    use crate::workload::{zipf::Zipf, Generator, Record};
+
+    fn worker_hists(recs: &[Record], n_workers: usize, k: usize) -> Vec<Histogram> {
+        let chunk = recs.len() / n_workers;
+        (0..n_workers)
+            .map(|w| Histogram::exact(&recs[w * chunk..(w + 1) * chunk], k))
+            .collect()
+    }
+
+    #[test]
+    fn disabled_dr_never_updates() {
+        let mut drm = DrMaster::new(DrConfig::disabled(), PartitionerChoice::Kip, 8, 1);
+        let mut z = Zipf::new(10_000, 1.2, 1);
+        let recs = z.batch(100_000);
+        let d = drm.decide(worker_hists(&recs, 4, drm.histogram_size()));
+        assert!(d.new_partitioner.is_none());
+        assert_eq!(drm.updates_issued(), 0);
+    }
+
+    #[test]
+    fn skew_triggers_update_and_improves() {
+        let mut drm = DrMaster::new(DrConfig::default(), PartitionerChoice::Kip, 8, 2);
+        let mut z = Zipf::new(50_000, 1.2, 2);
+        let recs = z.batch(200_000);
+        let before = drm.handle();
+        let d = drm.decide(worker_hists(&recs, 4, drm.histogram_size()));
+        assert!(d.new_partitioner.is_some(), "skewed data must repartition");
+        assert!(d.planned_max_share < d.current_max_share);
+        let after = d.new_partitioner.unwrap();
+        // measured imbalance must actually improve
+        let kw: Vec<(Key, f64)> = {
+            let mut m = std::collections::HashMap::new();
+            for r in &recs {
+                *m.entry(r.key).or_insert(0.0) += 1.0;
+            }
+            m.into_iter().collect()
+        };
+        let imb_before = load_imbalance(&partition_loads(before.as_dyn(), &kw));
+        let imb_after = load_imbalance(&partition_loads(after.as_dyn(), &kw));
+        assert!(imb_after < imb_before, "{imb_after} vs {imb_before}");
+    }
+
+    #[test]
+    fn uniform_data_does_not_repartition() {
+        let mut drm = DrMaster::new(DrConfig::default(), PartitionerChoice::Kip, 8, 3);
+        let mut z = Zipf::new(100_000, 0.0, 3); // uniform
+        let recs = z.batch(100_000);
+        let d = drm.decide(worker_hists(&recs, 4, drm.histogram_size()));
+        assert!(
+            d.new_partitioner.is_none(),
+            "uniform data repartitioned: cur={} planned={}",
+            d.current_max_share,
+            d.planned_max_share
+        );
+    }
+
+    #[test]
+    fn forced_updates_always_fire() {
+        let mut drm = DrMaster::new(DrConfig::forced(), PartitionerChoice::Kip, 8, 4);
+        let mut z = Zipf::new(100_000, 0.0, 4);
+        let recs = z.batch(50_000);
+        let d = drm.decide(worker_hists(&recs, 2, drm.histogram_size()));
+        assert!(d.new_partitioner.is_some());
+        assert_eq!(drm.updates_issued(), 1);
+    }
+
+    #[test]
+    fn all_baseline_choices_construct_and_update() {
+        for choice in [
+            PartitionerChoice::Kip,
+            PartitionerChoice::Gedik(GedikStrategy::Scan),
+            PartitionerChoice::Gedik(GedikStrategy::Readj),
+            PartitionerChoice::Gedik(GedikStrategy::Redist),
+            PartitionerChoice::Mixed,
+        ] {
+            let mut drm = DrMaster::new(DrConfig::forced(), choice, 6, 5);
+            let mut z = Zipf::new(10_000, 1.3, 5);
+            let recs = z.batch(50_000);
+            let d = drm.decide(worker_hists(&recs, 3, drm.histogram_size()));
+            assert!(d.new_partitioner.is_some(), "{} failed", choice.name());
+            let h = d.new_partitioner.unwrap();
+            for k in 0..1000u64 {
+                assert!(h.partition(k) < 6);
+            }
+        }
+    }
+
+    #[test]
+    fn histogram_memory_smooths_drift() {
+        // A one-batch blip should not dominate the blended histogram.
+        let mut drm = DrMaster::new(
+            DrConfig {
+                histogram_memory: 3,
+                force_updates: true,
+                ..Default::default()
+            },
+            PartitionerChoice::Kip,
+            4,
+            6,
+        );
+        // two intervals dominated by key 1
+        for _ in 0..2 {
+            let h = Histogram::from_counts(&[(1, 900.0), (2, 100.0)], 1000.0, 8);
+            drm.decide(vec![h]);
+        }
+        // blip: key 3 spikes for one interval with less data
+        let blip = Histogram::from_counts(&[(3, 300.0), (1, 200.0)], 500.0, 8);
+        let d = drm.decide(vec![blip]);
+        // blended top key must still be 1 (2*900+200 vs 300)
+        assert_eq!(d.histogram.entries()[0].key, 1);
+    }
+
+    #[test]
+    fn handle_is_cheap_to_clone_and_consistent() {
+        let drm = DrMaster::new(DrConfig::default(), PartitionerChoice::Kip, 16, 7);
+        let h1 = drm.handle();
+        let h2 = h1.clone();
+        for k in 0..1000u64 {
+            assert_eq!(h1.partition(k), h2.partition(k));
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! **Dynamic Repartitioning** — the paper's system contribution (§3).
+//!
+//! The DR framework is pluggable into the DDPS engines in [`crate::ddps`]:
+//!
+//! - [`DrWorker`] (DRW) lives inside each DDPS worker and taps the keys
+//!   flowing through the map/source side, feeding a low-memory
+//!   [`FreqCounter`](crate::sketch::FreqCounter);
+//! - [`DrMaster`] (DRM) is the central authority integrated into the
+//!   driver: it merges worker-local histograms, keeps a record of past
+//!   histograms ("to ensure that a partitioner construction is useful in
+//!   the long run"), runs the partitioner update (KIP by default, any
+//!   baseline for comparison), and decides *whether* the expected gain
+//!   justifies the replay / state-migration cost.
+
+pub mod master;
+pub mod worker;
+
+pub use master::{DrDecision, DrMaster, PartitionerChoice};
+pub use worker::DrWorker;
+
+/// Configuration of the DR module (both DRM and DRW sides).
+#[derive(Debug, Clone, Copy)]
+pub struct DrConfig {
+    /// Master switch — `false` reproduces the baseline system exactly.
+    pub enabled: bool,
+    /// DRW key-sampling probability on the map path (1.0 = observe all).
+    /// The paper's overhead is "negligible" because the tap is a counter
+    /// bump; we keep it configurable to measure the overhead curve.
+    pub sample_rate: f64,
+    /// Multiple of B = λN giving each worker-local counter capacity.
+    pub counter_capacity_factor: usize,
+    /// Histogram scale factor λ (global top-B with B = λN).
+    pub lambda: usize,
+    /// KIP slack ε (Algorithm 1).
+    pub epsilon: f64,
+    /// How many past histograms to blend when updating (drift smoothing).
+    pub histogram_memory: usize,
+    /// Minimum relative improvement of the planned max load before a
+    /// repartitioning is worth its migration cost (decision threshold).
+    pub min_gain: f64,
+    /// Force an update at every opportunity (Fig 3's methodology:
+    /// "We forced a partitioner update on each batch").
+    pub force_updates: bool,
+}
+
+impl Default for DrConfig {
+    fn default() -> Self {
+        Self {
+            enabled: true,
+            sample_rate: 1.0,
+            counter_capacity_factor: 4,
+            lambda: 2,
+            epsilon: 0.01,
+            histogram_memory: 3,
+            min_gain: 0.05,
+            force_updates: false,
+        }
+    }
+}
+
+impl DrConfig {
+    pub fn disabled() -> Self {
+        Self {
+            enabled: false,
+            ..Default::default()
+        }
+    }
+
+    pub fn forced() -> Self {
+        Self {
+            force_updates: true,
+            ..Default::default()
+        }
+    }
+}

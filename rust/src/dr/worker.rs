@@ -1,0 +1,132 @@
+//! DRW — the Dynamic Repartitioning Worker (§3, Figure 1).
+//!
+//! A DRW is embedded in each DDPS worker. On the map/source path it taps
+//! every (sampled) key into a bounded [`FreqCounter`]; at a histogram
+//! request from the DRM it harvests its local top-k and decays its
+//! counters so the next interval tracks the current distribution.
+
+use crate::sketch::{FreqCounter, HeavyHitter, Histogram};
+use crate::util::Rng;
+use crate::workload::Key;
+
+#[derive(Debug)]
+pub struct DrWorker {
+    counter: FreqCounter,
+    sample_rate: f64,
+    rng: Rng,
+    observed: u64,
+    sampled: u64,
+}
+
+impl DrWorker {
+    pub fn new(capacity: usize, sample_rate: f64, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&sample_rate) && sample_rate > 0.0);
+        Self {
+            counter: FreqCounter::with_capacity(capacity.max(1)),
+            sample_rate,
+            rng: Rng::new(seed ^ 0xD2_57),
+            observed: 0,
+            sampled: 0,
+        }
+    }
+
+    /// The map-path tap. Cheap by design: one branch + counter bump.
+    #[inline]
+    pub fn observe(&mut self, key: Key, weight: f64) {
+        self.observed += 1;
+        if self.sample_rate >= 1.0 || self.rng.next_f64() < self.sample_rate {
+            self.sampled += 1;
+            self.counter.observe(key, weight);
+        }
+    }
+
+    /// Records seen on the tap (sampled or not).
+    pub fn observed(&self) -> u64 {
+        self.observed
+    }
+
+    pub fn sampled(&self) -> u64 {
+        self.sampled
+    }
+
+    /// Harvest the local histogram for the DRM and decay local counters
+    /// (interval boundary).
+    pub fn harvest(&mut self, top_k: usize) -> Histogram {
+        let h = self.counter.harvest(top_k);
+        self.counter.decay_now();
+        h
+    }
+
+    /// Memory footprint in counters (DRW must stay small — §1 "low-memory-
+    /// footprint sampling").
+    pub fn footprint(&self) -> usize {
+        self.counter.footprint()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tap_counts_and_harvests() {
+        let mut w = DrWorker::new(16, 1.0, 1);
+        for _ in 0..90 {
+            w.observe(7, 1.0);
+        }
+        for _ in 0..10 {
+            w.observe(8, 1.0);
+        }
+        assert_eq!(w.observed(), 100);
+        assert_eq!(w.sampled(), 100);
+        let h = w.harvest(2);
+        assert_eq!(h.entries()[0].key, 7);
+        assert!((h.entries()[0].freq - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sampling_rate_respected() {
+        let mut w = DrWorker::new(64, 0.1, 2);
+        for i in 0..100_000u64 {
+            w.observe(i % 50, 1.0);
+        }
+        let rate = w.sampled() as f64 / w.observed() as f64;
+        assert!((rate - 0.1).abs() < 0.01, "rate={rate}");
+    }
+
+    #[test]
+    fn sampled_histogram_still_finds_heavy_key() {
+        let mut w = DrWorker::new(64, 0.05, 3);
+        for i in 0..200_000u64 {
+            // 30% of traffic on key 999
+            let k = if i % 10 < 3 { 999 } else { i };
+            w.observe(k, 1.0);
+        }
+        let h = w.harvest(4);
+        assert_eq!(h.entries()[0].key, 999);
+        assert!((h.entries()[0].freq - 0.3).abs() < 0.05);
+    }
+
+    #[test]
+    fn footprint_bounded() {
+        let mut w = DrWorker::new(32, 1.0, 4);
+        for i in 0..100_000u64 {
+            w.observe(i, 1.0);
+        }
+        assert!(w.footprint() <= 32);
+    }
+
+    #[test]
+    fn harvest_decays_for_drift() {
+        let mut w = DrWorker::new(32, 1.0, 5);
+        for _ in 0..1000 {
+            w.observe(1, 1.0);
+        }
+        let _ = w.harvest(4);
+        for _ in 0..600 {
+            w.observe(2, 1.0);
+        }
+        let h = w.harvest(4);
+        assert_eq!(h.entries()[0].key, 2, "drift not tracked after decay");
+    }
+}

@@ -1,0 +1,157 @@
+//! Fig 2 — effect of parallelism on load imbalance over ZIPF(1.0).
+//!
+//! Left: Hash / Readj / Redist / Scan / Mixed / KIP across partition
+//! counts, averaged over independent experiments (paper: 100 runs).
+//! Right: KIP with λ ∈ {1, 2, 3, 4}.
+//!
+//! This is a *component* experiment: partitioners are built from the exact
+//! histogram of each sample (isolating partitioning quality from sketch
+//! error, as the paper's §5 hashing evaluation does) and imbalance is the
+//! measured max/mean load over the sampled records.
+
+use crate::partitioner::{
+    partition_loads, GedikConfig, GedikPartitioner, GedikStrategy, Kip, KipConfig, Mixed,
+    Partitioner, Uhp, WeightedHash,
+};
+use crate::sketch::Histogram;
+use crate::util::{load_imbalance, Table};
+use crate::workload::{zipf::Zipf, Generator, Key};
+use std::collections::HashMap;
+
+pub const PARALLELISMS: [usize; 7] = [2, 4, 6, 8, 10, 12, 14];
+
+fn key_weights(recs: &[crate::workload::Record]) -> Vec<(Key, f64)> {
+    let mut m: HashMap<Key, f64> = HashMap::new();
+    for r in recs {
+        *m.entry(r.key).or_insert(0.0) += r.weight;
+    }
+    m.into_iter().collect()
+}
+
+fn imbalance_of(p: &dyn Partitioner, kw: &[(Key, f64)]) -> f64 {
+    load_imbalance(&partition_loads(p, kw))
+}
+
+/// One experiment repetition: per-method imbalance at partition count `n`.
+fn run_once(n: usize, lambda: usize, seed: u64, n_records: usize) -> HashMap<&'static str, f64> {
+    let mut z = Zipf::new(super::setup::ZIPF_KEYS_COMPONENT, 1.0, seed);
+    let recs = z.batch(n_records);
+    let kw = key_weights(&recs);
+    let hist = Histogram::exact(&recs, lambda * n);
+    let mut out = HashMap::new();
+
+    let uhp = Uhp::with_seed(n, seed);
+    out.insert("Hash", imbalance_of(&uhp, &kw));
+
+    for strat in [GedikStrategy::Readj, GedikStrategy::Redist, GedikStrategy::Scan] {
+        let g = GedikPartitioner::initial(strat, n, GedikConfig::default(), seed).update(&hist);
+        out.insert(strat.name(), imbalance_of(&g, &kw));
+    }
+
+    let m = Mixed::initial(n, seed).update(&hist);
+    out.insert("Mixed", imbalance_of(&m, &kw));
+
+    let cfg = KipConfig {
+        lambda,
+        ..Default::default()
+    };
+    let kip = Kip::update(
+        &uhp,
+        &WeightedHash::with_default_hosts(n, seed ^ 0xA5),
+        &hist,
+        cfg,
+    );
+    out.insert("KIP", imbalance_of(&kip, &kw));
+    out
+}
+
+/// Fig 2 left: method comparison. `repeats` ~ the paper's 100 runs.
+pub fn left(repeats: usize, scale: f64) -> Table {
+    let n_records = ((400_000 as f64) * scale).max(10_000.0) as usize;
+    let mut t = Table::new(
+        "Fig 2 (left): load imbalance vs parallelism, ZIPF exp 1.0, lambda=2",
+        &["partitions", "Hash", "Readj", "Redist", "Scan", "Mixed", "KIP"],
+    );
+    for &n in &PARALLELISMS {
+        let mut acc: HashMap<&str, f64> = HashMap::new();
+        for rep in 0..repeats {
+            for (k, v) in run_once(n, 2, 1000 + rep as u64, n_records) {
+                *acc.entry(k).or_insert(0.0) += v / repeats as f64;
+            }
+        }
+        t.rowf(&[
+            n as f64,
+            acc["Hash"],
+            acc["Readj"],
+            acc["Redist"],
+            acc["Scan"],
+            acc["Mixed"],
+            acc["KIP"],
+        ]);
+    }
+    t
+}
+
+/// Fig 2 right: KIP with λ ∈ {1,2,3,4}.
+pub fn right(repeats: usize, scale: f64) -> Table {
+    let n_records = ((400_000 as f64) * scale).max(10_000.0) as usize;
+    let mut t = Table::new(
+        "Fig 2 (right): KIP load imbalance vs parallelism, lambda in {1,2,3,4}",
+        &["partitions", "l=1", "l=2", "l=3", "l=4"],
+    );
+    for &n in &PARALLELISMS {
+        let mut row = vec![n as f64];
+        for lambda in 1..=4usize {
+            let mut acc = 0.0;
+            for rep in 0..repeats {
+                acc += run_once(n, lambda, 2000 + rep as u64, n_records)["KIP"] / repeats as f64;
+            }
+            row.push(acc);
+        }
+        t.rowf(&row);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kip_flat_while_hash_grows() {
+        let t = left(2, 0.25);
+        assert_eq!(t.n_rows(), PARALLELISMS.len());
+        // parse back from the table: col 1 = Hash, col 6 = KIP
+        let rows: Vec<Vec<f64>> = t
+            .to_tsv()
+            .lines()
+            .skip(2)
+            .map(|l| l.split('\t').map(|c| c.parse().unwrap()).collect())
+            .collect();
+        let (hash_first, hash_last) = (rows[0][1], rows[rows.len() - 1][1]);
+        let (kip_first, kip_last) = (rows[0][6], rows[rows.len() - 1][6]);
+        assert!(hash_last > hash_first + 0.3, "hash must grow with N");
+        assert!(kip_last - kip_first < hash_last - hash_first, "KIP grows slower");
+        // paper: KIP stays below ~1.2 in this range
+        assert!(kip_last < 1.35, "kip at N=14: {kip_last}");
+        // KIP beats every baseline at max parallelism
+        for col in 1..=5 {
+            assert!(rows[rows.len() - 1][col] >= kip_last - 0.05);
+        }
+    }
+
+    #[test]
+    fn lambda_ordering_roughly_monotone() {
+        let t = right(2, 0.25);
+        let rows: Vec<Vec<f64>> = t
+            .to_tsv()
+            .lines()
+            .skip(2)
+            .map(|l| l.split('\t').map(|c| c.parse().unwrap()).collect())
+            .collect();
+        // λ=4 no worse than λ=1 on average across the sweep
+        let avg1: f64 = rows.iter().map(|r| r[1]).sum::<f64>() / rows.len() as f64;
+        let avg4: f64 = rows.iter().map(|r| r[4]).sum::<f64>() / rows.len() as f64;
+        assert!(avg4 <= avg1 + 0.02, "λ=4 {avg4} vs λ=1 {avg1}");
+    }
+}

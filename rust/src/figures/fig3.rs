@@ -1,0 +1,254 @@
+//! Fig 3 — load imbalance (left) and relative state migration (right)
+//! over a drifting LFM stream of 20 batches × 100K records, 20 partitions.
+//!
+//! "States were assumed to be linear in the size of the corresponding
+//! keygroups and were kept in a sliding state window of size 5. We forced
+//! a partitioner update on each batch. We averaged measurements over 10
+//! iterations, replacing keys with randomly generated strings in each
+//! round. All partitioning methods started with a load imbalance of
+//! around 2.0 and a relatively heavy migration caused by switching from
+//! Hash to one of the dynamic partitioners."
+
+use super::setup;
+use crate::partitioner::{
+    migration_fraction, partition_loads, GedikConfig, GedikPartitioner, GedikStrategy, Kip,
+    KipConfig, Partitioner, Uhp,
+};
+use crate::sketch::Histogram;
+use crate::state::SlidingStateWindow;
+use crate::util::{load_imbalance, Table};
+use crate::workload::{lfm::Lfm, Key};
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    Hash,
+    Kip,
+    Scan,
+    Readj,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Hash => "Hash",
+            Method::Kip => "KIP",
+            Method::Scan => "Scan",
+            Method::Readj => "Readj",
+        }
+    }
+    pub const ALL: [Method; 4] = [Method::Hash, Method::Kip, Method::Scan, Method::Readj];
+}
+
+/// Per-update series of one method over the LFM stream.
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    pub imbalance: Vec<f64>,
+    pub migration: Vec<f64>,
+}
+
+enum State {
+    Hash(Uhp),
+    Kip(Kip),
+    Gedik(GedikPartitioner),
+}
+
+impl State {
+    fn as_dyn(&self) -> &dyn Partitioner {
+        match self {
+            State::Hash(p) => p,
+            State::Kip(p) => p,
+            State::Gedik(p) => p,
+        }
+    }
+
+    fn update(&self, hist: &Histogram) -> State {
+        match self {
+            State::Hash(p) => State::Hash(p.clone()),
+            State::Kip(p) => State::Kip(p.updated(hist)),
+            State::Gedik(p) => State::Gedik(p.update(hist)),
+        }
+    }
+}
+
+/// Run the Fig 3 protocol for one method and one iteration seed.
+fn run_stream(method: Method, seed: u64, batch_size: usize) -> Series {
+    let n = setup::LFM_PARTITIONS;
+    let lambda = 2usize;
+    let mut lfm = Lfm::with_defaults(seed);
+    let mut window = SlidingStateWindow::new(setup::LFM_STATE_WINDOW);
+    let mut series = Series::default();
+
+    let mut state = match method {
+        Method::Hash => State::Hash(Uhp::with_seed(n, seed)),
+        Method::Kip => {
+            // first replacement of UHP happens at update 0 (paper): start
+            // from the UHP-equivalent initial KIP
+            State::Kip(Kip::initial(n, KipConfig { lambda, ..Default::default() }, seed))
+        }
+        Method::Scan => State::Gedik(GedikPartitioner::initial(
+            GedikStrategy::Scan,
+            n,
+            GedikConfig::default(),
+            seed,
+        )),
+        Method::Readj => State::Gedik(GedikPartitioner::initial(
+            GedikStrategy::Readj,
+            n,
+            GedikConfig::default(),
+            seed,
+        )),
+    };
+
+    for _batch_no in 0..setup::LFM_BATCHES {
+        let batch = lfm.next_batch(batch_size);
+
+        // keygroup weights of this batch
+        let mut kg: HashMap<Key, f64> = HashMap::new();
+        for r in &batch {
+            *kg.entry(r.key).or_insert(0.0) += r.weight;
+        }
+
+        // measured imbalance of the *current* partitioner on this batch
+        let kw: Vec<(Key, f64)> = kg.iter().map(|(&k, &w)| (k, w)).collect();
+        series
+            .imbalance
+            .push(load_imbalance(&partition_loads(state.as_dyn(), &kw)));
+
+        // forced update at the batch boundary
+        let hist = Histogram::exact(&batch, lambda * n);
+        let new_state = state.update(&hist);
+
+        // state lives in a sliding window of 5 batches
+        window.push_batch(kg);
+        let sw = window.state_weights();
+        series
+            .migration
+            .push(migration_fraction(state.as_dyn(), new_state.as_dyn(), &sw));
+        state = new_state;
+    }
+    series
+}
+
+/// Average Fig 3 series over `iters` iterations (paper: 10).
+pub fn run(method: Method, iters: usize, scale: f64) -> Series {
+    let batch_size = ((setup::LFM_BATCH_SIZE as f64) * scale).max(5_000.0) as usize;
+    let mut acc = Series {
+        imbalance: vec![0.0; setup::LFM_BATCHES],
+        migration: vec![0.0; setup::LFM_BATCHES],
+    };
+    for it in 0..iters {
+        let s = run_stream(method, 7000 + it as u64, batch_size);
+        for i in 0..setup::LFM_BATCHES {
+            acc.imbalance[i] += s.imbalance[i] / iters as f64;
+            acc.migration[i] += s.migration[i] / iters as f64;
+        }
+    }
+    acc
+}
+
+pub fn tables(iters: usize, scale: f64) -> (Table, Table) {
+    let all: Vec<(Method, Series)> = Method::ALL
+        .iter()
+        .map(|&m| (m, run(m, iters, scale)))
+        .collect();
+
+    let mut left = Table::new(
+        "Fig 3 (left): load imbalance per partitioner update, LFM stream",
+        &["update", "Hash", "KIP", "Scan", "Readj"],
+    );
+    let mut right = Table::new(
+        "Fig 3 (right): relative state migration per update, LFM stream",
+        &["update", "KIP", "Scan", "Readj"],
+    );
+    for i in 0..setup::LFM_BATCHES {
+        left.rowf(&[
+            i as f64,
+            all[0].1.imbalance[i],
+            all[1].1.imbalance[i],
+            all[2].1.imbalance[i],
+            all[3].1.imbalance[i],
+        ]);
+        right.rowf(&[
+            i as f64,
+            all[1].1.migration[i],
+            all[2].1.migration[i],
+            all[3].1.migration[i],
+        ]);
+    }
+    (left, right)
+}
+
+/// The paper's headline Fig 3 claims, computed from the series: KIP
+/// improves mean imbalance vs Hash/Scan/Readj and outmigrates Readj by ~4×.
+pub fn summary(iters: usize, scale: f64) -> Table {
+    let mut t = Table::new(
+        "Fig 3 summary: mean imbalance + mean migration (updates 1..)",
+        &["method", "mean_imbalance", "mean_migration"],
+    );
+    for m in Method::ALL {
+        let s = run(m, iters, scale);
+        // skip update 0 (the forced switch away from UHP)
+        let imb = crate::util::mean(&s.imbalance[1..]);
+        let mig = crate::util::mean(&s.migration[1..]);
+        t.row(&[m.name().to_string(), format!("{imb:.4}"), format!("{mig:.4}")]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kip_beats_hash_scan_readj_on_imbalance() {
+        let series: HashMap<&str, Series> = Method::ALL
+            .iter()
+            .map(|&m| (m.name(), run(m, 2, 0.2)))
+            .collect();
+        let mean_imb =
+            |m: &str| crate::util::mean(&series[m].imbalance[1..]);
+        let kip = mean_imb("KIP");
+        assert!(kip < mean_imb("Hash"), "KIP {kip} vs Hash {}", mean_imb("Hash"));
+        assert!(kip < mean_imb("Scan"), "KIP {kip} vs Scan {}", mean_imb("Scan"));
+        assert!(kip < mean_imb("Readj"), "KIP {kip} vs Readj {}", mean_imb("Readj"));
+    }
+
+    #[test]
+    fn kip_migration_below_readj() {
+        // paper: "KIP outperforms Readj by a factor of 4" on migration
+        let kip = run(Method::Kip, 2, 0.2);
+        let readj = run(Method::Readj, 2, 0.2);
+        let m_kip = crate::util::mean(&kip.migration[1..]);
+        let m_readj = crate::util::mean(&readj.migration[1..]);
+        assert!(
+            m_kip < m_readj,
+            "KIP migration {m_kip} not below Readj {m_readj}"
+        );
+    }
+
+    #[test]
+    fn hash_never_migrates() {
+        let s = run(Method::Hash, 1, 0.1);
+        assert!(s.migration.iter().all(|&m| m == 0.0));
+    }
+
+    #[test]
+    fn initial_imbalance_around_two() {
+        // paper: "All partitioning methods started with a load imbalance of
+        // around 2.0"
+        let s = run(Method::Kip, 2, 0.2);
+        assert!(
+            s.imbalance[0] > 1.4 && s.imbalance[0] < 3.0,
+            "update-0 imbalance {}",
+            s.imbalance[0]
+        );
+    }
+
+    #[test]
+    fn tables_have_20_updates() {
+        let (l, r) = tables(1, 0.1);
+        assert_eq!(l.n_rows(), 20);
+        assert_eq!(r.n_rows(), 20);
+    }
+}

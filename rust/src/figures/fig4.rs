@@ -1,0 +1,145 @@
+//! Fig 4 — Spark DR vs plain Spark over the Zipf exponent (1.0–2.0):
+//! load imbalance (left) and total processing time for 10M records
+//! (right). 1M keys, 35 partitions, 40 executor slots (§5).
+//!
+//! "DR is beneficial for the moderate values of the Zipf exponent. For an
+//! exponent near 1, DR is not required ... for very large exponents, the
+//! heaviest key dominates the processing time."
+
+use super::setup;
+use crate::ddps::{EngineConfig, MicroBatchEngine};
+use crate::dr::{DrConfig, PartitionerChoice};
+use crate::util::Table;
+use crate::workload::{zipf::Zipf, Generator};
+
+/// NB: our exact-Zipf sampler parametrizes skew more aggressively than the
+/// paper's generator — a single key already takes ≥18% of the stream at
+/// exponent 1.2 with 1M keys. The paper's "moderate exponent" sweet spot
+/// (~1.5) corresponds to ≈1.0–1.2 here; we sweep from 0.8 so the full
+/// inverted-U (no gain → max gain → heavy-key-pinned decay) is visible.
+/// See EXPERIMENTS.md.
+pub const EXPONENTS: [f64; 7] = [0.8, 1.0, 1.2, 1.4, 1.6, 1.8, 2.0];
+
+#[derive(Debug, Clone)]
+pub struct Fig4Point {
+    pub exponent: f64,
+    pub imbalance_dr: f64,
+    pub imbalance_hash: f64,
+    pub time_dr: f64,
+    pub time_hash: f64,
+}
+
+fn engine_config() -> EngineConfig {
+    EngineConfig {
+        n_partitions: setup::SPARK_PARTITIONS,
+        n_slots: setup::SPARK_SLOTS,
+        ..Default::default()
+    }
+}
+
+/// Run the 10M-record job as a stream of micro-batches and report the
+/// steady-state imbalance (last batch) and total processing time.
+pub fn run_point(exponent: f64, scale: f64, with_dr: bool) -> (f64, f64) {
+    let total_records = ((10_000_000 as f64) * scale).max(100_000.0) as usize;
+    let n_batches = 10usize;
+    let per_batch = total_records / n_batches;
+    let keys = ((setup::ZIPF_KEYS_SYSTEM as f64) * scale.max(0.1)) as usize;
+
+    let (dr, choice) = if with_dr {
+        (DrConfig::default(), PartitionerChoice::Kip)
+    } else {
+        (DrConfig::disabled(), PartitionerChoice::Uhp)
+    };
+    let mut engine = MicroBatchEngine::new(engine_config(), dr, choice, 42);
+    let mut z = Zipf::new(keys, exponent, 42);
+    let mut last_imbalance = 1.0;
+    for _ in 0..n_batches {
+        let r = engine.run_batch(&z.batch(per_batch));
+        last_imbalance = r.imbalance;
+    }
+    (last_imbalance, engine.metrics().total_vtime)
+}
+
+pub fn run(scale: f64) -> Vec<Fig4Point> {
+    EXPONENTS
+        .iter()
+        .map(|&exponent| {
+            let (imbalance_dr, time_dr) = run_point(exponent, scale, true);
+            let (imbalance_hash, time_hash) = run_point(exponent, scale, false);
+            Fig4Point {
+                exponent,
+                imbalance_dr,
+                imbalance_hash,
+                time_dr,
+                time_hash,
+            }
+        })
+        .collect()
+}
+
+pub fn tables(scale: f64) -> (Table, Table) {
+    let pts = run(scale);
+    let mut left = Table::new(
+        "Fig 4 (left): load imbalance vs Zipf exponent (35 partitions, 1M keys)",
+        &["exponent", "Spark DR", "Spark hash"],
+    );
+    let mut right = Table::new(
+        "Fig 4 (right): total processing time for 10M ZIPF records [virtual s]",
+        &["exponent", "Spark DR", "Spark hash", "speedup"],
+    );
+    for p in pts {
+        left.rowf(&[p.exponent, p.imbalance_dr, p.imbalance_hash]);
+        right.rowf(&[
+            p.exponent,
+            p.time_dr,
+            p.time_hash,
+            p.time_hash / p.time_dr,
+        ]);
+    }
+    (left, right)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dr_wins_at_moderate_exponents() {
+        // paper's headline: 1.5–2× speedup at moderate skew (≈1.0 in our
+        // parametrization; see EXPONENTS)
+        let (_, t_dr) = run_point(1.0, 0.1, true);
+        let (_, t_hash) = run_point(1.0, 0.1, false);
+        let speedup = t_hash / t_dr;
+        assert!(speedup > 1.3, "speedup {speedup} too small at exp 1.0");
+    }
+
+    #[test]
+    fn dr_imbalance_below_hash() {
+        let (imb_dr, _) = run_point(1.0, 0.1, true);
+        let (imb_hash, _) = run_point(1.0, 0.1, false);
+        assert!(imb_dr < imb_hash, "{imb_dr} vs {imb_hash}");
+    }
+
+    #[test]
+    fn gains_shrink_at_extreme_exponent() {
+        // at exp 2.0 the heaviest key dominates: speedup must be smaller
+        // than at the sweet spot
+        let (_, t_dr_m) = run_point(1.0, 0.1, true);
+        let (_, t_hash_m) = run_point(1.0, 0.1, false);
+        let (_, t_dr_x) = run_point(2.0, 0.1, true);
+        let (_, t_hash_x) = run_point(2.0, 0.1, false);
+        let mid = t_hash_m / t_dr_m;
+        let extreme = t_hash_x / t_dr_x;
+        assert!(
+            extreme < mid,
+            "speedup at exp 2.0 ({extreme}) should be below exp 1.0 ({mid})"
+        );
+    }
+
+    #[test]
+    fn tables_cover_exponent_range() {
+        let (l, r) = tables(0.01);
+        assert_eq!(l.n_rows(), EXPONENTS.len());
+        assert_eq!(r.n_rows(), EXPONENTS.len());
+    }
+}

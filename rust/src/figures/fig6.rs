@@ -1,0 +1,128 @@
+//! Fig 6 — Flink: relative throughput increase by DR at parallelism 14
+//! and 28 (left), and running-time improvement for 10M records at
+//! parallelism 28 (right), over Zipf exponents.
+//!
+//! The paper's Flink job uses "a reducer that simply stores a count for
+//! each key as task state", 1M keys, sources generating ~57,500 rec/s
+//! each; throughput measured over the first 10 minutes.
+
+use super::setup;
+use crate::ddps::{EngineConfig, StreamingEngine};
+use crate::dr::{DrConfig, PartitionerChoice};
+use crate::util::Table;
+use crate::workload::{zipf::Zipf, Generator};
+
+/// See fig4::EXPONENTS on the parametrization shift vs the paper.
+pub const EXPONENTS: [f64; 7] = [0.8, 1.0, 1.2, 1.4, 1.6, 1.8, 2.0];
+
+fn engine(parallelism: usize, with_dr: bool, seed: u64) -> StreamingEngine {
+    let cfg = EngineConfig {
+        n_partitions: parallelism,
+        n_slots: parallelism,
+        task_overhead: 0.0,
+        ..Default::default()
+    };
+    let (dr, choice) = if with_dr {
+        (DrConfig::default(), PartitionerChoice::Kip)
+    } else {
+        (DrConfig::disabled(), PartitionerChoice::Uhp)
+    };
+    StreamingEngine::new(cfg, dr, choice, seed)
+}
+
+/// Steady-state throughput (records / virtual second) over a 10-interval
+/// run, excluding the warmup interval (the paper measures the first 10
+/// wall-clock minutes; we measure the equivalent steady window).
+pub fn throughput(parallelism: usize, exponent: f64, scale: f64, with_dr: bool) -> f64 {
+    let keys = ((setup::ZIPF_KEYS_SYSTEM as f64) * scale.max(0.1)) as usize;
+    let per_interval = ((1_000_000 as f64) * scale).max(50_000.0) as usize;
+    let mut e = engine(parallelism, with_dr, 11);
+    let mut z = Zipf::new(keys, exponent, 11);
+    let mut records = 0u64;
+    let mut elapsed = 0.0;
+    for i in 0..10 {
+        let r = e.run_interval(&z.batch(per_interval));
+        if i >= 2 {
+            // skip warmup + first repartition
+            records += per_interval as u64;
+            elapsed += r.elapsed;
+        }
+    }
+    records as f64 / elapsed
+}
+
+/// Time to process 10M records (Fig 6 right).
+pub fn running_time(parallelism: usize, exponent: f64, scale: f64, with_dr: bool) -> f64 {
+    let keys = ((setup::ZIPF_KEYS_SYSTEM as f64) * scale.max(0.1)) as usize;
+    let total = ((10_000_000 as f64) * scale).max(200_000.0) as usize;
+    let intervals = 10usize;
+    let mut e = engine(parallelism, with_dr, 13);
+    let mut z = Zipf::new(keys, exponent, 13);
+    for _ in 0..intervals {
+        e.run_interval(&z.batch(total / intervals));
+    }
+    e.vtime()
+}
+
+pub fn tables(scale: f64) -> (Table, Table) {
+    let mut left = Table::new(
+        "Fig 6 (left): relative Flink throughput increase by DR [%]",
+        &["exponent", "par=14", "par=28"],
+    );
+    for &exp in &EXPONENTS {
+        let mut row = vec![exp];
+        for par in [setup::FLINK_PAR_LOW, setup::FLINK_PAR_HIGH] {
+            let with = throughput(par, exp, scale, true);
+            let without = throughput(par, exp, scale, false);
+            row.push((with / without - 1.0) * 100.0);
+        }
+        left.rowf(&row);
+    }
+
+    let mut right = Table::new(
+        "Fig 6 (right): Flink running time for 10M records, par=28 [virtual s]",
+        &["exponent", "Flink DR", "Flink hash", "improvement_%"],
+    );
+    for &exp in &EXPONENTS {
+        let with = running_time(setup::FLINK_PAR_HIGH, exp, scale, true);
+        let without = running_time(setup::FLINK_PAR_HIGH, exp, scale, false);
+        right.rowf(&[exp, with, without, (without / with - 1.0) * 100.0]);
+    }
+    (left, right)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dr_increases_throughput_at_moderate_skew() {
+        let with = throughput(14, 1.0, 0.1, true);
+        let without = throughput(14, 1.0, 0.1, false);
+        assert!(
+            with > without * 1.15,
+            "throughput with DR {with} vs without {without}"
+        );
+    }
+
+    #[test]
+    fn improvement_follows_inverted_u() {
+        // moderate exponents benefit more than the extreme (paper: "we
+        // observe improvement for the moderate exponents")
+        let gain = |exp: f64| {
+            let w = throughput(14, exp, 0.1, true);
+            let wo = throughput(14, exp, 0.1, false);
+            w / wo
+        };
+        let mid = gain(1.0);
+        let extreme = gain(2.0);
+        assert!(mid > extreme, "mid {mid} vs extreme {extreme}");
+    }
+
+    #[test]
+    fn running_time_improves() {
+        let with = running_time(28, 1.0, 0.1, true);
+        let without = running_time(28, 1.0, 0.1, false);
+        assert!(with < without, "{with} vs {without}");
+    }
+}

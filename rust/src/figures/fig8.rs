@@ -1,0 +1,185 @@
+//! Fig 8 — (left) speedup of Spark DR over consecutive crawl rounds;
+//! (right) processing time of the §6 NER streaming application ± DR.
+//!
+//! The NER run is the end-to-end three-layer experiment: documents flow
+//! through the micro-batch engine partitioned by host, and the reducer
+//! cost is *calibrated from the real PJRT scorer* when artifacts are
+//! available (`calibrated_reduce_cost`), anchoring the virtual timeline to
+//! measured compute. Paper: "DR was capable of speeding up the completion
+//! of the NER task by a factor of 6 for all partition configurations"
+//! (40K records, 6 executors × 6 cores).
+
+use super::fig7;
+use crate::ddps::{BatchJob, EngineConfig, MicroBatchEngine};
+use crate::dr::{DrConfig, PartitionerChoice};
+use crate::util::Table;
+use crate::workload::webcrawl::Crawl;
+use crate::workload::{ner::NerGen, Record};
+
+pub const NER_EXECUTORS: usize = 6;
+pub const NER_CORES: usize = 6;
+
+/// Fig 8 left: per-round speedup of DR over hash across the 7 rounds.
+pub fn left(scale: f64) -> Table {
+    let rounds = fig7::run_crawl(scale, fig7::EXECUTORS * fig7::CORES, 99);
+    let mut t = Table::new(
+        "Fig 8 (left): speedup of Spark DR per crawl round",
+        &["round", "speedup", "time_DR", "time_hash"],
+    );
+    for (i, (with, without)) in rounds.iter().enumerate() {
+        t.rowf(&[
+            (i + 1) as f64,
+            without.makespan / with.makespan,
+            with.makespan,
+            without.makespan,
+        ]);
+    }
+    t
+}
+
+/// Mean seconds of NER compute per unit of document weight (token). Uses
+/// the real PJRT scorer if artifacts are built; falls back to a measured
+/// constant otherwise (recorded in EXPERIMENTS.md).
+pub fn calibrated_reduce_cost() -> f64 {
+    if let Ok(arts) = crate::runtime::Artifacts::open_default() {
+        if let Ok(rt) = crate::runtime::Runtime::cpu() {
+            if let Ok(exe) = crate::runtime::NerExecutable::load(&rt, &arts, 128) {
+                if let Ok(per_doc) = exe.calibrate_per_doc_cost(3) {
+                    // weight is tokens; docs in calibration are MAX_LEN long
+                    return per_doc / crate::workload::ner::MAX_LEN as f64;
+                }
+            }
+        }
+    }
+    // fallback: a previously measured interpret-mode cost (~60 µs/doc at
+    // L=128 → ~0.5 µs/token)
+    0.5e-6
+}
+
+/// NER records from round-7 crawl hosts: heavy-tailed host mix.
+pub fn ner_records(n: usize, seed: u64) -> Vec<Record> {
+    let mut crawl = Crawl::with_defaults(seed);
+    let lists = crawl.run();
+    let mut freqs: Vec<(u64, f64)> = Crawl::host_freqs(&lists[6]).into_iter().collect();
+    // HashMap iteration order is process-random; sort for reproducibility
+    freqs.sort_unstable_by_key(|e| e.0);
+    let mut gen = NerGen::new(&freqs, seed);
+    (0..n).map(|_| gen.next_doc().to_record()).collect()
+}
+
+/// Fig 8 right: NER streaming processing time ± DR for several partition
+/// configurations. `reduce_cost` from [`calibrated_reduce_cost`].
+pub fn right(scale: f64, reduce_cost: f64) -> Table {
+    let n_records = ((40_000 as f64) * scale.max(0.05)) as usize;
+    let mut t = Table::new(
+        "Fig 8 (right): NER streaming processing time, 40K records [virtual s]",
+        &["partitions", "Spark DR", "Spark hash", "speedup"],
+    );
+    let slots = NER_EXECUTORS * NER_CORES;
+    for n_partitions in [slots, 2 * slots, 4 * slots] {
+        let cfg = EngineConfig {
+            n_partitions,
+            n_slots: NER_EXECUTORS * NER_CORES,
+            reduce_cost,
+            // migration of NER window state is cheap relative to the model
+            migration_cost: reduce_cost * 0.1,
+            // Spark Streaming reuses executors across micro-batches:
+            // per-task overhead is small next to the NLP compute
+            task_overhead: 5e-3,
+            ..Default::default()
+        };
+        let records = ner_records(n_records, 77);
+        let run = |with_dr: bool| -> f64 {
+            // same sketch budget as the crawl jobs: the host universe is
+            // O(1000), so track λ=4·N hosts with roomy worker counters
+            let (dr, choice) = if with_dr {
+                (
+                    DrConfig {
+                        lambda: 4,
+                        counter_capacity_factor: 16,
+                        ..Default::default()
+                    },
+                    PartitionerChoice::Kip,
+                )
+            } else {
+                (DrConfig::disabled(), PartitionerChoice::Uhp)
+            };
+            let mut engine = MicroBatchEngine::new(cfg, dr, choice, 77);
+            // stream as 8 micro-batches
+            for chunk in records.chunks(records.len().div_ceil(8)) {
+                engine.run_batch(chunk);
+            }
+            engine.metrics().total_vtime
+        };
+        let with = run(true);
+        let without = run(false);
+        t.rowf(&[n_partitions as f64, with, without, without / with]);
+    }
+    t
+}
+
+/// One-shot batch variant used by the webcrawl example for quick output.
+pub fn ner_batch_speedup(scale: f64, reduce_cost: f64) -> (f64, f64, f64) {
+    let n_records = ((40_000 as f64) * scale.max(0.05)) as usize;
+    let cfg = EngineConfig {
+        n_partitions: NER_EXECUTORS * NER_CORES,
+        n_slots: NER_EXECUTORS * NER_CORES,
+        reduce_cost,
+        ..Default::default()
+    };
+    let records = ner_records(n_records, 78);
+    let job = BatchJob::new(cfg, DrConfig::default(), PartitionerChoice::Kip, 78);
+    let (with, without) = job.compare(&records);
+    (
+        with.makespan,
+        without.makespan,
+        without.makespan / with.makespan,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedup_grows_across_rounds() {
+        let t = left(1.0);
+        assert_eq!(t.n_rows(), 7);
+        let rows: Vec<Vec<f64>> = t
+            .to_tsv()
+            .lines()
+            .skip(2)
+            .map(|l| l.split('\t').map(|c| c.parse().unwrap()).collect())
+            .collect();
+        // last round should show a clear speedup
+        assert!(rows[6][1] > 1.3, "round-7 speedup {}", rows[6][1]);
+    }
+
+    #[test]
+    fn ner_dr_speedup_substantial() {
+        // paper reports ~6× for all partition configurations; our linear
+        // cost model (no NLP superlinearity / memory thrash) lands at
+        // ~1.5–2× — DR must clearly win at ≤2× slots, and never lose at
+        // 4× slots where per-batch Poisson noise dominates (40K records
+        // over 144 partitions ≈ 35 docs/partition/batch). Deviation
+        // recorded in EXPERIMENTS.md. 1e-4 s/token ≈ 10 ms per 100-token
+        // doc, a representative real-NER cost.
+        let t = right(1.0, 1e-4);
+        let rows: Vec<Vec<f64>> = t
+            .to_tsv()
+            .lines()
+            .skip(2)
+            .map(|l| l.split('\t').map(|c| c.parse().unwrap()).collect())
+            .collect();
+        assert!(rows[0][3] > 1.3, "speedup {} at partitions {}", rows[0][3], rows[0][0]);
+        assert!(rows[1][3] > 1.05, "speedup {} at partitions {}", rows[1][3], rows[1][0]);
+        assert!(rows[2][3] > 0.95, "speedup {} at partitions {}", rows[2][3], rows[2][0]);
+    }
+
+    #[test]
+    fn batch_variant_consistent() {
+        let (with, without, speedup) = ner_batch_speedup(0.25, 1e-4);
+        assert!(with < without);
+        assert!((speedup - without / with).abs() < 1e-9);
+    }
+}

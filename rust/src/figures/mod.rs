@@ -1,0 +1,36 @@
+//! Experiment drivers — one per figure of the paper's evaluation (§5, §6).
+//!
+//! Each driver regenerates the corresponding figure's series as a
+//! [`Table`](crate::util::Table) (printed and optionally dumped as TSV via
+//! `DYNREPART_OUT`). The bench targets (`cargo bench --bench figN_…`) are
+//! thin wrappers; `EXPERIMENTS.md` records paper-vs-measured for each.
+//!
+//! Every driver takes a `scale` in (0, 1] that shrinks record counts for
+//! quick runs (`cargo test` uses small scales; benches run scale = 1).
+
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+
+/// Shared experiment constants mirroring the paper's setups.
+pub mod setup {
+    /// §5 component tests: ZIPF of 100K distinct items.
+    pub const ZIPF_KEYS_COMPONENT: usize = 100_000;
+    /// §5 Spark/Flink system tests: 1M keys.
+    pub const ZIPF_KEYS_SYSTEM: usize = 1_000_000;
+    /// Fig 3: 20 batches of 100K over 20 partitions, state window 5.
+    pub const LFM_BATCHES: usize = 20;
+    pub const LFM_BATCH_SIZE: usize = 100_000;
+    pub const LFM_PARTITIONS: usize = 20;
+    pub const LFM_STATE_WINDOW: usize = 5;
+    /// Fig 4: 35 partitions over 4 nodes × 10 cores.
+    pub const SPARK_PARTITIONS: usize = 35;
+    pub const SPARK_SLOTS: usize = 40;
+    /// Fig 6: Flink parallelism levels.
+    pub const FLINK_PAR_LOW: usize = 14;
+    pub const FLINK_PAR_HIGH: usize = 28;
+}

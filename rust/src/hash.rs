@@ -1,0 +1,140 @@
+//! Hashing primitives.
+//!
+//! The paper generates word tokens with MurmurHash3 (§5, Spark evaluation)
+//! and both Spark and Flink use murmur-style finalizers in their default
+//! partitioners, so we implement MurmurHash3 x86_32 (for string keys) and
+//! the 64-bit fmix finalizer (for integer keys) from scratch.
+
+/// MurmurHash3 x86_32 over arbitrary bytes (Austin Appleby's reference).
+pub fn murmur3_32(data: &[u8], seed: u32) -> u32 {
+    const C1: u32 = 0xcc9e_2d51;
+    const C2: u32 = 0x1b87_3593;
+    let mut h1 = seed;
+    let n_blocks = data.len() / 4;
+
+    for i in 0..n_blocks {
+        let mut k1 = u32::from_le_bytes([
+            data[i * 4],
+            data[i * 4 + 1],
+            data[i * 4 + 2],
+            data[i * 4 + 3],
+        ]);
+        k1 = k1.wrapping_mul(C1);
+        k1 = k1.rotate_left(15);
+        k1 = k1.wrapping_mul(C2);
+        h1 ^= k1;
+        h1 = h1.rotate_left(13);
+        h1 = h1.wrapping_mul(5).wrapping_add(0xe654_6b64);
+    }
+
+    let tail = &data[n_blocks * 4..];
+    let mut k1: u32 = 0;
+    if !tail.is_empty() {
+        if tail.len() >= 3 {
+            k1 ^= (tail[2] as u32) << 16;
+        }
+        if tail.len() >= 2 {
+            k1 ^= (tail[1] as u32) << 8;
+        }
+        k1 ^= tail[0] as u32;
+        k1 = k1.wrapping_mul(C1);
+        k1 = k1.rotate_left(15);
+        k1 = k1.wrapping_mul(C2);
+        h1 ^= k1;
+    }
+
+    h1 ^= data.len() as u32;
+    fmix32(h1)
+}
+
+/// Murmur3 32-bit finalizer.
+#[inline]
+pub fn fmix32(mut h: u32) -> u32 {
+    h ^= h >> 16;
+    h = h.wrapping_mul(0x85eb_ca6b);
+    h ^= h >> 13;
+    h = h.wrapping_mul(0xc2b2_ae35);
+    h ^= h >> 16;
+    h
+}
+
+/// Murmur3 64-bit finalizer — the fast path for integer keys.
+#[inline]
+pub fn fmix64(mut k: u64) -> u64 {
+    k ^= k >> 33;
+    k = k.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    k ^= k >> 33;
+    k = k.wrapping_mul(0xc4ce_b9fe_1a85_ec53);
+    k ^= k >> 33;
+    k
+}
+
+/// Hash a u64 key with a seed (seed folds into the finalizer input).
+#[inline]
+pub fn hash_u64(key: u64, seed: u64) -> u64 {
+    fmix64(key ^ seed.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// Map a hash uniformly onto `[0, n)` without modulo bias.
+#[inline]
+pub fn bucket(hash: u64, n: usize) -> usize {
+    (((hash as u128) * (n as u128)) >> 64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn murmur3_reference_vectors() {
+        // Canonical test vectors for MurmurHash3 x86_32.
+        assert_eq!(murmur3_32(b"", 0), 0);
+        assert_eq!(murmur3_32(b"", 1), 0x514E_28B7);
+        assert_eq!(murmur3_32(b"test", 0), 0xba6b_d213);
+        assert_eq!(murmur3_32(b"Hello, world!", 0), 0xc036_3e43);
+        assert_eq!(murmur3_32(b"The quick brown fox jumps over the lazy dog", 0), 0x2e4f_f723);
+    }
+
+    #[test]
+    fn fmix64_bijective_sample() {
+        // fmix64 is a bijection; distinct inputs give distinct outputs.
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..10_000u64 {
+            assert!(seen.insert(fmix64(i)));
+        }
+    }
+
+    #[test]
+    fn bucket_in_range_and_covers() {
+        let n = 7;
+        let mut seen = vec![false; n];
+        for i in 0..100_000u64 {
+            let b = bucket(hash_u64(i, 0), n);
+            assert!(b < n);
+            seen[b] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn bucket_roughly_uniform() {
+        let n = 16;
+        let mut counts = vec![0f64; n];
+        let trials = 160_000u64;
+        for i in 0..trials {
+            counts[bucket(hash_u64(i, 42), n)] += 1.0;
+        }
+        let exp = trials as f64 / n as f64;
+        for c in counts {
+            assert!((c - exp).abs() / exp < 0.05, "c={c} exp={exp}");
+        }
+    }
+
+    #[test]
+    fn seeds_decorrelate() {
+        let a: Vec<usize> = (0..1000).map(|i| bucket(hash_u64(i, 1), 10)).collect();
+        let b: Vec<usize> = (0..1000).map(|i| bucket(hash_u64(i, 2), 10)).collect();
+        let same = a.iter().zip(&b).filter(|(x, y)| x == y).count();
+        assert!(same < 200, "same={same}"); // ~10% expected
+    }
+}

@@ -1,0 +1,33 @@
+//! # dynrepart — System-aware dynamic partitioning for batch and streaming
+//!
+//! A from-scratch reproduction of Zvara et al., *"System-aware dynamic
+//! partitioning for batch and streaming workloads"* (2021) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the Dynamic Repartitioning framework ([`dr`]),
+//!   the Key Isolator Partitioner and baselines ([`partitioner`]), the
+//!   heavy-hitter sketches ([`sketch`]), and the mini-DDPS substrate
+//!   ([`ddps`]) with micro-batch (spark-like) and continuous (flink-like)
+//!   engines, keyed state with migration ([`state`]), and the workload
+//!   generators of the paper's evaluation ([`workload`]).
+//! - **L2/L1 (python, build-time only)** — the §6 NER reducer compute,
+//!   AOT-lowered to HLO text and executed from rust through [`runtime`]
+//!   (PJRT CPU via the `xla` crate).
+//!
+//! Every figure of the paper's evaluation has a driver in [`figures`] and
+//! a bench target (`cargo bench --bench fig…`); see `DESIGN.md` for the
+//! per-experiment index and `EXPERIMENTS.md` for paper-vs-measured.
+
+pub mod bench;
+pub mod ddps;
+pub mod dr;
+pub mod figures;
+pub mod hash;
+pub mod ner;
+pub mod partitioner;
+pub mod prop;
+pub mod runtime;
+pub mod sketch;
+pub mod state;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,102 @@
+//! dynrepart CLI — run experiments and inspect the system from one binary.
+//!
+//!   dynrepart fig <2|3|4|5|6|7|8>   regenerate a paper figure (quick scale)
+//!   dynrepart bench-partitioners    micro-bench partitioner updates
+//!   dynrepart quickstart            the README demo
+//!   dynrepart artifacts             check AOT artifacts + PJRT runtime
+
+use dynrepart::figures::*;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("fig") => {
+            let which = args.get(1).map(|s| s.as_str()).unwrap_or("");
+            let scale: f64 = args
+                .get(2)
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0.25);
+            match which {
+                "2" => {
+                    fig2::left(5, scale).emit("fig2_left");
+                    fig2::right(5, scale).emit("fig2_right");
+                }
+                "3" => {
+                    let (l, r) = fig3::tables(3, scale);
+                    l.emit("fig3_left");
+                    r.emit("fig3_right");
+                    fig3::summary(3, scale).emit("fig3_summary");
+                }
+                "4" => {
+                    let (l, r) = fig4::tables(scale);
+                    l.emit("fig4_left");
+                    r.emit("fig4_right");
+                }
+                "5" => {
+                    let (l, r) = fig5::tables(scale);
+                    l.emit("fig5_left");
+                    r.emit("fig5_right");
+                }
+                "6" => {
+                    let (l, r) = fig6::tables(scale);
+                    l.emit("fig6_left");
+                    r.emit("fig6_right");
+                }
+                "7" => {
+                    fig7::left(scale).emit("fig7_left");
+                    fig7::right(scale).emit("fig7_right");
+                }
+                "8" => {
+                    fig8::left(scale).emit("fig8_left");
+                    let c = fig8::calibrated_reduce_cost();
+                    fig8::right(scale, c.max(1e-5)).emit("fig8_right");
+                }
+                _ => {
+                    eprintln!("usage: dynrepart fig <2..8> [scale]");
+                    std::process::exit(2);
+                }
+            }
+        }
+        Some("artifacts") => match dynrepart::runtime::Artifacts::open_default() {
+            Ok(arts) => {
+                println!("artifacts dir: {}", arts.dir.display());
+                for name in arts.manifest.names() {
+                    let e = arts.manifest.get(name).unwrap();
+                    println!("  {name}: {} inputs, {} outputs", e.inputs.len(), e.n_outputs);
+                }
+                match dynrepart::runtime::Runtime::cpu() {
+                    Ok(rt) => println!("PJRT: {} OK", rt.platform()),
+                    Err(e) => println!("PJRT unavailable: {e}"),
+                }
+            }
+            Err(e) => {
+                eprintln!("no artifacts ({e}); run `make artifacts`");
+                std::process::exit(1);
+            }
+        },
+        Some("quickstart") => {
+            let cfg = dynrepart::ddps::EngineConfig {
+                n_partitions: 35,
+                n_slots: 40,
+                ..Default::default()
+            };
+            for (label, dr, choice) in [
+                ("hash", dynrepart::dr::DrConfig::disabled(), dynrepart::dr::PartitionerChoice::Uhp),
+                ("DR", dynrepart::dr::DrConfig::default(), dynrepart::dr::PartitionerChoice::Kip),
+            ] {
+                let mut engine = dynrepart::ddps::MicroBatchEngine::new(cfg, dr, choice, 1);
+                let mut z = dynrepart::workload::zipf::Zipf::new(100_000, 1.0, 1);
+                use dynrepart::workload::Generator;
+                for _ in 0..8 {
+                    engine.run_batch(&z.batch(100_000));
+                }
+                println!("{label}: {:.3} virtual s", engine.metrics().total_vtime);
+            }
+        }
+        _ => {
+            eprintln!("dynrepart — System-aware dynamic partitioning (Zvara et al. 2021)");
+            eprintln!("usage: dynrepart <fig 2..8 [scale] | artifacts | quickstart>");
+            std::process::exit(2);
+        }
+    }
+}

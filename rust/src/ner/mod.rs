@@ -1,0 +1,176 @@
+//! The §6 NER streaming application: host-partitioned entity recognition
+//! with windowed frequent-mention aggregation.
+//!
+//! "a NER model is used to calculate frequent mentions of the recognized
+//! entities in 60-minute time windows. Here, we partition by host ...
+//! Calculating frequent mentions requires sorting of entities within the
+//! time window and a mutable update of state per domain key."
+//!
+//! [`EntityWindows`] is the reducer state: per-host, per-window class
+//! histograms with top-k "frequent mentions" queries. The heavy compute
+//! (the scorer) is the AOT artifact executed through
+//! [`crate::runtime::NerExecutable`]; this module is pure L3 state logic
+//! and therefore testable without artifacts.
+
+use crate::workload::Key;
+use std::collections::HashMap;
+
+pub const N_CLASSES: usize = 9;
+
+/// Human-readable class names (BIO tagging over 4 entity types).
+pub const CLASS_NAMES: [&str; N_CLASSES] = [
+    "O", "B-PER", "I-PER", "B-ORG", "I-ORG", "B-LOC", "I-LOC", "B-MISC", "I-MISC",
+];
+
+/// Windowed per-host entity statistics — the mutable reducer state.
+#[derive(Debug, Clone)]
+pub struct EntityWindows {
+    /// Window length in event-time units.
+    window: u64,
+    /// (host, window index) -> class histogram.
+    state: HashMap<(Key, u64), [f64; N_CLASSES]>,
+    /// Documents folded per host (all windows).
+    docs_per_host: HashMap<Key, u64>,
+}
+
+impl EntityWindows {
+    pub fn new(window: u64) -> Self {
+        assert!(window > 0);
+        Self {
+            window,
+            state: HashMap::new(),
+            docs_per_host: HashMap::new(),
+        }
+    }
+
+    pub fn window_of(&self, ts: u64) -> u64 {
+        ts / self.window
+    }
+
+    /// Fold one scored document (class histogram contribution) into the
+    /// host's current window.
+    pub fn fold(&mut self, host: Key, ts: u64, class_hist: &[f64; N_CLASSES]) {
+        let w = self.window_of(ts);
+        let slot = self.state.entry((host, w)).or_insert([0.0; N_CLASSES]);
+        for (a, b) in slot.iter_mut().zip(class_hist) {
+            *a += b;
+        }
+        *self.docs_per_host.entry(host).or_insert(0) += 1;
+    }
+
+    /// Fold a batch-level histogram (from `NerOutput.class_hist`).
+    pub fn fold_batch(&mut self, host: Key, ts: u64, class_hist: &[f32]) {
+        assert_eq!(class_hist.len(), N_CLASSES);
+        let mut h = [0.0f64; N_CLASSES];
+        for (i, v) in class_hist.iter().enumerate() {
+            h[i] = *v as f64;
+        }
+        self.fold(host, ts, &h);
+    }
+
+    /// "Frequent mentions": the top-k classes of a host's window, sorted
+    /// by mention weight (requires sorting within the window — the paper's
+    /// stateful, compute-heavy reducer behaviour).
+    pub fn frequent_mentions(&self, host: Key, ts: u64, k: usize) -> Vec<(&'static str, f64)> {
+        let w = self.window_of(ts);
+        let Some(hist) = self.state.get(&(host, w)) else {
+            return Vec::new();
+        };
+        let mut v: Vec<(usize, f64)> = hist
+            .iter()
+            .cloned()
+            .enumerate()
+            .filter(|&(c, x)| c != 0 && x > 0.0) // class 0 is "O" (non-entity)
+            .collect();
+        v.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        v.truncate(k);
+        v.into_iter().map(|(c, x)| (CLASS_NAMES[c], x)).collect()
+    }
+
+    pub fn n_hosts(&self) -> usize {
+        self.docs_per_host.len()
+    }
+
+    pub fn docs_for(&self, host: Key) -> u64 {
+        self.docs_per_host.get(&host).cloned().unwrap_or(0)
+    }
+
+    /// Drop windows older than `ts - retain` (event-time GC).
+    pub fn evict_before(&mut self, ts: u64, retain: u64) {
+        let min_w = self.window_of(ts.saturating_sub(retain));
+        self.state.retain(|&(_, w), _| w >= min_w);
+    }
+
+    /// State weight for migration accounting: linear in entries.
+    pub fn state_weight(&self) -> f64 {
+        self.state.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hist(class: usize, w: f64) -> [f64; N_CLASSES] {
+        let mut h = [0.0; N_CLASSES];
+        h[class] = w;
+        h
+    }
+
+    #[test]
+    fn fold_and_query() {
+        let mut ew = EntityWindows::new(3600);
+        ew.fold(1, 100, &hist(1, 5.0)); // B-PER
+        ew.fold(1, 200, &hist(3, 9.0)); // B-ORG
+        ew.fold(1, 300, &hist(1, 2.0));
+        let top = ew.frequent_mentions(1, 300, 2);
+        assert_eq!(top, vec![("B-ORG", 9.0), ("B-PER", 7.0)]);
+    }
+
+    #[test]
+    fn windows_are_disjoint() {
+        let mut ew = EntityWindows::new(100);
+        ew.fold(1, 50, &hist(1, 1.0));
+        ew.fold(1, 150, &hist(1, 10.0));
+        assert_eq!(ew.frequent_mentions(1, 50, 5), vec![("B-PER", 1.0)]);
+        assert_eq!(ew.frequent_mentions(1, 150, 5), vec![("B-PER", 10.0)]);
+    }
+
+    #[test]
+    fn o_class_excluded_from_mentions() {
+        let mut ew = EntityWindows::new(100);
+        ew.fold(7, 10, &hist(0, 100.0)); // O
+        ew.fold(7, 10, &hist(2, 1.0)); // I-PER
+        assert_eq!(ew.frequent_mentions(7, 10, 5), vec![("I-PER", 1.0)]);
+    }
+
+    #[test]
+    fn hosts_are_isolated() {
+        let mut ew = EntityWindows::new(100);
+        ew.fold(1, 10, &hist(1, 1.0));
+        ew.fold(2, 10, &hist(3, 1.0));
+        assert_eq!(ew.frequent_mentions(1, 10, 5)[0].0, "B-PER");
+        assert_eq!(ew.frequent_mentions(2, 10, 5)[0].0, "B-ORG");
+        assert_eq!(ew.n_hosts(), 2);
+    }
+
+    #[test]
+    fn eviction_drops_old_windows() {
+        let mut ew = EntityWindows::new(100);
+        ew.fold(1, 10, &hist(1, 1.0));
+        ew.fold(1, 1000, &hist(1, 1.0));
+        assert_eq!(ew.state_weight(), 2.0);
+        ew.evict_before(1000, 200);
+        assert_eq!(ew.state_weight(), 1.0);
+        assert!(ew.frequent_mentions(1, 10, 5).is_empty());
+    }
+
+    #[test]
+    fn fold_batch_f32_bridge() {
+        let mut ew = EntityWindows::new(100);
+        let mut h = [0.0f32; N_CLASSES];
+        h[5] = 4.5; // B-LOC
+        ew.fold_batch(9, 42, &h);
+        assert_eq!(ew.frequent_mentions(9, 42, 1), vec![("B-LOC", 4.5)]);
+    }
+}

@@ -1,0 +1,452 @@
+//! The **Key Isolator Partitioner** and its update rule — Algorithm 1 of
+//! the paper, implemented line by line.
+//!
+//! KIP is "a heuristic combination of an explicit hashing for the heaviest
+//! keys and a weighted hash partitioner for filling up the partitions to
+//! roughly the same load", with updates that "make minimal modifications
+//! to the previous partitioner to reduce migration costs".
+
+use super::{Partitioner, WeightedHash};
+use crate::sketch::Histogram;
+use crate::workload::Key;
+use crate::util::keymap::{key_map_with_capacity, KeyMap};
+
+#[derive(Debug, Clone, Copy)]
+pub struct KipConfig {
+    /// Global histogram scale factor λ: the DRM gathers the top B = λN keys
+    /// (§4). The paper sets λ = 2 in its experiments and sweeps {1,2,3,4}
+    /// in Fig 2 (right).
+    pub lambda: usize,
+    /// Slack ε on the ideal maximal load (Algorithm 1, line 1).
+    pub epsilon: f64,
+    /// Hosts per partition for the weighted hash (H = this × N, H ≫ N).
+    pub hosts_per_partition: usize,
+}
+
+impl Default for KipConfig {
+    fn default() -> Self {
+        Self {
+            lambda: 2,
+            epsilon: 0.01,
+            hosts_per_partition: super::weighted::DEFAULT_HOSTS_PER_PARTITION,
+        }
+    }
+}
+
+impl KipConfig {
+    pub fn histogram_size(&self, n_partitions: usize) -> usize {
+        self.lambda * n_partitions
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Kip {
+    /// Explicit routing table for the isolated heavy keys — O(λN) entries,
+    /// fmix64-hashed (hot path: one lookup per record).
+    explicit: KeyMap<u32>,
+    /// Weighted hash for everything else.
+    hash: WeightedHash,
+    cfg: KipConfig,
+}
+
+impl Kip {
+    /// The partitioner before any histogram is known: empty routing table,
+    /// balanced host map — behaviourally a uniform hash partitioner.
+    pub fn initial(n_partitions: usize, cfg: KipConfig, seed: u64) -> Self {
+        Self {
+            explicit: KeyMap::default(),
+            hash: WeightedHash::balanced(
+                n_partitions,
+                n_partitions * cfg.hosts_per_partition,
+                seed,
+            ),
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> KipConfig {
+        self.cfg
+    }
+
+    pub fn weighted_hash(&self) -> &WeightedHash {
+        &self.hash
+    }
+
+    pub fn explicit_table(&self) -> &KeyMap<u32> {
+        &self.explicit
+    }
+
+    /// **KIPUPDATE** (Algorithm 1).
+    ///
+    /// * `prev` — KI, the partitioner of the previous stage (line 4 reads
+    ///   key locations from it; on the very first update this is the UHP).
+    /// * `hash` — the weighted hash whose host map the update starts from
+    ///   and rebalances (lines 11–15).
+    /// * `hist` — the merged global histogram, decreasing frequency.
+    pub fn update(
+        prev: &dyn Partitioner,
+        hash: &WeightedHash,
+        hist: &Histogram,
+        cfg: KipConfig,
+    ) -> Self {
+        let n = hash.n_partitions();
+        let h = hash.n_hosts() as f64;
+        assert_eq!(prev.n_partitions(), n, "partition count change not supported here");
+
+        // line 1: allowed level
+        let maxload = (1.0 / n as f64).max(hist.top_freq()) + cfg.epsilon;
+        // line 2: average host load
+        let hostload = (1.0 - hist.heavy_mass()).max(0.0) / h;
+
+        let mut load = vec![0.0f64; n];
+        let mut explicit: KeyMap<u32> = key_map_with_capacity(hist.len());
+
+        // lines 3–10: place heavy keys by decreasing frequency
+        for e in hist.entries() {
+            let (k, f) = (e.key, e.freq);
+            // line 4: try to place k into the same partition as before
+            let p = prev.partition(k);
+            if load[p] < maxload - f {
+                load[p] += f;
+                explicit.insert(k, p as u32);
+                continue;
+            }
+            // line 7: try the hash location (its future home if it cools
+            // down) to reduce potential migration later
+            let p = hash.partition(k);
+            if load[p] < maxload - f {
+                load[p] += f;
+                explicit.insert(k, p as u32);
+                continue;
+            }
+            // line 10: put k explicitly into the lowest-load partition
+            let (p, _) = load
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.total_cmp(b.1))
+                .expect("n > 0");
+            load[p] += f;
+            explicit.insert(k, p as u32);
+        }
+
+        // lines 11–13: add tail mass — HOSTLOAD × hosts mapped to p
+        let mut new_hash = hash.clone();
+        let mut hosts_in: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for host in 0..new_hash.n_hosts() {
+            hosts_in[new_hash.partition_of_host(host)].push(host);
+        }
+        for p in 0..n {
+            load[p] += hostload * hosts_in[p].len() as f64;
+        }
+
+        // lines 14–15: greedy bin packing — move hosts off overloaded
+        // partitions into partitions with room (load < MAXLOAD − HOSTLOAD).
+        // Hosts are popped in canonical (descending-index) order so that
+        // successive updates under similar loads move the *same* hosts —
+        // placement hysteresis that keeps tail-state migration low (Fig 3).
+        if hostload > 0.0 {
+            for h in hosts_in.iter_mut() {
+                h.sort_unstable();
+            }
+            for p in 0..n {
+                while load[p] > maxload && !hosts_in[p].is_empty() {
+                    // lowest-load target with room for one more host
+                    let target = (0..n)
+                        .filter(|&q| q != p)
+                        .min_by(|&a, &b| load[a].total_cmp(&load[b]))
+                        .filter(|&q| load[q] < maxload - hostload);
+                    let Some(q) = target else { break };
+                    let host = hosts_in[p].pop().expect("non-empty");
+                    new_hash.set_host(host, q);
+                    hosts_in[q].push(host);
+                    load[p] -= hostload;
+                    load[q] += hostload;
+                }
+            }
+            // Even filling: "a weighted hash partitioner for filling up the
+            // partitions to roughly the same load" (§4). Keep moving single
+            // hosts from the fullest to the emptiest partition while the
+            // spread exceeds a hysteresis band: tight enough for Fig 2's
+            // flat balance (band ≈ ε keeps imbalance ≤ 1 + εN), wide enough
+            // that drift/sampling wiggle in the heavy-key frequencies does
+            // not re-shuffle hosts at every update (Fig 3 migration). Each
+            // move shifts ~HOSTLOAD → O(H) termination.
+            let band = (3.0 * hostload).max(cfg.epsilon);
+            loop {
+                let pmax = (0..n).max_by(|&a, &b| load[a].total_cmp(&load[b])).unwrap();
+                let pmin = (0..n).min_by(|&a, &b| load[a].total_cmp(&load[b])).unwrap();
+                if load[pmax] - load[pmin] <= band || hosts_in[pmax].is_empty() {
+                    break;
+                }
+                let host = hosts_in[pmax].pop().expect("non-empty");
+                new_hash.set_host(host, pmin);
+                hosts_in[pmin].push(host);
+                load[pmax] -= hostload;
+                load[pmin] += hostload;
+            }
+        }
+
+        // line 16: the new partitioning function
+        Self {
+            explicit,
+            hash: new_hash,
+            cfg,
+        }
+    }
+
+    /// Update using `self` as the previous partitioner (the common case in
+    /// a long-running job).
+    pub fn updated(&self, hist: &Histogram) -> Self {
+        Self::update(self, &self.hash, hist, self.cfg)
+    }
+
+    /// Planned per-partition load this update computed for itself, given a
+    /// histogram (recomputed; used by tests and the DRM's decision logic).
+    pub fn planned_loads(&self, hist: &Histogram) -> Vec<f64> {
+        let n = self.n_partitions();
+        let mut load = vec![0.0; n];
+        for e in hist.entries() {
+            if let Some(&p) = self.explicit.get(&e.key) {
+                load[p as usize] += e.freq;
+            } else {
+                load[self.hash.partition(e.key)] += e.freq;
+            }
+        }
+        let hostload = (1.0 - hist.heavy_mass()).max(0.0) / self.hash.n_hosts() as f64;
+        for (p, &c) in self.hash.hosts_per_partition().iter().enumerate() {
+            load[p] += hostload * c as f64;
+        }
+        load
+    }
+}
+
+impl Partitioner for Kip {
+    #[inline]
+    fn partition(&self, key: Key) -> usize {
+        match self.explicit.get(&key) {
+            Some(&p) => p as usize,
+            None => self.hash.partition(key),
+        }
+    }
+
+    fn n_partitions(&self) -> usize {
+        self.hash.n_partitions()
+    }
+
+    fn explicit_routes(&self) -> usize {
+        self.explicit.len()
+    }
+
+    fn tail_shares(&self) -> Vec<f64> {
+        self.hash.tail_shares()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partitioner::{migration_fraction, partition_loads, Uhp};
+    use crate::util::load_imbalance;
+    use crate::workload::{zipf::Zipf, Generator, Record};
+
+    fn zipf_records(n_keys: usize, exp: f64, n: usize, seed: u64) -> Vec<Record> {
+        let mut z = Zipf::new(n_keys, exp, seed);
+        z.batch(n)
+    }
+
+    fn key_weights(recs: &[Record]) -> Vec<(Key, f64)> {
+        let mut m: std::collections::HashMap<Key, f64> = Default::default();
+        for r in recs {
+            *m.entry(r.key).or_insert(0.0) += r.weight;
+        }
+        m.into_iter().collect()
+    }
+
+    #[test]
+    fn initial_kip_behaves_like_hash() {
+        let kip = Kip::initial(8, KipConfig::default(), 1);
+        assert_eq!(kip.explicit_routes(), 0);
+        let kw: Vec<(Key, f64)> = (0..100_000u64).map(|k| (k, 1.0)).collect();
+        let imb = load_imbalance(&partition_loads(&kip, &kw));
+        assert!(imb < 1.05, "imb={imb}");
+    }
+
+    #[test]
+    fn update_isolates_heavy_keys() {
+        let n = 10;
+        let cfg = KipConfig::default();
+        let recs = zipf_records(10_000, 1.2, 200_000, 2);
+        let hist = Histogram::exact(&recs, cfg.histogram_size(n));
+        let prev = Uhp::new(n);
+        let base = WeightedHash::with_default_hosts(n, 3);
+        let kip = Kip::update(&prev, &base, &hist, cfg);
+        assert_eq!(kip.explicit_routes(), hist.len());
+        // all heavy keys routed to a valid partition
+        for e in hist.entries() {
+            assert!(kip.partition(e.key) < n);
+        }
+    }
+
+    #[test]
+    fn planned_load_within_maxload_when_feasible() {
+        // exp 1.0, many keys: top freq << 1, so a near-perfect packing exists
+        let n = 10;
+        let cfg = KipConfig { lambda: 4, ..Default::default() };
+        let recs = zipf_records(100_000, 1.0, 400_000, 4);
+        let hist = Histogram::exact(&recs, cfg.histogram_size(n));
+        let kip = Kip::update(
+            &Uhp::new(n),
+            &WeightedHash::with_default_hosts(n, 5),
+            &hist,
+            cfg,
+        );
+        let maxload = (1.0 / n as f64).max(hist.top_freq()) + cfg.epsilon;
+        let hostload = (1.0 - hist.heavy_mass()).max(0.0)
+            / kip.weighted_hash().n_hosts() as f64;
+        for (p, l) in kip.planned_loads(&hist).iter().enumerate() {
+            assert!(
+                *l <= maxload + hostload + 1e-9,
+                "partition {p} planned load {l} > maxload {maxload}"
+            );
+        }
+    }
+
+    #[test]
+    fn beats_hash_on_skewed_data() {
+        let n = 20;
+        let cfg = KipConfig::default();
+        let recs = zipf_records(100_000, 1.0, 400_000, 6);
+        let kw = key_weights(&recs);
+        let hist = Histogram::exact(&recs, cfg.histogram_size(n));
+        let uhp = Uhp::new(n);
+        let kip = Kip::update(&uhp, &WeightedHash::with_default_hosts(n, 7), &hist, cfg);
+        let imb_hash = load_imbalance(&partition_loads(&uhp, &kw));
+        let imb_kip = load_imbalance(&partition_loads(&kip, &kw));
+        assert!(
+            imb_kip < imb_hash - 0.3,
+            "KIP {imb_kip} not clearly better than hash {imb_hash}"
+        );
+        // the heaviest key alone forces imbalance ≥ top_freq·N ≈ 1.65 here;
+        // KIP should be close to that floor
+        assert!(imb_kip < 2.0, "imb_kip={imb_kip}");
+    }
+
+    #[test]
+    fn stable_histogram_causes_no_migration() {
+        // Two consecutive updates with the same histogram: the second must
+        // keep every heavy key in place (line 4 always succeeds) and not
+        // touch the host map.
+        let n = 8;
+        let cfg = KipConfig::default();
+        let recs = zipf_records(50_000, 1.1, 200_000, 8);
+        let hist = Histogram::exact(&recs, cfg.histogram_size(n));
+        let kip1 = Kip::update(
+            &Uhp::new(n),
+            &WeightedHash::with_default_hosts(n, 9),
+            &hist,
+            cfg,
+        );
+        let kip2 = kip1.updated(&hist);
+        let kw = key_weights(&recs);
+        let mig = migration_fraction(&kip1, &kip2, &kw);
+        assert!(
+            mig < 1e-9,
+            "stationary distribution migrated {mig} of state"
+        );
+    }
+
+    #[test]
+    fn heaviest_key_gets_isolated_partition_when_dominant() {
+        // One key with 60% mass: MAXLOAD ≈ 0.6+ε, so nothing else fits
+        // beside it only if loads stay under; tail hosts must drain away
+        // from its partition.
+        let n = 4;
+        let cfg = KipConfig::default();
+        let mut kw: Vec<(Key, f64)> = vec![(42, 0.6)];
+        for k in 0..1000u64 {
+            kw.push((k + 100, 0.4 / 1000.0));
+        }
+        let hist = Histogram::from_freqs(&[(42, 0.6)], 1.0);
+        let kip = Kip::update(
+            &Uhp::new(n),
+            &WeightedHash::with_default_hosts(n, 10),
+            &hist,
+            cfg,
+        );
+        let p_heavy = kip.partition(42);
+        let loads = partition_loads(&kip, &kw);
+        // heavy partition should carry ~0.6 and little tail
+        assert!(loads[p_heavy] < 0.7, "heavy partition overfilled: {loads:?}");
+        // others share the 0.4 tail
+        let others: f64 = loads
+            .iter()
+            .enumerate()
+            .filter(|(p, _)| *p != p_heavy)
+            .map(|(_, l)| *l)
+            .sum();
+        assert!(others > 0.3, "tail not spread: {loads:?}");
+    }
+
+    #[test]
+    fn empty_histogram_update_is_identity_ish() {
+        let n = 6;
+        let cfg = KipConfig::default();
+        let base = WeightedHash::with_default_hosts(n, 11);
+        let kip = Kip::update(&Uhp::new(n), &base, &Histogram::empty(), cfg);
+        assert_eq!(kip.explicit_routes(), 0);
+        assert_eq!(kip.weighted_hash(), &base);
+    }
+
+    #[test]
+    fn drifted_histogram_reroutes_minimally() {
+        // Old heavy key cools down, new heavy key appears; the cooled key
+        // must leave the explicit table, the hot one must enter.
+        let n = 8;
+        let cfg = KipConfig::default();
+        let hist1 = Histogram::from_freqs(&[(1, 0.3), (2, 0.2)], 1.0);
+        let kip1 = Kip::update(
+            &Uhp::new(n),
+            &WeightedHash::with_default_hosts(n, 12),
+            &hist1,
+            cfg,
+        );
+        let hist2 = Histogram::from_freqs(&[(3, 0.3), (1, 0.2)], 1.0);
+        let kip2 = kip1.updated(&hist2);
+        assert!(kip2.explicit_table().contains_key(&3));
+        assert!(kip2.explicit_table().contains_key(&1));
+        assert!(!kip2.explicit_table().contains_key(&2));
+        // key 1 should not have moved (line 4 keeps it in place)
+        assert_eq!(kip1.partition(1), kip2.partition(1));
+    }
+
+    #[test]
+    fn higher_lambda_improves_balance() {
+        // Fig 2 (right): KIP reaches better load balance for higher λ.
+        // Averaged over seeds at n=8 where the top key does not pin the
+        // max load (beyond ~1/top_freq partitions no λ can help — the
+        // heaviest key alone sets the floor).
+        let n = 8;
+        let mut avg = [0.0f64; 2];
+        for seed in 0..5u64 {
+            let recs = zipf_records(100_000, 1.0, 400_000, 13 + seed);
+            let kw = key_weights(&recs);
+            for (i, lambda) in [1usize, 4].into_iter().enumerate() {
+                let cfg = KipConfig { lambda, ..Default::default() };
+                let hist = Histogram::exact(&recs, cfg.histogram_size(n));
+                let kip = Kip::update(
+                    &Uhp::new(n),
+                    &WeightedHash::with_default_hosts(n, 14),
+                    &hist,
+                    cfg,
+                );
+                avg[i] += load_imbalance(&partition_loads(&kip, &kw)) / 5.0;
+            }
+        }
+        assert!(
+            avg[1] <= avg[0] + 0.02,
+            "λ=4 ({}) should not be worse than λ=1 ({})",
+            avg[1],
+            avg[0]
+        );
+    }
+}

@@ -1,0 +1,108 @@
+//! State-migration cost between two partitioning functions.
+//!
+//! When the partitioner changes, every key routed to a different partition
+//! drags its operator state with it (§3: "repartitioning incurs state
+//! migration, hence the gains for repartitioning should exceed state
+//! migration costs"). Fig 3 (right) reports **relative state migration**:
+//! the fraction of total state weight that moves at an update. The paper
+//! assumes "states linear in the size of the corresponding keygroups".
+
+use super::Partitioner;
+use crate::workload::Key;
+
+/// Fraction of state (by weight) that must move when switching from `old`
+/// to `new`, over the given per-key state weights.
+pub fn migration_fraction<A: Partitioner + ?Sized, B: Partitioner + ?Sized>(
+    old: &A,
+    new: &B,
+    state_weights: &[(Key, f64)],
+) -> f64 {
+    assert_eq!(old.n_partitions(), new.n_partitions());
+    let mut total = 0.0;
+    let mut moved = 0.0;
+    for &(k, w) in state_weights {
+        total += w;
+        if old.partition(k) != new.partition(k) {
+            moved += w;
+        }
+    }
+    if total <= 0.0 {
+        0.0
+    } else {
+        moved / total
+    }
+}
+
+/// Detailed migration plan: which keys move where (used by the streaming
+/// engine to actually transfer state at a checkpoint barrier).
+pub fn migration_plan<A: Partitioner + ?Sized, B: Partitioner + ?Sized>(
+    old: &A,
+    new: &B,
+    keys: impl IntoIterator<Item = Key>,
+) -> Vec<(Key, usize, usize)> {
+    let mut plan = Vec::new();
+    for k in keys {
+        let (from, to) = (old.partition(k), new.partition(k));
+        if from != to {
+            plan.push((k, from, to));
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partitioner::Uhp;
+
+    #[test]
+    fn identical_partitioners_zero_migration() {
+        let p = Uhp::new(8);
+        let sw: Vec<(Key, f64)> = (0..1000u64).map(|k| (k, 1.0)).collect();
+        assert_eq!(migration_fraction(&p, &p, &sw), 0.0);
+        assert!(migration_plan(&p, &p, 0..1000u64).is_empty());
+    }
+
+    #[test]
+    fn different_seeds_move_most_state() {
+        let a = Uhp::with_seed(8, 1);
+        let b = Uhp::with_seed(8, 2);
+        let sw: Vec<(Key, f64)> = (0..10_000u64).map(|k| (k, 1.0)).collect();
+        let f = migration_fraction(&a, &b, &sw);
+        // expected: 7/8 of keys move
+        assert!((f - 0.875).abs() < 0.03, "f={f}");
+    }
+
+    #[test]
+    fn weights_are_respected() {
+        let a = Uhp::with_seed(4, 1);
+        let b = Uhp::with_seed(4, 2);
+        // find one key that moves, one that stays
+        let moved_key = (0..1000u64).find(|&k| a.partition(k) != b.partition(k)).unwrap();
+        let stay_key = (0..1000u64).find(|&k| a.partition(k) == b.partition(k)).unwrap();
+        let f = migration_fraction(&a, &b, &[(moved_key, 3.0), (stay_key, 1.0)]);
+        assert!((f - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn plan_matches_fraction() {
+        let a = Uhp::with_seed(6, 3);
+        let b = Uhp::with_seed(6, 4);
+        let keys: Vec<Key> = (0..500).collect();
+        let plan = migration_plan(&a, &b, keys.iter().cloned());
+        let sw: Vec<(Key, f64)> = keys.iter().map(|&k| (k, 1.0)).collect();
+        let f = migration_fraction(&a, &b, &sw);
+        assert!((plan.len() as f64 / 500.0 - f).abs() < 1e-12);
+        for (k, from, to) in plan {
+            assert_eq!(from, a.partition(k));
+            assert_eq!(to, b.partition(k));
+            assert_ne!(from, to);
+        }
+    }
+
+    #[test]
+    fn empty_state_is_zero() {
+        let p = Uhp::new(4);
+        assert_eq!(migration_fraction(&p, &p, &[]), 0.0);
+    }
+}

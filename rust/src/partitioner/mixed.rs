@@ -1,0 +1,205 @@
+//! The **Mixed** partitioning strategy of Fang et al., "Parallel stream
+//! processing against workload skewness and variance" [9] — the second
+//! baseline family of Fig 2.
+//!
+//! Mixed splits keys into a *tracked head* (explicit placement, histogram
+//! bounded by A_max) and a *hashed tail* (plain uniform hashing, unlike
+//! Gedik's consistent ring). Head placement is greedy under a user-supplied
+//! load bound θ_max; the paper obtained θ_max "through an extra
+//! optimization loop", which we reproduce with a bisection on θ_max until
+//! the greedy placement is feasible and tight. Plain-uniform tail balance
+//! explains Fig 2's ordering: Mixed sits between the ring-based Gedik
+//! functions and KIP (whose host re-packing also balances the tail).
+
+use super::{Partitioner, Uhp};
+use crate::sketch::Histogram;
+use crate::workload::Key;
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct Mixed {
+    explicit: HashMap<Key, u32>,
+    tail: Uhp,
+    /// θ_max found by the last optimization loop (for inspection/tests).
+    theta_max: f64,
+}
+
+impl Mixed {
+    pub fn initial(n: usize, seed: u64) -> Self {
+        Self {
+            explicit: HashMap::new(),
+            tail: Uhp::with_seed(n, seed),
+            theta_max: f64::INFINITY,
+        }
+    }
+
+    pub fn theta_max(&self) -> f64 {
+        self.theta_max
+    }
+
+    /// Greedy head placement under absolute per-partition bound `cap`.
+    /// Returns planned loads on success.
+    fn try_place(
+        &self,
+        hist: &Histogram,
+        cap: f64,
+    ) -> Option<(HashMap<Key, u32>, Vec<f64>)> {
+        let n = self.tail.n_partitions();
+        // tail is uniformly hashed: residual spreads ~evenly
+        let residual = (1.0 - hist.heavy_mass()).max(0.0);
+        let mut load = vec![residual / n as f64; n];
+        let mut explicit = HashMap::with_capacity(hist.len());
+        for e in hist.entries() {
+            let p = load
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i)
+                .expect("n > 0");
+            if load[p] + e.freq > cap {
+                return None;
+            }
+            load[p] += e.freq;
+            explicit.insert(e.key, p as u32);
+        }
+        Some((explicit, load))
+    }
+
+    /// Update with the paper's "extra optimization loop": bisect the load
+    /// bound θ_max down to the tightest feasible greedy placement.
+    pub fn update(&self, hist: &Histogram) -> Self {
+        let n = self.tail.n_partitions();
+        if hist.is_empty() {
+            return Self {
+                explicit: HashMap::new(),
+                tail: self.tail.clone(),
+                theta_max: f64::INFINITY,
+            };
+        }
+        let ideal = (1.0 / n as f64).max(hist.top_freq());
+        // bisection over cap in [ideal, 2·ideal + heavy mass]
+        let mut lo = ideal;
+        let mut hi = ideal * 2.0 + hist.heavy_mass();
+        let mut best = None;
+        for _ in 0..32 {
+            let mid = 0.5 * (lo + hi);
+            match self.try_place(hist, mid) {
+                Some(sol) => {
+                    best = Some((sol, mid));
+                    hi = mid;
+                }
+                None => lo = mid,
+            }
+        }
+        // ensure at least the loose bound works
+        let ((explicit, _), cap) = match best {
+            Some((sol, cap)) => (sol, cap),
+            None => {
+                let cap = hi * 2.0;
+                (
+                    self.try_place(hist, cap)
+                        .expect("loose bound must be feasible"),
+                    cap,
+                )
+            }
+        };
+        Self {
+            explicit,
+            tail: self.tail.clone(),
+            theta_max: cap / ideal - 1.0,
+        }
+    }
+}
+
+impl Partitioner for Mixed {
+    #[inline]
+    fn partition(&self, key: Key) -> usize {
+        match self.explicit.get(&key) {
+            Some(&p) => p as usize,
+            None => self.tail.partition(key),
+        }
+    }
+
+    fn n_partitions(&self) -> usize {
+        self.tail.n_partitions()
+    }
+
+    fn explicit_routes(&self) -> usize {
+        self.explicit.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partitioner::partition_loads;
+    use crate::util::load_imbalance;
+    use crate::workload::{zipf::Zipf, Generator};
+
+    #[test]
+    fn beats_plain_hash_on_skew() {
+        let n = 16;
+        let mut z = Zipf::new(50_000, 1.0, 3);
+        let recs = z.batch(300_000);
+        let hist = Histogram::exact(&recs, 2 * n);
+        let mut kw: HashMap<Key, f64> = HashMap::new();
+        for r in &recs {
+            *kw.entry(r.key).or_insert(0.0) += 1.0;
+        }
+        let kw: Vec<(Key, f64)> = kw.into_iter().collect();
+        let m0 = Mixed::initial(n, 1);
+        let before = load_imbalance(&partition_loads(&m0, &kw));
+        let m1 = m0.update(&hist);
+        let after = load_imbalance(&partition_loads(&m1, &kw));
+        assert!(after < before, "after={after} before={before}");
+    }
+
+    #[test]
+    fn optimization_loop_tightens_theta() {
+        let n = 8;
+        let freqs: Vec<(Key, f64)> = (0..16u64).map(|k| (k, 0.04)).collect();
+        let hist = Histogram::from_freqs(&freqs, 1.0);
+        let m = Mixed::initial(n, 2).update(&hist);
+        // 16 keys × 0.04 over 8 partitions on top of 0.36 tail: a tight
+        // bound exists; θ_max should come out small
+        assert!(m.theta_max() < 0.5, "theta_max={}", m.theta_max());
+    }
+
+    #[test]
+    fn empty_histogram_resets_head() {
+        let n = 4;
+        let hist = Histogram::from_freqs(&[(1, 0.5)], 1.0);
+        let m = Mixed::initial(n, 3).update(&hist);
+        assert_eq!(m.explicit_routes(), 1);
+        let m2 = m.update(&Histogram::empty());
+        assert_eq!(m2.explicit_routes(), 0);
+    }
+
+    #[test]
+    fn head_placement_respects_found_bound() {
+        let n = 8;
+        let mut z = Zipf::new(10_000, 1.3, 4);
+        let recs = z.batch(100_000);
+        let hist = Histogram::exact(&recs, 2 * n);
+        let m = Mixed::initial(n, 4).update(&hist);
+        let ideal = (1.0 / n as f64).max(hist.top_freq());
+        let cap = ideal * (1.0 + m.theta_max());
+        // verify planned head+tail load under cap
+        let residual = (1.0 - hist.heavy_mass()).max(0.0);
+        let mut load = vec![residual / n as f64; n];
+        for e in hist.entries() {
+            load[m.partition(e.key)] += e.freq;
+        }
+        for (p, l) in load.iter().enumerate() {
+            assert!(*l <= cap + 1e-9, "partition {p}: {l} > cap {cap}");
+        }
+    }
+
+    #[test]
+    fn tail_uniform_hash() {
+        let m = Mixed::initial(10, 5);
+        let kw: Vec<(Key, f64)> = (0..100_000u64).map(|k| (k, 1.0)).collect();
+        let imb = load_imbalance(&partition_loads(&m, &kw));
+        assert!(imb < 1.05, "imb={imb}");
+    }
+}

@@ -1,0 +1,139 @@
+//! Partitioning functions — the paper's core contribution (§4) plus every
+//! baseline it evaluates against (Fig 2/3).
+//!
+//! - [`Uhp`] — Uniform Hash Partitioning, the Spark/Flink default.
+//! - [`WeightedHash`] — the two-level key→host→partition hash that KIP
+//!   uses for the non-heavy tail (H ≫ N hosts, host→partition map
+//!   adjusted by greedy bin packing).
+//! - [`Kip`] — the Key Isolator Partitioner, updated by Algorithm 1.
+//! - [`gedik`] — `Scan`, `Redist`, `Readj` from Gedik, VLDB J. 23(4)
+//!   [12], over a consistent-hash base (reconstructions; see DESIGN.md).
+//! - [`Mixed`] — the hash+explicit hybrid of Fang et al. [9].
+//! - [`migration`] — state-migration cost between two partitioners.
+
+pub mod gedik;
+pub mod kip;
+pub mod migration;
+pub mod mixed;
+pub mod weighted;
+
+pub use gedik::{GedikConfig, GedikPartitioner, GedikStrategy};
+pub use kip::{Kip, KipConfig};
+pub use migration::{migration_fraction, migration_plan};
+pub use mixed::Mixed;
+pub use weighted::WeightedHash;
+
+use crate::hash::{bucket, hash_u64};
+use crate::workload::Key;
+
+/// A partitioning function: total, deterministic map key → partition.
+pub trait Partitioner: Send + Sync {
+    fn partition(&self, key: Key) -> usize;
+
+    fn n_partitions(&self) -> usize;
+
+    /// Number of explicitly-routed keys (routing-table footprint; 0 for
+    /// pure hash partitioners). The naive explicit router the paper rejects
+    /// would be O(#keys); KIP keeps this at O(λN).
+    fn explicit_routes(&self) -> usize {
+        0
+    }
+
+    /// Expected per-partition share of the *non-tracked tail* mass under
+    /// this function's tail routing. Uniform for plain hashing; KIP's
+    /// weighted hash and Gedik's ring override it. Used by the DRM to
+    /// estimate load shares from a histogram.
+    fn tail_shares(&self) -> Vec<f64> {
+        vec![1.0 / self.n_partitions() as f64; self.n_partitions()]
+    }
+}
+
+/// Uniform Hash Partitioning — murmur-finalized modulo-free bucketing,
+/// the default partitioner of both Spark and Flink (§4).
+#[derive(Debug, Clone)]
+pub struct Uhp {
+    n: usize,
+    seed: u64,
+}
+
+impl Uhp {
+    pub fn new(n: usize) -> Self {
+        Self::with_seed(n, 0)
+    }
+
+    pub fn with_seed(n: usize, seed: u64) -> Self {
+        assert!(n > 0);
+        Self { n, seed }
+    }
+}
+
+impl Partitioner for Uhp {
+    #[inline]
+    fn partition(&self, key: Key) -> usize {
+        bucket(hash_u64(key, self.seed), self.n)
+    }
+
+    fn n_partitions(&self) -> usize {
+        self.n
+    }
+}
+
+/// Compute per-partition loads of a weighted key set under a partitioner.
+/// Used by every balance experiment.
+pub fn partition_loads<P: Partitioner + ?Sized>(
+    p: &P,
+    key_weights: &[(Key, f64)],
+) -> Vec<f64> {
+    let mut loads = vec![0.0; p.n_partitions()];
+    for &(k, w) in key_weights {
+        loads[p.partition(k)] += w;
+    }
+    loads
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uhp_total_and_in_range() {
+        let p = Uhp::new(7);
+        for k in 0..10_000u64 {
+            assert!(p.partition(k) < 7);
+        }
+    }
+
+    #[test]
+    fn uhp_deterministic() {
+        let p = Uhp::new(16);
+        let q = Uhp::new(16);
+        for k in 0..1000u64 {
+            assert_eq!(p.partition(k), q.partition(k));
+        }
+    }
+
+    #[test]
+    fn uhp_balanced_on_many_uniform_keys() {
+        let p = Uhp::new(10);
+        let kw: Vec<(Key, f64)> = (0..100_000u64).map(|k| (k, 1.0)).collect();
+        let loads = partition_loads(&p, &kw);
+        let imb = crate::util::load_imbalance(&loads);
+        assert!(imb < 1.05, "imb={imb}");
+    }
+
+    #[test]
+    fn uhp_seeds_differ() {
+        let p = Uhp::with_seed(10, 1);
+        let q = Uhp::with_seed(10, 2);
+        let diff = (0..1000u64).filter(|&k| p.partition(k) != q.partition(k)).count();
+        assert!(diff > 700);
+    }
+
+    #[test]
+    fn loads_sum_preserved() {
+        let p = Uhp::new(5);
+        let kw: Vec<(Key, f64)> = (0..1000u64).map(|k| (k, 0.5)).collect();
+        let loads = partition_loads(&p, &kw);
+        assert!((loads.iter().sum::<f64>() - 500.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,144 @@
+//! Mini property-based testing framework (proptest substitute — crates.io
+//! is unreachable in this image; see DESIGN.md "Substitutions").
+//!
+//! Usage (doctest disabled: doctest binaries don't inherit the
+//! libxla_extension rpath in this offline image):
+//! ```text
+//! use dynrepart::prop::{forall, Gen};
+//! forall(100, |g: &mut Gen| {
+//!     let xs = g.vec(0..50, |g| g.u64(0..1000));
+//!     let mut sorted = xs.clone();
+//!     sorted.sort_unstable();
+//!     assert!(sorted.len() == xs.len());
+//! });
+//! ```
+//!
+//! Each case runs with a fresh deterministic seed derived from a base seed
+//! (override with env `PROP_SEED`); on panic the failing case's seed is
+//! printed so the exact case can be replayed with `PROP_SEED=<seed>
+//! PROP_CASES=1`.
+
+use crate::util::Rng;
+
+/// Case-local generator handed to the property closure.
+pub struct Gen {
+    rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Rng::new(seed),
+            seed,
+        }
+    }
+
+    pub fn u64(&mut self, range: std::ops::Range<u64>) -> u64 {
+        assert!(range.start < range.end);
+        range.start + self.rng.next_below(range.end - range.start)
+    }
+
+    pub fn usize(&mut self, range: std::ops::Range<usize>) -> usize {
+        self.u64(range.start as u64..range.end as u64) as usize
+    }
+
+    pub fn f64(&mut self, range: std::ops::Range<f64>) -> f64 {
+        range.start + self.rng.next_f64() * (range.end - range.start)
+    }
+
+    pub fn bool(&mut self, p_true: f64) -> bool {
+        self.rng.next_f64() < p_true
+    }
+
+    pub fn vec<T>(
+        &mut self,
+        len: std::ops::Range<usize>,
+        mut item: impl FnMut(&mut Gen) -> T,
+    ) -> Vec<T> {
+        let n = self.usize(len);
+        (0..n).map(|_| item(self)).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize(0..xs.len())]
+    }
+
+    /// Direct access for distributions the helpers don't cover.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `property` on `cases` generated cases. Panics (with the case seed)
+/// on the first failure. `PROP_SEED` overrides the base seed; `PROP_CASES`
+/// overrides the case count.
+pub fn forall(cases: usize, mut property: impl FnMut(&mut Gen)) {
+    let base: u64 = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD1CE_5EED);
+    let cases: usize = std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(cases);
+    for i in 0..cases {
+        let seed = base.wrapping_add(i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut g);
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property failed on case {i}/{cases}; replay with PROP_SEED={seed} PROP_CASES=1"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_respect_ranges() {
+        forall(200, |g| {
+            let x = g.u64(10..20);
+            assert!((10..20).contains(&x));
+            let f = g.f64(-1.0..1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let v = g.vec(0..5, |g| g.usize(0..3));
+            assert!(v.len() < 5);
+            assert!(v.iter().all(|&x| x < 3));
+        });
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        forall(10, |g| first.push(g.u64(0..1_000_000)));
+        let mut second: Vec<u64> = Vec::new();
+        forall(10, |g| second.push(g.u64(0..1_000_000)));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn failure_is_reported() {
+        let r = std::panic::catch_unwind(|| {
+            forall(50, |g| {
+                let x = g.u64(0..100);
+                assert!(x < 90, "intentional failure");
+            });
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn pick_stays_in_slice() {
+        forall(100, |g| {
+            let xs = [1, 2, 3];
+            assert!(xs.contains(g.pick(&xs)));
+        });
+    }
+}

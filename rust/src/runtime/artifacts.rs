@@ -1,0 +1,186 @@
+//! Artifact manifest: what `make artifacts` produced and how to call it.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One input spec, e.g. `int32[32,128]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InputSpec {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl InputSpec {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let (dtype, rest) = s
+            .split_once('[')
+            .ok_or_else(|| anyhow::anyhow!("bad input spec {s:?}"))?;
+        let dims = rest.trim_end_matches(']');
+        let shape = if dims.is_empty() {
+            Vec::new()
+        } else {
+            dims.split(',')
+                .map(|d| d.parse::<usize>())
+                .collect::<Result<_, _>>()?
+        };
+        Ok(Self {
+            dtype: dtype.to_string(),
+            shape,
+        })
+    }
+
+    pub fn n_elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub inputs: Vec<InputSpec>,
+    pub n_outputs: usize,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    entries: HashMap<String, ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let mut entries = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split('\t');
+            let name = parts
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("empty manifest line"))?
+                .to_string();
+            let inputs = parts
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("{name}: missing inputs"))?
+                .split(';')
+                .map(InputSpec::parse)
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let n_outputs: usize = parts
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("{name}: missing n_outputs"))?
+                .parse()?;
+            entries.insert(
+                name.clone(),
+                ManifestEntry {
+                    name,
+                    inputs,
+                    n_outputs,
+                },
+            );
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.tsv"))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.entries.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// The artifacts directory with its manifest.
+#[derive(Debug, Clone)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Artifacts {
+    pub fn open(dir: &Path) -> anyhow::Result<Self> {
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            manifest: Manifest::load(dir)?,
+        })
+    }
+
+    pub fn open_default() -> anyhow::Result<Self> {
+        Self::open(&super::artifacts_dir())
+    }
+
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    pub fn bin_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.bin"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "# name\tinputs\tn_outputs\n\
+        ner_b32\tint32[32,128];int32[32];float32[8192,64];float32[64,9];float32[9]\t3\n\
+        cms_n4096\tuint32[4096];float32[4096]\t1\n";
+
+    #[test]
+    fn parse_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 2);
+        let e = m.get("ner_b32").unwrap();
+        assert_eq!(e.inputs.len(), 5);
+        assert_eq!(e.inputs[0].dtype, "int32");
+        assert_eq!(e.inputs[0].shape, vec![32, 128]);
+        assert_eq!(e.inputs[2].n_elems(), 8192 * 64);
+        assert_eq!(e.n_outputs, 3);
+    }
+
+    #[test]
+    fn parse_scalar_spec() {
+        let s = InputSpec::parse("float32[]").unwrap();
+        assert_eq!(s.shape, Vec::<usize>::new());
+        assert_eq!(s.n_elems(), 1);
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        assert!(InputSpec::parse("float32").is_err());
+        assert!(InputSpec::parse("float32[a,b]").is_err());
+        assert!(Manifest::parse("name_only\n").is_err());
+    }
+
+    #[test]
+    fn names_sorted() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.names(), vec!["cms_n4096", "ner_b32"]);
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // integration-ish: if `make artifacts` ran, the real manifest parses
+        let dir = crate::runtime::artifacts_dir();
+        if dir.join("manifest.tsv").exists() {
+            let a = Artifacts::open(&dir).unwrap();
+            assert!(a.manifest.get("ner_b32").is_some());
+            assert!(a.hlo_path("ner_b32").exists());
+        }
+    }
+}

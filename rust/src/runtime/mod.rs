@@ -1,0 +1,121 @@
+//! PJRT runtime — loads the AOT artifacts (`artifacts/*.hlo.txt`) built by
+//! `make artifacts` and executes them from the L3 hot path via the `xla`
+//! crate (PJRT CPU client). Python never runs here.
+//!
+//! The interchange format is HLO *text*: jax ≥ 0.5 serializes protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+
+pub mod artifacts;
+pub mod ner_exec;
+
+pub use artifacts::{Artifacts, Manifest, ManifestEntry};
+pub use ner_exec::{NerExecutable, NerOutput, NER_BATCH_SIZES};
+
+use std::path::Path;
+
+/// Wrapper around the PJRT CPU client plus the loaded executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> anyhow::Result<Self> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu()?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one HLO-text artifact into a PJRT executable.
+    pub fn load_hlo_text(&self, path: &Path) -> anyhow::Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path {path:?}"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+}
+
+/// Read a little-endian f32 binary file (the exported parameter format).
+pub fn read_f32_file(path: &Path) -> anyhow::Result<Vec<f32>> {
+    let bytes = std::fs::read(path)?;
+    anyhow::ensure!(
+        bytes.len() % 4 == 0,
+        "{}: length {} not a multiple of 4",
+        path.display(),
+        bytes.len()
+    );
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Read a little-endian i32 binary file (check fixtures).
+pub fn read_i32_file(path: &Path) -> anyhow::Result<Vec<i32>> {
+    let bytes = std::fs::read(path)?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "{}: bad length", path.display());
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Locate the artifacts directory: `$DYNREPART_ARTIFACTS`, else
+/// `./artifacts` relative to the workspace root.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(d) = std::env::var("DYNREPART_ARTIFACTS") {
+        return d.into();
+    }
+    // tests and benches run from the workspace root
+    let cwd = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    for base in [&cwd, &cwd.join("..")] {
+        let cand = base.join("artifacts");
+        if cand.join("manifest.tsv").exists() {
+            return cand;
+        }
+    }
+    cwd.join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_f32_roundtrip() {
+        let dir = std::env::temp_dir().join("dynrepart_test_f32");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.bin");
+        let vals = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&p, bytes).unwrap();
+        assert_eq!(read_f32_file(&p).unwrap(), vals);
+    }
+
+    #[test]
+    fn read_f32_rejects_truncated() {
+        let dir = std::env::temp_dir().join("dynrepart_test_f32b");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, [1u8, 2, 3]).unwrap();
+        assert!(read_f32_file(&p).is_err());
+    }
+
+    #[test]
+    fn artifacts_dir_env_override() {
+        // NB: set_var is process-global; this test only checks the default
+        // path resolution logic doesn't panic.
+        let d = artifacts_dir();
+        assert!(d.to_string_lossy().contains("artifacts"));
+    }
+}

@@ -1,0 +1,203 @@
+//! The global top-B histogram object of §4.
+//!
+//! `Hist` in Algorithm 1: the approximate heaviest keys ordered by
+//! decreasing **relative** frequency (fractions of all input; frequencies
+//! of keys not in the histogram make up the remainder to 1). Obtained by
+//! merging worker-local histograms computed during sampling.
+
+use crate::workload::Key;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramEntry {
+    pub key: Key,
+    /// Relative frequency estimate in [0, 1].
+    pub freq: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Histogram {
+    entries: Vec<HistogramEntry>,
+    /// Total absolute weight this histogram was computed from (for merges).
+    total_weight: f64,
+}
+
+impl Histogram {
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// Build from absolute (key, count) estimates: keep the top `k` by
+    /// count, convert to relative frequencies against `total`.
+    pub fn from_counts(counts: &[(Key, f64)], total: f64, k: usize) -> Self {
+        let mut v: Vec<(Key, f64)> = counts.iter().filter(|e| e.1 > 0.0).cloned().collect();
+        v.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        v.truncate(k);
+        if total <= 0.0 {
+            return Self::empty();
+        }
+        Self {
+            entries: v
+                .into_iter()
+                .map(|(key, c)| HistogramEntry {
+                    key,
+                    freq: (c / total).min(1.0),
+                })
+                .collect(),
+            total_weight: total,
+        }
+    }
+
+    /// Build directly from relative frequencies (already sorted or not).
+    pub fn from_freqs(freqs: &[(Key, f64)], total_weight: f64) -> Self {
+        let mut entries: Vec<HistogramEntry> = freqs
+            .iter()
+            .map(|&(key, freq)| HistogramEntry { key, freq })
+            .collect();
+        entries.sort_by(|a, b| b.freq.total_cmp(&a.freq).then(a.key.cmp(&b.key)));
+        Self {
+            entries,
+            total_weight,
+        }
+    }
+
+    /// Merge worker-local histograms into a global one, keeping top `k`.
+    ///
+    /// Locals carry absolute totals, so the merge weights each local's
+    /// relative frequencies by its share of the global weight. A key absent
+    /// from one local but present in another contributes only the observed
+    /// part — the standard mergeable-summary behaviour (underestimates are
+    /// bounded by each local's top-k cutoff).
+    pub fn merge(locals: &[Histogram], k: usize) -> Self {
+        let total: f64 = locals.iter().map(|h| h.total_weight).sum();
+        if total <= 0.0 {
+            return Self::empty();
+        }
+        let mut acc: std::collections::HashMap<Key, f64> = std::collections::HashMap::new();
+        for h in locals {
+            for e in &h.entries {
+                *acc.entry(e.key).or_insert(0.0) += e.freq * h.total_weight;
+            }
+        }
+        let counts: Vec<(Key, f64)> = acc.into_iter().collect();
+        Self::from_counts(&counts, total, k)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn entries(&self) -> &[HistogramEntry] {
+        &self.entries
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.total_weight
+    }
+
+    /// Sum of the tracked heavy-key frequencies (Σᵢ Hist[i].freq ≤ 1).
+    pub fn heavy_mass(&self) -> f64 {
+        self.entries.iter().map(|e| e.freq).sum()
+    }
+
+    /// Frequency of the heaviest key (Hist[1].freq in the paper, 0 if empty).
+    pub fn top_freq(&self) -> f64 {
+        self.entries.first().map(|e| e.freq).unwrap_or(0.0)
+    }
+
+    pub fn contains(&self, key: Key) -> bool {
+        self.entries.iter().any(|e| e.key == key)
+    }
+
+    /// Exact histogram from a batch of records — the oracle used in tests
+    /// and in component experiments where the paper measures partitioning
+    /// quality in isolation from sketch error (Fig 2).
+    pub fn exact<'a, I: IntoIterator<Item = &'a crate::workload::Record>>(
+        records: I,
+        k: usize,
+    ) -> Self {
+        let mut counts: std::collections::HashMap<Key, f64> = std::collections::HashMap::new();
+        let mut total = 0.0;
+        for r in records {
+            *counts.entry(r.key).or_insert(0.0) += r.weight;
+            total += r.weight;
+        }
+        let v: Vec<(Key, f64)> = counts.into_iter().collect();
+        Self::from_counts(&v, total, k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Record;
+
+    #[test]
+    fn from_counts_sorts_and_truncates() {
+        let h = Histogram::from_counts(&[(1, 10.0), (2, 30.0), (3, 20.0), (4, 5.0)], 100.0, 3);
+        assert_eq!(h.len(), 3);
+        assert_eq!(h.entries()[0].key, 2);
+        assert!((h.entries()[0].freq - 0.3).abs() < 1e-12);
+        assert_eq!(h.entries()[2].key, 1);
+        assert!(!h.contains(4));
+    }
+
+    #[test]
+    fn heavy_mass_and_top() {
+        let h = Histogram::from_counts(&[(1, 50.0), (2, 25.0)], 100.0, 10);
+        assert!((h.heavy_mass() - 0.75).abs() < 1e-12);
+        assert!((h.top_freq() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_histogram_is_safe() {
+        let h = Histogram::empty();
+        assert_eq!(h.top_freq(), 0.0);
+        assert_eq!(h.heavy_mass(), 0.0);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn merge_weights_by_local_totals() {
+        // local A: key 1 at 50% of 100; local B: key 1 at 10% of 300
+        let a = Histogram::from_counts(&[(1, 50.0)], 100.0, 5);
+        let b = Histogram::from_counts(&[(1, 30.0), (2, 60.0)], 300.0, 5);
+        let m = Histogram::merge(&[a, b], 5);
+        // key1: (50+30)/400 = 0.2 ; key2: 60/400 = 0.15
+        assert_eq!(m.entries()[0].key, 1);
+        assert!((m.entries()[0].freq - 0.2).abs() < 1e-12);
+        assert!((m.entries()[1].freq - 0.15).abs() < 1e-12);
+        assert!((m.total_weight() - 400.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_empty_is_empty() {
+        assert!(Histogram::merge(&[], 5).is_empty());
+        assert!(Histogram::merge(&[Histogram::empty()], 5).is_empty());
+    }
+
+    #[test]
+    fn exact_matches_manual_count() {
+        let recs = vec![
+            Record::unit(1, 0),
+            Record::unit(1, 1),
+            Record::unit(2, 2),
+            Record::new(3, 3, 2.0),
+        ];
+        let h = Histogram::exact(&recs, 10);
+        // weights: k1=2, k3=2, k2=1, total 5
+        assert_eq!(h.len(), 3);
+        assert!((h.heavy_mass() - 1.0).abs() < 1e-12);
+        assert!((h.top_freq() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ties_break_deterministically() {
+        let a = Histogram::from_counts(&[(5, 10.0), (3, 10.0), (9, 10.0)], 30.0, 2);
+        let b = Histogram::from_counts(&[(9, 10.0), (5, 10.0), (3, 10.0)], 30.0, 2);
+        assert_eq!(a.entries(), b.entries());
+    }
+}

@@ -1,0 +1,187 @@
+//! Lossy Counting (Manku & Motwani, VLDB 2002) — baseline sketch [21].
+//!
+//! Deterministic ε-deficient counting: maintains (count, Δ) per tracked
+//! key, prunes at bucket boundaries of width ⌈1/ε⌉. Guarantees: every key
+//! with true frequency ≥ ε·N is reported, and estimates underestimate by
+//! at most ε·N. Generalised to weighted items (bucket boundaries advance
+//! on accumulated weight).
+
+use super::HeavyHitter;
+use crate::workload::Key;
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+struct Entry {
+    count: f64,
+    delta: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct LossyCounting {
+    epsilon: f64,
+    bucket_width: f64,
+    entries: HashMap<Key, Entry>,
+    total: f64,
+    current_bucket: f64,
+}
+
+impl LossyCounting {
+    pub fn new(epsilon: f64) -> Self {
+        assert!(epsilon > 0.0 && epsilon < 1.0);
+        Self {
+            epsilon,
+            bucket_width: 1.0 / epsilon,
+            entries: HashMap::new(),
+            total: 0.0,
+            current_bucket: 1.0,
+        }
+    }
+
+    pub fn epsilon(&self) -> f64 {
+        self.epsilon
+    }
+
+    fn prune(&mut self) {
+        let b = self.current_bucket;
+        self.entries.retain(|_, e| e.count + e.delta > b - 1.0);
+    }
+}
+
+impl HeavyHitter for LossyCounting {
+    fn observe(&mut self, key: Key, w: f64) {
+        debug_assert!(w >= 0.0);
+        self.total += w;
+        let bucket = self.current_bucket;
+        self.entries
+            .entry(key)
+            .and_modify(|e| e.count += w)
+            .or_insert(Entry {
+                count: w,
+                delta: bucket - 1.0,
+            });
+        let new_bucket = (self.total / self.bucket_width).ceil().max(1.0);
+        if new_bucket > self.current_bucket {
+            self.current_bucket = new_bucket;
+            self.prune();
+        }
+    }
+
+    fn total(&self) -> f64 {
+        self.total
+    }
+
+    fn estimates(&self) -> Vec<(Key, f64)> {
+        self.entries
+            .iter()
+            .map(|(&k, e)| (k, e.count + e.delta))
+            .collect()
+    }
+
+    fn footprint(&self) -> usize {
+        self.entries.len()
+    }
+
+    fn clear(&mut self) {
+        self.entries.clear();
+        self.total = 0.0;
+        self.current_bucket = 1.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use crate::workload::{zipf::Zipf, Generator};
+
+    #[test]
+    fn finds_all_true_heavy_hitters() {
+        // ε = 0.001; any key with freq >= 1% must be present.
+        let mut lc = LossyCounting::new(0.001);
+        let mut z = Zipf::new(10_000, 1.2, 1);
+        let n = 100_000;
+        let mut exact: std::collections::HashMap<_, u32> = Default::default();
+        for _ in 0..n {
+            let r = z.next_record();
+            *exact.entry(r.key).or_insert(0) += 1;
+            lc.observe(r.key, 1.0);
+        }
+        let tracked: std::collections::HashSet<_> =
+            lc.estimates().iter().map(|e| e.0).collect();
+        for (k, c) in exact {
+            if c as f64 >= 0.01 * n as f64 {
+                assert!(tracked.contains(&k), "missing heavy key {k} count {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn estimate_error_bounded_by_epsilon_n() {
+        let eps = 0.005;
+        let mut lc = LossyCounting::new(eps);
+        let mut z = Zipf::new(1_000, 1.0, 2);
+        let n = 50_000;
+        let mut exact: std::collections::HashMap<_, f64> = Default::default();
+        for _ in 0..n {
+            let r = z.next_record();
+            *exact.entry(r.key).or_insert(0.0) += 1.0;
+            lc.observe(r.key, 1.0);
+        }
+        for (k, est) in lc.estimates() {
+            let truth = exact.get(&k).cloned().unwrap_or(0.0);
+            assert!(est <= truth + eps * n as f64 + 1e-9, "overestimate beyond bound");
+            assert!(est >= truth - eps * n as f64 - 1e-9, "underestimate beyond bound");
+        }
+    }
+
+    #[test]
+    fn memory_stays_bounded() {
+        let mut lc = LossyCounting::new(0.01);
+        let mut rng = Rng::new(3);
+        for _ in 0..200_000 {
+            lc.observe(rng.next_u64(), 1.0); // all-distinct adversary
+        }
+        // classic bound: (1/eps) * log(eps*N) counters
+        let bound = (1.0 / 0.01) * (0.01f64 * 200_000.0).ln();
+        assert!(
+            (lc.footprint() as f64) < bound * 2.0,
+            "footprint={} bound={bound}",
+            lc.footprint()
+        );
+    }
+
+    #[test]
+    fn weighted_observations() {
+        let mut lc = LossyCounting::new(0.1);
+        lc.observe(1, 10.0);
+        lc.observe(2, 1.0);
+        let est: std::collections::HashMap<_, _> = lc.estimates().into_iter().collect();
+        assert!(est[&1] >= 10.0);
+        assert!((lc.total() - 11.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut lc = LossyCounting::new(0.1);
+        lc.observe(1, 5.0);
+        lc.clear();
+        assert_eq!(lc.footprint(), 0);
+        assert_eq!(lc.total(), 0.0);
+    }
+
+    #[test]
+    fn harvest_is_sorted_topk() {
+        let mut lc = LossyCounting::new(0.001);
+        for i in 0..100u64 {
+            for _ in 0..=i {
+                lc.observe(i, 1.0);
+            }
+        }
+        let h = lc.harvest(5);
+        assert_eq!(h.len(), 5);
+        assert_eq!(h.entries()[0].key, 99);
+        for w in h.entries().windows(2) {
+            assert!(w[0].freq >= w[1].freq);
+        }
+    }
+}

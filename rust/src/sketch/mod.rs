@@ -1,0 +1,45 @@
+//! Approximate heavy-hitter counting and histogram machinery.
+//!
+//! DR needs a *distributed top-k histogram*: each DRW samples its local
+//! key stream with a low-memory counter, the DRM merges the local
+//! histograms and keeps the global top B = λN keys with relative frequency
+//! estimates (§4). The paper evaluates Lossy Counting [21] and SpaceSaving
+//! [22] as baselines and uses its own counter-based heuristic (details
+//! deferred to the extended paper; reconstructed here — see DESIGN.md).
+
+pub mod counter;
+pub mod histogram;
+pub mod lossy;
+pub mod spacesaving;
+
+pub use counter::FreqCounter;
+pub use histogram::{Histogram, HistogramEntry};
+pub use lossy::LossyCounting;
+pub use spacesaving::SpaceSaving;
+
+use crate::workload::Key;
+
+/// Common interface of all heavy-hitter counters: observe weighted keys,
+/// then harvest a local histogram of (key, estimated count) pairs.
+pub trait HeavyHitter {
+    /// Observe one occurrence of `key` with weight `w` (w = 1 for counting).
+    fn observe(&mut self, key: Key, w: f64);
+
+    /// Total weight observed so far (including evicted/expired mass).
+    fn total(&self) -> f64;
+
+    /// Current estimates, *unsorted*: (key, estimated weight).
+    fn estimates(&self) -> Vec<(Key, f64)>;
+
+    /// Number of counters held (memory footprint proxy).
+    fn footprint(&self) -> usize;
+
+    /// Reset for the next sampling interval.
+    fn clear(&mut self);
+
+    /// Harvest a top-k local histogram (sorted by decreasing frequency,
+    /// relative to `total()`).
+    fn harvest(&self, k: usize) -> Histogram {
+        Histogram::from_counts(&self.estimates(), self.total(), k)
+    }
+}

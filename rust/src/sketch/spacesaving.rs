@@ -1,0 +1,164 @@
+//! SpaceSaving (Metwally, Agrawal, El Abbadi, ICDT 2005) — baseline [22].
+//!
+//! Fixed budget of `capacity` counters. On a miss with a full table, the
+//! minimum counter is reassigned to the new key, inheriting its count
+//! (overestimate bounded by min-count). Implemented with a hash map plus a
+//! lazily-maintained min tracking; capacity is small (O(λN)) so the
+//! occasional O(capacity) min-scan is cheap and keeps the code simple.
+
+use super::HeavyHitter;
+use crate::workload::Key;
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct SpaceSaving {
+    capacity: usize,
+    counts: HashMap<Key, f64>,
+    /// Per-key maximum overestimation (the inherited count at takeover).
+    errors: HashMap<Key, f64>,
+    total: f64,
+}
+
+impl SpaceSaving {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self {
+            capacity,
+            counts: HashMap::with_capacity(capacity + 1),
+            errors: HashMap::with_capacity(capacity + 1),
+            total: 0.0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Guaranteed-count lower bound for a tracked key.
+    pub fn lower_bound(&self, key: Key) -> f64 {
+        self.counts.get(&key).cloned().unwrap_or(0.0)
+            - self.errors.get(&key).cloned().unwrap_or(0.0)
+    }
+
+    fn min_entry(&self) -> Option<(Key, f64)> {
+        self.counts
+            .iter()
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(&k, &c)| (k, c))
+    }
+}
+
+impl HeavyHitter for SpaceSaving {
+    fn observe(&mut self, key: Key, w: f64) {
+        debug_assert!(w >= 0.0);
+        self.total += w;
+        if let Some(c) = self.counts.get_mut(&key) {
+            *c += w;
+            return;
+        }
+        if self.counts.len() < self.capacity {
+            self.counts.insert(key, w);
+            self.errors.insert(key, 0.0);
+            return;
+        }
+        // evict-min with count inheritance
+        let (min_key, min_count) = self.min_entry().expect("capacity > 0");
+        self.counts.remove(&min_key);
+        self.errors.remove(&min_key);
+        self.counts.insert(key, min_count + w);
+        self.errors.insert(key, min_count);
+    }
+
+    fn total(&self) -> f64 {
+        self.total
+    }
+
+    fn estimates(&self) -> Vec<(Key, f64)> {
+        self.counts.iter().map(|(&k, &c)| (k, c)).collect()
+    }
+
+    fn footprint(&self) -> usize {
+        self.counts.len()
+    }
+
+    fn clear(&mut self) {
+        self.counts.clear();
+        self.errors.clear();
+        self.total = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{zipf::Zipf, Generator};
+
+    #[test]
+    fn capacity_never_exceeded() {
+        let mut ss = SpaceSaving::new(10);
+        let mut z = Zipf::new(10_000, 0.5, 1); // near-uniform: worst case
+        for _ in 0..50_000 {
+            ss.observe(z.next_record().key, 1.0);
+        }
+        assert!(ss.footprint() <= 10);
+    }
+
+    #[test]
+    fn overestimates_only_and_bounded() {
+        // SpaceSaving estimate >= truth, and error <= total/capacity.
+        let cap = 50;
+        let mut ss = SpaceSaving::new(cap);
+        let mut z = Zipf::new(1000, 1.5, 2);
+        let n = 50_000;
+        let mut exact: std::collections::HashMap<_, f64> = Default::default();
+        for _ in 0..n {
+            let r = z.next_record();
+            *exact.entry(r.key).or_insert(0.0) += 1.0;
+            ss.observe(r.key, 1.0);
+        }
+        for (k, est) in ss.estimates() {
+            let truth = exact.get(&k).cloned().unwrap_or(0.0);
+            assert!(est + 1e-9 >= truth, "must overestimate");
+            assert!(
+                est - truth <= n as f64 / cap as f64 + 1e-9,
+                "error beyond N/m bound"
+            );
+        }
+    }
+
+    #[test]
+    fn heavy_hitters_survive() {
+        // top-5 keys of a skewed stream must be tracked with capacity 50.
+        let mut ss = SpaceSaving::new(50);
+        let mut z = Zipf::new(100_000, 1.2, 3);
+        for _ in 0..100_000 {
+            ss.observe(z.next_record().key, 1.0);
+        }
+        let tracked: std::collections::HashSet<_> =
+            ss.estimates().iter().map(|e| e.0).collect();
+        for rank in 0..5 {
+            assert!(tracked.contains(&z.key_of_rank(rank)), "rank {rank} lost");
+        }
+    }
+
+    #[test]
+    fn lower_bound_is_sound() {
+        let mut ss = SpaceSaving::new(2);
+        for _ in 0..10 {
+            ss.observe(1, 1.0);
+        }
+        ss.observe(2, 1.0);
+        ss.observe(3, 1.0); // evicts key 2 (count 1), inherits
+        assert!(ss.lower_bound(3) <= 1.0 + 1e-12);
+        assert!((ss.lower_bound(1) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut ss = SpaceSaving::new(4);
+        ss.observe(1, 2.0);
+        ss.clear();
+        assert_eq!(ss.footprint(), 0);
+        assert_eq!(ss.total(), 0.0);
+    }
+}

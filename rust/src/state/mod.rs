@@ -1,0 +1,12 @@
+//! Keyed operator state: per-partition stores, sliding state windows,
+//! checkpoints, and migration — the substrate that makes repartitioning
+//! *stateful* operators possible (§1: "state migration that existing
+//! streaming skew mitigation methods cannot handle").
+
+pub mod checkpoint;
+pub mod store;
+pub mod window;
+
+pub use checkpoint::{Checkpoint, CheckpointStore};
+pub use store::{KeyState, StateStore};
+pub use window::SlidingStateWindow;

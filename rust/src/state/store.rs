@@ -1,0 +1,201 @@
+//! Per-partition keyed state store.
+//!
+//! Each reducer task owns the state of the keygroup currently routed to it.
+//! The paper assumes "states ... linear in the size of the corresponding
+//! keygroups" (Fig 3), so [`KeyState`] tracks both an application value and
+//! its weight (bytes proxy). Migration extracts whole keygroups.
+
+use crate::workload::Key;
+use crate::util::keymap::KeyMap;
+use std::collections::hash_map::Entry;
+
+/// State attached to one key: an opaque accumulator plus bookkeeping that
+/// the engines and the migration planner need.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KeyState {
+    /// Running aggregate (count, sum, or app-defined scalar vector).
+    pub values: Vec<f64>,
+    /// Number of records folded into this state.
+    pub records: u64,
+    /// State size proxy (e.g. bytes). Linear in keygroup size per Fig 3.
+    pub weight: f64,
+}
+
+impl KeyState {
+    pub fn new() -> Self {
+        Self {
+            values: Vec::new(),
+            records: 0,
+            weight: 0.0,
+        }
+    }
+}
+
+impl Default for KeyState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The state store of one partition (one parallel operator instance).
+#[derive(Debug, Clone, Default)]
+pub struct StateStore {
+    states: KeyMap<KeyState>,
+    total_weight: f64,
+}
+
+impl StateStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one record into a key's state. `update` mutates the state and
+    /// returns the weight *delta* it caused.
+    pub fn update<F: FnOnce(&mut KeyState) -> f64>(&mut self, key: Key, update: F) {
+        let st = self.states.entry(key).or_default();
+        st.records += 1;
+        let dw = update(st);
+        st.weight += dw;
+        self.total_weight += dw;
+    }
+
+    /// Standard counting update: +1 record, +`w` weight.
+    pub fn fold_count(&mut self, key: Key, w: f64) {
+        self.update(key, |_| w);
+    }
+
+    pub fn get(&self, key: Key) -> Option<&KeyState> {
+        self.states.get(&key)
+    }
+
+    pub fn n_keys(&self) -> usize {
+        self.states.len()
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.total_weight
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = Key> + '_ {
+        self.states.keys().cloned()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (Key, &KeyState)> {
+        self.states.iter().map(|(&k, v)| (k, v))
+    }
+
+    /// Remove and return a key's state (migration source side).
+    pub fn extract(&mut self, key: Key) -> Option<KeyState> {
+        let st = self.states.remove(&key)?;
+        self.total_weight -= st.weight;
+        Some(st)
+    }
+
+    /// Install a migrated state (migration target side). Merges if the key
+    /// already has local state (can happen after batch replay).
+    pub fn install(&mut self, key: Key, incoming: KeyState) {
+        self.total_weight += incoming.weight;
+        match self.states.entry(key) {
+            Entry::Vacant(e) => {
+                e.insert(incoming);
+            }
+            Entry::Occupied(mut e) => {
+                let st = e.get_mut();
+                st.records += incoming.records;
+                st.weight += incoming.weight;
+                if st.values.len() < incoming.values.len() {
+                    st.values.resize(incoming.values.len(), 0.0);
+                }
+                for (i, v) in incoming.values.iter().enumerate() {
+                    st.values[i] += v;
+                }
+            }
+        }
+    }
+
+    /// Per-key state weights — the input to `migration_fraction`.
+    pub fn state_weights(&self) -> Vec<(Key, f64)> {
+        self.states.iter().map(|(&k, s)| (k, s.weight)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fold_accumulates() {
+        let mut s = StateStore::new();
+        s.fold_count(1, 2.0);
+        s.fold_count(1, 3.0);
+        s.fold_count(2, 1.0);
+        let st = s.get(1).unwrap();
+        assert_eq!(st.records, 2);
+        assert!((st.weight - 5.0).abs() < 1e-12);
+        assert_eq!(s.n_keys(), 2);
+        assert!((s.total_weight() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn extract_removes_and_adjusts_total() {
+        let mut s = StateStore::new();
+        s.fold_count(1, 4.0);
+        s.fold_count(2, 1.0);
+        let st = s.extract(1).unwrap();
+        assert!((st.weight - 4.0).abs() < 1e-12);
+        assert_eq!(s.n_keys(), 1);
+        assert!((s.total_weight() - 1.0).abs() < 1e-12);
+        assert!(s.extract(1).is_none());
+    }
+
+    #[test]
+    fn install_fresh_and_merge() {
+        let mut a = StateStore::new();
+        a.update(7, |st| {
+            st.values = vec![1.0, 2.0];
+            10.0
+        });
+        let moved = a.extract(7).unwrap();
+
+        let mut b = StateStore::new();
+        b.install(7, moved.clone());
+        assert_eq!(b.get(7).unwrap().values, vec![1.0, 2.0]);
+        assert!((b.total_weight() - 10.0).abs() < 1e-12);
+
+        // merge path
+        b.install(7, moved);
+        let st = b.get(7).unwrap();
+        assert_eq!(st.values, vec![2.0, 4.0]);
+        assert_eq!(st.records, 2);
+        assert!((b.total_weight() - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn state_weights_reflect_store() {
+        let mut s = StateStore::new();
+        s.fold_count(1, 2.0);
+        s.fold_count(2, 8.0);
+        let mut sw = s.state_weights();
+        sw.sort_by_key(|e| e.0);
+        assert_eq!(sw, vec![(1, 2.0), (2, 8.0)]);
+    }
+
+    #[test]
+    fn weight_conservation_under_migration() {
+        // total weight across stores is invariant under extract+install
+        let mut stores = vec![StateStore::new(), StateStore::new()];
+        for k in 0..100u64 {
+            stores[(k % 2) as usize].fold_count(k, k as f64);
+        }
+        let before: f64 = stores.iter().map(|s| s.total_weight()).sum();
+        // move all even keys to store 1
+        let keys: Vec<Key> = stores[0].keys().collect();
+        for k in keys {
+            let st = stores[0].extract(k).unwrap();
+            stores[1].install(k, st);
+        }
+        let after: f64 = stores.iter().map(|s| s.total_weight()).sum();
+        assert!((before - after).abs() < 1e-9);
+        assert_eq!(stores[0].n_keys(), 0);
+    }
+}

@@ -1,0 +1,102 @@
+//! Sliding state window — Fig 3's experimental setup keeps keygroup state
+//! "in a sliding state window of size 5": the state that must migrate at a
+//! partitioner update is the total keygroup weight of the last W batches.
+
+use crate::workload::Key;
+use std::collections::{HashMap, VecDeque};
+
+#[derive(Debug, Clone)]
+pub struct SlidingStateWindow {
+    window: usize,
+    /// Per-batch keygroup weights, most recent at the back.
+    batches: VecDeque<HashMap<Key, f64>>,
+}
+
+impl SlidingStateWindow {
+    pub fn new(window: usize) -> Self {
+        assert!(window > 0);
+        Self {
+            window,
+            batches: VecDeque::with_capacity(window + 1),
+        }
+    }
+
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Push one batch's keygroup weights; evicts the oldest beyond W.
+    pub fn push_batch(&mut self, keygroup_weights: HashMap<Key, f64>) {
+        self.batches.push_back(keygroup_weights);
+        while self.batches.len() > self.window {
+            self.batches.pop_front();
+        }
+    }
+
+    pub fn n_batches(&self) -> usize {
+        self.batches.len()
+    }
+
+    /// Current state weight per key: sum over the window.
+    pub fn state_weights(&self) -> Vec<(Key, f64)> {
+        let mut acc: HashMap<Key, f64> = HashMap::new();
+        for b in &self.batches {
+            for (&k, &w) in b {
+                *acc.entry(k).or_insert(0.0) += w;
+            }
+        }
+        acc.into_iter().collect()
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.batches.iter().map(|b| b.values().sum::<f64>()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch(pairs: &[(Key, f64)]) -> HashMap<Key, f64> {
+        pairs.iter().cloned().collect()
+    }
+
+    #[test]
+    fn eviction_after_window() {
+        let mut w = SlidingStateWindow::new(2);
+        w.push_batch(batch(&[(1, 1.0)]));
+        w.push_batch(batch(&[(1, 2.0)]));
+        w.push_batch(batch(&[(1, 4.0)]));
+        assert_eq!(w.n_batches(), 2);
+        let sw = w.state_weights();
+        assert_eq!(sw, vec![(1, 6.0)]); // 2 + 4, first batch evicted
+    }
+
+    #[test]
+    fn weights_sum_over_window() {
+        let mut w = SlidingStateWindow::new(5);
+        for i in 0..5 {
+            w.push_batch(batch(&[(1, 1.0), (2, i as f64)]));
+        }
+        let m: HashMap<Key, f64> = w.state_weights().into_iter().collect();
+        assert!((m[&1] - 5.0).abs() < 1e-12);
+        assert!((m[&2] - 10.0).abs() < 1e-12);
+        assert!((w.total_weight() - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn keys_disappear_when_cold() {
+        let mut w = SlidingStateWindow::new(2);
+        w.push_batch(batch(&[(42, 1.0)]));
+        w.push_batch(batch(&[(7, 1.0)]));
+        w.push_batch(batch(&[(7, 1.0)]));
+        let m: HashMap<Key, f64> = w.state_weights().into_iter().collect();
+        assert!(!m.contains_key(&42));
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_window_panics() {
+        SlidingStateWindow::new(0);
+    }
+}

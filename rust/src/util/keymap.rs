@@ -1,0 +1,94 @@
+//! Fast hash maps for u64 keys on the request path.
+//!
+//! std's default SipHash is DoS-resistant but ~5× slower than needed for
+//! the per-record `partition()` lookup and the DRW counter bump. Keys here
+//! are already murmur-finalized 64-bit ids (not attacker-controlled
+//! strings), so a single fmix64 round is both sufficient and fast.
+//! §Perf in EXPERIMENTS.md records the before/after.
+
+use crate::hash::fmix64;
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// One-round fmix64 hasher for u64 keys.
+#[derive(Default)]
+pub struct KeyHasher {
+    state: u64,
+}
+
+impl Hasher for KeyHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.state
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        // generic fallback (not on the hot path)
+        for chunk in bytes.chunks(8) {
+            let mut buf = [0u8; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            self.state = fmix64(self.state ^ u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, i: u64) {
+        self.state = fmix64(i);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, i: usize) {
+        self.write_u64(i as u64);
+    }
+}
+
+pub type KeyBuild = BuildHasherDefault<KeyHasher>;
+
+/// HashMap keyed by u64 record keys, fmix64-hashed.
+pub type KeyMap<V> = HashMap<u64, V, KeyBuild>;
+pub type KeySet = HashSet<u64, KeyBuild>;
+
+pub fn key_map<V>() -> KeyMap<V> {
+    KeyMap::default()
+}
+
+pub fn key_map_with_capacity<V>(cap: usize) -> KeyMap<V> {
+    KeyMap::with_capacity_and_hasher(cap, KeyBuild::default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_roundtrip() {
+        let mut m: KeyMap<u32> = key_map();
+        for k in 0..10_000u64 {
+            m.insert(k, (k * 3) as u32);
+        }
+        for k in 0..10_000u64 {
+            assert_eq!(m[&k], (k * 3) as u32);
+        }
+        assert_eq!(m.len(), 10_000);
+    }
+
+    #[test]
+    fn capacity_constructor() {
+        let mut m: KeyMap<u8> = key_map_with_capacity(64);
+        m.insert(1, 2);
+        assert_eq!(m.get(&1), Some(&2));
+    }
+
+    #[test]
+    fn hasher_spreads_sequential_keys() {
+        // sequential u64 keys must not collide in low bits
+        let mut low_bits = std::collections::HashSet::new();
+        for k in 0..1000u64 {
+            let mut h = KeyHasher::default();
+            h.write_u64(k);
+            low_bits.insert(h.finish() & 0xFFF);
+        }
+        assert!(low_bits.len() > 700, "low-bit collisions: {}", low_bits.len());
+    }
+}

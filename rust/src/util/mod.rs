@@ -1,0 +1,13 @@
+//! Shared utilities: PRNGs, statistics, virtual time, table output.
+
+pub mod keymap;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod vtime;
+
+pub use keymap::{key_map, key_map_with_capacity, KeyMap, KeySet};
+pub use rng::{Rng, SplitMix64};
+pub use stats::{load_imbalance, load_rsd, mean, percentile, std, Online};
+pub use table::Table;
+pub use vtime::{wave_makespan, SlotClock, VTime};

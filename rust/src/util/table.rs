@@ -1,0 +1,135 @@
+//! Aligned-text and TSV table output for benches and figure drivers.
+//!
+//! Every figure driver emits its series through this writer so the bench
+//! output both reads well on a terminal and can be fed to plotting scripts.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row arity mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Convenience: format f64 cells with 4 significant decimals.
+    pub fn rowf(&mut self, cells: &[f64]) {
+        self.row(&cells.iter().map(|v| format!("{v:.4}")).collect::<Vec<_>>());
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "# {}", self.title);
+        let hdr: Vec<String> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| format!("{:>w$}", h, w = widths[i]))
+            .collect();
+        let _ = writeln!(out, "{}", hdr.join("  "));
+        let _ = writeln!(out, "{}", "-".repeat(hdr.join("  ").len()));
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect();
+            let _ = writeln!(out, "{}", line.join("  "));
+        }
+        out
+    }
+
+    /// Render as TSV (headers prefixed with `#`).
+    pub fn to_tsv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "# {}", self.title);
+        let _ = writeln!(out, "{}", self.headers.join("\t"));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.join("\t"));
+        }
+        out
+    }
+
+    /// Print to stdout and, if `DYNREPART_OUT` is set, also write
+    /// `<DYNREPART_OUT>/<slug>.tsv` for plotting.
+    pub fn emit(&self, slug: &str) {
+        print!("{}", self.render());
+        println!();
+        if let Ok(dir) = std::env::var("DYNREPART_OUT") {
+            let path = Path::new(&dir).join(format!("{slug}.tsv"));
+            if let Err(e) = std::fs::create_dir_all(&dir)
+                .and_then(|_| std::fs::File::create(&path))
+                .and_then(|mut f| f.write_all(self.to_tsv().as_bytes()))
+            {
+                eprintln!("warn: could not write {}: {e}", path.display());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns_columns() {
+        let mut t = Table::new("demo", &["a", "longheader"]);
+        t.row(&["1".into(), "2".into()]);
+        t.row(&["100".into(), "2000".into()]);
+        let r = t.render();
+        assert!(r.contains("# demo"));
+        assert!(r.contains("longheader"));
+        // each data line has same length
+        let lines: Vec<&str> = r.lines().skip(1).collect();
+        assert_eq!(lines[1].len(), lines[2].len());
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    fn tsv_roundtrip_shape() {
+        let mut t = Table::new("x", &["c1", "c2", "c3"]);
+        t.rowf(&[1.0, 2.5, 3.25]);
+        let tsv = t.to_tsv();
+        let data_line = tsv.lines().nth(2).unwrap();
+        assert_eq!(data_line.split('\t').count(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+}

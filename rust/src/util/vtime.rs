@@ -1,0 +1,139 @@
+//! Virtual time for the DDPS executor model.
+//!
+//! The paper's processing-time figures were taken on 4–15-node clusters.
+//! This image has a single physical core, so parallel wall-clock speedup is
+//! physically impossible; instead the engines account *virtual* time per
+//! executor slot, discrete-event style (see DESIGN.md "Substitutions").
+//! Per-record costs are calibrated from real PJRT kernel timings, so the
+//! virtual timeline is anchored to measured compute.
+
+/// Virtual seconds.
+pub type VTime = f64;
+
+/// A pool of executor slots with independent virtual clocks, used by the
+/// wave scheduler: a task is assigned to the earliest-free slot and advances
+/// that slot's clock by the task's cost.
+#[derive(Debug, Clone)]
+pub struct SlotClock {
+    slots: Vec<VTime>,
+}
+
+impl SlotClock {
+    pub fn new(n_slots: usize) -> Self {
+        assert!(n_slots > 0, "need at least one executor slot");
+        Self {
+            slots: vec![0.0; n_slots],
+        }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Assign a task of `cost` virtual seconds to the earliest-free slot.
+    /// Returns (slot index, completion time).
+    pub fn assign(&mut self, cost: VTime) -> (usize, VTime) {
+        let (idx, _) = self
+            .slots
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .expect("non-empty");
+        self.slots[idx] += cost;
+        (idx, self.slots[idx])
+    }
+
+    /// Assign a task that cannot start before `ready` (e.g. shuffle barrier).
+    pub fn assign_after(&mut self, ready: VTime, cost: VTime) -> (usize, VTime) {
+        let (idx, _) = self
+            .slots
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .expect("non-empty");
+        self.slots[idx] = self.slots[idx].max(ready) + cost;
+        (idx, self.slots[idx])
+    }
+
+    /// Time at which every slot is idle — the stage completion time.
+    pub fn makespan(&self) -> VTime {
+        self.slots.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Advance all slots to at least `t` (barrier).
+    pub fn barrier(&mut self, t: VTime) {
+        for s in &mut self.slots {
+            *s = s.max(t);
+        }
+    }
+
+    pub fn reset(&mut self) {
+        for s in &mut self.slots {
+            *s = 0.0;
+        }
+    }
+
+    pub fn slot_times(&self) -> &[VTime] {
+        &self.slots
+    }
+}
+
+/// Schedule a set of task costs onto `n_slots` with LPT-free arrival order
+/// (the order tasks become ready, like Spark's wave scheduling) and return
+/// the makespan. Convenience used widely by figure drivers.
+pub fn wave_makespan(task_costs: &[VTime], n_slots: usize) -> VTime {
+    let mut clock = SlotClock::new(n_slots);
+    for &c in task_costs {
+        clock.assign(c);
+    }
+    clock.makespan()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_slot_sums() {
+        assert!((wave_makespan(&[1.0, 2.0, 3.0], 1) - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn many_slots_is_max() {
+        assert!((wave_makespan(&[1.0, 2.0, 3.0], 3) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn straggler_dominates() {
+        // 4 slots, one huge task: makespan is the straggler.
+        let costs = [10.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0];
+        assert!((wave_makespan(&costs, 4) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wave_scheduling_two_waves() {
+        // 2 slots, tasks [3,3,3,3] -> two waves of 3 -> makespan 6.
+        assert!((wave_makespan(&[3.0, 3.0, 3.0, 3.0], 2) - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn assign_after_respects_ready_time() {
+        let mut c = SlotClock::new(2);
+        let (_, done) = c.assign_after(5.0, 1.0);
+        assert!((done - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn barrier_advances_all() {
+        let mut c = SlotClock::new(3);
+        c.assign(1.0);
+        c.barrier(4.0);
+        assert!(c.slot_times().iter().all(|&t| t >= 4.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_slots_panics() {
+        SlotClock::new(0);
+    }
+}

@@ -1,0 +1,212 @@
+//! Synthetic **LFM** — a drifting power-law stream standing in for the
+//! paper's 4M-tag LastFM dataset (not redistributable; see DESIGN.md
+//! "Substitutions").
+//!
+//! Fig 3 splits LFM into 20 batches of 100K records over 20 partitions and
+//! forces a partitioner update per batch, measuring how each method tracks
+//! *fluctuations in the key distribution*. What matters is therefore:
+//! realistic cardinality (~100K distinct tags), power-law popularity
+//! (music-tag frequency follows a Zipf-like law with exponent ≈ 0.9–1.0),
+//! and drift: the set of heavy tags churns over time (album releases,
+//! charting songs). We model drift with two mechanisms, both per batch:
+//!
+//! 1. **rank churn** — a fraction of popularity ranks swap with a nearby
+//!    rank (gradual drift);
+//! 2. **head replacement** — with some probability a top-R rank is handed
+//!    to a brand-new key (sudden drift — matches the paper's "replacing
+//!    keys with randomly generated strings in each round").
+
+use super::{Generator, Key, Record};
+use crate::hash::fmix64;
+use crate::util::Rng;
+
+#[derive(Debug, Clone)]
+pub struct LfmConfig {
+    pub n_keys: usize,
+    pub exponent: f64,
+    /// Fraction of ranks that swap with a neighbour at each batch boundary.
+    pub churn_frac: f64,
+    /// Max distance of a churn swap in rank space.
+    pub churn_radius: usize,
+    /// Probability that each of the top `head_size` ranks is replaced by a
+    /// fresh key at a batch boundary.
+    pub head_replace_prob: f64,
+    pub head_size: usize,
+}
+
+impl Default for LfmConfig {
+    fn default() -> Self {
+        Self {
+            n_keys: 100_000,
+            exponent: 0.9,
+            churn_frac: 0.02,
+            churn_radius: 1000,
+            head_replace_prob: 0.15,
+            head_size: 10,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Lfm {
+    cfg: LfmConfig,
+    cdf: Vec<f64>,
+    /// rank -> key id; mutated at batch boundaries to model drift.
+    rank_to_key: Vec<Key>,
+    rng: Rng,
+    ts: u64,
+    fresh_counter: u64,
+    batch_no: u64,
+}
+
+impl Lfm {
+    pub fn new(cfg: LfmConfig, seed: u64) -> Self {
+        let mut acc = 0.0;
+        let mut cdf = Vec::with_capacity(cfg.n_keys);
+        for i in 1..=cfg.n_keys {
+            acc += (i as f64).powf(-cfg.exponent);
+            cdf.push(acc);
+        }
+        for c in &mut cdf {
+            *c /= acc;
+        }
+        let rank_to_key = (0..cfg.n_keys as u64).map(|r| fmix64(r + 1)).collect();
+        Self {
+            cfg,
+            cdf,
+            rank_to_key,
+            rng: Rng::new(seed),
+            ts: 0,
+            fresh_counter: 1 << 60,
+            batch_no: 0,
+        }
+    }
+
+    pub fn with_defaults(seed: u64) -> Self {
+        Self::new(LfmConfig::default(), seed)
+    }
+
+    pub fn batch_no(&self) -> u64 {
+        self.batch_no
+    }
+
+    /// Apply one step of concept drift. Call at each batch boundary
+    /// (`next_batch` does this for you).
+    pub fn drift(&mut self) {
+        self.batch_no += 1;
+        let n = self.cfg.n_keys;
+        // 1. rank churn: nearby-rank swaps
+        let swaps = ((n as f64) * self.cfg.churn_frac) as usize;
+        for _ in 0..swaps {
+            let a = self.rng.range(0, n);
+            let lo = a.saturating_sub(self.cfg.churn_radius);
+            let hi = (a + self.cfg.churn_radius + 1).min(n);
+            let b = self.rng.range(lo, hi);
+            self.rank_to_key.swap(a, b);
+        }
+        // 2. sudden head replacement: a heavy tag dies, a new one is born
+        for r in 0..self.cfg.head_size.min(n) {
+            if self.rng.next_f64() < self.cfg.head_replace_prob {
+                self.fresh_counter += 1;
+                self.rank_to_key[r] = fmix64(self.fresh_counter);
+            }
+        }
+    }
+
+    /// Generate one batch of `n` records, then drift.
+    pub fn next_batch(&mut self, n: usize) -> Vec<Record> {
+        let out = self.batch(n);
+        self.drift();
+        out
+    }
+
+    #[inline]
+    fn sample_rank(&mut self) -> usize {
+        let u = self.rng.next_f64();
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+    }
+}
+
+impl Generator for Lfm {
+    fn next_record(&mut self) -> Record {
+        let rank = self.sample_rank();
+        self.ts += 1;
+        Record::unit(self.rank_to_key[rank], self.ts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::{HashMap, HashSet};
+
+    fn head_keys(l: &Lfm, k: usize) -> HashSet<Key> {
+        l.rank_to_key[..k].iter().cloned().collect()
+    }
+
+    #[test]
+    fn power_law_head_is_heavy() {
+        let mut l = Lfm::with_defaults(1);
+        let recs = l.batch(100_000);
+        let mut counts: HashMap<Key, u32> = HashMap::new();
+        for r in &recs {
+            *counts.entry(r.key).or_insert(0) += 1;
+        }
+        let mut v: Vec<u32> = counts.values().cloned().collect();
+        v.sort_unstable_by(|a, b| b.cmp(a));
+        // top key should be far above the mean count
+        let mean = 100_000.0 / counts.len() as f64;
+        assert!(v[0] as f64 > 20.0 * mean, "top={} mean={mean}", v[0]);
+    }
+
+    #[test]
+    fn drift_churns_the_head_eventually() {
+        let mut l = Lfm::with_defaults(2);
+        let before = head_keys(&l, 10);
+        for _ in 0..20 {
+            l.drift();
+        }
+        let after = head_keys(&l, 10);
+        let kept = before.intersection(&after).count();
+        assert!(kept < 10, "head never churned across 20 drifts");
+    }
+
+    #[test]
+    fn no_drift_config_is_stationary() {
+        let cfg = LfmConfig {
+            churn_frac: 0.0,
+            head_replace_prob: 0.0,
+            ..Default::default()
+        };
+        let mut l = Lfm::new(cfg, 3);
+        let before = l.rank_to_key.clone();
+        l.drift();
+        assert_eq!(before, l.rank_to_key);
+    }
+
+    #[test]
+    fn next_batch_advances_batch_no() {
+        let mut l = Lfm::with_defaults(4);
+        let _ = l.next_batch(10);
+        let _ = l.next_batch(10);
+        assert_eq!(l.batch_no(), 2);
+    }
+
+    #[test]
+    fn rank_to_key_stays_injective_under_drift() {
+        let mut l = Lfm::with_defaults(5);
+        for _ in 0..50 {
+            l.drift();
+        }
+        let set: HashSet<_> = l.rank_to_key.iter().collect();
+        assert_eq!(set.len(), l.rank_to_key.len());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Lfm::with_defaults(42);
+        let mut b = Lfm::with_defaults(42);
+        assert_eq!(a.next_batch(1000), b.next_batch(1000));
+        assert_eq!(a.next_batch(1000), b.next_batch(1000));
+    }
+}

@@ -1,0 +1,76 @@
+//! Workload generators for every dataset in the paper's evaluation.
+//!
+//! - [`zipf`] — the **ZIPF** dataset family (§5): parametrized Zipfian key
+//!   distributions, exponents 1–3, 100K–1M distinct keys.
+//! - [`lfm`] — a synthetic stand-in for the **LFM** LastFM tag dataset
+//!   (§5, Fig 3): 4M records, ~100K distinct keys, power-law popularity
+//!   with concept drift across batches.
+//! - [`webcrawl`] — the §6 web-crawl frontier simulator: 64 seed news
+//!   hosts, 7 crawl rounds, heavy-tailed per-host page counts and
+//!   dynamic-page parse costs.
+//! - [`ner`] — variable-length text records for the §6 NER streaming
+//!   application (token ids consumed by the AOT-compiled scorer).
+
+pub mod lfm;
+pub mod ner;
+pub mod webcrawl;
+pub mod zipf;
+
+/// Keys are 64-bit ids. String keys (word tokens, host names) are hashed to
+/// ids at the source with murmur3, exactly as the paper generates tokens.
+pub type Key = u64;
+
+/// A data record flowing through the DDPS.
+///
+/// `weight` is the record's processing-cost proxy in the reducer (e.g. text
+/// length for NER); the engines multiply it by the calibrated per-unit cost.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Record {
+    pub key: Key,
+    pub ts: u64,
+    pub weight: f64,
+}
+
+impl Record {
+    pub fn new(key: Key, ts: u64, weight: f64) -> Self {
+        Self { key, ts, weight }
+    }
+
+    /// A unit-cost record (counting workloads).
+    pub fn unit(key: Key, ts: u64) -> Self {
+        Self::new(key, ts, 1.0)
+    }
+}
+
+/// Anything that can produce a finite batch or an unbounded stream of records.
+pub trait Generator {
+    /// Produce the next record, advancing internal state (time, drift).
+    fn next_record(&mut self) -> Record;
+
+    /// Produce `n` records into a vector.
+    fn batch(&mut self, n: usize) -> Vec<Record> {
+        (0..n).map(|_| self.next_record()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Constant(u64);
+    impl Generator for Constant {
+        fn next_record(&mut self) -> Record {
+            self.0 += 1;
+            Record::unit(7, self.0)
+        }
+    }
+
+    #[test]
+    fn batch_draws_n() {
+        let mut g = Constant(0);
+        let b = g.batch(5);
+        assert_eq!(b.len(), 5);
+        assert_eq!(b[4].ts, 5);
+        assert!(b.iter().all(|r| r.key == 7 && r.weight == 1.0));
+    }
+}

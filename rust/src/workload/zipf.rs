@@ -1,0 +1,181 @@
+//! Exact Zipfian sampling — the paper's ZIPF dataset family.
+//!
+//! "**ZIPF** of 4M element parametrized Zipfian datasets of 100K distinct
+//! items, with an exponent between 1–3" (§5); the Spark/Flink experiments
+//! use 1M keys and exponents 1–2 (§5, Figs 4–6).
+//!
+//! We sample from the exact distribution: P(rank i) ∝ i^(−s) over ranks
+//! 1..=K, via an inverse-CDF binary search on the precomputed cumulative
+//! weights (8 MB for 1M keys — fine). Rank→key-id mapping goes through the
+//! murmur finalizer so key ids are uncorrelated with popularity rank, like
+//! the paper's murmur-hashed word tokens.
+
+use super::{Generator, Key, Record};
+use crate::hash::fmix64;
+use crate::util::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+    exponent: f64,
+    rng: Rng,
+    ts: u64,
+    /// Mixed into the rank→key mapping so two generators over the same K
+    /// produce disjoint key universes (used for drift experiments).
+    key_salt: u64,
+}
+
+impl Zipf {
+    pub fn new(n_keys: usize, exponent: f64, seed: u64) -> Self {
+        assert!(n_keys > 0);
+        assert!(exponent >= 0.0);
+        let mut cdf = Vec::with_capacity(n_keys);
+        let mut acc = 0.0f64;
+        for i in 1..=n_keys {
+            acc += (i as f64).powf(-exponent);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Self {
+            cdf,
+            exponent,
+            rng: Rng::new(seed),
+            ts: 0,
+            key_salt: 0,
+        }
+    }
+
+    pub fn with_key_salt(mut self, salt: u64) -> Self {
+        self.key_salt = salt;
+        self
+    }
+
+    pub fn n_keys(&self) -> usize {
+        self.cdf.len()
+    }
+
+    pub fn exponent(&self) -> f64 {
+        self.exponent
+    }
+
+    /// Sample a popularity rank in `[0, K)` (0 = heaviest).
+    #[inline]
+    pub fn sample_rank(&mut self) -> usize {
+        let u = self.rng.next_f64();
+        // first index with cdf[i] >= u
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+    }
+
+    /// The key id of a rank.
+    #[inline]
+    pub fn key_of_rank(&self, rank: usize) -> Key {
+        fmix64((rank as u64 + 1) ^ self.key_salt.rotate_left(17))
+    }
+
+    /// Exact relative frequency of a rank.
+    pub fn freq_of_rank(&self, rank: usize) -> f64 {
+        let lo = if rank == 0 { 0.0 } else { self.cdf[rank - 1] };
+        self.cdf[rank] - lo
+    }
+}
+
+impl Generator for Zipf {
+    fn next_record(&mut self) -> Record {
+        let rank = self.sample_rank();
+        self.ts += 1;
+        Record::unit(self.key_of_rank(rank), self.ts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn exponent_zero_is_uniform() {
+        let mut z = Zipf::new(10, 0.0, 1);
+        let mut counts = HashMap::new();
+        for _ in 0..100_000 {
+            *counts.entry(z.next_record().key).or_insert(0u32) += 1;
+        }
+        assert_eq!(counts.len(), 10);
+        for &c in counts.values() {
+            assert!((c as f64 - 10_000.0).abs() < 700.0, "c={c}");
+        }
+    }
+
+    #[test]
+    fn heavy_head_matches_theory() {
+        // exponent 1, K=1000: P(rank1) = 1/H(1000) ≈ 0.1336
+        let mut z = Zipf::new(1000, 1.0, 2);
+        let top_key = z.key_of_rank(0);
+        let n = 200_000;
+        let mut hits = 0u32;
+        for _ in 0..n {
+            if z.next_record().key == top_key {
+                hits += 1;
+            }
+        }
+        let p = hits as f64 / n as f64;
+        let h1000: f64 = (1..=1000).map(|i| 1.0 / i as f64).sum();
+        let expected = 1.0 / h1000;
+        assert!((p - expected).abs() < 0.01, "p={p} expected={expected}");
+    }
+
+    #[test]
+    fn freq_of_rank_sums_to_one() {
+        let z = Zipf::new(500, 1.5, 3);
+        let s: f64 = (0..500).map(|r| z.freq_of_rank(r)).sum();
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn freq_decreasing_in_rank() {
+        let z = Zipf::new(100, 2.0, 4);
+        for r in 1..100 {
+            assert!(z.freq_of_rank(r) <= z.freq_of_rank(r - 1) + 1e-15);
+        }
+    }
+
+    #[test]
+    fn high_exponent_concentrates() {
+        // exponent 3: top key takes ~83% of mass (1/zeta(3)).
+        let z = Zipf::new(100_000, 3.0, 5);
+        assert!(z.freq_of_rank(0) > 0.8);
+    }
+
+    #[test]
+    fn key_ids_uncorrelated_with_rank() {
+        let z = Zipf::new(1000, 1.0, 6);
+        // adjacent ranks should not map to adjacent ids
+        let mut adjacent = 0;
+        for r in 1..1000 {
+            if z.key_of_rank(r).abs_diff(z.key_of_rank(r - 1)) < 1000 {
+                adjacent += 1;
+            }
+        }
+        assert!(adjacent < 5);
+    }
+
+    #[test]
+    fn salt_disjoint_universes() {
+        let a = Zipf::new(100, 1.0, 7).with_key_salt(1);
+        let b = Zipf::new(100, 1.0, 7).with_key_salt(2);
+        let ka: std::collections::HashSet<_> = (0..100).map(|r| a.key_of_rank(r)).collect();
+        let overlap = (0..100).filter(|&r| ka.contains(&b.key_of_rank(r))).count();
+        assert_eq!(overlap, 0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Zipf::new(100, 1.2, 42);
+        let mut b = Zipf::new(100, 1.2, 42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_record(), b.next_record());
+        }
+    }
+}

@@ -1,0 +1,119 @@
+//! Integration tests across modules: engines × DR × state × workloads,
+//! plus failure injection (garbage histograms must never corrupt routing).
+
+use dynrepart::ddps::{BatchJob, EngineConfig, MicroBatchEngine, StreamingEngine};
+use dynrepart::dr::{DrConfig, DrMaster, PartitionerChoice};
+use dynrepart::partitioner::GedikStrategy;
+use dynrepart::sketch::Histogram;
+use dynrepart::workload::{lfm::Lfm, zipf::Zipf, Generator};
+
+fn cfg(n_partitions: usize, n_slots: usize) -> EngineConfig {
+    EngineConfig {
+        n_partitions,
+        n_slots,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn microbatch_all_partitioner_families_run_end_to_end() {
+    for choice in [
+        PartitionerChoice::Kip,
+        PartitionerChoice::Mixed,
+        PartitionerChoice::Gedik(GedikStrategy::Scan),
+        PartitionerChoice::Gedik(GedikStrategy::Readj),
+        PartitionerChoice::Gedik(GedikStrategy::Redist),
+        PartitionerChoice::Uhp,
+    ] {
+        let mut e = MicroBatchEngine::new(cfg(8, 8), DrConfig::forced(), choice, 3);
+        let mut z = Zipf::new(10_000, 1.2, 3);
+        let mut expected = 0.0;
+        for _ in 0..4 {
+            let b = z.batch(20_000);
+            expected += b.iter().map(|r| r.weight).sum::<f64>();
+            let r = e.run_batch(&b);
+            assert!(r.makespan > 0.0);
+            assert!((r.loads.iter().sum::<f64>() - 20_000.0).abs() < 1e-6);
+        }
+        assert!(
+            (e.total_state_weight() - expected).abs() < 1e-6,
+            "{:?}: state not conserved",
+            choice.name()
+        );
+    }
+}
+
+#[test]
+fn streaming_long_run_with_drift_stays_consistent() {
+    let scfg = EngineConfig {
+        n_partitions: 12,
+        n_slots: 12,
+        task_overhead: 0.0,
+        ..Default::default()
+    };
+    let mut e = StreamingEngine::new(scfg, DrConfig::default(), PartitionerChoice::Kip, 5);
+    let mut lfm = Lfm::with_defaults(5);
+    let mut total = 0.0;
+    for _ in 0..12 {
+        let b = lfm.next_batch(30_000);
+        total += b.iter().map(|r| r.weight).sum::<f64>();
+        e.run_interval(&b);
+    }
+    assert!((e.total_state_weight() - total).abs() < 1e-6);
+    assert!(e.metrics().repartition_count >= 1, "drift must trigger DR");
+    // checkpoints retained and consistent
+    let cp = e.checkpoints().latest().unwrap();
+    assert_eq!(cp.id, 12);
+    assert!((cp.total_state_weight() - total).abs() < 1e-6);
+}
+
+#[test]
+fn batch_replay_beats_no_dr_on_skew_and_costs_show_up() {
+    let mut z = Zipf::new(100_000, 1.0, 8);
+    let recs = z.batch(300_000);
+    let job = BatchJob::new(cfg(16, 16), DrConfig::default(), PartitionerChoice::Kip, 8);
+    let (with, without) = job.compare(&recs);
+    assert!(with.repartitioned && !without.repartitioned);
+    assert!(with.replay_time > 0.0);
+    assert!(with.makespan < without.makespan);
+}
+
+#[test]
+fn failure_injection_garbage_histograms_never_break_routing() {
+    // A DRM fed adversarial histograms (wrong mass, NaN-free but extreme)
+    // must still emit total, in-range partitioners.
+    let mut drm = DrMaster::new(DrConfig::forced(), PartitionerChoice::Kip, 8, 9);
+    let cases = vec![
+        Histogram::from_freqs(&[], 0.0),                         // empty
+        Histogram::from_freqs(&[(1, 1.0)], 1.0),                 // one key = everything
+        Histogram::from_freqs(&[(1, 0.9), (2, 0.9)], 1.0),       // mass > 1 (broken worker)
+        Histogram::from_freqs(&(0..64u64).map(|k| (k, 1e-9)).collect::<Vec<_>>(), 1.0), // dust
+    ];
+    for hist in cases {
+        let d = drm.decide(vec![hist]);
+        let h = d.new_partitioner.unwrap_or_else(|| drm.handle());
+        for k in 0..5_000u64 {
+            assert!(h.partition(k) < 8, "routing broke on adversarial histogram");
+        }
+    }
+}
+
+#[test]
+fn dr_overhead_is_negligible_when_data_is_uniform() {
+    // §1: DR "improves the performance with negligible overhead" — on
+    // uniform data the DR-enabled engine must stay within 2% of baseline.
+    let mut with = MicroBatchEngine::new(cfg(16, 16), DrConfig::default(), PartitionerChoice::Kip, 10);
+    let mut without = MicroBatchEngine::new(cfg(16, 16), DrConfig::disabled(), PartitionerChoice::Uhp, 10);
+    let mut z = Zipf::new(100_000, 0.0, 10);
+    let mut t_with = 0.0;
+    let mut t_without = 0.0;
+    for _ in 0..5 {
+        let b = z.batch(50_000);
+        t_with += with.run_batch(&b).makespan;
+        t_without += without.run_batch(&b).makespan;
+    }
+    assert!(
+        t_with <= t_without * 1.02,
+        "DR overhead on uniform data: {t_with} vs {t_without}"
+    );
+}

@@ -1,0 +1,145 @@
+//! Property-based tests over the partitioner invariants (mini-prop
+//! framework; replay failures with PROP_SEED=<seed> PROP_CASES=1).
+
+use dynrepart::partitioner::*;
+use dynrepart::prop::{forall, Gen};
+use dynrepart::sketch::Histogram;
+
+fn random_histogram(g: &mut Gen, max_keys: usize) -> Histogram {
+    let n_keys = g.usize(0..max_keys);
+    let mut freqs = Vec::with_capacity(n_keys);
+    let mut remaining = 1.0f64;
+    for i in 0..n_keys {
+        let f = g.f64(0.0..remaining * 0.5);
+        freqs.push((g.u64(0..1 << 48) ^ (i as u64) << 50, f));
+        remaining -= f;
+    }
+    Histogram::from_freqs(&freqs, 1_000_000.0)
+}
+
+#[test]
+fn every_partitioner_is_total_and_in_range() {
+    forall(60, |g| {
+        let n = g.usize(1..48);
+        let hist = random_histogram(g, 4 * n);
+        let seed = g.u64(0..1 << 32);
+        let parts: Vec<Box<dyn Partitioner>> = vec![
+            Box::new(Uhp::with_seed(n, seed)),
+            Box::new(Kip::update(
+                &Uhp::with_seed(n, seed),
+                &WeightedHash::with_default_hosts(n, seed),
+                &hist,
+                KipConfig::default(),
+            )),
+            Box::new(
+                GedikPartitioner::initial(GedikStrategy::Scan, n, GedikConfig::default(), seed)
+                    .update(&hist),
+            ),
+            Box::new(
+                GedikPartitioner::initial(GedikStrategy::Readj, n, GedikConfig::default(), seed)
+                    .update(&hist),
+            ),
+            Box::new(
+                GedikPartitioner::initial(GedikStrategy::Redist, n, GedikConfig::default(), seed)
+                    .update(&hist),
+            ),
+            Box::new(Mixed::initial(n, seed).update(&hist)),
+        ];
+        for p in &parts {
+            assert_eq!(p.n_partitions(), n);
+            for _ in 0..50 {
+                let k = g.u64(0..u64::MAX);
+                assert!(p.partition(k) < n);
+            }
+            // determinism
+            let k = g.u64(0..u64::MAX);
+            assert_eq!(p.partition(k), p.partition(k));
+            // tail shares are a distribution
+            let shares = p.tail_shares();
+            assert_eq!(shares.len(), n);
+            let s: f64 = shares.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6, "tail shares sum {s}");
+            assert!(shares.iter().all(|&x| x >= 0.0));
+        }
+    });
+}
+
+#[test]
+fn kip_heavy_keys_always_explicit_and_within_histogram_budget() {
+    forall(60, |g| {
+        let n = g.usize(2..32);
+        let hist = random_histogram(g, 4 * n);
+        let kip = Kip::update(
+            &Uhp::with_seed(n, 1),
+            &WeightedHash::with_default_hosts(n, 2),
+            &hist,
+            KipConfig::default(),
+        );
+        assert_eq!(kip.explicit_routes(), hist.len());
+        for e in hist.entries() {
+            assert!(kip.explicit_table().contains_key(&e.key));
+        }
+    });
+}
+
+#[test]
+fn migration_fraction_bounds_and_consistency() {
+    forall(80, |g| {
+        let n = g.usize(2..24);
+        let a = Uhp::with_seed(n, g.u64(0..1000));
+        let b = Uhp::with_seed(n, g.u64(0..1000));
+        let sw: Vec<(u64, f64)> = (0..g.usize(1..500))
+            .map(|i| (i as u64, g.f64(0.0..10.0)))
+            .collect();
+        let f = migration_fraction(&a, &b, &sw);
+        assert!((0.0..=1.0).contains(&f), "fraction {f} out of bounds");
+        // self-migration is zero
+        assert_eq!(migration_fraction(&a, &a, &sw), 0.0);
+        // plan count consistent with unweighted fraction
+        let plan = migration_plan(&a, &b, sw.iter().map(|e| e.0));
+        let unw: Vec<(u64, f64)> = sw.iter().map(|e| (e.0, 1.0)).collect();
+        let fu = migration_fraction(&a, &b, &unw);
+        assert!((plan.len() as f64 / sw.len() as f64 - fu).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn kip_update_is_idempotent_under_stable_histogram() {
+    forall(40, |g| {
+        let n = g.usize(2..24);
+        let hist = random_histogram(g, 2 * n);
+        let k1 = Kip::update(
+            &Uhp::with_seed(n, 3),
+            &WeightedHash::with_default_hosts(n, 4),
+            &hist,
+            KipConfig::default(),
+        );
+        let k2 = k1.updated(&hist);
+        let sw: Vec<(u64, f64)> = hist.entries().iter().map(|e| (e.key, e.freq)).collect();
+        let f = migration_fraction(&k1, &k2, &sw);
+        assert!(f < 1e-9, "stable histogram migrated {f} of heavy state");
+    });
+}
+
+#[test]
+fn histogram_merge_preserves_mass_and_order() {
+    forall(60, |g| {
+        let n_locals = g.usize(1..6);
+        let locals: Vec<Histogram> = (0..n_locals)
+            .map(|_| {
+                let counts: Vec<(u64, f64)> = (0..g.usize(1..50))
+                    .map(|i| (g.u64(0..100) ^ (i as u64) << 32, g.f64(0.1..100.0)))
+                    .collect();
+                let total: f64 = counts.iter().map(|c| c.1).sum::<f64>() + g.f64(0.0..100.0);
+                Histogram::from_counts(&counts, total, 32)
+            })
+            .collect();
+        let merged = Histogram::merge(&locals, 16);
+        assert!(merged.len() <= 16);
+        assert!(merged.heavy_mass() <= 1.0 + 1e-9);
+        let e = merged.entries();
+        for w in e.windows(2) {
+            assert!(w[0].freq >= w[1].freq - 1e-12, "not sorted");
+        }
+    });
+}

@@ -1,0 +1,87 @@
+//! Cross-language numerics: the AOT artifact executed from rust via PJRT
+//! must reproduce the python eager model bit-for-bit (within f32 noise).
+//!
+//! Requires `make artifacts` (skips politely otherwise, so `cargo test`
+//! works on a fresh checkout).
+
+use dynrepart::runtime::{read_f32_file, read_i32_file, Artifacts, NerExecutable, Runtime};
+
+fn artifacts() -> Option<Artifacts> {
+    let dir = dynrepart::runtime::artifacts_dir();
+    if !dir.join("manifest.tsv").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Artifacts::open(&dir).expect("manifest parses"))
+}
+
+#[test]
+fn ner_b32_matches_python_fixture() {
+    let Some(arts) = artifacts() else { return };
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    let exe = NerExecutable::load(&rt, &arts, 32).expect("load ner_b32");
+
+    let tokens = read_i32_file(&arts.dir.join("check_tokens.bin")).unwrap();
+    let lens = read_i32_file(&arts.dir.join("check_lens.bin")).unwrap();
+    let want_logits = read_f32_file(&arts.dir.join("check_logits.bin")).unwrap();
+    let want_pred = read_i32_file(&arts.dir.join("check_pred.bin")).unwrap();
+    let want_hist = read_f32_file(&arts.dir.join("check_hist.bin")).unwrap();
+
+    let out = exe.execute(&tokens, &lens).expect("execute");
+    assert_eq!(out.logits.len(), want_logits.len());
+    for (i, (a, b)) in out.logits.iter().zip(&want_logits).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-4 + 1e-4 * b.abs(),
+            "logit {i}: rust={a} python={b}"
+        );
+    }
+    assert_eq!(out.pred, want_pred, "argmax predictions diverge");
+    for (i, (a, b)) in out.class_hist.iter().zip(&want_hist).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-2 + 1e-4 * b.abs(),
+            "hist {i}: rust={a} python={b}"
+        );
+    }
+}
+
+#[test]
+fn all_manifest_variants_compile() {
+    let Some(arts) = artifacts() else { return };
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    for name in arts.manifest.names() {
+        rt.load_hlo_text(&arts.hlo_path(name))
+            .unwrap_or_else(|e| panic!("{name} failed to compile: {e}"));
+    }
+}
+
+#[test]
+fn ladder_scores_arbitrary_doc_counts() {
+    let Some(arts) = artifacts() else { return };
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    let ladder = dynrepart::runtime::ner_exec::NerLadder::load(&rt, &arts).expect("ladder");
+
+    let hosts: Vec<(u64, f64)> = vec![(1, 0.5), (2, 0.5)];
+    let mut gen = dynrepart::workload::ner::NerGen::new(&hosts, 7);
+    for n in [1usize, 31, 33, 200] {
+        let docs = gen.docs(n);
+        let outs = ladder.score_all(&docs).expect("score");
+        let scored: usize = outs.iter().map(|o| o.batch).sum();
+        assert!(scored >= n, "scored {scored} < {n}");
+        // histogram mass equals the total valid token weight
+        let total_hist: f32 = outs.iter().flat_map(|o| o.class_hist.iter()).sum();
+        let total_len: f64 = docs.iter().map(|d| d.weight()).sum();
+        assert!(
+            (total_hist as f64 - total_len).abs() < 1e-2 * total_len.max(1.0),
+            "hist mass {total_hist} vs len {total_len}"
+        );
+    }
+}
+
+#[test]
+fn calibration_returns_sane_cost() {
+    let Some(arts) = artifacts() else { return };
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    let exe = NerExecutable::load(&rt, &arts, 32).expect("load");
+    let cost = exe.calibrate_per_doc_cost(2).expect("calibrate");
+    assert!(cost > 0.0 && cost < 1.0, "per-doc cost {cost}s out of range");
+}
