@@ -16,15 +16,15 @@ use dynrepart::ddps::{EngineConfig, MicroBatchEngine};
 use dynrepart::dr::{DrConfig, PartitionerChoice};
 use dynrepart::figures::fig8;
 use dynrepart::ner::EntityWindows;
-use dynrepart::runtime::{Artifacts, NerExecutable, Runtime};
+use dynrepart::runtime::{Artifacts, Error, NerExecutable, Result, Runtime};
 use dynrepart::workload::ner::{Doc, NerGen};
 use dynrepart::workload::webcrawl::Crawl;
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     // ---- L1/L2: load the AOT artifacts --------------------------------
     let arts = Artifacts::open_default()
-        .map_err(|e| anyhow::anyhow!("{e}\nrun `make artifacts` first"))?;
+        .map_err(|e| Error::msg(format!("{e}\nrun `make artifacts` first")))?;
     let rt = Runtime::cpu()?;
     let exe = NerExecutable::load(&rt, &arts, 128)?;
     println!("PJRT platform: {}; loaded ner_b128 artifact", rt.platform());

@@ -11,10 +11,15 @@
 //! using the new partitioner. Hence a batch job is repartitioned only in
 //! an early stage of the execution so that the cost of replay does not
 //! exceed the expected gains of better partitioning."
+//!
+//! Thin driver over the shared [`ShuffleStage`] core: one stage per job,
+//! with a single mid-map decision point whose epoch swap prices the
+//! replay of already-evicted prefix records.
 
+use super::exec::{self, Scheduling, ShuffleStage, TapAssignment};
 use super::{EngineConfig, EngineMetrics};
 use crate::dr::{DrConfig, DrMaster, DrWorker, PartitionerChoice};
-use crate::util::{load_imbalance, wave_makespan, VTime};
+use crate::util::VTime;
 use crate::workload::Record;
 
 #[derive(Debug, Clone)]
@@ -32,6 +37,9 @@ pub struct JobReport {
     /// Records (not weight) per partition — Fig 7's "record balance".
     pub record_counts: Vec<u64>,
     pub imbalance: f64,
+    /// Partitioner epoch the job finished under (0 = initial, 1 = the
+    /// mid-map repartitioning fired).
+    pub epoch: u64,
 }
 
 /// A one-shot key-grouped batch job (map → shuffle → reduce).
@@ -76,54 +84,35 @@ impl BatchJob {
         let cut = ((records.len() as f64 * self.decision_at) as usize).min(records.len());
 
         // Map phase part 1: the prefix, observed by the DRWs and already
-        // evicted with the initial partitioner.
-        let per_slot = cut.div_ceil(self.cfg.n_slots).max(1);
-        for (i, r) in records[..cut].iter().enumerate() {
-            workers[i / per_slot].observe(r.key, r.weight);
-        }
+        // evicted with the initial (epoch-0) partitioner.
+        exec::tap_records(&mut workers, &records[..cut], TapAssignment::Chunked);
 
-        // DRM decision point.
-        let k = drm.histogram_size();
-        let hists: Vec<_> = workers.iter_mut().map(|w| w.harvest(k)).collect();
-        let decision = drm.decide(hists);
-        let (repartitioned, replayed, replay_time) = match decision.new_partitioner {
-            Some(new) => {
-                partitioner = new;
+        // DRM decision point: decision → epoch bump → replay plan.
+        let decision = exec::decision_point(&mut drm, &mut workers);
+        let (repartitioned, replayed, replay_time) = match decision.swap {
+            Some(swap) => {
+                partitioner = swap.to.clone();
                 // prefix assignments recomputed with the new partitioner
                 (true, cut as u64, cut as f64 * self.cfg.replay_cost)
             }
             None => (false, 0, 0.0),
         };
 
-        // Map phase part 2 + shuffle with the (possibly new) partitioner.
-        let mut loads = vec![0.0f64; n];
-        let mut record_counts = vec![0u64; n];
-        for r in records {
-            let p = partitioner.partition(r.key);
-            loads[p] += r.weight;
-            record_counts[p] += 1;
-        }
-        let map_per_slot = records.len().div_ceil(self.cfg.n_slots);
-        let map_time = map_per_slot as f64 * (self.cfg.map_cost + self.cfg.shuffle_cost);
-
-        // Reduce phase: wave scheduling over the slots (spill model applies).
-        let total_load: f64 = loads.iter().sum();
-        let task_costs: Vec<VTime> = loads
-            .iter()
-            .map(|l| self.cfg.reduce_task_time(*l, total_load))
-            .collect();
-        let reduce_time = wave_makespan(&task_costs, self.cfg.n_slots);
+        // Map phase part 2 + shuffle + wave-scheduled reduce with the
+        // (possibly new) epoch, through the shared core.
+        let stage = ShuffleStage::new(&self.cfg, Scheduling::Wave).run(records, &partitioner, None);
 
         JobReport {
-            makespan: map_time + replay_time + reduce_time,
-            map_time,
-            reduce_time,
+            makespan: stage.map_time + replay_time + stage.reduce_time,
+            map_time: stage.map_time,
+            reduce_time: stage.reduce_time,
             replay_time,
             replayed_records: replayed,
             repartitioned,
-            imbalance: load_imbalance(&loads),
-            loads,
-            record_counts,
+            imbalance: stage.imbalance,
+            loads: stage.loads,
+            record_counts: stage.record_counts,
+            epoch: partitioner.epoch(),
         }
     }
 
@@ -183,6 +172,8 @@ mod tests {
         let (with, without) = job.compare(&recs);
         assert!(with.repartitioned);
         assert!(!without.repartitioned);
+        assert_eq!(with.epoch, 1, "repartitioning must be visible as epoch 1");
+        assert_eq!(without.epoch, 0);
         assert!(
             with.imbalance < without.imbalance,
             "{} vs {}",
@@ -206,6 +197,7 @@ mod tests {
         assert!(r.repartitioned);
         assert_eq!(r.replayed_records, 10_000); // decision_at = 0.1
         assert!(r.replay_time > 0.0);
+        assert_eq!(r.epoch, 1);
 
         let mut z0 = Zipf::new(50_000, 0.0, 3); // uniform: no repartition
         let recs0 = z0.batch(100_000);
@@ -213,6 +205,7 @@ mod tests {
         assert!(!r0.repartitioned);
         assert_eq!(r0.replayed_records, 0);
         assert_eq!(r0.replay_time, 0.0);
+        assert_eq!(r0.epoch, 0);
     }
 
     #[test]

@@ -1,0 +1,344 @@
+//! The shared shuffle-stage execution core (see DESIGN.md "Epochs and the
+//! shared ShuffleStage core").
+//!
+//! All three DDPS engines run the same logical loop — map-tap → shuffle by
+//! the current [`PartitionerEpoch`] → keyed reduce with spill-cost
+//! accounting — and differ only in *scheduling discipline* and in when the
+//! DRM decision point fires:
+//!
+//! | engine     | tap                   | scheduling           | decision point        |
+//! |------------|-----------------------|----------------------|-----------------------|
+//! | batch      | chunked, prefix only  | [`Scheduling::Wave`]   | mid-map, once         |
+//! | microbatch | chunked, every batch  | [`Scheduling::Wave`]   | between batches       |
+//! | streaming  | round-robin sources   | [`Scheduling::Pinned`] | checkpoint barrier    |
+//!
+//! [`ShuffleStage`] implements the loop once; the engines are thin drivers
+//! that sequence decision points, stages and epoch swaps. This is the
+//! single loop later PRs parallelize/shard instead of three.
+
+use super::{EngineConfig, EngineMetrics};
+use crate::dr::{DrDecision, DrMaster, DrWorker};
+use crate::partitioner::{EpochSwap, PartitionerEpoch};
+use crate::sketch::Histogram;
+use crate::state::StateStore;
+use crate::util::{load_imbalance, wave_makespan, VTime};
+use crate::workload::{Key, Record};
+
+/// How map/source work is spread over the DRW taps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TapAssignment {
+    /// Contiguous chunks of the batch per worker — Spark map tasks.
+    Chunked,
+    /// Round-robin over workers — long-running streaming source tasks.
+    RoundRobin,
+}
+
+/// Feed `records` through the DRW sampling taps under `assign`.
+pub fn tap_records(workers: &mut [DrWorker], records: &[Record], assign: TapAssignment) {
+    if workers.is_empty() {
+        return;
+    }
+    match assign {
+        TapAssignment::Chunked => {
+            let per = records.len().div_ceil(workers.len()).max(1);
+            for (i, r) in records.iter().enumerate() {
+                workers[i / per].observe(r.key, r.weight);
+            }
+        }
+        TapAssignment::RoundRobin => {
+            let n = workers.len();
+            for (i, r) in records.iter().enumerate() {
+                workers[i % n].observe(r.key, r.weight);
+            }
+        }
+    }
+}
+
+/// The DRM decision point shared by every engine: harvest each DRW's local
+/// histogram (decaying its counters for the next interval) and let the
+/// master decide. Returns the decision; on a repartitioning the caller
+/// applies the epoch swap with [`apply_epoch_swap`].
+pub fn decision_point(drm: &mut DrMaster, workers: &mut [DrWorker]) -> DrDecision {
+    let k = drm.histogram_size();
+    let hists: Vec<Histogram> = workers.iter_mut().map(|w| w.harvest(k)).collect();
+    drm.decide(hists)
+}
+
+/// How reduce work turns into virtual time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheduling {
+    /// Spark-style short tasks, wave-scheduled over `n_slots`, with the
+    /// spill model and per-task overhead; map and reduce phases are
+    /// sequential (stage time = map + reduce).
+    Wave,
+    /// Flink-style pinned long-running tasks, one per partition; the
+    /// interval drains at the pace of the bottleneck reducer through
+    /// backpressure (stage time = max(source, reduce), no task overhead).
+    Pinned,
+}
+
+/// Outcome of one shuffle stage: per-partition routing result plus the
+/// virtual-time accounting under the stage's scheduling discipline.
+#[derive(Debug, Clone)]
+pub struct StageReport {
+    /// Reduce-side weight per partition.
+    pub loads: Vec<f64>,
+    /// Records (not weight) per partition — Fig 7's "record balance".
+    pub record_counts: Vec<u64>,
+    /// Map/source-side virtual time (parse + emit + shuffle write).
+    pub map_time: VTime,
+    /// Reduce-side virtual time under the scheduling discipline.
+    pub reduce_time: VTime,
+    /// Combined stage time: `map + reduce` for [`Scheduling::Wave`],
+    /// `max(source, reduce)` for [`Scheduling::Pinned`].
+    pub stage_time: VTime,
+    pub imbalance: f64,
+    /// Load of the most loaded partition relative to the mean — how hard
+    /// backpressure bites in the pinned model.
+    pub bottleneck_ratio: f64,
+}
+
+/// The shared map → shuffle → keyed-reduce loop, parameterized by
+/// [`EngineConfig`] and driven through a [`PartitionerEpoch`].
+pub struct ShuffleStage<'a> {
+    cfg: &'a EngineConfig,
+    sched: Scheduling,
+}
+
+impl<'a> ShuffleStage<'a> {
+    pub fn new(cfg: &'a EngineConfig, sched: Scheduling) -> Self {
+        Self { cfg, sched }
+    }
+
+    /// Route `records` through `epoch`, optionally folding reducer state,
+    /// and account virtual time. The spill model (`reduce_task_time`)
+    /// applies under [`Scheduling::Wave`]; the pinned model is gated by
+    /// the bottleneck reducer.
+    pub fn run(
+        &self,
+        records: &[Record],
+        epoch: &PartitionerEpoch,
+        mut state: Option<&mut [StateStore]>,
+    ) -> StageReport {
+        let n = self.cfg.n_partitions;
+        debug_assert_eq!(epoch.n_partitions(), n, "epoch/config partition mismatch");
+
+        // Shuffle: route by the epoch's function; gather loads and fold
+        // keyed state exactly as the reducers would.
+        let mut loads = vec![0.0f64; n];
+        let mut record_counts = vec![0u64; n];
+        for r in records {
+            let p = epoch.partition(r.key);
+            loads[p] += r.weight;
+            record_counts[p] += 1;
+            if let Some(stores) = state.as_deref_mut() {
+                stores[p].fold_count(r.key, r.weight);
+            }
+        }
+
+        let total_load: f64 = loads.iter().sum();
+        let bottleneck = loads.iter().cloned().fold(0.0, f64::max);
+        let (map_time, reduce_time, stage_time) = match self.sched {
+            Scheduling::Wave => {
+                let per_slot = records.len().div_ceil(self.cfg.n_slots);
+                let map_time =
+                    per_slot as f64 * (self.cfg.map_cost + self.cfg.shuffle_cost);
+                let task_costs: Vec<VTime> = loads
+                    .iter()
+                    .map(|l| self.cfg.reduce_task_time(*l, total_load))
+                    .collect();
+                let reduce_time = wave_makespan(&task_costs, self.cfg.n_slots);
+                (map_time, reduce_time, map_time + reduce_time)
+            }
+            Scheduling::Pinned => {
+                let source_time = records.len() as f64 / n as f64
+                    * (self.cfg.map_cost + self.cfg.shuffle_cost);
+                let reduce_time = bottleneck * self.cfg.reduce_cost;
+                (source_time, reduce_time, source_time.max(reduce_time))
+            }
+        };
+
+        let mean_load = total_load / n as f64;
+        StageReport {
+            imbalance: load_imbalance(&loads),
+            bottleneck_ratio: if mean_load > 0.0 { bottleneck / mean_load } else { 1.0 },
+            loads,
+            record_counts,
+            map_time,
+            reduce_time,
+            stage_time,
+        }
+    }
+}
+
+/// Outcome of applying an epoch swap to the keyed state.
+#[derive(Debug, Clone, Copy)]
+pub struct MigrationReport {
+    /// Pause charged against the engine timeline (`moved × migration_cost`).
+    pub pause: VTime,
+    /// Absolute state weight that moved.
+    pub moved_weight: f64,
+    /// Fraction of total state weight that moved (Fig 3 right).
+    pub migrated_fraction: f64,
+}
+
+/// Execute `swap`'s migration plan over the per-partition stores: every
+/// key whose partition changed drags its operator state, paying
+/// `migration_cost` per unit of weight. The plan is derived from the
+/// epoch diff — no engine re-implements the key walk.
+pub fn apply_epoch_swap(
+    cfg: &EngineConfig,
+    stores: &mut [StateStore],
+    swap: &EpochSwap,
+) -> MigrationReport {
+    let total_weight: f64 = stores.iter().map(|s| s.total_weight()).sum();
+    let mut moved = 0.0;
+    let keys: Vec<Vec<Key>> = stores.iter().map(|s| s.keys().collect()).collect();
+    for (p, part_keys) in keys.into_iter().enumerate() {
+        for (key, from, to) in swap.plan(part_keys) {
+            // Precondition (debug-asserted): the stores are laid out per
+            // `swap.from` routing — swaps must be adopted in epoch order.
+            // Extraction uses the store the key was actually found in, so
+            // a violated precondition in release builds cannot corrupt
+            // state weights (it can only leave a key un-migrated).
+            debug_assert_eq!(from, p, "store layout diverged from swap.from routing");
+            if let Some(st) = stores[p].extract(key) {
+                moved += st.weight;
+                stores[to].install(key, st);
+            }
+        }
+    }
+    MigrationReport {
+        pause: moved * cfg.migration_cost,
+        moved_weight: moved,
+        migrated_fraction: if total_weight > 0.0 { moved / total_weight } else { 0.0 },
+    }
+}
+
+/// Adopt an accepted decision — the step every engine performs the same
+/// way: migrate keyed state along the swap's derived plan, switch the
+/// engine's routing snapshot to the new epoch, and record the migration
+/// in the engine metrics.
+pub fn adopt_swap(
+    cfg: &EngineConfig,
+    stores: &mut [StateStore],
+    partitioner: &mut PartitionerEpoch,
+    metrics: &mut EngineMetrics,
+    swap: &EpochSwap,
+) -> MigrationReport {
+    let mig = apply_epoch_swap(cfg, stores, swap);
+    *partitioner = swap.to.clone();
+    metrics.state_weight_migrated += mig.moved_weight;
+    metrics.repartition_count += 1;
+    mig
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partitioner::{EpochedPartitioner, Uhp};
+    use crate::workload::{zipf::Zipf, Generator};
+    use std::sync::Arc;
+
+    fn cfg(n_partitions: usize, n_slots: usize) -> EngineConfig {
+        EngineConfig {
+            n_partitions,
+            n_slots,
+            ..Default::default()
+        }
+    }
+
+    fn epoch(n: usize, seed: u64) -> PartitionerEpoch {
+        EpochedPartitioner::new(Arc::new(Uhp::with_seed(n, seed))).current()
+    }
+
+    #[test]
+    fn stage_conserves_weight_and_counts() {
+        let cfg = cfg(8, 4);
+        let mut z = Zipf::new(10_000, 1.1, 1);
+        let recs = z.batch(30_000);
+        let w: f64 = recs.iter().map(|r| r.weight).sum();
+        let r = ShuffleStage::new(&cfg, Scheduling::Wave).run(&recs, &epoch(8, 1), None);
+        assert!((r.loads.iter().sum::<f64>() - w).abs() < 1e-6);
+        assert_eq!(r.record_counts.iter().sum::<u64>(), 30_000);
+        assert!(r.stage_time > 0.0);
+        assert!((r.stage_time - (r.map_time + r.reduce_time)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pinned_stage_is_bottleneck_gated() {
+        let cfg = cfg(4, 4);
+        let mut z = Zipf::new(5_000, 1.5, 2);
+        let recs = z.batch(20_000);
+        let r = ShuffleStage::new(&cfg, Scheduling::Pinned).run(&recs, &epoch(4, 2), None);
+        let bottleneck = r.loads.iter().cloned().fold(0.0, f64::max);
+        assert!((r.reduce_time - bottleneck * cfg.reduce_cost).abs() < 1e-12);
+        assert!((r.stage_time - r.map_time.max(r.reduce_time)).abs() < 1e-12);
+        assert!(r.bottleneck_ratio >= 1.0);
+    }
+
+    #[test]
+    fn stage_folds_state_when_given_stores() {
+        let cfg = cfg(4, 4);
+        let mut z = Zipf::new(1_000, 1.0, 3);
+        let recs = z.batch(5_000);
+        let mut stores: Vec<StateStore> = (0..4).map(|_| StateStore::new()).collect();
+        let ep = epoch(4, 3);
+        ShuffleStage::new(&cfg, Scheduling::Wave).run(&recs, &ep, Some(&mut stores));
+        let total: f64 = stores.iter().map(|s| s.total_weight()).sum();
+        let w: f64 = recs.iter().map(|r| r.weight).sum();
+        assert!((total - w).abs() < 1e-6);
+        // every key's state sits where the epoch routes it
+        for (p, s) in stores.iter().enumerate() {
+            for k in s.keys() {
+                assert_eq!(ep.partition(k), p);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_costs_only_overheadless_zero() {
+        let cfg = cfg(4, 2);
+        let r = ShuffleStage::new(&cfg, Scheduling::Pinned).run(&[], &epoch(4, 4), None);
+        assert_eq!(r.record_counts.iter().sum::<u64>(), 0);
+        assert!((r.stage_time - 0.0).abs() < 1e-12);
+        assert_eq!(r.bottleneck_ratio, 1.0);
+    }
+
+    #[test]
+    fn tap_chunked_and_round_robin_observe_everything() {
+        for assign in [TapAssignment::Chunked, TapAssignment::RoundRobin] {
+            let mut workers: Vec<DrWorker> =
+                (0..4).map(|w| DrWorker::new(64, 1.0, w as u64)).collect();
+            let mut z = Zipf::new(1_000, 1.0, 5);
+            let recs = z.batch(10_000);
+            tap_records(&mut workers, &recs, assign);
+            let seen: u64 = workers.iter().map(|w| w.observed()).sum();
+            assert_eq!(seen, 10_000, "{assign:?} dropped records");
+        }
+    }
+
+    #[test]
+    fn apply_epoch_swap_moves_exactly_the_replanned_keys() {
+        let cfg = cfg(6, 6);
+        let mut ep = EpochedPartitioner::new(Arc::new(Uhp::with_seed(6, 1)));
+        let mut stores: Vec<StateStore> = (0..6).map(|_| StateStore::new()).collect();
+        for k in 0..500u64 {
+            stores[ep.partition(k)].fold_count(k, 1.0 + k as f64 % 3.0);
+        }
+        let before: f64 = stores.iter().map(|s| s.total_weight()).sum();
+        let swap = ep.install(Arc::new(Uhp::with_seed(6, 2)));
+        let mig = apply_epoch_swap(&cfg, &mut stores, &swap);
+        let after: f64 = stores.iter().map(|s| s.total_weight()).sum();
+        assert!((before - after).abs() < 1e-9, "state weight not conserved");
+        assert!(mig.moved_weight > 0.0);
+        assert!((0.0..=1.0).contains(&mig.migrated_fraction));
+        assert!((mig.pause - mig.moved_weight * cfg.migration_cost).abs() < 1e-12);
+        // every key now lives where the new epoch routes it
+        for (p, s) in stores.iter().enumerate() {
+            for k in s.keys() {
+                assert_eq!(swap.to.partition(k), p);
+            }
+        }
+    }
+}

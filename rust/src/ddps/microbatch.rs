@@ -4,20 +4,20 @@
 //! partitioner when it generates micro-batches from the streaming DAG.
 //! Spark performs state migration automatically in the shuffle phase."
 //!
-//! Per micro-batch:
+//! Thin driver over the shared [`ShuffleStage`] core. Per micro-batch:
 //! 1. the DRM decision point — harvest DRW histograms from *previous*
-//!    batches, possibly install a new partitioner, migrate state;
-//! 2. map phase over the executor slots (DRW tap runs here);
-//! 3. shuffle by the current partitioner;
-//! 4. key-grouped reduce tasks, wave-scheduled over the slots (this is
-//!    where skew turns into stragglers);
-//! 5. fold into per-partition keyed state.
+//!    batches; an accepted decision bumps the partitioner epoch, and the
+//!    migration plan derived from the epoch swap moves keyed state;
+//! 2. map-tap over the executor slots (chunked assignment);
+//! 3. one wave-scheduled [`ShuffleStage`] (shuffle → keyed reduce → state
+//!    fold; this is where skew turns into stragglers).
 
+use super::exec::{self, Scheduling, ShuffleStage, TapAssignment};
 use super::{EngineConfig, EngineMetrics};
 use crate::dr::{DrConfig, DrMaster, DrWorker, PartitionerChoice};
-use crate::partitioner::migration_plan;
+use crate::partitioner::PartitionerEpoch;
 use crate::state::StateStore;
-use crate::util::{load_imbalance, wave_makespan, VTime};
+use crate::util::VTime;
 use crate::workload::Record;
 
 #[derive(Debug, Clone)]
@@ -34,13 +34,15 @@ pub struct BatchReport {
     /// Fraction of state weight migrated at the batch boundary.
     pub migrated_fraction: f64,
     pub repartitioned: bool,
+    /// Partitioner epoch this batch was routed under.
+    pub epoch: u64,
 }
 
 pub struct MicroBatchEngine {
     cfg: EngineConfig,
     drm: DrMaster,
     workers: Vec<DrWorker>,
-    partitioner: crate::dr::master::PartitionerHandle,
+    partitioner: PartitionerEpoch,
     stores: Vec<StateStore>,
     metrics: EngineMetrics,
     batch_no: u64,
@@ -78,54 +80,35 @@ impl MicroBatchEngine {
         &self.drm
     }
 
-    pub fn partitioner(&self) -> &crate::dr::master::PartitionerHandle {
+    /// The routing epoch currently in force.
+    pub fn partitioner(&self) -> &PartitionerEpoch {
         &self.partitioner
+    }
+
+    /// The current epoch number (observable in every [`BatchReport`]).
+    pub fn epoch(&self) -> u64 {
+        self.partitioner.epoch()
     }
 
     /// The DRM decision point at a micro-batch boundary. Returns the
     /// migration pause time and migrated state fraction.
     fn decision_point(&mut self) -> (VTime, f64, bool) {
-        let k = self.drm.histogram_size();
-        let hists: Vec<_> = self.workers.iter_mut().map(|w| w.harvest(k)).collect();
-        let old = self.partitioner.clone();
-        let decision = self.drm.decide(hists);
-        let Some(new) = decision.new_partitioner else {
+        let decision = exec::decision_point(&mut self.drm, &mut self.workers);
+        let Some(swap) = decision.swap else {
             return (0.0, 0.0, false);
         };
 
         // Spark migrates state "automatically in the shuffle phase": keys
-        // whose partition changed drag their state. We account the cost
-        // explicitly against the batch makespan.
-        let mut moved_weight = 0.0;
-        let mut total_weight = 0.0;
-        for p in 0..self.cfg.n_partitions {
-            total_weight += self.stores[p].total_weight();
-        }
-        let keys: Vec<Vec<crate::workload::Key>> = self
-            .stores
-            .iter()
-            .map(|s| s.keys().collect())
-            .collect();
-        for (p, part_keys) in keys.into_iter().enumerate() {
-            let plan = migration_plan(old.as_dyn(), new.as_dyn(), part_keys.into_iter());
-            for (key, from, to) in plan {
-                debug_assert_eq!(from, p);
-                if let Some(st) = self.stores[from].extract(key) {
-                    moved_weight += st.weight;
-                    self.stores[to].install(key, st);
-                }
-            }
-        }
-        self.partitioner = new;
-        let pause = moved_weight * self.cfg.migration_cost;
-        let frac = if total_weight > 0.0 {
-            moved_weight / total_weight
-        } else {
-            0.0
-        };
-        self.metrics.state_weight_migrated += moved_weight;
-        self.metrics.repartition_count += 1;
-        (pause, frac, true)
+        // whose partition changed drag their state. The plan derives from
+        // the epoch swap; the cost is charged against the batch makespan.
+        let mig = exec::adopt_swap(
+            &self.cfg,
+            &mut self.stores,
+            &mut self.partitioner,
+            &mut self.metrics,
+            &swap,
+        );
+        (mig.pause, mig.migrated_fraction, true)
     }
 
     /// Run one micro-batch through map → shuffle → reduce → state.
@@ -135,49 +118,36 @@ impl MicroBatchEngine {
         // 1. decision point (uses histograms gathered in earlier batches)
         let (migration_time, migrated_fraction, repartitioned) = self.decision_point();
 
-        // 2. map phase: records split evenly over slots; the DRW tap runs
-        //    on the map path.
-        let per_slot = records.len().div_ceil(self.cfg.n_slots);
-        for (i, r) in records.iter().enumerate() {
-            self.workers[i / per_slot.max(1)].observe(r.key, r.weight);
-        }
-        let map_time = per_slot as f64 * (self.cfg.map_cost + self.cfg.shuffle_cost);
+        // 2. map-tap: records split evenly over slots; the DRW tap runs on
+        //    the map path.
+        exec::tap_records(&mut self.workers, records, TapAssignment::Chunked);
 
-        // 3. shuffle: route by the current partitioner; gather loads.
-        let mut loads = vec![0.0f64; self.cfg.n_partitions];
-        for r in records {
-            let p = self.partitioner.partition(r.key);
-            loads[p] += r.weight;
-            // 5. fold state as the reducer would
-            self.stores[p].fold_count(r.key, r.weight);
-        }
+        // 3. the shared stage: shuffle by the current epoch, wave-scheduled
+        //    keyed reduce (spill model applies), state folded per partition.
+        let stage = ShuffleStage::new(&self.cfg, Scheduling::Wave).run(
+            records,
+            &self.partitioner,
+            Some(self.stores.as_mut_slice()),
+        );
 
-        // 4. reduce phase: one task per partition (spill model applies),
-        //    wave-scheduled.
-        let total_load: f64 = loads.iter().sum();
-        let task_costs: Vec<VTime> = loads
-            .iter()
-            .map(|l| self.cfg.reduce_task_time(*l, total_load))
-            .collect();
-        let reduce_time = wave_makespan(&task_costs, self.cfg.n_slots);
-
-        let makespan = migration_time + map_time + reduce_time;
+        let makespan = migration_time + stage.stage_time;
         self.metrics.records_processed += records.len() as u64;
         self.metrics.total_vtime += makespan;
-        self.metrics.map_vtime += map_time;
-        self.metrics.reduce_vtime += reduce_time;
+        self.metrics.map_vtime += stage.map_time;
+        self.metrics.reduce_vtime += stage.reduce_time;
         self.metrics.migration_vtime += migration_time;
 
         BatchReport {
             batch_no: self.batch_no,
             makespan,
-            map_time,
-            reduce_time,
+            map_time: stage.map_time,
+            reduce_time: stage.reduce_time,
             migration_time,
-            imbalance: load_imbalance(&loads),
-            loads,
+            imbalance: stage.imbalance,
+            loads: stage.loads,
             migrated_fraction,
             repartitioned,
+            epoch: self.partitioner.epoch(),
         }
     }
 
@@ -207,6 +177,7 @@ mod tests {
         let r = e.run_batch(&z.batch(50_000));
         assert!(!r.repartitioned, "no histogram exists before batch 1");
         assert_eq!(r.batch_no, 1);
+        assert_eq!(r.epoch, 0);
         assert!(r.makespan > 0.0);
     }
 
@@ -220,6 +191,9 @@ mod tests {
         assert!(r2.imbalance < r1.imbalance, "{} vs {}", r2.imbalance, r1.imbalance);
         assert!(r2.migrated_fraction > 0.0, "stateful keys must migrate");
         assert_eq!(e.metrics().repartition_count, 1);
+        assert_eq!(r1.epoch, 0);
+        assert_eq!(r2.epoch, 1, "repartitioning must bump the epoch");
+        assert_eq!(e.epoch(), 1);
     }
 
     #[test]
@@ -230,6 +204,7 @@ mod tests {
         let r2 = e.run_batch(&z.batch(50_000));
         assert!(!r1.repartitioned && !r2.repartitioned);
         assert_eq!(e.metrics().repartition_count, 0);
+        assert_eq!(r2.epoch, 0, "no epoch bumps without DR");
         assert!((r1.imbalance - r2.imbalance).abs() < 0.2, "hash is stationary");
     }
 
@@ -280,5 +255,16 @@ mod tests {
         let t_slow = slow.run_batch(&batch).makespan;
         let t_fast = fast.run_batch(&batch).makespan;
         assert!(t_fast < t_slow, "{t_fast} vs {t_slow}");
+    }
+
+    #[test]
+    fn forced_updates_bump_epoch_every_batch() {
+        let mut e = MicroBatchEngine::new(cfg(6, 6), DrConfig::forced(), PartitionerChoice::Kip, 8);
+        let mut z = Zipf::new(5_000, 1.2, 8);
+        for expect in 1..=4u64 {
+            let r = e.run_batch(&z.batch(10_000));
+            assert_eq!(r.epoch, expect, "forced update must bump the epoch each batch");
+        }
+        assert_eq!(e.drm().epoch(), 4);
     }
 }

@@ -13,12 +13,23 @@
 //! - [`streaming`] — Flink-like long-running tasks with checkpoint
 //!   barriers; repartitioning rides the Asynchronous Distributed Snapshot
 //!   and migrates state explicitly.
+//!
+//! All three engines drive the same [`exec::ShuffleStage`] core — one
+//! implementation of the map-tap → shuffle → keyed-reduce → spill-cost
+//! loop — and swap partitioners exclusively through versioned
+//! [`PartitionerEpoch`](crate::partitioner::PartitionerEpoch)s whose
+//! migration plans derive from the epoch diff.
 
 pub mod batch;
+pub mod exec;
 pub mod microbatch;
 pub mod streaming;
 
 pub use batch::{BatchJob, JobReport};
+pub use exec::{
+    adopt_swap, apply_epoch_swap, decision_point, tap_records, MigrationReport, Scheduling,
+    ShuffleStage, StageReport, TapAssignment,
+};
 pub use microbatch::{BatchReport, MicroBatchEngine};
 pub use streaming::{IntervalReport, StreamingEngine};
 

@@ -8,12 +8,18 @@
 //! the *bottleneck* reducer through backpressure; repartitioning happens
 //! at checkpoint barriers, riding the Asynchronous Distributed Snapshot
 //! mechanism, with explicit operator-state migration.
+//!
+//! Thin driver over the shared [`ShuffleStage`] core in its
+//! [`Scheduling::Pinned`] discipline; epoch swaps are aligned with the
+//! checkpoint barrier, and the state-migration plan derives from the
+//! epoch diff.
 
+use super::exec::{self, Scheduling, ShuffleStage, TapAssignment};
 use super::{EngineConfig, EngineMetrics};
 use crate::dr::{DrConfig, DrMaster, DrWorker, PartitionerChoice};
-use crate::partitioner::migration_plan;
+use crate::partitioner::PartitionerEpoch;
 use crate::state::{Checkpoint, CheckpointStore, StateStore};
-use crate::util::{load_imbalance, VTime};
+use crate::util::VTime;
 use crate::workload::Record;
 
 #[derive(Debug, Clone)]
@@ -30,6 +36,8 @@ pub struct IntervalReport {
     /// Utilisation of the bottleneck reducer relative to the mean — how
     /// hard backpressure bites.
     pub bottleneck_ratio: f64,
+    /// Partitioner epoch in force after this interval's barrier.
+    pub epoch: u64,
 }
 
 pub struct StreamingEngine {
@@ -37,7 +45,7 @@ pub struct StreamingEngine {
     drm: DrMaster,
     /// One DRW per source task (sources tap keys before the key-grouping).
     workers: Vec<DrWorker>,
-    partitioner: crate::dr::master::PartitionerHandle,
+    partitioner: PartitionerEpoch,
     stores: Vec<StateStore>,
     checkpoints: CheckpointStore,
     metrics: EngineMetrics,
@@ -94,38 +102,37 @@ impl StreamingEngine {
         &self.drm
     }
 
+    /// The routing epoch currently in force.
+    pub fn partitioner(&self) -> &PartitionerEpoch {
+        &self.partitioner
+    }
+
+    /// The current epoch number (observable in every [`IntervalReport`]).
+    pub fn epoch(&self) -> u64 {
+        self.partitioner.epoch()
+    }
+
     pub fn total_state_weight(&self) -> f64 {
         self.stores.iter().map(|s| s.total_weight()).sum()
     }
 
     /// Process one checkpoint interval of records, then take the barrier:
-    /// snapshot, DRM decision, possible state migration.
+    /// snapshot, DRM decision, possible epoch swap + state migration.
     pub fn run_interval(&mut self, records: &[Record]) -> IntervalReport {
         self.interval_no += 1;
         let n = self.cfg.n_partitions;
 
         // Sources tap the stream (round-robin source assignment).
-        for (i, r) in records.iter().enumerate() {
-            self.workers[i % n].observe(r.key, r.weight);
-        }
+        exec::tap_records(&mut self.workers, records, TapAssignment::RoundRobin);
 
-        // Key-grouped routing to the pinned reducers.
-        let mut loads = vec![0.0f64; n];
-        for r in records {
-            let p = self.partitioner.partition(r.key);
-            loads[p] += r.weight;
-            self.stores[p].fold_count(r.key, r.weight);
-        }
-
-        // Backpressure model: all channels drain at the pace of the
-        // bottleneck reducer; the interval completes when the most loaded
-        // task has processed its share. Source/shuffle work is spread over
-        // the (parallel) source tasks.
-        let source_time =
-            records.len() as f64 / n as f64 * (self.cfg.map_cost + self.cfg.shuffle_cost);
-        let bottleneck = loads.iter().cloned().fold(0.0, f64::max);
-        let reduce_time = bottleneck * self.cfg.reduce_cost;
-        let mean_load = loads.iter().sum::<f64>() / n as f64;
+        // Key-grouped routing to the pinned reducers through the shared
+        // stage: backpressure model — all channels drain at the pace of
+        // the bottleneck reducer.
+        let stage = ShuffleStage::new(&self.cfg, Scheduling::Pinned).run(
+            records,
+            &self.partitioner,
+            Some(self.stores.as_mut_slice()),
+        );
 
         // Barrier: snapshot.
         self.checkpoints.save(Checkpoint {
@@ -134,40 +141,28 @@ impl StreamingEngine {
             stores: self.stores.clone(),
         });
 
-        // Barrier: DRM decision + state migration.
-        let k = self.drm.histogram_size();
-        let hists: Vec<_> = self.workers.iter_mut().map(|w| w.harvest(k)).collect();
-        let old = self.partitioner.clone();
-        let decision = self.drm.decide(hists);
+        // Barrier: DRM decision; an accepted decision bumps the epoch and
+        // the swap's derived plan migrates operator state explicitly.
+        let decision = exec::decision_point(&mut self.drm, &mut self.workers);
         let (mut migration_pause, mut migrated_fraction, mut repartitioned) = (0.0, 0.0, false);
-        if let Some(new) = decision.new_partitioner {
-            let total_weight: f64 = self.total_state_weight();
-            let mut moved = 0.0;
-            let keys: Vec<Vec<crate::workload::Key>> =
-                self.stores.iter().map(|s| s.keys().collect()).collect();
-            for part_keys in keys {
-                for (key, from, to) in
-                    migration_plan(old.as_dyn(), new.as_dyn(), part_keys.into_iter())
-                {
-                    if let Some(st) = self.stores[from].extract(key) {
-                        moved += st.weight;
-                        self.stores[to].install(key, st);
-                    }
-                }
-            }
-            self.partitioner = new;
-            migration_pause = moved * self.cfg.migration_cost;
-            migrated_fraction = if total_weight > 0.0 { moved / total_weight } else { 0.0 };
+        if let Some(swap) = decision.swap {
+            let mig = exec::adopt_swap(
+                &self.cfg,
+                &mut self.stores,
+                &mut self.partitioner,
+                &mut self.metrics,
+                &swap,
+            );
+            migration_pause = mig.pause;
+            migrated_fraction = mig.migrated_fraction;
             repartitioned = true;
-            self.metrics.state_weight_migrated += moved;
-            self.metrics.repartition_count += 1;
         }
 
-        let elapsed = source_time.max(reduce_time) + migration_pause;
+        let elapsed = stage.stage_time + migration_pause;
         self.vtime += elapsed;
         self.metrics.records_processed += records.len() as u64;
         self.metrics.total_vtime += elapsed;
-        self.metrics.reduce_vtime += reduce_time;
+        self.metrics.reduce_vtime += stage.reduce_time;
         self.metrics.migration_vtime += migration_pause;
 
         IntervalReport {
@@ -178,11 +173,12 @@ impl StreamingEngine {
             } else {
                 0.0
             },
-            imbalance: load_imbalance(&loads),
+            imbalance: stage.imbalance,
             migrated_fraction,
             migration_pause,
             repartitioned,
-            bottleneck_ratio: if mean_load > 0.0 { bottleneck / mean_load } else { 1.0 },
+            bottleneck_ratio: stage.bottleneck_ratio,
+            epoch: self.partitioner.epoch(),
         }
     }
 }
@@ -216,6 +212,7 @@ mod tests {
             r1.throughput
         );
         assert!(r3.imbalance < r1.imbalance);
+        assert!(r3.epoch >= 1, "repartitioning must be visible as an epoch bump");
     }
 
     #[test]
@@ -272,5 +269,19 @@ mod tests {
         let a = e.run_interval(&z.batch(10_000));
         let b = e.run_interval(&z.batch(10_000));
         assert!((e.vtime() - (a.elapsed + b.elapsed)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn barrier_aligned_epochs_are_monotone() {
+        let mut e = StreamingEngine::new(cfg(6), DrConfig::forced(), PartitionerChoice::Kip, 7);
+        let mut z = Zipf::new(5_000, 1.3, 7);
+        let mut last = 0;
+        for i in 1..=4u64 {
+            let r = e.run_interval(&z.batch(10_000));
+            assert_eq!(r.interval_no, i);
+            assert!(r.epoch > last, "forced barrier update must bump the epoch");
+            last = r.epoch;
+        }
+        assert_eq!(e.epoch(), last);
     }
 }

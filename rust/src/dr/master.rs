@@ -3,12 +3,17 @@
 //! Integrated into the DDPS driver. At each decision point (micro-batch
 //! boundary in Spark, checkpoint barrier in Flink, mid-map in batch jobs)
 //! it merges the DRWs' local histograms, blends them with the recent past,
-//! constructs a candidate partitioner, and issues a [`DrDecision`]:
-//! repartition (with the new function) or keep the current one.
+//! constructs a candidate partitioner, and issues a [`DrDecision`]. A
+//! positive decision is an **epoch bump**: the DRM installs the candidate
+//! into its [`EpochedPartitioner`] and hands the engine the resulting
+//! [`EpochSwap`], from which the engine derives its state-migration plan
+//! (decision → epoch bump → plan; see DESIGN.md "Epochs and the shared
+//! ShuffleStage core").
 
 use super::DrConfig;
 use crate::partitioner::{
-    GedikConfig, GedikPartitioner, GedikStrategy, Kip, KipConfig, Mixed, Partitioner, Uhp,
+    EpochSwap, EpochedPartitioner, GedikConfig, GedikPartitioner, GedikStrategy, Kip, KipConfig,
+    Mixed, Partitioner, PartitionerEpoch, Uhp,
 };
 use crate::sketch::Histogram;
 use crate::workload::Key;
@@ -59,45 +64,36 @@ impl DynPartitioner {
     }
 }
 
-/// A cheaply-cloneable handle the engines route records through.
-#[derive(Clone)]
-pub struct PartitionerHandle(Arc<DynPartitioner>);
-
-impl PartitionerHandle {
+/// Delegating impl so the concrete family can be installed into an
+/// [`EpochedPartitioner`] (`Arc<dyn Partitioner>`) without re-boxing per
+/// family at every swap site.
+impl Partitioner for DynPartitioner {
     #[inline]
-    pub fn partition(&self, key: Key) -> usize {
-        self.0.as_dyn().partition(key)
+    fn partition(&self, key: Key) -> usize {
+        self.as_dyn().partition(key)
     }
 
-    pub fn n_partitions(&self) -> usize {
-        self.0.as_dyn().n_partitions()
+    fn n_partitions(&self) -> usize {
+        self.as_dyn().n_partitions()
     }
 
-    pub fn explicit_routes(&self) -> usize {
-        self.0.as_dyn().explicit_routes()
+    fn explicit_routes(&self) -> usize {
+        self.as_dyn().explicit_routes()
     }
 
-    pub fn as_dyn(&self) -> &dyn Partitioner {
-        self.0.as_dyn()
-    }
-}
-
-impl std::fmt::Debug for PartitionerHandle {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(
-            f,
-            "PartitionerHandle(n={}, explicit={})",
-            self.n_partitions(),
-            self.explicit_routes()
-        )
+    fn tail_shares(&self) -> Vec<f64> {
+        self.as_dyn().tail_shares()
     }
 }
 
 /// Outcome of a DRM decision point.
 #[derive(Debug, Clone)]
 pub struct DrDecision {
-    /// New partitioner to install, or None to keep the current one.
-    pub new_partitioner: Option<PartitionerHandle>,
+    /// The epoch transition, if the DRM repartitioned; `None` keeps the
+    /// current function. The engine derives its migration plan from this.
+    pub swap: Option<EpochSwap>,
+    /// The epoch in force *after* this decision.
+    pub epoch: u64,
     /// Estimated max load share under the current partitioner.
     pub current_max_share: f64,
     /// Planned max load share under the candidate.
@@ -106,12 +102,30 @@ pub struct DrDecision {
     pub histogram: Histogram,
 }
 
+impl DrDecision {
+    /// Did this decision install a new partitioner?
+    pub fn repartitioned(&self) -> bool {
+        self.swap.is_some()
+    }
+
+    /// The newly installed routing snapshot, if any.
+    pub fn new_partitioner(&self) -> Option<PartitionerEpoch> {
+        self.swap.as_ref().map(|s| s.to.clone())
+    }
+}
+
 #[derive(Debug)]
 pub struct DrMaster {
     cfg: DrConfig,
     choice: PartitionerChoice,
     n_partitions: usize,
-    current: DynPartitioner,
+    /// The concrete family state candidates are derived from. Always the
+    /// same allocation the current epoch routes through (`epoched` holds a
+    /// clone of this `Arc`), so the two views cannot diverge.
+    current: Arc<DynPartitioner>,
+    /// The versioned handle engines route through; every accepted decision
+    /// installs `current` here and bumps the epoch.
+    epoched: EpochedPartitioner,
     /// Record of past histograms (§3) blended into each decision.
     past: VecDeque<Histogram>,
     updates_issued: u64,
@@ -136,11 +150,14 @@ impl DrMaster {
             PartitionerChoice::Mixed => DynPartitioner::Mixed(Mixed::initial(n_partitions, seed)),
             PartitionerChoice::Uhp => DynPartitioner::Uhp(Uhp::with_seed(n_partitions, seed)),
         };
+        let current = Arc::new(current);
+        let epoched = EpochedPartitioner::new(current.clone());
         Self {
             cfg,
             choice,
             n_partitions,
             current,
+            epoched,
             past: VecDeque::new(),
             updates_issued: 0,
             decisions_made: 0,
@@ -164,8 +181,14 @@ impl DrMaster {
         self.cfg.counter_capacity_factor * self.histogram_size()
     }
 
-    pub fn handle(&self) -> PartitionerHandle {
-        PartitionerHandle(Arc::new(self.current.clone()))
+    /// Snapshot of the currently installed routing epoch.
+    pub fn handle(&self) -> PartitionerEpoch {
+        self.epoched.current()
+    }
+
+    /// The current epoch number (0 until the first accepted update).
+    pub fn epoch(&self) -> u64 {
+        self.epoched.epoch()
     }
 
     pub fn updates_issued(&self) -> u64 {
@@ -200,7 +223,8 @@ impl DrMaster {
     }
 
     /// The DRM decision point: merge worker histograms, maybe construct and
-    /// install a new partitioner. This is the paper's central control loop.
+    /// install a new partitioner. This is the paper's central control loop,
+    /// now phrased as decision → epoch bump → plan.
     pub fn decide(&mut self, worker_histograms: Vec<Histogram>) -> DrDecision {
         self.decisions_made += 1;
         let merged = Histogram::merge(&worker_histograms, self.histogram_size());
@@ -210,7 +234,8 @@ impl DrMaster {
 
         if !self.cfg.enabled || matches!(self.choice, PartitionerChoice::Uhp) {
             return DrDecision {
-                new_partitioner: None,
+                swap: None,
+                epoch: self.epoched.epoch(),
                 current_max_share: current_max,
                 planned_max_share: current_max,
                 histogram: hist,
@@ -218,7 +243,7 @@ impl DrMaster {
         }
 
         // Construct the candidate with the family's own update rule.
-        let candidate = match &self.current {
+        let candidate = match self.current.as_ref() {
             DynPartitioner::Kip(kip) => DynPartitioner::Kip(kip.updated(&hist)),
             DynPartitioner::Gedik(g) => DynPartitioner::Gedik(g.update(&hist)),
             DynPartitioner::Mixed(m) => DynPartitioner::Mixed(m.update(&hist)),
@@ -231,17 +256,20 @@ impl DrMaster {
             || planned_max < current_max * (1.0 - self.cfg.min_gain);
 
         if worth_it {
-            self.current = candidate;
+            self.current = Arc::new(candidate);
+            let swap = self.epoched.install(self.current.clone());
             self.updates_issued += 1;
             DrDecision {
-                new_partitioner: Some(self.handle()),
+                epoch: swap.to_epoch(),
+                swap: Some(swap),
                 current_max_share: current_max,
                 planned_max_share: planned_max,
                 histogram: hist,
             }
         } else {
             DrDecision {
-                new_partitioner: None,
+                swap: None,
+                epoch: self.epoched.epoch(),
                 current_max_share: current_max,
                 planned_max_share: planned_max,
                 histogram: hist,
@@ -270,8 +298,11 @@ mod tests {
         let mut z = Zipf::new(10_000, 1.2, 1);
         let recs = z.batch(100_000);
         let d = drm.decide(worker_hists(&recs, 4, drm.histogram_size()));
-        assert!(d.new_partitioner.is_none());
+        assert!(d.swap.is_none());
+        assert!(!d.repartitioned());
+        assert_eq!(d.epoch, 0);
         assert_eq!(drm.updates_issued(), 0);
+        assert_eq!(drm.epoch(), 0);
     }
 
     #[test]
@@ -281,9 +312,10 @@ mod tests {
         let recs = z.batch(200_000);
         let before = drm.handle();
         let d = drm.decide(worker_hists(&recs, 4, drm.histogram_size()));
-        assert!(d.new_partitioner.is_some(), "skewed data must repartition");
+        assert!(d.repartitioned(), "skewed data must repartition");
         assert!(d.planned_max_share < d.current_max_share);
-        let after = d.new_partitioner.unwrap();
+        let after = d.new_partitioner().unwrap();
+        assert_eq!(after.epoch(), before.epoch() + 1);
         // measured imbalance must actually improve
         let kw: Vec<(Key, f64)> = {
             let mut m = std::collections::HashMap::new();
@@ -304,11 +336,12 @@ mod tests {
         let recs = z.batch(100_000);
         let d = drm.decide(worker_hists(&recs, 4, drm.histogram_size()));
         assert!(
-            d.new_partitioner.is_none(),
+            d.swap.is_none(),
             "uniform data repartitioned: cur={} planned={}",
             d.current_max_share,
             d.planned_max_share
         );
+        assert_eq!(d.epoch, 0);
     }
 
     #[test]
@@ -317,8 +350,9 @@ mod tests {
         let mut z = Zipf::new(100_000, 0.0, 4);
         let recs = z.batch(50_000);
         let d = drm.decide(worker_hists(&recs, 2, drm.histogram_size()));
-        assert!(d.new_partitioner.is_some());
+        assert!(d.repartitioned());
         assert_eq!(drm.updates_issued(), 1);
+        assert_eq!(drm.epoch(), 1);
     }
 
     #[test]
@@ -334,8 +368,8 @@ mod tests {
             let mut z = Zipf::new(10_000, 1.3, 5);
             let recs = z.batch(50_000);
             let d = drm.decide(worker_hists(&recs, 3, drm.histogram_size()));
-            assert!(d.new_partitioner.is_some(), "{} failed", choice.name());
-            let h = d.new_partitioner.unwrap();
+            assert!(d.repartitioned(), "{} failed", choice.name());
+            let h = d.new_partitioner().unwrap();
             for k in 0..1000u64 {
                 assert!(h.partition(k) < 6);
             }
@@ -372,8 +406,39 @@ mod tests {
         let drm = DrMaster::new(DrConfig::default(), PartitionerChoice::Kip, 16, 7);
         let h1 = drm.handle();
         let h2 = h1.clone();
+        assert_eq!(h1.epoch(), h2.epoch());
         for k in 0..1000u64 {
             assert_eq!(h1.partition(k), h2.partition(k));
+        }
+    }
+
+    #[test]
+    fn epochs_bump_once_per_accepted_decision() {
+        let mut drm = DrMaster::new(DrConfig::forced(), PartitionerChoice::Kip, 8, 8);
+        let mut z = Zipf::new(20_000, 1.2, 8);
+        for expect in 1..=4u64 {
+            let recs = z.batch(40_000);
+            let d = drm.decide(worker_hists(&recs, 2, drm.histogram_size()));
+            let swap = d.swap.expect("forced update");
+            assert_eq!(swap.from_epoch(), expect - 1);
+            assert_eq!(swap.to_epoch(), expect);
+            assert_eq!(d.epoch, expect);
+            assert_eq!(drm.epoch(), expect);
+        }
+        assert_eq!(drm.updates_issued(), 4);
+    }
+
+    #[test]
+    fn swap_plan_agrees_with_routing_change() {
+        let mut drm = DrMaster::new(DrConfig::forced(), PartitionerChoice::Kip, 8, 9);
+        let mut z = Zipf::new(20_000, 1.4, 9);
+        let recs = z.batch(100_000);
+        let d = drm.decide(worker_hists(&recs, 4, drm.histogram_size()));
+        let swap = d.swap.expect("forced update");
+        for (k, from, to) in swap.plan(0..5000u64) {
+            assert_eq!(from, swap.from.partition(k));
+            assert_eq!(to, swap.to.partition(k));
+            assert_ne!(from, to);
         }
     }
 }

@@ -1,0 +1,230 @@
+//! Versioned partitioner epochs — the single mechanism every engine uses
+//! to swap partitioning functions (see DESIGN.md "Epochs and the shared
+//! ShuffleStage core").
+//!
+//! Prior work treats routing-table updates as *versioned* transitions
+//! with explicit state-migration plans (Gedik's migration-aware
+//! construction; Fang et al.'s mixed partitioner); our engines used to
+//! hand-roll that per engine. Here the active partitioner is an
+//! [`EpochedPartitioner`]: an `Arc`-swappable handle whose every install
+//! bumps a monotone epoch number and yields an [`EpochSwap`] from which
+//! the state-migration plan is *derived* (old routing vs new routing)
+//! instead of being re-implemented at each call site.
+
+use super::{migration_fraction, migration_plan, Partitioner};
+use crate::workload::Key;
+use std::fmt;
+use std::sync::Arc;
+
+/// An immutable, version-numbered snapshot of the active partitioning
+/// function. Cheap to clone; engines route every record through one of
+/// these, and reports surface its `epoch()` so repartitionings are
+/// observable end-to-end.
+#[derive(Clone)]
+pub struct PartitionerEpoch {
+    epoch: u64,
+    partitioner: Arc<dyn Partitioner>,
+}
+
+impl PartitionerEpoch {
+    pub fn new(epoch: u64, partitioner: Arc<dyn Partitioner>) -> Self {
+        Self { epoch, partitioner }
+    }
+
+    /// The version number: 0 for the initial function, +1 per install.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    #[inline]
+    pub fn partition(&self, key: Key) -> usize {
+        self.partitioner.partition(key)
+    }
+
+    pub fn n_partitions(&self) -> usize {
+        self.partitioner.n_partitions()
+    }
+
+    pub fn explicit_routes(&self) -> usize {
+        self.partitioner.explicit_routes()
+    }
+
+    pub fn as_dyn(&self) -> &dyn Partitioner {
+        self.partitioner.as_ref()
+    }
+}
+
+impl fmt::Debug for PartitionerEpoch {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "PartitionerEpoch(epoch={}, n={}, explicit={})",
+            self.epoch,
+            self.n_partitions(),
+            self.explicit_routes()
+        )
+    }
+}
+
+/// The transition produced by one epoch bump: both routing snapshots,
+/// from which migration plans and fractions are derived on demand.
+#[derive(Debug, Clone)]
+pub struct EpochSwap {
+    /// Routing before the swap (epoch e).
+    pub from: PartitionerEpoch,
+    /// Routing after the swap (epoch e + 1).
+    pub to: PartitionerEpoch,
+}
+
+impl EpochSwap {
+    pub fn from_epoch(&self) -> u64 {
+        self.from.epoch()
+    }
+
+    pub fn to_epoch(&self) -> u64 {
+        self.to.epoch()
+    }
+
+    /// Does `key` route differently under the new epoch?
+    pub fn moves(&self, key: Key) -> bool {
+        self.from.partition(key) != self.to.partition(key)
+    }
+
+    /// The state-migration plan for `keys`: every key whose partition
+    /// changed, with its source and destination. Derived from the epoch
+    /// diff — engines no longer compute this ad hoc.
+    pub fn plan(&self, keys: impl IntoIterator<Item = Key>) -> Vec<(Key, usize, usize)> {
+        migration_plan(self.from.as_dyn(), self.to.as_dyn(), keys)
+    }
+
+    /// Fraction of state weight this swap moves (Fig 3 right).
+    pub fn migration_fraction(&self, state_weights: &[(Key, f64)]) -> f64 {
+        migration_fraction(self.from.as_dyn(), self.to.as_dyn(), state_weights)
+    }
+}
+
+/// The `Arc`-swappable, version-numbered partitioner handle owned by the
+/// DRM. `install` atomically (from the engines' perspective: between
+/// records) replaces the function and bumps the epoch.
+#[derive(Debug)]
+pub struct EpochedPartitioner {
+    current: PartitionerEpoch,
+}
+
+impl EpochedPartitioner {
+    /// Wrap the initial partitioning function as epoch 0.
+    pub fn new(initial: Arc<dyn Partitioner>) -> Self {
+        Self {
+            current: PartitionerEpoch::new(0, initial),
+        }
+    }
+
+    /// A cheap snapshot of the current epoch for routing.
+    pub fn current(&self) -> PartitionerEpoch {
+        self.current.clone()
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.current.epoch()
+    }
+
+    #[inline]
+    pub fn partition(&self, key: Key) -> usize {
+        self.current.partition(key)
+    }
+
+    pub fn n_partitions(&self) -> usize {
+        self.current.n_partitions()
+    }
+
+    /// Install `next` as the new routing function, bumping the epoch.
+    /// Returns the [`EpochSwap`] describing the transition; the caller
+    /// derives the migration plan from it.
+    pub fn install(&mut self, next: Arc<dyn Partitioner>) -> EpochSwap {
+        assert_eq!(
+            next.n_partitions(),
+            self.current.n_partitions(),
+            "epoch swap must preserve the partition count"
+        );
+        let from = self.current.clone();
+        let to = PartitionerEpoch::new(from.epoch() + 1, next);
+        self.current = to.clone();
+        EpochSwap { from, to }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partitioner::Uhp;
+
+    #[test]
+    fn initial_epoch_is_zero_and_routes() {
+        let ep = EpochedPartitioner::new(Arc::new(Uhp::with_seed(8, 1)));
+        assert_eq!(ep.epoch(), 0);
+        assert_eq!(ep.n_partitions(), 8);
+        for k in 0..1000u64 {
+            assert!(ep.partition(k) < 8);
+        }
+    }
+
+    #[test]
+    fn install_bumps_epoch_monotonically() {
+        let mut ep = EpochedPartitioner::new(Arc::new(Uhp::with_seed(4, 1)));
+        for expect in 1..=5u64 {
+            let swap = ep.install(Arc::new(Uhp::with_seed(4, expect)));
+            assert_eq!(swap.from_epoch(), expect - 1);
+            assert_eq!(swap.to_epoch(), expect);
+            assert_eq!(ep.epoch(), expect);
+        }
+    }
+
+    #[test]
+    fn swap_plan_matches_routing_diff() {
+        let mut ep = EpochedPartitioner::new(Arc::new(Uhp::with_seed(6, 1)));
+        let swap = ep.install(Arc::new(Uhp::with_seed(6, 2)));
+        let keys: Vec<Key> = (0..2000).collect();
+        let plan = swap.plan(keys.iter().cloned());
+        assert!(!plan.is_empty(), "different seeds must move some keys");
+        for &(k, from, to) in &plan {
+            assert_eq!(from, swap.from.partition(k));
+            assert_eq!(to, swap.to.partition(k));
+            assert_ne!(from, to);
+            assert!(swap.moves(k));
+        }
+        let planned: std::collections::HashSet<Key> = plan.iter().map(|e| e.0).collect();
+        for &k in &keys {
+            assert_eq!(planned.contains(&k), swap.moves(k));
+        }
+    }
+
+    #[test]
+    fn identity_swap_has_empty_plan() {
+        let p: Arc<dyn Partitioner> = Arc::new(Uhp::with_seed(5, 9));
+        let mut ep = EpochedPartitioner::new(p.clone());
+        let swap = ep.install(p);
+        assert!(swap.plan(0..500u64).is_empty());
+        assert_eq!(swap.migration_fraction(&[(1, 2.0), (2, 3.0)]), 0.0);
+        assert_eq!(swap.to_epoch(), 1, "epoch bumps even when routing is unchanged");
+    }
+
+    #[test]
+    fn snapshots_survive_later_installs() {
+        let mut ep = EpochedPartitioner::new(Arc::new(Uhp::with_seed(8, 1)));
+        let old = ep.current();
+        ep.install(Arc::new(Uhp::with_seed(8, 2)));
+        // the pre-swap snapshot still routes with the old function
+        let fresh = Uhp::with_seed(8, 1);
+        for k in 0..500u64 {
+            assert_eq!(old.partition(k), fresh.partition(k));
+        }
+        assert_eq!(old.epoch(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn partition_count_change_rejected() {
+        let mut ep = EpochedPartitioner::new(Arc::new(Uhp::with_seed(4, 1)));
+        ep.install(Arc::new(Uhp::with_seed(8, 1)));
+    }
+}

@@ -10,13 +10,18 @@
 //!   [12], over a consistent-hash base (reconstructions; see DESIGN.md).
 //! - [`Mixed`] — the hash+explicit hybrid of Fang et al. [9].
 //! - [`migration`] — state-migration cost between two partitioners.
+//! - [`epoch`] — versioned partitioner epochs: the `Arc`-swappable handle
+//!   every engine swaps through, with migration plans derived from the
+//!   epoch diff.
 
+pub mod epoch;
 pub mod gedik;
 pub mod kip;
 pub mod migration;
 pub mod mixed;
 pub mod weighted;
 
+pub use epoch::{EpochSwap, EpochedPartitioner, PartitionerEpoch};
 pub use gedik::{GedikConfig, GedikPartitioner, GedikStrategy};
 pub use kip::{Kip, KipConfig};
 pub use migration::{migration_fraction, migration_plan};

@@ -1,5 +1,7 @@
 //! Artifact manifest: what `make artifacts` produced and how to call it.
+//! Pure std — available with or without the `pjrt` feature.
 
+use super::error::{Error, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -11,17 +13,17 @@ pub struct InputSpec {
 }
 
 impl InputSpec {
-    pub fn parse(s: &str) -> anyhow::Result<Self> {
+    pub fn parse(s: &str) -> Result<Self> {
         let (dtype, rest) = s
             .split_once('[')
-            .ok_or_else(|| anyhow::anyhow!("bad input spec {s:?}"))?;
+            .ok_or_else(|| Error::msg(format!("bad input spec {s:?}")))?;
         let dims = rest.trim_end_matches(']');
         let shape = if dims.is_empty() {
             Vec::new()
         } else {
             dims.split(',')
                 .map(|d| d.parse::<usize>())
-                .collect::<Result<_, _>>()?
+                .collect::<std::result::Result<_, _>>()?
         };
         Ok(Self {
             dtype: dtype.to_string(),
@@ -47,7 +49,7 @@ pub struct Manifest {
 }
 
 impl Manifest {
-    pub fn parse(text: &str) -> anyhow::Result<Self> {
+    pub fn parse(text: &str) -> Result<Self> {
         let mut entries = HashMap::new();
         for line in text.lines() {
             let line = line.trim();
@@ -57,17 +59,17 @@ impl Manifest {
             let mut parts = line.split('\t');
             let name = parts
                 .next()
-                .ok_or_else(|| anyhow::anyhow!("empty manifest line"))?
+                .ok_or_else(|| Error::msg("empty manifest line"))?
                 .to_string();
             let inputs = parts
                 .next()
-                .ok_or_else(|| anyhow::anyhow!("{name}: missing inputs"))?
+                .ok_or_else(|| Error::msg(format!("{name}: missing inputs")))?
                 .split(';')
                 .map(InputSpec::parse)
-                .collect::<anyhow::Result<Vec<_>>>()?;
+                .collect::<Result<Vec<_>>>()?;
             let n_outputs: usize = parts
                 .next()
-                .ok_or_else(|| anyhow::anyhow!("{name}: missing n_outputs"))?
+                .ok_or_else(|| Error::msg(format!("{name}: missing n_outputs")))?
                 .parse()?;
             entries.insert(
                 name.clone(),
@@ -81,7 +83,7 @@ impl Manifest {
         Ok(Self { entries })
     }
 
-    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+    pub fn load(dir: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(dir.join("manifest.tsv"))?;
         Self::parse(&text)
     }
@@ -113,14 +115,14 @@ pub struct Artifacts {
 }
 
 impl Artifacts {
-    pub fn open(dir: &Path) -> anyhow::Result<Self> {
+    pub fn open(dir: &Path) -> Result<Self> {
         Ok(Self {
             dir: dir.to_path_buf(),
             manifest: Manifest::load(dir)?,
         })
     }
 
-    pub fn open_default() -> anyhow::Result<Self> {
+    pub fn open_default() -> Result<Self> {
         Self::open(&super::artifacts_dir())
     }
 

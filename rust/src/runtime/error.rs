@@ -1,0 +1,91 @@
+//! Minimal error plumbing for the runtime layer (anyhow substitute —
+//! crates.io is unreachable in this image; see DESIGN.md "Substitutions").
+//!
+//! Mirrors the small slice of `anyhow` the runtime needs: a string-backed
+//! error, `Result<T>` alias, a blanket `From<E: std::error::Error>` so
+//! `?` converts io/parse errors, and `bail!`/`ensure!` macros.
+
+use std::fmt;
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// String-backed error. Deliberately does **not** implement
+/// `std::error::Error` so the blanket `From` below stays coherent
+/// (the same trick `anyhow::Error` uses).
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Self {
+        Self(m.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self(e.to_string())
+    }
+}
+
+/// Return early with a formatted [`Error`].
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::runtime::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless `cond` holds.
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::runtime::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+
+// `ensure` is imported across the runtime modules; `bail` is part of the
+// same mini-API even though the current callers all use `ensure`.
+#[allow(unused_imports)]
+pub(crate) use bail;
+pub(crate) use ensure;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parses(s: &str) -> Result<usize> {
+        Ok(s.parse::<usize>()?)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parses("42").unwrap(), 42);
+        let e = parses("nope").unwrap_err();
+        assert!(format!("{e}").contains("invalid digit"));
+    }
+
+    #[test]
+    fn ensure_and_bail_format() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 100 {
+                bail!("x too large: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert!(format!("{}", f(-1).unwrap_err()).contains("positive"));
+        assert!(format!("{}", f(200).unwrap_err()).contains("too large"));
+    }
+}

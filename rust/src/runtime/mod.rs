@@ -5,22 +5,34 @@
 //! The interchange format is HLO *text*: jax ≥ 0.5 serializes protos with
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+//!
+//! **Feature gating:** the `xla` crate is not vendored in this image, so
+//! the PJRT-backed [`Runtime`]/executables are compiled only with the
+//! `pjrt` cargo feature (which requires vendoring `xla` first). Without
+//! it, API-compatible stubs return errors and callers fall back (e.g.
+//! `fig8::calibrated_reduce_cost` uses its measured constant). Artifact
+//! manifests and binary fixture IO are std-only and always available.
 
 pub mod artifacts;
+pub mod error;
 pub mod ner_exec;
 
-pub use artifacts::{Artifacts, Manifest, ManifestEntry};
-pub use ner_exec::{NerExecutable, NerOutput, NER_BATCH_SIZES};
+pub use artifacts::{Artifacts, InputSpec, Manifest, ManifestEntry};
+pub use error::{Error, Result};
+pub use ner_exec::{NerExecutable, NerLadder, NerOutput, NER_BATCH_SIZES};
 
+use error::ensure;
 use std::path::Path;
 
 /// Wrapper around the PJRT CPU client plus the loaded executables.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
-    pub fn cpu() -> anyhow::Result<Self> {
+    pub fn cpu() -> Result<Self> {
         Ok(Self {
             client: xla::PjRtClient::cpu()?,
         })
@@ -31,10 +43,10 @@ impl Runtime {
     }
 
     /// Compile one HLO-text artifact into a PJRT executable.
-    pub fn load_hlo_text(&self, path: &Path) -> anyhow::Result<xla::PjRtLoadedExecutable> {
+    pub fn load_hlo_text(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str()
-                .ok_or_else(|| anyhow::anyhow!("non-utf8 path {path:?}"))?,
+                .ok_or_else(|| Error::msg(format!("non-utf8 path {path:?}")))?,
         )?;
         let comp = xla::XlaComputation::from_proto(&proto);
         Ok(self.client.compile(&comp)?)
@@ -45,10 +57,31 @@ impl Runtime {
     }
 }
 
+/// Stub shown when the crate is built without the `pjrt` feature: the
+/// constructor reports the runtime as unavailable so callers (CLI
+/// `artifacts` command, fig8 calibration) degrade gracefully.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    _private: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Err(Error::msg(
+            "PJRT runtime not built: enable the `pjrt` feature (requires a vendored `xla` crate)",
+        ))
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (built without the pjrt feature)".to_string()
+    }
+}
+
 /// Read a little-endian f32 binary file (the exported parameter format).
-pub fn read_f32_file(path: &Path) -> anyhow::Result<Vec<f32>> {
+pub fn read_f32_file(path: &Path) -> Result<Vec<f32>> {
     let bytes = std::fs::read(path)?;
-    anyhow::ensure!(
+    ensure!(
         bytes.len() % 4 == 0,
         "{}: length {} not a multiple of 4",
         path.display(),
@@ -61,9 +94,9 @@ pub fn read_f32_file(path: &Path) -> anyhow::Result<Vec<f32>> {
 }
 
 /// Read a little-endian i32 binary file (check fixtures).
-pub fn read_i32_file(path: &Path) -> anyhow::Result<Vec<i32>> {
+pub fn read_i32_file(path: &Path) -> Result<Vec<i32>> {
     let bytes = std::fs::read(path)?;
-    anyhow::ensure!(bytes.len() % 4 == 0, "{}: bad length", path.display());
+    ensure!(bytes.len() % 4 == 0, "{}: bad length", path.display());
     Ok(bytes
         .chunks_exact(4)
         .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
@@ -117,5 +150,12 @@ mod tests {
         // path resolution logic doesn't panic.
         let d = artifacts_dir();
         assert!(d.to_string_lossy().contains("artifacts"));
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_reports_unavailable() {
+        let e = Runtime::cpu().unwrap_err();
+        assert!(format!("{e}").contains("pjrt"));
     }
 }

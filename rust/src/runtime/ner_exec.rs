@@ -4,15 +4,17 @@
 //! parameters (`ner_*.bin`) as device buffers **once**, and then serves
 //! `execute()` calls from the reducer hot path with only the token batch
 //! crossing the host→device boundary.
+//!
+//! Compiled against the real `xla` crate only with the `pjrt` feature;
+//! otherwise API-compatible stubs return errors and callers fall back
+//! (see `runtime` module docs).
 
-use super::{read_f32_file, Artifacts, Runtime};
-use crate::workload::ner::{Doc, MAX_LEN, VOCAB};
-use std::time::Instant;
+use super::error::Result;
+use super::{Artifacts, Runtime};
+use crate::workload::ner::Doc;
 
 /// The compiled batch-size ladder (must match python/compile/model.py).
 pub const NER_BATCH_SIZES: [usize; 3] = [32, 128, 512];
-const EMBED_DIM: usize = 64;
-const N_CLASSES: usize = 9;
 
 /// One batch's outputs (see model.ner_window_model).
 #[derive(Debug, Clone)]
@@ -26,113 +28,169 @@ pub struct NerOutput {
     pub batch: usize,
 }
 
-/// A loaded `ner_b{N}` executable with staged parameters.
-pub struct NerExecutable {
-    exe: xla::PjRtLoadedExecutable,
-    client: xla::PjRtClient,
-    emb: xla::PjRtBuffer,
-    w: xla::PjRtBuffer,
-    b: xla::PjRtBuffer,
-    batch: usize,
+#[cfg(feature = "pjrt")]
+mod real {
+    use super::super::error::{ensure, Result};
+    use super::super::{read_f32_file, Artifacts, Runtime};
+    use super::{NerOutput, NER_BATCH_SIZES};
+    use crate::workload::ner::{Doc, MAX_LEN, VOCAB};
+    use std::time::Instant;
+
+    const EMBED_DIM: usize = 64;
+    const N_CLASSES: usize = 9;
+
+    /// A loaded `ner_b{N}` executable with staged parameters.
+    pub struct NerExecutable {
+        exe: xla::PjRtLoadedExecutable,
+        client: xla::PjRtClient,
+        emb: xla::PjRtBuffer,
+        w: xla::PjRtBuffer,
+        b: xla::PjRtBuffer,
+        batch: usize,
+    }
+
+    impl NerExecutable {
+        /// Load the artifact for one batch size and stage the parameters.
+        pub fn load(rt: &Runtime, arts: &Artifacts, batch: usize) -> Result<Self> {
+            ensure!(
+                NER_BATCH_SIZES.contains(&batch),
+                "no ner artifact for batch size {batch}"
+            );
+            let name = format!("ner_b{batch}");
+            ensure!(
+                arts.manifest.get(&name).is_some(),
+                "{name} missing from manifest — run `make artifacts`"
+            );
+            let exe = rt.load_hlo_text(&arts.hlo_path(&name))?;
+
+            let emb_host = read_f32_file(&arts.bin_path("ner_emb"))?;
+            ensure!(emb_host.len() == VOCAB * EMBED_DIM, "ner_emb.bin size");
+            let w_host = read_f32_file(&arts.bin_path("ner_w"))?;
+            ensure!(w_host.len() == EMBED_DIM * N_CLASSES, "ner_w.bin size");
+            let b_host = read_f32_file(&arts.bin_path("ner_b"))?;
+            ensure!(b_host.len() == N_CLASSES, "ner_b.bin size");
+
+            let client = rt.client().clone();
+            let emb = client.buffer_from_host_buffer(&emb_host, &[VOCAB, EMBED_DIM], None)?;
+            let w = client.buffer_from_host_buffer(&w_host, &[EMBED_DIM, N_CLASSES], None)?;
+            let b = client.buffer_from_host_buffer(&b_host, &[N_CLASSES], None)?;
+            Ok(Self {
+                exe,
+                client,
+                emb,
+                w,
+                b,
+                batch,
+            })
+        }
+
+        pub fn batch(&self) -> usize {
+            self.batch
+        }
+
+        /// Execute one padded batch. `tokens` is `[batch × MAX_LEN]`
+        /// row-major, `lens` is `[batch]` (0 marks an empty slot).
+        pub fn execute(&self, tokens: &[i32], lens: &[i32]) -> Result<NerOutput> {
+            ensure!(tokens.len() == self.batch * MAX_LEN, "tokens shape");
+            ensure!(lens.len() == self.batch, "lens shape");
+            let tok_buf = self
+                .client
+                .buffer_from_host_buffer(tokens, &[self.batch, MAX_LEN], None)?;
+            let len_buf = self
+                .client
+                .buffer_from_host_buffer(lens, &[self.batch], None)?;
+
+            let args = [&tok_buf, &len_buf, &self.emb, &self.w, &self.b];
+            let result = self.exe.execute_b(&args)?;
+            let tuple = result[0][0].to_literal_sync()?;
+            let (logits_l, pred_l, hist_l) = tuple.to_tuple3()?;
+            Ok(NerOutput {
+                logits: logits_l.to_vec::<f32>()?,
+                pred: pred_l.to_vec::<i32>()?,
+                class_hist: hist_l.to_vec::<f32>()?,
+                batch: self.batch,
+            })
+        }
+
+        /// Execute a slice of documents (padded/truncated into this batch).
+        pub fn execute_docs(&self, docs: &[&Doc]) -> Result<NerOutput> {
+            let (tokens, lens) = crate::workload::ner::pad_batch(docs, self.batch);
+            self.execute(&tokens, &lens)
+        }
+
+        /// Measure mean wall-clock seconds per *document* over `iters` runs
+        /// of a representative batch — the calibration source for the
+        /// engines' `reduce_cost` (DESIGN.md: the virtual timeline is
+        /// anchored to measured compute).
+        pub fn calibrate_per_doc_cost(&self, iters: usize) -> Result<f64> {
+            let tokens: Vec<i32> = (0..self.batch * MAX_LEN)
+                .map(|i| (crate::hash::fmix64(i as u64) % VOCAB as u64) as i32)
+                .collect();
+            let lens = vec![MAX_LEN as i32; self.batch];
+            // warmup
+            self.execute(&tokens, &lens)?;
+            let t = Instant::now();
+            for _ in 0..iters.max(1) {
+                self.execute(&tokens, &lens)?;
+            }
+            Ok(t.elapsed().as_secs_f64() / (iters.max(1) * self.batch) as f64)
+        }
+    }
 }
 
+#[cfg(feature = "pjrt")]
+pub use real::NerExecutable;
+
+/// Stub compiled without the `pjrt` feature: `load` reports the runtime
+/// as unavailable; the remaining methods exist so callers typecheck but
+/// are unreachable (the struct cannot be constructed).
+#[cfg(not(feature = "pjrt"))]
+pub struct NerExecutable {
+    never: Never,
+}
+
+#[cfg(not(feature = "pjrt"))]
+#[derive(Clone, Copy)]
+enum Never {}
+
+#[cfg(not(feature = "pjrt"))]
 impl NerExecutable {
-    /// Load the artifact for one batch size and stage the parameters.
-    pub fn load(rt: &Runtime, arts: &Artifacts, batch: usize) -> anyhow::Result<Self> {
-        anyhow::ensure!(
-            NER_BATCH_SIZES.contains(&batch),
-            "no ner artifact for batch size {batch}"
-        );
-        let name = format!("ner_b{batch}");
-        anyhow::ensure!(
-            arts.manifest.get(&name).is_some(),
-            "{name} missing from manifest — run `make artifacts`"
-        );
-        let exe = rt.load_hlo_text(&arts.hlo_path(&name))?;
-
-        let emb_host = read_f32_file(&arts.bin_path("ner_emb"))?;
-        anyhow::ensure!(emb_host.len() == VOCAB * EMBED_DIM, "ner_emb.bin size");
-        let w_host = read_f32_file(&arts.bin_path("ner_w"))?;
-        anyhow::ensure!(w_host.len() == EMBED_DIM * N_CLASSES, "ner_w.bin size");
-        let b_host = read_f32_file(&arts.bin_path("ner_b"))?;
-        anyhow::ensure!(b_host.len() == N_CLASSES, "ner_b.bin size");
-
-        let client = rt.client().clone();
-        let emb = client.buffer_from_host_buffer(&emb_host, &[VOCAB, EMBED_DIM], None)?;
-        let w = client.buffer_from_host_buffer(&w_host, &[EMBED_DIM, N_CLASSES], None)?;
-        let b = client.buffer_from_host_buffer(&b_host, &[N_CLASSES], None)?;
-        Ok(Self {
-            exe,
-            client,
-            emb,
-            w,
-            b,
-            batch,
-        })
+    pub fn load(_rt: &Runtime, _arts: &Artifacts, _batch: usize) -> Result<Self> {
+        Err(super::Error::msg(
+            "NER scorer not built: enable the `pjrt` feature (requires a vendored `xla` crate)",
+        ))
     }
 
     pub fn batch(&self) -> usize {
-        self.batch
+        match self.never {}
     }
 
-    /// Execute one padded batch. `tokens` is `[batch × MAX_LEN]` row-major,
-    /// `lens` is `[batch]` (0 marks an empty slot).
-    pub fn execute(&self, tokens: &[i32], lens: &[i32]) -> anyhow::Result<NerOutput> {
-        anyhow::ensure!(tokens.len() == self.batch * MAX_LEN, "tokens shape");
-        anyhow::ensure!(lens.len() == self.batch, "lens shape");
-        let tok_buf = self
-            .client
-            .buffer_from_host_buffer(tokens, &[self.batch, MAX_LEN], None)?;
-        let len_buf = self.client.buffer_from_host_buffer(lens, &[self.batch], None)?;
-
-        let args = [&tok_buf, &len_buf, &self.emb, &self.w, &self.b];
-        let result = self.exe.execute_b(&args)?;
-        let tuple = result[0][0].to_literal_sync()?;
-        let (logits_l, pred_l, hist_l) = tuple.to_tuple3()?;
-        Ok(NerOutput {
-            logits: logits_l.to_vec::<f32>()?,
-            pred: pred_l.to_vec::<i32>()?,
-            class_hist: hist_l.to_vec::<f32>()?,
-            batch: self.batch,
-        })
+    pub fn execute(&self, _tokens: &[i32], _lens: &[i32]) -> Result<NerOutput> {
+        match self.never {}
     }
 
-    /// Execute a slice of documents (padded/truncated into this batch).
-    pub fn execute_docs(&self, docs: &[&Doc]) -> anyhow::Result<NerOutput> {
-        let (tokens, lens) = crate::workload::ner::pad_batch(docs, self.batch);
-        self.execute(&tokens, &lens)
+    pub fn execute_docs(&self, _docs: &[&Doc]) -> Result<NerOutput> {
+        match self.never {}
     }
 
-    /// Measure mean wall-clock seconds per *document* over `iters` runs of
-    /// a representative batch — the calibration source for the engines'
-    /// `reduce_cost` (DESIGN.md: the virtual timeline is anchored to
-    /// measured compute).
-    pub fn calibrate_per_doc_cost(&self, iters: usize) -> anyhow::Result<f64> {
-        let tokens: Vec<i32> = (0..self.batch * MAX_LEN)
-            .map(|i| (crate::hash::fmix64(i as u64) % VOCAB as u64) as i32)
-            .collect();
-        let lens = vec![MAX_LEN as i32; self.batch];
-        // warmup
-        self.execute(&tokens, &lens)?;
-        let t = Instant::now();
-        for _ in 0..iters.max(1) {
-            self.execute(&tokens, &lens)?;
-        }
-        Ok(t.elapsed().as_secs_f64() / (iters.max(1) * self.batch) as f64)
+    pub fn calibrate_per_doc_cost(&self, _iters: usize) -> Result<f64> {
+        match self.never {}
     }
 }
 
 /// A ladder of NER executables; picks the smallest batch that fits.
+/// Shared across the real and stub backends (it only uses the
+/// [`NerExecutable`] surface).
 pub struct NerLadder {
     rungs: Vec<NerExecutable>,
 }
 
 impl NerLadder {
-    pub fn load(rt: &Runtime, arts: &Artifacts) -> anyhow::Result<Self> {
+    pub fn load(rt: &Runtime, arts: &Artifacts) -> Result<Self> {
         let rungs = NER_BATCH_SIZES
             .iter()
             .map(|&b| NerExecutable::load(rt, arts, b))
-            .collect::<anyhow::Result<Vec<_>>>()?;
+            .collect::<Result<Vec<_>>>()?;
         Ok(Self { rungs })
     }
 
@@ -144,7 +202,7 @@ impl NerLadder {
     }
 
     /// Score an arbitrary number of documents, chunking through the ladder.
-    pub fn score_all(&self, docs: &[Doc]) -> anyhow::Result<Vec<NerOutput>> {
+    pub fn score_all(&self, docs: &[Doc]) -> Result<Vec<NerOutput>> {
         let mut out = Vec::new();
         let max_b = self.rungs.last().expect("ladder").batch();
         let mut i = 0;

@@ -18,7 +18,7 @@
 //! 2. **drift tracking** — counts decay by γ at each harvest boundary,
 //!    so mass reflects the current distribution, exponentially weighted.
 
-use super::HeavyHitter;
+use super::{HeavyHitter, MergeableSketch};
 use crate::workload::Key;
 use crate::util::keymap::{key_map_with_capacity, KeyMap};
 
@@ -68,6 +68,21 @@ impl FreqCounter {
             .min_by(|a, b| a.1.total_cmp(b.1))
         {
             self.counts.remove(&k);
+        }
+    }
+}
+
+impl MergeableSketch for FreqCounter {
+    /// Sum per-key counts and totals, then evict smallest counters until
+    /// the capacity bound is re-established. Because eviction carries no
+    /// inheritance, the merge (like `observe`) never overestimates.
+    fn merge_from(&mut self, other: &Self) {
+        self.total += other.total;
+        for (&k, &c) in other.counts.iter() {
+            *self.counts.entry(k).or_insert(0.0) += c;
+        }
+        while self.counts.len() > self.capacity {
+            self.evict_min();
         }
     }
 }

@@ -67,6 +67,13 @@ impl Histogram {
     /// from one local but present in another contributes only the observed
     /// part — the standard mergeable-summary behaviour (underestimates are
     /// bounded by each local's top-k cutoff).
+    ///
+    /// This is the batch form of
+    /// [`MergeableSketch::merge_from`](crate::sketch::MergeableSketch):
+    /// one accumulation pass over all locals (the decision-point hot path
+    /// merges every DRW histogram at once), where the pairwise trait fold
+    /// would re-sort per local. `merge_from_matches_batch_merge` pins
+    /// their equivalence.
     pub fn merge(locals: &[Histogram], k: usize) -> Self {
         let total: f64 = locals.iter().map(|h| h.total_weight).sum();
         if total <= 0.0 {
@@ -80,6 +87,16 @@ impl Histogram {
         }
         let counts: Vec<(Key, f64)> = acc.into_iter().collect();
         Self::from_counts(&counts, total, k)
+    }
+
+    /// Keep only the heaviest `k` entries. Entries are always held in
+    /// decreasing-frequency order, so this is a suffix drop — the
+    /// re-bounding step after pairwise [`merge_from`] folds
+    /// (`Histogram::merge` applies it implicitly via its top-`k` build).
+    ///
+    /// [`merge_from`]: crate::sketch::MergeableSketch::merge_from
+    pub fn truncate_top(&mut self, k: usize) {
+        self.entries.truncate(k);
     }
 
     pub fn len(&self) -> usize {
@@ -130,9 +147,45 @@ impl Histogram {
     }
 }
 
+impl super::MergeableSketch for Histogram {
+    /// Union-merge on absolute weights: each local's relative frequencies
+    /// are weighted by its share of the combined total. A key absent from
+    /// one local but present in another contributes only the observed
+    /// part — the standard mergeable-summary behaviour (underestimates
+    /// are bounded by each local's top-k cutoff). Keeps *all* surviving
+    /// keys so no mass is lost mid-fold; callers re-bound the footprint
+    /// with [`Histogram::truncate_top`] once the fold is done (exactly
+    /// what [`Histogram::merge`]'s top-`k` build does implicitly).
+    fn merge_from(&mut self, other: &Self) {
+        let total = self.total_weight + other.total_weight;
+        if total <= 0.0 {
+            return;
+        }
+        let mut acc: std::collections::HashMap<Key, f64> = std::collections::HashMap::new();
+        for e in &self.entries {
+            *acc.entry(e.key).or_insert(0.0) += e.freq * self.total_weight;
+        }
+        for e in &other.entries {
+            *acc.entry(e.key).or_insert(0.0) += e.freq * other.total_weight;
+        }
+        let mut entries: Vec<HistogramEntry> = acc
+            .into_iter()
+            .filter(|&(_, c)| c > 0.0)
+            .map(|(key, c)| HistogramEntry {
+                key,
+                freq: (c / total).min(1.0),
+            })
+            .collect();
+        entries.sort_by(|a, b| b.freq.total_cmp(&a.freq).then(a.key.cmp(&b.key)));
+        self.entries = entries;
+        self.total_weight = total;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sketch::MergeableSketch;
     use crate::workload::Record;
 
     #[test]
@@ -192,6 +245,30 @@ mod tests {
         assert_eq!(h.len(), 3);
         assert!((h.heavy_mass() - 1.0).abs() < 1e-12);
         assert!((h.top_freq() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_from_matches_batch_merge() {
+        let a = Histogram::from_counts(&[(1, 50.0), (3, 10.0)], 100.0, 5);
+        let b = Histogram::from_counts(&[(1, 30.0), (2, 60.0)], 300.0, 5);
+        let c = Histogram::from_counts(&[(2, 5.0), (4, 20.0)], 50.0, 5);
+        // k = 2 exercises the truncation regime: the fold keeps all keys
+        // until truncate_top re-bounds it, and must agree with the batch
+        // merge's top-k build.
+        for k in [2usize, 10] {
+            let batch = Histogram::merge(&[a.clone(), b.clone(), c.clone()], k);
+            let mut folded = Histogram::empty();
+            folded.merge_from(&a);
+            folded.merge_from(&b);
+            folded.merge_from(&c);
+            folded.truncate_top(k);
+            assert_eq!(batch.len(), folded.len(), "k={k}");
+            assert!((batch.total_weight() - folded.total_weight()).abs() < 1e-9);
+            for (x, y) in batch.entries().iter().zip(folded.entries()) {
+                assert_eq!(x.key, y.key, "k={k}");
+                assert!((x.freq - y.freq).abs() < 1e-12);
+            }
+        }
     }
 
     #[test]

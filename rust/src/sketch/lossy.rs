@@ -6,7 +6,7 @@
 //! at most ε·N. Generalised to weighted items (bucket boundaries advance
 //! on accumulated weight).
 
-use super::HeavyHitter;
+use super::{HeavyHitter, MergeableSketch};
 use crate::workload::Key;
 use std::collections::HashMap;
 
@@ -44,6 +44,47 @@ impl LossyCounting {
     fn prune(&mut self) {
         let b = self.current_bucket;
         self.entries.retain(|_, e| e.count + e.delta > b - 1.0);
+    }
+}
+
+impl MergeableSketch for LossyCounting {
+    /// Keywise sum of counts and error terms (Δ) — the standard
+    /// lossy-counting merge, where the ε-deficiency bounds add. A key
+    /// *absent* from one side may have been pruned there with up to that
+    /// side's `bucket − 1` mass, so its Δ absorbs that side's prune bound;
+    /// otherwise a key heavy in the union could be dropped by the
+    /// post-merge prune despite exceeding the ε·N guarantee. The bucket
+    /// cursor then advances to the merged total and a prune re-establishes
+    /// the footprint bound.
+    fn merge_from(&mut self, other: &Self) {
+        // Hard assert (not debug): merging incompatible epsilons silently
+        // corrupts both sketches' bounds, and merges are cold-path.
+        assert!(
+            (self.bucket_width - other.bucket_width).abs() < 1e-9,
+            "merging lossy counters with different epsilon ({} vs {}) voids both bounds",
+            self.epsilon,
+            other.epsilon
+        );
+        let self_bound = (self.current_bucket - 1.0).max(0.0);
+        let other_bound = (other.current_bucket - 1.0).max(0.0);
+        self.total += other.total;
+        for (k, m) in self.entries.iter_mut() {
+            match other.entries.get(k) {
+                Some(e) => {
+                    m.count += e.count;
+                    m.delta += e.delta;
+                }
+                None => m.delta += other_bound,
+            }
+        }
+        for (&k, e) in other.entries.iter() {
+            self.entries.entry(k).or_insert_with(|| Entry {
+                count: e.count,
+                delta: e.delta + self_bound,
+            });
+        }
+        self.current_bucket = (self.total / self.bucket_width).ceil().max(1.0);
+        self.prune();
     }
 }
 

@@ -17,6 +17,56 @@ pub use histogram::{Histogram, HistogramEntry};
 pub use lossy::LossyCounting;
 pub use spacesaving::SpaceSaving;
 
+#[cfg(test)]
+mod merge_tests {
+    use super::*;
+
+    // Cross-sketch property: merging locals matches observing the union
+    // stream, up to each sketch's own error model.
+    #[test]
+    fn merged_totals_add_for_every_sketch() {
+        let mut a = FreqCounter::with_capacity(32);
+        let mut b = FreqCounter::with_capacity(32);
+        let mut sa = SpaceSaving::new(32);
+        let mut sb = SpaceSaving::new(32);
+        let mut la = LossyCounting::new(0.02);
+        let mut lb = LossyCounting::new(0.02);
+        for k in 0..1000u64 {
+            a.observe(k % 40, 1.0);
+            sa.observe(k % 40, 1.0);
+            la.observe(k % 40, 1.0);
+            b.observe(k % 7, 2.0);
+            sb.observe(k % 7, 2.0);
+            lb.observe(k % 7, 2.0);
+        }
+        a.merge_from(&b);
+        sa.merge_from(&sb);
+        la.merge_from(&lb);
+        for (name, total) in [("counter", a.total()), ("spacesaving", sa.total()), ("lossy", la.total())] {
+            assert!((total - 3000.0).abs() < 1e-9, "{name}: total {total}");
+        }
+    }
+
+    #[test]
+    fn merged_heavy_key_rises_to_top() {
+        // key 9 is moderate in each local but heavy in the union
+        let mut locals: Vec<FreqCounter> = (0..4).map(|_| FreqCounter::with_capacity(16)).collect();
+        for (w, fc) in locals.iter_mut().enumerate() {
+            for i in 0..1000u64 {
+                let k = if i % 3 == 0 { 9 } else { (w as u64 + 1) * 1000 + i };
+                fc.observe(k, 1.0);
+            }
+        }
+        let mut merged = locals.remove(0);
+        for fc in &locals {
+            merged.merge_from(fc);
+        }
+        let h = merged.harvest(4);
+        assert_eq!(h.entries()[0].key, 9);
+        assert!((h.entries()[0].freq - 1.0 / 3.0).abs() < 0.05);
+    }
+}
+
 use crate::workload::Key;
 
 /// Common interface of all heavy-hitter counters: observe weighted keys,
@@ -42,4 +92,25 @@ pub trait HeavyHitter {
     fn harvest(&self, k: usize) -> Histogram {
         Histogram::from_counts(&self.estimates(), self.total(), k)
     }
+}
+
+/// Sketches whose worker-local instances combine into one summary of the
+/// union of their input streams — the mergeable-summary property the DRM
+/// path relies on (DRWs sketch locally, the DRM merges globally).
+///
+/// Contract:
+/// - `total()` of the merge equals the sum of the parts' totals;
+/// - every key's estimate stays within the parts' summed error bounds
+///   (a key absent from one side absorbs that side's eviction/prune
+///   bound, so per-sketch guarantees survive the merge);
+/// - bounded-memory sketches re-establish their capacity bound after the
+///   merge (evicting smallest counters, as in mergeable SpaceSaving).
+///
+/// [`Histogram::merge`] — the hot-path merge the DRM decision point
+/// runs — is the *batch* form of this fold: one accumulation pass over
+/// all locals rather than pairwise `merge_from` calls, with a test
+/// (`merge_from_matches_batch_merge`) pinning the two equivalent.
+pub trait MergeableSketch {
+    /// Fold `other`'s observations into `self`.
+    fn merge_from(&mut self, other: &Self);
 }

@@ -6,7 +6,7 @@
 //! lazily-maintained min tracking; capacity is small (O(λN)) so the
 //! occasional O(capacity) min-scan is cheap and keeps the code simple.
 
-use super::HeavyHitter;
+use super::{HeavyHitter, MergeableSketch};
 use crate::workload::Key;
 use std::collections::HashMap;
 
@@ -45,6 +45,53 @@ impl SpaceSaving {
             .iter()
             .min_by(|a, b| a.1.total_cmp(b.1))
             .map(|(&k, &c)| (k, c))
+    }
+}
+
+impl MergeableSketch for SpaceSaving {
+    /// Mergeable-summaries combine (Agarwal et al.): sum counts and error
+    /// bounds keywise, then keep the largest `capacity` counters. A key
+    /// *absent* from one side may have been observed there up to that
+    /// side's minimum counter before eviction, so absent-side mass is
+    /// absorbed as `min counter` into both count and error — preserving
+    /// SpaceSaving's never-underestimate guarantee across the merge (a
+    /// side that never filled its table evicted nothing: bound 0).
+    fn merge_from(&mut self, other: &Self) {
+        let bound = |s: &Self| {
+            if s.counts.len() >= s.capacity {
+                s.min_entry().map(|e| e.1).unwrap_or(0.0)
+            } else {
+                0.0
+            }
+        };
+        let self_bound = bound(self);
+        let other_bound = bound(other);
+        self.total += other.total;
+        for (k, c) in self.counts.iter_mut() {
+            match other.counts.get(k) {
+                Some(&oc) => {
+                    *c += oc;
+                    let oe = other.errors.get(k).cloned().unwrap_or(0.0);
+                    *self.errors.entry(*k).or_insert(0.0) += oe;
+                }
+                None => {
+                    *c += other_bound;
+                    *self.errors.entry(*k).or_insert(0.0) += other_bound;
+                }
+            }
+        }
+        for (&k, &c) in other.counts.iter() {
+            if !self.counts.contains_key(&k) {
+                let oe = other.errors.get(&k).cloned().unwrap_or(0.0);
+                self.counts.insert(k, c + self_bound);
+                self.errors.insert(k, oe + self_bound);
+            }
+        }
+        while self.counts.len() > self.capacity {
+            let (min_key, _) = self.min_entry().expect("capacity > 0");
+            self.counts.remove(&min_key);
+            self.errors.remove(&min_key);
+        }
     }
 }
 

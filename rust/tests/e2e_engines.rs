@@ -91,10 +91,54 @@ fn failure_injection_garbage_histograms_never_break_routing() {
     ];
     for hist in cases {
         let d = drm.decide(vec![hist]);
-        let h = d.new_partitioner.unwrap_or_else(|| drm.handle());
+        let h = d.new_partitioner().unwrap_or_else(|| drm.handle());
         for k in 0..5_000u64 {
             assert!(h.partition(k) < 8, "routing broke on adversarial histogram");
         }
+    }
+}
+
+#[test]
+fn epochs_surface_in_every_engine_report() {
+    // JobReport: the single mid-map decision is epoch 1.
+    let mut z = Zipf::new(50_000, 1.2, 21);
+    let recs = z.batch(100_000);
+    let job = BatchJob::new(cfg(16, 16), DrConfig::forced(), PartitionerChoice::Kip, 21);
+    let jr = job.run(&recs);
+    assert!(jr.repartitioned);
+    assert_eq!(jr.epoch, 1);
+
+    // BatchReport: forced updates bump the epoch at every batch boundary.
+    let mut mb = MicroBatchEngine::new(cfg(8, 8), DrConfig::forced(), PartitionerChoice::Kip, 22);
+    let mut z2 = Zipf::new(20_000, 1.2, 22);
+    let mut last = 0;
+    for _ in 0..3 {
+        let r = mb.run_batch(&z2.batch(20_000));
+        assert_eq!(r.epoch, last + 1, "micro-batch epoch must be monotone");
+        last = r.epoch;
+    }
+
+    // IntervalReport: barrier-aligned swaps, monotone across intervals.
+    let scfg = EngineConfig {
+        n_partitions: 8,
+        n_slots: 8,
+        task_overhead: 0.0,
+        ..Default::default()
+    };
+    let mut st = StreamingEngine::new(scfg, DrConfig::forced(), PartitionerChoice::Kip, 23);
+    let mut z3 = Zipf::new(20_000, 1.2, 23);
+    let mut last = 0;
+    for _ in 0..3 {
+        let r = st.run_interval(&z3.batch(20_000));
+        assert!(r.epoch > last, "streaming epoch must be monotone");
+        last = r.epoch;
+    }
+
+    // Without DR nothing ever bumps.
+    let mut off = MicroBatchEngine::new(cfg(8, 8), DrConfig::disabled(), PartitionerChoice::Uhp, 24);
+    let mut z4 = Zipf::new(20_000, 1.2, 24);
+    for _ in 0..3 {
+        assert_eq!(off.run_batch(&z4.batch(20_000)).epoch, 0);
     }
 }
 

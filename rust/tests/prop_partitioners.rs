@@ -122,6 +122,79 @@ fn kip_update_is_idempotent_under_stable_histogram() {
 }
 
 #[test]
+fn epoch_swap_invariants() {
+    use std::sync::Arc;
+    forall(60, |g| {
+        let n = g.usize(2..24);
+        let mut ep = EpochedPartitioner::new(Arc::new(Uhp::with_seed(n, g.u64(0..1000))));
+        assert_eq!(ep.epoch(), 0);
+        let keys: Vec<u64> = (0..g.usize(1..300))
+            .map(|_| g.u64(0..1 << 40))
+            .collect();
+        let mut last_epoch = 0;
+        for _ in 0..g.usize(1..4) {
+            let swap = ep.install(Arc::new(Uhp::with_seed(n, g.u64(0..1000))));
+            // epoch monotonicity across (possibly forced no-op) updates
+            assert_eq!(swap.from_epoch(), last_epoch);
+            assert_eq!(swap.to_epoch(), last_epoch + 1);
+            assert_eq!(ep.epoch(), swap.to_epoch());
+            last_epoch = ep.epoch();
+
+            // plan keys = exactly the keys whose partition changed
+            let plan = swap.plan(keys.iter().cloned());
+            let planned: std::collections::HashSet<u64> = plan.iter().map(|e| e.0).collect();
+            for &(k, from, to) in &plan {
+                assert_eq!(from, swap.from.partition(k));
+                assert_eq!(to, swap.to.partition(k));
+                assert_ne!(from, to, "plan contains a non-moving key");
+            }
+            for &k in &keys {
+                assert_eq!(
+                    planned.contains(&k),
+                    swap.from.partition(k) != swap.to.partition(k),
+                    "plan keys must be exactly the keys whose partition changed"
+                );
+            }
+
+            // migration_fraction ∈ [0, 1], and 0 iff the plan is empty
+            let sw: Vec<(u64, f64)> = keys.iter().map(|&k| (k, g.f64(0.1..5.0))).collect();
+            let f = swap.migration_fraction(&sw);
+            assert!((0.0..=1.0).contains(&f), "fraction {f} out of bounds");
+            let unique_moves = planned.len();
+            assert_eq!(f == 0.0, unique_moves == 0);
+        }
+    });
+}
+
+#[test]
+fn drm_epochs_monotone_and_plans_match_under_forced_updates() {
+    use dynrepart::dr::{DrConfig, DrMaster, PartitionerChoice};
+    forall(20, |g| {
+        let n = g.usize(2..16);
+        let mut drm = DrMaster::new(DrConfig::forced(), PartitionerChoice::Kip, n, g.u64(0..100));
+        assert_eq!(drm.epoch(), 0);
+        let mut last = 0;
+        for _ in 0..3 {
+            let hist = random_histogram(g, 4 * n);
+            let d = drm.decide(vec![hist]);
+            let swap = d.swap.expect("forced update must install");
+            assert_eq!(swap.from_epoch(), last);
+            assert_eq!(swap.to_epoch(), last + 1);
+            assert_eq!(d.epoch, swap.to_epoch());
+            last = drm.epoch();
+            // the installed epoch is the master's current handle
+            let h = drm.handle();
+            assert_eq!(h.epoch(), last);
+            for _ in 0..30 {
+                let k = g.u64(0..u64::MAX);
+                assert_eq!(h.partition(k), swap.to.partition(k));
+                assert!(h.partition(k) < n);
+            }
+        }
+    });
+}
+
+#[test]
 fn histogram_merge_preserves_mass_and_order() {
     forall(60, |g| {
         let n_locals = g.usize(1..6);

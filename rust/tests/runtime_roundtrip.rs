@@ -1,8 +1,10 @@
 //! Cross-language numerics: the AOT artifact executed from rust via PJRT
 //! must reproduce the python eager model bit-for-bit (within f32 noise).
 //!
-//! Requires `make artifacts` (skips politely otherwise, so `cargo test`
-//! works on a fresh checkout).
+//! Requires the `pjrt` feature (the whole file is gated — without it the
+//! runtime is a stub; see the `runtime` module docs) and `make artifacts`
+//! (skips politely otherwise, so `cargo test` works on a fresh checkout).
+#![cfg(feature = "pjrt")]
 
 use dynrepart::runtime::{read_f32_file, read_i32_file, Artifacts, NerExecutable, Runtime};
 
