@@ -35,7 +35,11 @@ fn main() {
                 report.throughput,
                 report.imbalance,
                 report.migrated_fraction * 100.0,
-                if report.repartitioned { "barrier: new partitioner + state migration" } else { "" },
+                if report.repartitioned {
+                    "barrier: new partitioner + state migration"
+                } else {
+                    ""
+                },
             );
         }
         let m = engine.metrics();

@@ -1,0 +1,89 @@
+//! Parallel ShuffleStage scaling: wall clock of the sharded executor at
+//! 1/2/4/8 threads on a large skewed micro-batch, plus an engine-level
+//! run. Virtual-time results are identical across thread counts by
+//! construction (pinned by `tests/prop_parallel.rs`); this bench measures
+//! the real-time column. See EXPERIMENTS.md "Parallel scaling".
+use dynrepart::bench::{bench_with, black_box, header, BenchOpts};
+use dynrepart::ddps::{EngineConfig, MicroBatchEngine, Scheduling, ShuffleStage};
+use dynrepart::dr::{DrConfig, PartitionerChoice};
+use dynrepart::partitioner::{EpochedPartitioner, Uhp};
+use dynrepart::workload::{zipf::Zipf, Generator};
+use std::sync::Arc;
+
+const THREAD_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let n_records = if quick { 200_000 } else { 2_000_000 };
+    let n_partitions = 64;
+    let mut z = Zipf::new(200_000, 1.1, 1);
+    let records = z.batch(n_records);
+    let epoch = EpochedPartitioner::new(Arc::new(Uhp::with_seed(n_partitions, 1))).current();
+    let opts = BenchOpts {
+        budget_s: 1.0,
+        ..Default::default()
+    };
+
+    header(&format!(
+        "ShuffleStage wall clock: {n_records} records, {n_partitions} partitions"
+    ));
+    let mut base_ns = 0.0;
+    for threads in THREAD_SWEEP {
+        let cfg = EngineConfig {
+            n_partitions,
+            n_slots: 16,
+            num_threads: threads,
+            ..Default::default()
+        };
+        let stage = ShuffleStage::new(&cfg, Scheduling::Wave);
+        let m = bench_with(
+            &format!("route + keyed reduce, {threads} thread(s)"),
+            opts,
+            &mut || {
+                black_box(stage.run(&records, &epoch, None));
+            },
+        );
+        if threads == 1 {
+            base_ns = m.mean_ns;
+        }
+        println!(
+            "{}  speedup vs 1 thread: {:.2}x",
+            m.report(),
+            base_ns / m.mean_ns
+        );
+    }
+
+    header("micro-batch engine wall clock (DR on, taps + harvests sharded)");
+    for threads in THREAD_SWEEP {
+        let cfg = EngineConfig {
+            n_partitions,
+            n_slots: 16,
+            num_threads: threads,
+            ..Default::default()
+        };
+        let m = bench_with(&format!("run_batch, {threads} thread(s)"), opts, &mut || {
+            let mut e = MicroBatchEngine::new(cfg, DrConfig::default(), PartitionerChoice::Kip, 7);
+            for chunk in records.chunks(records.len().div_ceil(4)) {
+                black_box(e.run_batch(chunk));
+            }
+        });
+        println!("{}", m.report());
+    }
+
+    // Determinism spot check: sharded loads must be bitwise-identical to
+    // the sequential reference.
+    let seq_cfg = EngineConfig {
+        n_partitions,
+        n_slots: 16,
+        ..Default::default()
+    };
+    let par_cfg = EngineConfig {
+        num_threads: 8,
+        ..seq_cfg
+    };
+    let seq = ShuffleStage::new(&seq_cfg, Scheduling::Wave).run(&records, &epoch, None);
+    let par = ShuffleStage::new(&par_cfg, Scheduling::Wave).run(&records, &epoch, None);
+    assert_eq!(seq.loads, par.loads);
+    assert_eq!(seq.record_counts, par.record_counts);
+    println!("\n8-thread loads bitwise-identical to sequential: ok");
+}

@@ -31,6 +31,9 @@ pub struct JobReport {
     /// Replay pause: records already evicted with the old partitioner that
     /// had their assignments recomputed.
     pub replay_time: VTime,
+    /// Measured wall-clock seconds of the stage executor (sequential or
+    /// sharded per `num_threads`); `makespan` above is the virtual model.
+    pub wall_s: f64,
     pub replayed_records: u64,
     pub repartitioned: bool,
     pub loads: Vec<f64>,
@@ -84,11 +87,17 @@ impl BatchJob {
         let cut = ((records.len() as f64 * self.decision_at) as usize).min(records.len());
 
         // Map phase part 1: the prefix, observed by the DRWs and already
-        // evicted with the initial (epoch-0) partitioner.
-        exec::tap_records(&mut workers, &records[..cut], TapAssignment::Chunked);
+        // evicted with the initial (epoch-0) partitioner. Taps and the
+        // decision-point harvest ride the executor's sharding.
+        exec::tap_records_sharded(
+            &mut workers,
+            &records[..cut],
+            TapAssignment::Chunked,
+            self.cfg.num_threads,
+        );
 
         // DRM decision point: decision → epoch bump → replay plan.
-        let decision = exec::decision_point(&mut drm, &mut workers);
+        let decision = exec::decision_point_sharded(&mut drm, &mut workers, self.cfg.num_threads);
         let (repartitioned, replayed, replay_time) = match decision.swap {
             Some(swap) => {
                 partitioner = swap.to.clone();
@@ -107,6 +116,7 @@ impl BatchJob {
             map_time: stage.map_time,
             reduce_time: stage.reduce_time,
             replay_time,
+            wall_s: stage.wall_s,
             replayed_records: replayed,
             repartitioned,
             imbalance: stage.imbalance,
@@ -136,6 +146,7 @@ impl BatchJob {
             m.map_vtime += r.map_time;
             m.reduce_vtime += r.reduce_time;
             m.replay_vtime += r.replay_time;
+            m.wall_s += r.wall_s;
             m.repartition_count += r.repartitioned as u64;
         }
         m

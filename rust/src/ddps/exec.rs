@@ -13,8 +13,25 @@
 //! | streaming  | round-robin sources   | [`Scheduling::Pinned`] | checkpoint barrier    |
 //!
 //! [`ShuffleStage`] implements the loop once; the engines are thin drivers
-//! that sequence decision points, stages and epoch swaps. This is the
-//! single loop later PRs parallelize/shard instead of three.
+//! that sequence decision points, stages and epoch swaps. The stage
+//! executes in one of two modes, selected by
+//! [`EngineConfig::num_threads`]:
+//!
+//! | mode       | `num_threads` | execution                                             |
+//! |------------|---------------|-------------------------------------------------------|
+//! | sequential | `= 1`         | the single-threaded reference loop (default)          |
+//! | parallel   | `> 1`         | [`parallel`]: scoped workers, one contiguous partition shard each, lock-free per-shard state stores, merged in partition order |
+//!
+//! Both modes produce bitwise-identical reports; virtual time is the
+//! scheduling *model* and never depends on the thread count, while the
+//! measured [`StageReport::wall_s`] column is where real parallelism
+//! shows up. The DRW taps and histogram harvests ride the same sharding
+//! ([`tap_records_sharded`], [`decision_point_sharded`]) so the sampling
+//! path stays consistent with where records actually ran.
+
+pub mod parallel;
+
+pub use parallel::{harvest_sharded, tap_records_sharded};
 
 use super::{EngineConfig, EngineMetrics};
 use crate::dr::{DrDecision, DrMaster, DrWorker};
@@ -23,6 +40,7 @@ use crate::sketch::Histogram;
 use crate::state::StateStore;
 use crate::util::{load_imbalance, wave_makespan, VTime};
 use crate::workload::{Key, Record};
+use std::time::Instant;
 
 /// How map/source work is spread over the DRW taps.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -59,8 +77,21 @@ pub fn tap_records(workers: &mut [DrWorker], records: &[Record], assign: TapAssi
 /// master decide. Returns the decision; on a repartitioning the caller
 /// applies the epoch swap with [`apply_epoch_swap`].
 pub fn decision_point(drm: &mut DrMaster, workers: &mut [DrWorker]) -> DrDecision {
+    decision_point_sharded(drm, workers, 1)
+}
+
+/// [`decision_point`] with the DRW harvests sharded over `num_threads`
+/// scoped workers ([`parallel::harvest_sharded`]). Shards are contiguous
+/// and joined in worker order, so the DRM merges exactly the histogram
+/// sequence the sequential harvest produces and the decision is
+/// identical.
+pub fn decision_point_sharded(
+    drm: &mut DrMaster,
+    workers: &mut [DrWorker],
+    num_threads: usize,
+) -> DrDecision {
     let k = drm.histogram_size();
-    let hists: Vec<Histogram> = workers.iter_mut().map(|w| w.harvest(k)).collect();
+    let hists: Vec<Histogram> = parallel::harvest_sharded(workers, k, num_threads);
     drm.decide(hists)
 }
 
@@ -92,6 +123,11 @@ pub struct StageReport {
     /// Combined stage time: `map + reduce` for [`Scheduling::Wave`],
     /// `max(source, reduce)` for [`Scheduling::Pinned`].
     pub stage_time: VTime,
+    /// Measured wall-clock seconds this stage's executor actually took
+    /// (routing + keyed reduce). Unlike the virtual times above this is a
+    /// *measurement*, varies run to run, and is the only report field that
+    /// depends on [`EngineConfig::num_threads`].
+    pub wall_s: f64,
     pub imbalance: f64,
     /// Load of the most loaded partition relative to the mean — how hard
     /// backpressure bites in the pinned model.
@@ -113,28 +149,46 @@ impl<'a> ShuffleStage<'a> {
     /// Route `records` through `epoch`, optionally folding reducer state,
     /// and account virtual time. The spill model (`reduce_task_time`)
     /// applies under [`Scheduling::Wave`]; the pinned model is gated by
-    /// the bottleneck reducer.
+    /// the bottleneck reducer. With `cfg.num_threads > 1` the routing and
+    /// the keyed reduce run sharded on scoped workers ([`parallel`]); both
+    /// paths produce bitwise-identical loads, counts and state.
     pub fn run(
         &self,
         records: &[Record],
         epoch: &PartitionerEpoch,
         mut state: Option<&mut [StateStore]>,
     ) -> StageReport {
+        let wall_start = Instant::now();
         let n = self.cfg.n_partitions;
         debug_assert_eq!(epoch.n_partitions(), n, "epoch/config partition mismatch");
 
         // Shuffle: route by the epoch's function; gather loads and fold
         // keyed state exactly as the reducers would.
-        let mut loads = vec![0.0f64; n];
-        let mut record_counts = vec![0u64; n];
-        for r in records {
-            let p = epoch.partition(r.key);
-            loads[p] += r.weight;
-            record_counts[p] += 1;
-            if let Some(stores) = state.as_deref_mut() {
-                stores[p].fold_count(r.key, r.weight);
+        let (loads, record_counts) = if self.cfg.num_threads > 1 {
+            let routed = parallel::route(records, epoch, self.cfg.num_threads);
+            parallel::shuffle_sharded(
+                records,
+                &routed,
+                n,
+                state.as_deref_mut(),
+                self.cfg.num_threads,
+            )
+        } else {
+            let mut loads = vec![0.0f64; n];
+            let mut record_counts = vec![0u64; n];
+            for r in records {
+                let p = epoch.partition(r.key);
+                loads[p] += r.weight;
+                record_counts[p] += 1;
+                if let Some(stores) = state.as_deref_mut() {
+                    stores[p].fold_count(r.key, r.weight);
+                }
             }
-        }
+            (loads, record_counts)
+        };
+        // The executor span ends here: the virtual-time modeling below is
+        // O(n_partitions) bookkeeping, not sharded work.
+        let wall_s = wall_start.elapsed().as_secs_f64();
 
         let total_load: f64 = loads.iter().sum();
         let bottleneck = loads.iter().cloned().fold(0.0, f64::max);
@@ -167,6 +221,7 @@ impl<'a> ShuffleStage<'a> {
             map_time,
             reduce_time,
             stage_time,
+            wall_s,
         }
     }
 }
@@ -315,6 +370,74 @@ mod tests {
             tap_records(&mut workers, &recs, assign);
             let seen: u64 = workers.iter().map(|w| w.observed()).sum();
             assert_eq!(seen, 10_000, "{assign:?} dropped records");
+        }
+    }
+
+    #[test]
+    fn parallel_stage_matches_sequential_bitwise() {
+        for sched in [Scheduling::Wave, Scheduling::Pinned] {
+            let seq_cfg = cfg(9, 4);
+            let par_cfg = EngineConfig {
+                num_threads: 4,
+                ..seq_cfg
+            };
+            let ep = epoch(9, 6);
+            let mut z = Zipf::new(3_000, 1.2, 6);
+            let recs = z.batch(40_000);
+            let mut stores_seq: Vec<StateStore> = (0..9).map(|_| StateStore::new()).collect();
+            let mut stores_par: Vec<StateStore> = (0..9).map(|_| StateStore::new()).collect();
+            let rs = ShuffleStage::new(&seq_cfg, sched).run(&recs, &ep, Some(&mut stores_seq));
+            let rp = ShuffleStage::new(&par_cfg, sched).run(&recs, &ep, Some(&mut stores_par));
+            assert_eq!(rs.record_counts, rp.record_counts, "{sched:?}");
+            for (a, b) in rs.loads.iter().zip(&rp.loads) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{sched:?}: loads not bitwise-equal");
+            }
+            assert_eq!(rs.map_time.to_bits(), rp.map_time.to_bits(), "{sched:?}");
+            assert_eq!(rs.reduce_time.to_bits(), rp.reduce_time.to_bits(), "{sched:?}");
+            assert_eq!(rs.stage_time.to_bits(), rp.stage_time.to_bits(), "{sched:?}");
+            assert_eq!(rs.imbalance.to_bits(), rp.imbalance.to_bits(), "{sched:?}");
+            for (s, p) in stores_seq.iter().zip(&stores_par) {
+                assert_eq!(s.n_keys(), p.n_keys(), "{sched:?}");
+                assert_eq!(
+                    s.total_weight().to_bits(),
+                    p.total_weight().to_bits(),
+                    "{sched:?}: state weight bits differ"
+                );
+            }
+            assert!(rs.wall_s >= 0.0 && rp.wall_s >= 0.0);
+        }
+    }
+
+    #[test]
+    fn sharded_decision_point_matches_sequential() {
+        use crate::dr::{DrConfig, PartitionerChoice};
+        let make = |seed: u64| {
+            let drm = DrMaster::new(DrConfig::forced(), PartitionerChoice::Kip, 8, seed);
+            let workers: Vec<DrWorker> = (0..6)
+                .map(|w| DrWorker::new(drm.worker_capacity(), 1.0, seed ^ (w as u64) << 8))
+                .collect();
+            (drm, workers)
+        };
+        let mut z = Zipf::new(5_000, 1.3, 11);
+        let recs = z.batch(60_000);
+
+        let (mut drm_seq, mut w_seq) = make(11);
+        tap_records(&mut w_seq, &recs, TapAssignment::Chunked);
+        let d_seq = decision_point(&mut drm_seq, &mut w_seq);
+
+        let (mut drm_par, mut w_par) = make(11);
+        tap_records_sharded(&mut w_par, &recs, TapAssignment::Chunked, 3);
+        let d_par = decision_point_sharded(&mut drm_par, &mut w_par, 3);
+
+        assert_eq!(d_seq.repartitioned(), d_par.repartitioned());
+        assert_eq!(d_seq.epoch, d_par.epoch);
+        assert_eq!(d_seq.histogram.entries(), d_par.histogram.entries());
+        let (sp, pp) = (
+            d_seq.new_partitioner().expect("forced"),
+            d_par.new_partitioner().expect("forced"),
+        );
+        for k in 0..5_000u64 {
+            assert_eq!(sp.partition(k), pp.partition(k), "routing diverged at key {k}");
         }
     }
 

@@ -1,0 +1,459 @@
+//! The sharded parallel executor behind [`ShuffleStage`](super::ShuffleStage)
+//! (see DESIGN.md "The sharded parallel executor").
+//!
+//! The paper's 1.5–6× speedups come from DR flattening partition load so
+//! that *parallel* reducers finish together. The sequential path only
+//! models that with virtual time; this module runs one stage's reduce
+//! partitions on real `std::thread::scope` workers so the spill/imbalance
+//! model can be validated against actual parallel execution:
+//!
+//! - **Routing** ([`route`]): records are split into contiguous chunks,
+//!   one per thread, and each thread routes its chunk through the shared
+//!   [`PartitionerEpoch`] snapshot (epoch snapshots are `Arc`-cloneable
+//!   and every `Partitioner` is `Send + Sync`, so the snapshot is shared
+//!   by reference) while bucketing record indices by owning shard.
+//! - **Keyed reduce** ([`shuffle_sharded`]): partitions are split into
+//!   contiguous *shards*, one per thread ([`shard_ranges`]). Each shard
+//!   worker owns its partitions' loads, record counts and
+//!   [`StateStore`]s outright — keyed reduce needs no locks — and visits
+//!   only its own records ([`RoutedBatch`]'s index buckets) in input
+//!   order, so every per-partition f64 accumulation happens in exactly
+//!   the sequential order and total work stays O(records). Per-shard
+//!   results are merged in partition order. Reports are therefore
+//!   **bitwise-identical** to the sequential path, independent of the
+//!   thread count.
+//! - **DRW taps and harvests** ([`tap_records_sharded`],
+//!   [`harvest_sharded`]): the same sharding applied to the
+//!   [`DrWorker`]s, preserving each DRW's observation/harvest sequence so
+//!   sampling RNGs, counters and the DRM's histogram order advance
+//!   exactly as they do sequentially — the taps stay consistent with
+//!   where records actually ran.
+//!
+//! Engines opt in through
+//! [`EngineConfig::num_threads`](super::EngineConfig::num_threads); the
+//! default of 1 keeps today's sequential loop. Because results are
+//! invariant, the only observable difference is the measured
+//! [`StageReport::wall_s`](super::StageReport::wall_s) column:
+//!
+//! ```
+//! use dynrepart::ddps::{EngineConfig, Scheduling, ShuffleStage};
+//! use dynrepart::partitioner::{EpochedPartitioner, Uhp};
+//! use dynrepart::workload::Record;
+//! use std::sync::Arc;
+//!
+//! let par = EngineConfig { n_partitions: 8, n_slots: 4, num_threads: 4, ..Default::default() };
+//! let seq = EngineConfig { num_threads: 1, ..par };
+//! let epoch = EpochedPartitioner::new(Arc::new(Uhp::with_seed(8, 1))).current();
+//! let records: Vec<Record> = (0u64..10_000).map(|k| Record::unit(k % 257, k)).collect();
+//!
+//! let p = ShuffleStage::new(&par, Scheduling::Wave).run(&records, &epoch, None);
+//! let s = ShuffleStage::new(&seq, Scheduling::Wave).run(&records, &epoch, None);
+//! assert_eq!(p.loads, s.loads); // bitwise-identical routing
+//! assert_eq!(p.stage_time, s.stage_time); // identical virtual time
+//! ```
+
+use super::TapAssignment;
+use crate::dr::DrWorker;
+use crate::partitioner::PartitionerEpoch;
+use crate::sketch::Histogram;
+use crate::state::StateStore;
+use crate::workload::Record;
+use std::ops::Range;
+use std::thread;
+
+/// The shard width [`shard_ranges`] cuts `0..n` into: every sharded step
+/// of one stage derives its `chunks_mut` decomposition from this same
+/// number, so all of them agree on who owns which index.
+fn shard_chunk(n: usize, shards: usize) -> usize {
+    n.div_ceil(shards.max(1)).max(1)
+}
+
+/// Split `0..n` into at most `shards` contiguous, equal-as-possible,
+/// non-empty ranges (fewer when `n < shards`). The ranges line up exactly
+/// with `slice.chunks_mut(shard_chunk(n, shards))` over a slice of
+/// length `n`.
+pub fn shard_ranges(n: usize, shards: usize) -> Vec<Range<usize>> {
+    let chunk = shard_chunk(n, shards);
+    (0..n)
+        .step_by(chunk)
+        .map(|start| start..(start + chunk).min(n))
+        .collect()
+}
+
+/// One routed batch: the partition index per record (input order) plus,
+/// for each partition shard, the indices of the records it owns — also in
+/// input order, so shard workers can replay exactly the sequential
+/// accumulation order while touching only their own records.
+pub struct RoutedBatch {
+    /// Partition index per record, in input order.
+    pub routes: Vec<u32>,
+    /// Record indices owned by each shard (shards as per [`shard_ranges`]
+    /// over `(epoch.n_partitions(), num_threads)`), each in input order.
+    pub shard_indices: Vec<Vec<u32>>,
+}
+
+/// Route every record through `epoch` on `num_threads` scoped workers.
+/// One contiguous record chunk per thread; each thread also buckets its
+/// chunk's record indices by owning shard, and the per-chunk buckets are
+/// concatenated in chunk order — so every shard's index list is in input
+/// order and the result is identical to the sequential map (routing is
+/// pure).
+pub fn route(records: &[Record], epoch: &PartitionerEpoch, num_threads: usize) -> RoutedBatch {
+    debug_assert!(records.len() <= u32::MAX as usize);
+    let n_partitions = epoch.n_partitions();
+    let n_shards = shard_ranges(n_partitions, num_threads).len();
+    let part_chunk = shard_chunk(n_partitions, num_threads);
+    let mut routes = vec![0u32; records.len()];
+
+    if num_threads <= 1 || records.len() <= 1 {
+        let mut shard_indices: Vec<Vec<u32>> = vec![Vec::new(); n_shards];
+        for (i, r) in records.iter().enumerate() {
+            let p = epoch.partition(r.key);
+            routes[i] = p as u32;
+            shard_indices[p / part_chunk].push(i as u32);
+        }
+        return RoutedBatch {
+            routes,
+            shard_indices,
+        };
+    }
+
+    let chunk = shard_chunk(records.len(), num_threads);
+    let mut chunk_buckets: Vec<Vec<Vec<u32>>> = Vec::new();
+    thread::scope(|s| {
+        let handles: Vec<_> = records
+            .chunks(chunk)
+            .zip(routes.chunks_mut(chunk))
+            .enumerate()
+            .map(|(ci, (rec, out))| {
+                s.spawn(move || {
+                    let base = ci * chunk;
+                    let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); n_shards];
+                    for (j, (r, o)) in rec.iter().zip(out.iter_mut()).enumerate() {
+                        let p = epoch.partition(r.key);
+                        *o = p as u32;
+                        buckets[p / part_chunk].push((base + j) as u32);
+                    }
+                    buckets
+                })
+            })
+            .collect();
+        chunk_buckets = handles
+            .into_iter()
+            .map(|h| h.join().expect("route worker panicked"))
+            .collect();
+    });
+
+    // Concatenate per-chunk buckets in chunk order: input order per shard.
+    let mut shard_indices: Vec<Vec<u32>> = vec![Vec::new(); n_shards];
+    for buckets in chunk_buckets {
+        for (shard, mut bucket) in buckets.into_iter().enumerate() {
+            shard_indices[shard].append(&mut bucket);
+        }
+    }
+    RoutedBatch {
+        routes,
+        shard_indices,
+    }
+}
+
+/// What one shard worker hands back: its partitions' loads and record
+/// counts, indexed relative to the shard's range start.
+struct ShardAccum {
+    loads: Vec<f64>,
+    record_counts: Vec<u64>,
+}
+
+/// The sharded keyed reduce: accumulate a routed batch into per-partition
+/// loads, record counts and (optionally) keyed state, with one scoped
+/// worker per partition shard. Each worker owns a disjoint `&mut` slice
+/// of the stores (no locks) and visits *only its own records* (the
+/// [`RoutedBatch`] index buckets) in input order, so per-partition
+/// accumulation order — and hence every f64 sum and every `StateStore`'s
+/// insertion sequence — matches the sequential loop exactly, while total
+/// work stays O(records). Shard results are merged in partition order.
+///
+/// `num_threads` must equal the value `routed` was built with (the shard
+/// decomposition is a pure function of `(n_partitions, num_threads)`).
+pub fn shuffle_sharded(
+    records: &[Record],
+    routed: &RoutedBatch,
+    n_partitions: usize,
+    state: Option<&mut [StateStore]>,
+    num_threads: usize,
+) -> (Vec<f64>, Vec<u64>) {
+    debug_assert_eq!(records.len(), routed.routes.len());
+    let ranges = shard_ranges(n_partitions, num_threads);
+    debug_assert_eq!(ranges.len(), routed.shard_indices.len());
+    let chunk = shard_chunk(n_partitions, num_threads);
+    let store_shards: Vec<Option<&mut [StateStore]>> = match state {
+        Some(stores) => {
+            debug_assert_eq!(stores.len(), n_partitions);
+            stores.chunks_mut(chunk).map(Some).collect()
+        }
+        None => ranges.iter().map(|_| None).collect(),
+    };
+
+    let mut loads = vec![0.0f64; n_partitions];
+    let mut record_counts = vec![0u64; n_partitions];
+    thread::scope(|s| {
+        let handles: Vec<_> = ranges
+            .iter()
+            .cloned()
+            .zip(&routed.shard_indices)
+            .zip(store_shards)
+            .map(|((range, indices), stores)| {
+                s.spawn(move || {
+                    let mut stores = stores;
+                    let base = range.start;
+                    let mut acc = ShardAccum {
+                        loads: vec![0.0; range.len()],
+                        record_counts: vec![0; range.len()],
+                    };
+                    for &i in indices {
+                        let r = &records[i as usize];
+                        let p = routed.routes[i as usize] as usize;
+                        acc.loads[p - base] += r.weight;
+                        acc.record_counts[p - base] += 1;
+                        if let Some(st) = stores.as_deref_mut() {
+                            st[p - base].fold_count(r.key, r.weight);
+                        }
+                    }
+                    acc
+                })
+            })
+            .collect();
+        // Deterministic merge: join shards in partition order.
+        for (range, h) in ranges.iter().zip(handles) {
+            let acc = h.join().expect("shard worker panicked");
+            loads[range.clone()].copy_from_slice(&acc.loads);
+            record_counts[range.clone()].copy_from_slice(&acc.record_counts);
+        }
+    });
+    (loads, record_counts)
+}
+
+/// [`tap_records`](super::tap_records) with the DRWs sharded over
+/// `num_threads` scoped workers (`<= 1` falls back to the sequential tap).
+/// Each worker owns a contiguous `&mut` slice of DRWs and replays exactly
+/// the observation subsequence the sequential tap would feed them, so
+/// sampling RNGs and counters advance identically.
+pub fn tap_records_sharded(
+    workers: &mut [DrWorker],
+    records: &[Record],
+    assign: TapAssignment,
+    num_threads: usize,
+) {
+    if num_threads <= 1 || workers.len() <= 1 {
+        super::tap_records(workers, records, assign);
+        return;
+    }
+    let n_workers = workers.len();
+    let per = records.len().div_ceil(n_workers).max(1);
+    let ranges = shard_ranges(n_workers, num_threads);
+    let chunk = shard_chunk(n_workers, num_threads);
+    thread::scope(|s| {
+        for (range, shard) in ranges.iter().cloned().zip(workers.chunks_mut(chunk)) {
+            s.spawn(move || match assign {
+                TapAssignment::Chunked => {
+                    for (local, w) in range.clone().enumerate() {
+                        let start = (w * per).min(records.len());
+                        let end = ((w + 1) * per).min(records.len());
+                        for r in &records[start..end] {
+                            shard[local].observe(r.key, r.weight);
+                        }
+                    }
+                }
+                TapAssignment::RoundRobin => {
+                    // Worker w owns records w, w + n, w + 2n, … — walk each
+                    // owned DRW's stride directly (no full-batch scan). The
+                    // sequential tap interleaves workers per record, but
+                    // per-DRW the observation order is this same ascending
+                    // stride, and DRWs share no state across workers.
+                    for (local, w) in range.clone().enumerate() {
+                        for i in (w..records.len()).step_by(n_workers) {
+                            let r = &records[i];
+                            shard[local].observe(r.key, r.weight);
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// Harvest every DRW's local histogram with the DRWs sharded over
+/// `num_threads` scoped workers. Shards are contiguous and joined in
+/// order, so the DRM receives histograms in exactly the worker order the
+/// sequential harvest produces.
+pub fn harvest_sharded(
+    workers: &mut [DrWorker],
+    top_k: usize,
+    num_threads: usize,
+) -> Vec<Histogram> {
+    if num_threads <= 1 || workers.len() <= 1 {
+        return workers.iter_mut().map(|w| w.harvest(top_k)).collect();
+    }
+    let chunk = shard_chunk(workers.len(), num_threads);
+    thread::scope(|s| {
+        let handles: Vec<_> = workers
+            .chunks_mut(chunk)
+            .map(|shard| {
+                s.spawn(move || shard.iter_mut().map(|w| w.harvest(top_k)).collect::<Vec<_>>())
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("harvest worker panicked"))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partitioner::{EpochedPartitioner, Uhp};
+    use crate::workload::{zipf::Zipf, Generator};
+    use std::sync::Arc;
+
+    fn epoch(n: usize, seed: u64) -> PartitionerEpoch {
+        EpochedPartitioner::new(Arc::new(Uhp::with_seed(n, seed))).current()
+    }
+
+    #[test]
+    fn shard_ranges_cover_exactly() {
+        for (n, shards) in [(1, 1), (7, 3), (8, 4), (16, 5), (3, 8), (64, 8), (0, 4)] {
+            let ranges = shard_ranges(n, shards);
+            assert!(ranges.len() <= shards.max(1), "n={n} shards={shards}");
+            let mut next = 0;
+            for r in &ranges {
+                assert_eq!(r.start, next, "gap at n={n} shards={shards}");
+                assert!(r.end > r.start, "empty shard at n={n} shards={shards}");
+                next = r.end;
+            }
+            assert_eq!(next, n, "n={n} shards={shards} not covered");
+            // ranges line up with chunks_mut over a slice of length n
+            let mut v = vec![0u8; n];
+            let pieces: Vec<usize> =
+                v.chunks_mut(shard_chunk(n, shards)).map(|c| c.len()).collect();
+            assert_eq!(pieces.len(), ranges.len(), "n={n} shards={shards}");
+            for (p, r) in pieces.iter().zip(&ranges) {
+                assert_eq!(*p, r.len(), "n={n} shards={shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn route_matches_sequential_and_buckets_cover() {
+        let ep = epoch(13, 7);
+        let mut z = Zipf::new(5_000, 1.1, 7);
+        let recs = z.batch(20_011); // odd count: uneven last chunk
+        let seq = route(&recs, &ep, 1);
+        assert_eq!(seq.routes.len(), recs.len());
+        for threads in [2, 3, 8] {
+            let par = route(&recs, &ep, threads);
+            assert_eq!(par.routes, seq.routes, "{threads} threads");
+            // buckets: every record exactly once, in its shard, in order
+            let ranges = shard_ranges(13, threads);
+            assert_eq!(par.shard_indices.len(), ranges.len());
+            let mut seen = 0usize;
+            for (range, indices) in ranges.iter().zip(&par.shard_indices) {
+                for w in indices.windows(2) {
+                    assert!(w[0] < w[1], "{threads} threads: bucket not in input order");
+                }
+                for &i in indices {
+                    let p = par.routes[i as usize] as usize;
+                    assert!(range.contains(&p), "{threads} threads: record in wrong shard");
+                }
+                seen += indices.len();
+            }
+            assert_eq!(seen, recs.len(), "{threads} threads: buckets must cover the batch");
+        }
+    }
+
+    #[test]
+    fn shuffle_sharded_matches_sequential_bitwise() {
+        let n = 11;
+        let ep = epoch(n, 3);
+        let mut z = Zipf::new(2_000, 1.3, 3);
+        let recs = z.batch(30_000);
+
+        // sequential reference (the exact ShuffleStage loop)
+        let mut loads_seq = vec![0.0f64; n];
+        let mut counts_seq = vec![0u64; n];
+        let mut stores_seq: Vec<StateStore> = (0..n).map(|_| StateStore::new()).collect();
+        for r in &recs {
+            let p = ep.partition(r.key);
+            loads_seq[p] += r.weight;
+            counts_seq[p] += 1;
+            stores_seq[p].fold_count(r.key, r.weight);
+        }
+
+        for threads in [2, 4, 7] {
+            let routed = route(&recs, &ep, threads);
+            let mut stores: Vec<StateStore> = (0..n).map(|_| StateStore::new()).collect();
+            let (loads, counts) =
+                shuffle_sharded(&recs, &routed, n, Some(stores.as_mut_slice()), threads);
+            assert_eq!(counts, counts_seq, "{threads} threads");
+            for (a, b) in loads.iter().zip(&loads_seq) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{threads} threads: load bits differ");
+            }
+            for (s, r) in stores.iter().zip(&stores_seq) {
+                assert_eq!(s.n_keys(), r.n_keys());
+                assert_eq!(
+                    s.total_weight().to_bits(),
+                    r.total_weight().to_bits(),
+                    "{threads} threads: state weight bits differ"
+                );
+                for k in r.keys() {
+                    assert_eq!(s.get(k), r.get(k), "{threads} threads: key {k} state differs");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_tap_matches_sequential() {
+        for assign in [TapAssignment::Chunked, TapAssignment::RoundRobin] {
+            let mut z = Zipf::new(1_000, 1.0, 9);
+            let recs = z.batch(10_007);
+            let make = || -> Vec<DrWorker> {
+                (0..5).map(|w| DrWorker::new(64, 0.5, w as u64)).collect()
+            };
+            for threads in [2, 3, 8] {
+                let mut seq = make();
+                super::super::tap_records(&mut seq, &recs, assign);
+                let mut par = make();
+                tap_records_sharded(&mut par, &recs, assign, threads);
+                for (a, b) in par.iter().zip(&seq) {
+                    assert_eq!(a.observed(), b.observed(), "{assign:?} {threads}");
+                    assert_eq!(a.sampled(), b.sampled(), "{assign:?} {threads}");
+                }
+                // harvests (which drain the counters) must agree too
+                let hp: Vec<Histogram> = harvest_sharded(&mut par, 8, threads);
+                let hs: Vec<Histogram> = seq.iter_mut().map(|w| w.harvest(8)).collect();
+                assert_eq!(hp.len(), hs.len());
+                for (x, y) in hp.iter().zip(&hs) {
+                    assert_eq!(x.entries(), y.entries(), "{assign:?} {threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs_are_safe() {
+        let ep = epoch(4, 1);
+        let empty = route(&[], &ep, 4);
+        assert!(empty.routes.is_empty());
+        assert!(empty.shard_indices.iter().all(|b| b.is_empty()));
+        let (loads, counts) = shuffle_sharded(&[], &empty, 4, None, 4);
+        assert_eq!(loads, vec![0.0; 4]);
+        assert_eq!(counts, vec![0; 4]);
+        // more threads than partitions/records
+        let recs = vec![Record::unit(1, 0), Record::unit(2, 1)];
+        let routed = route(&recs, &ep, 16);
+        let (loads, counts) = shuffle_sharded(&recs, &routed, 4, None, 16);
+        assert_eq!(counts.iter().sum::<u64>(), 2);
+        assert!((loads.iter().sum::<f64>() - 2.0).abs() < 1e-12);
+    }
+}

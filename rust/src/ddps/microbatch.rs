@@ -28,6 +28,9 @@ pub struct BatchReport {
     pub map_time: VTime,
     pub reduce_time: VTime,
     pub migration_time: VTime,
+    /// Measured wall-clock seconds of the stage executor (sequential or
+    /// sharded per `num_threads`); `makespan` above is the virtual model.
+    pub wall_s: f64,
     /// Reduce-side weight per partition.
     pub loads: Vec<f64>,
     pub imbalance: f64,
@@ -93,7 +96,8 @@ impl MicroBatchEngine {
     /// The DRM decision point at a micro-batch boundary. Returns the
     /// migration pause time and migrated state fraction.
     fn decision_point(&mut self) -> (VTime, f64, bool) {
-        let decision = exec::decision_point(&mut self.drm, &mut self.workers);
+        let decision =
+            exec::decision_point_sharded(&mut self.drm, &mut self.workers, self.cfg.num_threads);
         let Some(swap) = decision.swap else {
             return (0.0, 0.0, false);
         };
@@ -119,8 +123,13 @@ impl MicroBatchEngine {
         let (migration_time, migrated_fraction, repartitioned) = self.decision_point();
 
         // 2. map-tap: records split evenly over slots; the DRW tap runs on
-        //    the map path.
-        exec::tap_records(&mut self.workers, records, TapAssignment::Chunked);
+        //    the map path and rides the executor's sharding.
+        exec::tap_records_sharded(
+            &mut self.workers,
+            records,
+            TapAssignment::Chunked,
+            self.cfg.num_threads,
+        );
 
         // 3. the shared stage: shuffle by the current epoch, wave-scheduled
         //    keyed reduce (spill model applies), state folded per partition.
@@ -136,6 +145,7 @@ impl MicroBatchEngine {
         self.metrics.map_vtime += stage.map_time;
         self.metrics.reduce_vtime += stage.reduce_time;
         self.metrics.migration_vtime += migration_time;
+        self.metrics.wall_s += stage.wall_s;
 
         BatchReport {
             batch_no: self.batch_no,
@@ -143,6 +153,7 @@ impl MicroBatchEngine {
             map_time: stage.map_time,
             reduce_time: stage.reduce_time,
             migration_time,
+            wall_s: stage.wall_s,
             imbalance: stage.imbalance,
             loads: stage.loads,
             migrated_fraction,
@@ -172,7 +183,8 @@ mod tests {
 
     #[test]
     fn first_batch_never_repartitions() {
-        let mut e = MicroBatchEngine::new(cfg(8, 4), DrConfig::default(), PartitionerChoice::Kip, 1);
+        let mut e =
+            MicroBatchEngine::new(cfg(8, 4), DrConfig::default(), PartitionerChoice::Kip, 1);
         let mut z = Zipf::new(10_000, 1.2, 1);
         let r = e.run_batch(&z.batch(50_000));
         assert!(!r.repartitioned, "no histogram exists before batch 1");
@@ -183,7 +195,8 @@ mod tests {
 
     #[test]
     fn skewed_stream_repartitions_and_improves() {
-        let mut e = MicroBatchEngine::new(cfg(8, 8), DrConfig::default(), PartitionerChoice::Kip, 2);
+        let mut e =
+            MicroBatchEngine::new(cfg(8, 8), DrConfig::default(), PartitionerChoice::Kip, 2);
         let mut z = Zipf::new(50_000, 1.4, 2);
         let r1 = e.run_batch(&z.batch(100_000));
         let r2 = e.run_batch(&z.batch(100_000));
@@ -198,7 +211,8 @@ mod tests {
 
     #[test]
     fn dr_off_is_stable_hash() {
-        let mut e = MicroBatchEngine::new(cfg(8, 4), DrConfig::disabled(), PartitionerChoice::Uhp, 3);
+        let mut e =
+            MicroBatchEngine::new(cfg(8, 4), DrConfig::disabled(), PartitionerChoice::Uhp, 3);
         let mut z = Zipf::new(50_000, 1.4, 3);
         let r1 = e.run_batch(&z.batch(50_000));
         let r2 = e.run_batch(&z.batch(50_000));
@@ -227,7 +241,8 @@ mod tests {
 
     #[test]
     fn loads_sum_to_batch_weight() {
-        let mut e = MicroBatchEngine::new(cfg(8, 4), DrConfig::default(), PartitionerChoice::Kip, 5);
+        let mut e =
+            MicroBatchEngine::new(cfg(8, 4), DrConfig::default(), PartitionerChoice::Kip, 5);
         let mut z = Zipf::new(10_000, 1.0, 5);
         let batch = z.batch(20_000);
         let w: f64 = batch.iter().map(|r| r.weight).sum();
@@ -248,8 +263,10 @@ mod tests {
 
     #[test]
     fn more_slots_shorter_batches() {
-        let mut slow = MicroBatchEngine::new(cfg(16, 2), DrConfig::disabled(), PartitionerChoice::Uhp, 7);
-        let mut fast = MicroBatchEngine::new(cfg(16, 16), DrConfig::disabled(), PartitionerChoice::Uhp, 7);
+        let mut slow =
+            MicroBatchEngine::new(cfg(16, 2), DrConfig::disabled(), PartitionerChoice::Uhp, 7);
+        let mut fast =
+            MicroBatchEngine::new(cfg(16, 16), DrConfig::disabled(), PartitionerChoice::Uhp, 7);
         let mut z = Zipf::new(10_000, 1.0, 7);
         let batch = z.batch(100_000);
         let t_slow = slow.run_batch(&batch).makespan;

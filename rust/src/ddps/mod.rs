@@ -18,7 +18,10 @@
 //! implementation of the map-tap → shuffle → keyed-reduce → spill-cost
 //! loop — and swap partitioners exclusively through versioned
 //! [`PartitionerEpoch`](crate::partitioner::PartitionerEpoch)s whose
-//! migration plans derive from the epoch diff.
+//! migration plans derive from the epoch diff. The core runs either
+//! sequentially ([`EngineConfig::num_threads`] = 1) or sharded over scoped
+//! OS threads ([`exec::parallel`], `num_threads` > 1) with
+//! bitwise-identical reports.
 
 pub mod batch;
 pub mod exec;
@@ -27,8 +30,8 @@ pub mod streaming;
 
 pub use batch::{BatchJob, JobReport};
 pub use exec::{
-    adopt_swap, apply_epoch_swap, decision_point, tap_records, MigrationReport, Scheduling,
-    ShuffleStage, StageReport, TapAssignment,
+    adopt_swap, apply_epoch_swap, decision_point, decision_point_sharded, tap_records,
+    tap_records_sharded, MigrationReport, Scheduling, ShuffleStage, StageReport, TapAssignment,
 };
 pub use microbatch::{BatchReport, MicroBatchEngine};
 pub use streaming::{IntervalReport, StreamingEngine};
@@ -67,6 +70,14 @@ pub struct EngineConfig {
     /// why DR's flattening pays more than linearly (Fig 4/5/7/8).
     pub spill_threshold_factor: f64,
     pub spill_penalty: f64,
+    /// OS threads the [`exec::ShuffleStage`] executor shards its reduce
+    /// partitions (and the DRW taps / histogram harvests) over. `1` — the
+    /// default — is the sequential reference path; `> 1` runs the stage on
+    /// `std::thread::scope` workers, one contiguous partition shard per
+    /// worker, and produces bitwise-identical reports (see
+    /// [`exec::parallel`]). Virtual-time results never depend on this
+    /// knob — only the measured `wall_s` columns do.
+    pub num_threads: usize,
 }
 
 impl Default for EngineConfig {
@@ -82,6 +93,7 @@ impl Default for EngineConfig {
             replay_cost: 0.2e-6,
             spill_threshold_factor: 1.5,
             spill_penalty: 2.5,
+            num_threads: 1,
         }
     }
 }
@@ -90,8 +102,30 @@ impl EngineConfig {
     pub fn validate(&self) {
         assert!(self.n_partitions > 0, "need partitions");
         assert!(self.n_slots > 0, "need slots");
+        assert!(self.num_threads > 0, "need at least one executor thread");
         assert!(self.map_cost >= 0.0 && self.reduce_cost >= 0.0);
         assert!(self.spill_threshold_factor > 0.0 && self.spill_penalty >= 1.0);
+    }
+
+    /// Executor thread count requested via the `DYNREPART_THREADS`
+    /// environment variable; 1 (the sequential path) when unset, zero or
+    /// unparsable. The e2e tests and the figure drivers build their
+    /// configs through [`EngineConfig::from_env`] so CI can run the whole
+    /// tier-1 suite against the sharded executor.
+    pub fn threads_from_env() -> usize {
+        std::env::var("DYNREPART_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&t| t >= 1)
+            .unwrap_or(1)
+    }
+
+    /// [`Default`], with `num_threads` taken from `DYNREPART_THREADS`.
+    pub fn from_env() -> Self {
+        Self {
+            num_threads: Self::threads_from_env(),
+            ..Default::default()
+        }
     }
 
     /// Reduce-task virtual time for a partition of `load` within a batch of
@@ -137,6 +171,24 @@ mod tests {
         let t32 = cfg.reduce_task_time(400.0, 800.0);
         assert!(t32 > t8, "smaller budget per slot spills more: {t32} vs {t8}");
     }
+
+    #[test]
+    fn default_is_sequential_and_env_threads_sane() {
+        assert_eq!(EngineConfig::default().num_threads, 1);
+        // unset/garbage env must degrade to the sequential path
+        assert!(EngineConfig::threads_from_env() >= 1);
+        assert!(EngineConfig::from_env().num_threads >= 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_threads_rejected() {
+        EngineConfig {
+            num_threads: 0,
+            ..Default::default()
+        }
+        .validate();
+    }
 }
 
 /// Cumulative engine metrics across batches/intervals.
@@ -148,6 +200,10 @@ pub struct EngineMetrics {
     pub reduce_vtime: VTime,
     pub migration_vtime: VTime,
     pub replay_vtime: VTime,
+    /// Measured wall-clock seconds spent inside [`exec::ShuffleStage`]
+    /// runs. Virtual times above are the scheduling *model*; this is where
+    /// the real (possibly sharded, `num_threads > 1`) executor shows up.
+    pub wall_s: f64,
     pub state_weight_migrated: f64,
     pub repartition_count: u64,
 }

@@ -27,6 +27,9 @@ pub struct IntervalReport {
     pub interval_no: u64,
     /// Virtual time this checkpoint interval took to process.
     pub elapsed: VTime,
+    /// Measured wall-clock seconds of the stage executor (sequential or
+    /// sharded per `num_threads`); `elapsed` above is the virtual model.
+    pub wall_s: f64,
     /// Records per virtual second in this interval.
     pub throughput: f64,
     pub imbalance: f64,
@@ -122,8 +125,14 @@ impl StreamingEngine {
         self.interval_no += 1;
         let n = self.cfg.n_partitions;
 
-        // Sources tap the stream (round-robin source assignment).
-        exec::tap_records(&mut self.workers, records, TapAssignment::RoundRobin);
+        // Sources tap the stream (round-robin source assignment), sharded
+        // with the executor.
+        exec::tap_records_sharded(
+            &mut self.workers,
+            records,
+            TapAssignment::RoundRobin,
+            self.cfg.num_threads,
+        );
 
         // Key-grouped routing to the pinned reducers through the shared
         // stage: backpressure model — all channels drain at the pace of
@@ -143,7 +152,8 @@ impl StreamingEngine {
 
         // Barrier: DRM decision; an accepted decision bumps the epoch and
         // the swap's derived plan migrates operator state explicitly.
-        let decision = exec::decision_point(&mut self.drm, &mut self.workers);
+        let decision =
+            exec::decision_point_sharded(&mut self.drm, &mut self.workers, self.cfg.num_threads);
         let (mut migration_pause, mut migrated_fraction, mut repartitioned) = (0.0, 0.0, false);
         if let Some(swap) = decision.swap {
             let mig = exec::adopt_swap(
@@ -164,10 +174,12 @@ impl StreamingEngine {
         self.metrics.total_vtime += elapsed;
         self.metrics.reduce_vtime += stage.reduce_time;
         self.metrics.migration_vtime += migration_pause;
+        self.metrics.wall_s += stage.wall_s;
 
         IntervalReport {
             interval_no: self.interval_no,
             elapsed,
+            wall_s: stage.wall_s,
             throughput: if elapsed > 0.0 {
                 records.len() as f64 / elapsed
             } else {
@@ -242,8 +254,10 @@ mod tests {
 
     #[test]
     fn backpressure_ratio_tracks_skew() {
-        let mut skewed = StreamingEngine::new(cfg(8), DrConfig::disabled(), PartitionerChoice::Uhp, 4);
-        let mut uniform = StreamingEngine::new(cfg(8), DrConfig::disabled(), PartitionerChoice::Uhp, 4);
+        let mut skewed =
+            StreamingEngine::new(cfg(8), DrConfig::disabled(), PartitionerChoice::Uhp, 4);
+        let mut uniform =
+            StreamingEngine::new(cfg(8), DrConfig::disabled(), PartitionerChoice::Uhp, 4);
         let mut zs = Zipf::new(50_000, 1.8, 4);
         let mut zu = Zipf::new(50_000, 0.0, 5);
         let rs = skewed.run_interval(&zs.batch(50_000));

@@ -140,7 +140,9 @@ impl DrMaster {
             ..Default::default()
         };
         let current = match choice {
-            PartitionerChoice::Kip => DynPartitioner::Kip(Kip::initial(n_partitions, kip_cfg, seed)),
+            PartitionerChoice::Kip => {
+                DynPartitioner::Kip(Kip::initial(n_partitions, kip_cfg, seed))
+            }
             PartitionerChoice::Gedik(s) => DynPartitioner::Gedik(GedikPartitioner::initial(
                 s,
                 n_partitions,

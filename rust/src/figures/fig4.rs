@@ -33,7 +33,8 @@ fn engine_config() -> EngineConfig {
     EngineConfig {
         n_partitions: setup::SPARK_PARTITIONS,
         n_slots: setup::SPARK_SLOTS,
-        ..Default::default()
+        // executor threads from DYNREPART_THREADS (1 = sequential)
+        ..EngineConfig::from_env()
     }
 }
 

@@ -31,7 +31,8 @@ pub fn run_point(n_partitions: usize, scale: f64, with_dr: bool) -> (f64, f64) {
     let cfg = EngineConfig {
         n_partitions,
         n_slots: setup::SPARK_SLOTS,
-        ..Default::default()
+        // executor threads from DYNREPART_THREADS (1 = sequential)
+        ..EngineConfig::from_env()
     };
     let (dr, choice) = if with_dr {
         (DrConfig::default(), PartitionerChoice::Kip)

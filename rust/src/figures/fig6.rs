@@ -20,7 +20,8 @@ fn engine(parallelism: usize, with_dr: bool, seed: u64) -> StreamingEngine {
         n_partitions: parallelism,
         n_slots: parallelism,
         task_overhead: 0.0,
-        ..Default::default()
+        // executor threads from DYNREPART_THREADS (1 = sequential)
+        ..EngineConfig::from_env()
     };
     let (dr, choice) = if with_dr {
         (DrConfig::default(), PartitionerChoice::Kip)

@@ -18,7 +18,8 @@ pub fn engine_config(n_partitions: usize) -> EngineConfig {
         n_slots: EXECUTORS * CORES,
         // page parsing dominates: heavier reduce cost per weight unit
         reduce_cost: 50e-6,
-        ..Default::default()
+        // executor threads from DYNREPART_THREADS (1 = sequential)
+        ..EngineConfig::from_env()
     }
 }
 

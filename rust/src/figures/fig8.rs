@@ -86,7 +86,8 @@ pub fn right(scale: f64, reduce_cost: f64) -> Table {
             // Spark Streaming reuses executors across micro-batches:
             // per-task overhead is small next to the NLP compute
             task_overhead: 5e-3,
-            ..Default::default()
+            // executor threads from DYNREPART_THREADS (1 = sequential)
+            ..EngineConfig::from_env()
         };
         let records = ner_records(n_records, 77);
         let run = |with_dr: bool| -> f64 {
@@ -125,7 +126,8 @@ pub fn ner_batch_speedup(scale: f64, reduce_cost: f64) -> (f64, f64, f64) {
         n_partitions: NER_EXECUTORS * NER_CORES,
         n_slots: NER_EXECUTORS * NER_CORES,
         reduce_cost,
-        ..Default::default()
+        // executor threads from DYNREPART_THREADS (1 = sequential)
+        ..EngineConfig::from_env()
     };
     let records = ner_records(n_records, 78);
     let job = BatchJob::new(cfg, DrConfig::default(), PartitionerChoice::Kip, 78);

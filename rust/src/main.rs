@@ -78,10 +78,15 @@ fn main() {
             let cfg = dynrepart::ddps::EngineConfig {
                 n_partitions: 35,
                 n_slots: 40,
-                ..Default::default()
+                // executor threads from DYNREPART_THREADS (1 = sequential)
+                ..dynrepart::ddps::EngineConfig::from_env()
             };
             for (label, dr, choice) in [
-                ("hash", dynrepart::dr::DrConfig::disabled(), dynrepart::dr::PartitionerChoice::Uhp),
+                (
+                    "hash",
+                    dynrepart::dr::DrConfig::disabled(),
+                    dynrepart::dr::PartitionerChoice::Uhp,
+                ),
                 ("DR", dynrepart::dr::DrConfig::default(), dynrepart::dr::PartitionerChoice::Kip),
             ] {
                 let mut engine = dynrepart::ddps::MicroBatchEngine::new(cfg, dr, choice, 1);

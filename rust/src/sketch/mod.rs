@@ -42,7 +42,9 @@ mod merge_tests {
         a.merge_from(&b);
         sa.merge_from(&sb);
         la.merge_from(&lb);
-        for (name, total) in [("counter", a.total()), ("spacesaving", sa.total()), ("lossy", la.total())] {
+        for (name, total) in
+            [("counter", a.total()), ("spacesaving", sa.total()), ("lossy", la.total())]
+        {
             assert!((total - 3000.0).abs() < 1e-9, "{name}: total {total}");
         }
     }

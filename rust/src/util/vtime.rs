@@ -1,11 +1,14 @@
 //! Virtual time for the DDPS executor model.
 //!
-//! The paper's processing-time figures were taken on 4–15-node clusters.
-//! This image has a single physical core, so parallel wall-clock speedup is
-//! physically impossible; instead the engines account *virtual* time per
+//! The paper's processing-time figures were taken on 4–15-node clusters
+//! we cannot reproduce here, so the engines account *virtual* time per
 //! executor slot, discrete-event style (see DESIGN.md "Substitutions").
 //! Per-record costs are calibrated from real PJRT kernel timings, so the
-//! virtual timeline is anchored to measured compute.
+//! virtual timeline is anchored to measured compute. Virtual time is the
+//! scheduling *model* and is bitwise-identical at any
+//! `EngineConfig::num_threads`; the sharded executor
+//! (`ddps::exec::parallel`) additionally reports measured wall clock in
+//! the `wall_s` report fields — that is where real parallelism shows up.
 
 /// Virtual seconds.
 pub type VTime = f64;

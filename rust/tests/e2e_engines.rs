@@ -7,11 +7,14 @@ use dynrepart::partitioner::GedikStrategy;
 use dynrepart::sketch::Histogram;
 use dynrepart::workload::{lfm::Lfm, zipf::Zipf, Generator};
 
+// `num_threads` comes from DYNREPART_THREADS (default 1), so the CI matrix
+// leg can run this whole suite against the sharded parallel executor —
+// every assertion below must hold identically at any thread count.
 fn cfg(n_partitions: usize, n_slots: usize) -> EngineConfig {
     EngineConfig {
         n_partitions,
         n_slots,
-        ..Default::default()
+        ..EngineConfig::from_env()
     }
 }
 
@@ -49,7 +52,7 @@ fn streaming_long_run_with_drift_stays_consistent() {
         n_partitions: 12,
         n_slots: 12,
         task_overhead: 0.0,
-        ..Default::default()
+        ..EngineConfig::from_env()
     };
     let mut e = StreamingEngine::new(scfg, DrConfig::default(), PartitionerChoice::Kip, 5);
     let mut lfm = Lfm::with_defaults(5);
@@ -123,7 +126,7 @@ fn epochs_surface_in_every_engine_report() {
         n_partitions: 8,
         n_slots: 8,
         task_overhead: 0.0,
-        ..Default::default()
+        ..EngineConfig::from_env()
     };
     let mut st = StreamingEngine::new(scfg, DrConfig::forced(), PartitionerChoice::Kip, 23);
     let mut z3 = Zipf::new(20_000, 1.2, 23);
@@ -135,7 +138,8 @@ fn epochs_surface_in_every_engine_report() {
     }
 
     // Without DR nothing ever bumps.
-    let mut off = MicroBatchEngine::new(cfg(8, 8), DrConfig::disabled(), PartitionerChoice::Uhp, 24);
+    let mut off =
+        MicroBatchEngine::new(cfg(8, 8), DrConfig::disabled(), PartitionerChoice::Uhp, 24);
     let mut z4 = Zipf::new(20_000, 1.2, 24);
     for _ in 0..3 {
         assert_eq!(off.run_batch(&z4.batch(20_000)).epoch, 0);
@@ -146,8 +150,10 @@ fn epochs_surface_in_every_engine_report() {
 fn dr_overhead_is_negligible_when_data_is_uniform() {
     // §1: DR "improves the performance with negligible overhead" — on
     // uniform data the DR-enabled engine must stay within 2% of baseline.
-    let mut with = MicroBatchEngine::new(cfg(16, 16), DrConfig::default(), PartitionerChoice::Kip, 10);
-    let mut without = MicroBatchEngine::new(cfg(16, 16), DrConfig::disabled(), PartitionerChoice::Uhp, 10);
+    let mut with =
+        MicroBatchEngine::new(cfg(16, 16), DrConfig::default(), PartitionerChoice::Kip, 10);
+    let mut without =
+        MicroBatchEngine::new(cfg(16, 16), DrConfig::disabled(), PartitionerChoice::Uhp, 10);
     let mut z = Zipf::new(100_000, 0.0, 10);
     let mut t_with = 0.0;
     let mut t_without = 0.0;

@@ -1,0 +1,157 @@
+//! Property tests for executor-sharding invariance: for every engine,
+//! `num_threads = N` must reproduce the `num_threads = 1` reports exactly —
+//! routing (loads / record counts), epochs and virtual times are compared
+//! bitwise. Wall-clock fields (`wall_s`) are measurements and are the only
+//! reported values allowed to differ. Replay failures with
+//! `PROP_SEED=<seed> PROP_CASES=1`.
+
+use dynrepart::ddps::{BatchJob, EngineConfig, MicroBatchEngine, StreamingEngine};
+use dynrepart::dr::{DrConfig, PartitionerChoice};
+use dynrepart::prop::{forall, Gen};
+use dynrepart::workload::{zipf::Zipf, Generator, Record};
+
+fn cfg(n_partitions: usize, n_slots: usize, num_threads: usize) -> EngineConfig {
+    EngineConfig {
+        n_partitions,
+        n_slots,
+        num_threads,
+        ..Default::default()
+    }
+}
+
+fn gen_batches(g: &mut Gen, n_batches: usize) -> (Vec<Vec<Record>>, u64) {
+    let seed = g.u64(1..1 << 20);
+    let keys = g.usize(500..5_000);
+    let exponent = g.f64(0.0..1.6);
+    let per_batch = g.usize(1_000..8_000);
+    let mut z = Zipf::new(keys, exponent, seed);
+    ((0..n_batches).map(|_| z.batch(per_batch)).collect(), seed)
+}
+
+fn gen_dr(g: &mut Gen) -> DrConfig {
+    if g.bool(0.5) {
+        DrConfig::forced()
+    } else {
+        DrConfig::default()
+    }
+}
+
+#[track_caller]
+fn assert_bits(a: f64, b: f64, what: &str) {
+    assert!(
+        a.to_bits() == b.to_bits(),
+        "{what} not bitwise-identical: {a} vs {b}"
+    );
+}
+
+#[track_caller]
+fn assert_vec_bits(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what} length");
+    for (x, y) in a.iter().zip(b) {
+        assert_bits(*x, *y, what);
+    }
+}
+
+#[test]
+fn microbatch_reports_identical_across_thread_counts() {
+    forall(10, |g| {
+        let n_partitions = g.usize(2..12);
+        let n_slots = g.usize(2..12);
+        let threads = g.usize(2..6);
+        let (batches, seed) = gen_batches(g, 4);
+        let dr = gen_dr(g);
+        let mut seq =
+            MicroBatchEngine::new(cfg(n_partitions, n_slots, 1), dr, PartitionerChoice::Kip, seed);
+        let mut par = MicroBatchEngine::new(
+            cfg(n_partitions, n_slots, threads),
+            dr,
+            PartitionerChoice::Kip,
+            seed,
+        );
+        for b in &batches {
+            let rs = seq.run_batch(b);
+            let rp = par.run_batch(b);
+            assert_eq!(rs.batch_no, rp.batch_no);
+            assert_eq!(rs.repartitioned, rp.repartitioned);
+            assert_eq!(rs.epoch, rp.epoch, "epoch diverged at batch {}", rs.batch_no);
+            assert_bits(rs.makespan, rp.makespan, "makespan");
+            assert_bits(rs.map_time, rp.map_time, "map_time");
+            assert_bits(rs.reduce_time, rp.reduce_time, "reduce_time");
+            assert_bits(rs.migration_time, rp.migration_time, "migration_time");
+            assert_bits(rs.imbalance, rp.imbalance, "imbalance");
+            assert_bits(rs.migrated_fraction, rp.migrated_fraction, "migrated_fraction");
+            assert_vec_bits(&rs.loads, &rp.loads, "loads");
+        }
+        assert_bits(seq.total_state_weight(), par.total_state_weight(), "state weight");
+        assert_eq!(seq.epoch(), par.epoch());
+        assert_bits(seq.metrics().total_vtime, par.metrics().total_vtime, "total_vtime");
+    });
+}
+
+#[test]
+fn streaming_reports_identical_across_thread_counts() {
+    forall(10, |g| {
+        let n = g.usize(2..10);
+        let threads = g.usize(2..6);
+        let (batches, seed) = gen_batches(g, 4);
+        let dr = gen_dr(g);
+        let mut seq = StreamingEngine::new(cfg(n, n, 1), dr, PartitionerChoice::Kip, seed);
+        let mut par = StreamingEngine::new(cfg(n, n, threads), dr, PartitionerChoice::Kip, seed);
+        for b in &batches {
+            let rs = seq.run_interval(b);
+            let rp = par.run_interval(b);
+            assert_eq!(rs.interval_no, rp.interval_no);
+            assert_eq!(rs.repartitioned, rp.repartitioned);
+            assert_eq!(rs.epoch, rp.epoch, "epoch diverged at interval {}", rs.interval_no);
+            assert_bits(rs.elapsed, rp.elapsed, "elapsed");
+            assert_bits(rs.throughput, rp.throughput, "throughput");
+            assert_bits(rs.imbalance, rp.imbalance, "imbalance");
+            assert_bits(rs.migrated_fraction, rp.migrated_fraction, "migrated_fraction");
+            assert_bits(rs.migration_pause, rp.migration_pause, "migration_pause");
+            assert_bits(rs.bottleneck_ratio, rp.bottleneck_ratio, "bottleneck_ratio");
+        }
+        assert_bits(seq.vtime(), par.vtime(), "vtime");
+        assert_bits(seq.total_state_weight(), par.total_state_weight(), "state weight");
+        assert_eq!(seq.epoch(), par.epoch());
+    });
+}
+
+#[test]
+fn batch_job_reports_identical_across_thread_counts() {
+    forall(10, |g| {
+        let n_partitions = g.usize(2..16);
+        let n_slots = g.usize(2..16);
+        let threads = g.usize(2..6);
+        let (batches, seed) = gen_batches(g, 1);
+        let records = &batches[0];
+        let dr = gen_dr(g);
+        let decision_at = g.f64(0.05..0.5);
+        let mut seq = BatchJob::new(
+            cfg(n_partitions, n_slots, 1),
+            dr,
+            PartitionerChoice::Kip,
+            seed,
+        );
+        seq.decision_at = decision_at;
+        let mut par = BatchJob::new(
+            cfg(n_partitions, n_slots, threads),
+            dr,
+            PartitionerChoice::Kip,
+            seed,
+        );
+        par.decision_at = decision_at;
+
+        let rs = seq.run(records);
+        let rp = par.run(records);
+        assert_eq!(rs.repartitioned, rp.repartitioned);
+        assert_eq!(rs.epoch, rp.epoch);
+        assert_eq!(rs.replayed_records, rp.replayed_records);
+        assert_eq!(rs.record_counts, rp.record_counts);
+        assert_bits(rs.makespan, rp.makespan, "makespan");
+        assert_bits(rs.map_time, rp.map_time, "map_time");
+        assert_bits(rs.reduce_time, rp.reduce_time, "reduce_time");
+        assert_bits(rs.replay_time, rp.replay_time, "replay_time");
+        assert_bits(rs.imbalance, rp.imbalance, "imbalance");
+        assert_vec_bits(&rs.loads, &rp.loads, "loads");
+    });
+}
