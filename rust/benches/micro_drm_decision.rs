@@ -1,0 +1,131 @@
+//! DRM decision-point latency: wall clock of the sharded decision point —
+//! histogram tree-merge, blending, candidate construction — at 1/2/4/8
+//! threads, for the KIP and Gedik families. Decisions are
+//! bitwise-identical across thread counts by construction (pinned by
+//! `tests/prop_parallel.rs`; the bench spot-checks it too); this measures
+//! the real-time cost of the step the paper calls negligible. See
+//! EXPERIMENTS.md "Decision latency".
+use dynrepart::bench::{bench_with, black_box, header, BenchOpts};
+use dynrepart::ddps::{EngineConfig, MicroBatchEngine};
+use dynrepart::dr::{parallel, DrConfig, DrMaster, PartitionerChoice};
+use dynrepart::partitioner::GedikStrategy;
+use dynrepart::sketch::Histogram;
+use dynrepart::workload::{zipf::Zipf, Generator, Record};
+
+const THREAD_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+/// One exact local histogram per DRW, as the harvests would deliver them.
+fn worker_histograms(records: &[Record], n_workers: usize, top_k: usize) -> Vec<Histogram> {
+    let per = records.len().div_ceil(n_workers).max(1);
+    records
+        .chunks(per)
+        .map(|c| Histogram::exact(c, top_k))
+        .collect()
+}
+
+fn drm(choice: PartitionerChoice, n_partitions: usize) -> DrMaster {
+    let cfg = DrConfig {
+        lambda: 4,
+        force_updates: true, // construct + install a candidate every call
+        ..Default::default()
+    };
+    DrMaster::new(cfg, choice, n_partitions, 1)
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let n_records = if quick { 200_000 } else { 2_000_000 };
+    let n_partitions = 64;
+    let n_workers = 32;
+    let probe = drm(PartitionerChoice::Kip, n_partitions);
+    let top_k = probe.histogram_size(); // λN = 256
+    let mut z = Zipf::new(200_000, 1.1, 1);
+    let records = z.batch(n_records);
+    let hists = worker_histograms(&records, n_workers, top_k);
+    let opts = BenchOpts {
+        budget_s: 1.0,
+        ..Default::default()
+    };
+
+    header(&format!(
+        "histogram tree-merge wall clock: {n_workers} locals, top-{top_k}"
+    ));
+    for threads in THREAD_SWEEP {
+        let m = bench_with(&format!("merge_histograms_tree, {threads} thread(s)"), opts, &mut || {
+            black_box(parallel::merge_histograms_tree(hists.clone(), top_k, threads));
+        });
+        println!("{}", m.report());
+    }
+
+    for choice in [
+        PartitionerChoice::Kip,
+        PartitionerChoice::Gedik(GedikStrategy::Scan),
+    ] {
+        header(&format!(
+            "full decision point ({}): merge + blend + candidate + install",
+            choice.name()
+        ));
+        let mut base_ns = 0.0;
+        for threads in THREAD_SWEEP {
+            // One long-lived DRM per thread count, as in a long-running
+            // job: the past-histogram window fills and every decide
+            // constructs + installs a candidate (force_updates). The
+            // per-iteration hists.clone() is a fixed cost common to all
+            // thread counts.
+            let mut master = drm(choice, n_partitions);
+            let m = bench_with(&format!("decide_sharded, {threads} thread(s)"), opts, &mut || {
+                black_box(master.decide_sharded(hists.clone(), threads));
+            });
+            if threads == 1 {
+                base_ns = m.mean_ns;
+            }
+            println!(
+                "{}  speedup vs 1 thread: {:.2}x",
+                m.report(),
+                base_ns / m.mean_ns
+            );
+        }
+    }
+
+    // Engine-level decision-latency budget: the cumulative
+    // decision_wall_s / wall_s ratio of a DR-on micro-batch run — the
+    // paper's "negligible overhead" claim as one number (EXPERIMENTS.md
+    // "Decision latency" records this cell).
+    header("engine-level decision-latency budget (micro-batch, DR on)");
+    for threads in THREAD_SWEEP {
+        let cfg = EngineConfig {
+            n_partitions,
+            n_slots: 16,
+            num_threads: threads,
+            ..Default::default()
+        };
+        let mut engine = MicroBatchEngine::new(cfg, DrConfig::default(), PartitionerChoice::Kip, 7);
+        for chunk in records.chunks(records.len().div_ceil(8).max(1)) {
+            black_box(engine.run_batch(chunk));
+        }
+        let m = engine.metrics();
+        println!(
+            "{threads} thread(s): decision_wall_s / wall_s = {:.4}  ({:.3} ms / {:.3} ms)",
+            m.decision_wall_s / m.wall_s.max(f64::MIN_POSITIVE),
+            m.decision_wall_s * 1e3,
+            m.wall_s * 1e3
+        );
+    }
+
+    // Determinism spot check: sharded decisions must be bitwise-identical
+    // to the sequential path.
+    let mut seq = drm(PartitionerChoice::Kip, n_partitions);
+    let mut par = drm(PartitionerChoice::Kip, n_partitions);
+    let ds = seq.decide_sharded(hists.clone(), 1);
+    let dp = par.decide_sharded(hists, 8);
+    assert_eq!(ds.epoch, dp.epoch);
+    assert_eq!(ds.histogram.entries(), dp.histogram.entries());
+    let (ps, pp) = (
+        ds.new_partitioner().expect("forced"),
+        dp.new_partitioner().expect("forced"),
+    );
+    for k in 0..100_000u64 {
+        assert_eq!(ps.partition(k), pp.partition(k), "routing diverged at key {k}");
+    }
+    println!("\n8-thread decision bitwise-identical to sequential: ok");
+}

@@ -34,6 +34,11 @@ pub struct JobReport {
     /// Measured wall-clock seconds of the stage executor (sequential or
     /// sharded per `num_threads`); `makespan` above is the virtual model.
     pub wall_s: f64,
+    /// Measured wall-clock seconds of the single mid-map DRM decision
+    /// point (sharded DRW harvests + histogram tree-merge + candidate
+    /// construction). Compare against `wall_s` for the decision-latency
+    /// budget (EXPERIMENTS.md "Decision latency").
+    pub decision_wall_s: f64,
     pub replayed_records: u64,
     pub repartitioned: bool,
     pub loads: Vec<f64>,
@@ -98,6 +103,7 @@ impl BatchJob {
 
         // DRM decision point: decision → epoch bump → replay plan.
         let decision = exec::decision_point_sharded(&mut drm, &mut workers, self.cfg.num_threads);
+        let decision_wall_s = decision.decision_wall_s;
         let (repartitioned, replayed, replay_time) = match decision.swap {
             Some(swap) => {
                 partitioner = swap.to.clone();
@@ -117,6 +123,7 @@ impl BatchJob {
             reduce_time: stage.reduce_time,
             replay_time,
             wall_s: stage.wall_s,
+            decision_wall_s,
             replayed_records: replayed,
             repartitioned,
             imbalance: stage.imbalance,
@@ -147,6 +154,7 @@ impl BatchJob {
             m.reduce_vtime += r.reduce_time;
             m.replay_vtime += r.replay_time;
             m.wall_s += r.wall_s;
+            m.decision_wall_s += r.decision_wall_s;
             m.repartition_count += r.repartitioned as u64;
         }
         m

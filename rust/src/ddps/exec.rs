@@ -24,10 +24,14 @@
 //!
 //! Both modes produce bitwise-identical reports; virtual time is the
 //! scheduling *model* and never depends on the thread count, while the
-//! measured [`StageReport::wall_s`] column is where real parallelism
-//! shows up. The DRW taps and histogram harvests ride the same sharding
-//! ([`tap_records_sharded`], [`decision_point_sharded`]) so the sampling
-//! path stays consistent with where records actually ran.
+//! measured [`StageReport::wall_s`] and
+//! [`StageReport::decision_wall_s`] columns are where real parallelism
+//! shows up. The same knob shards the DRM side: DRW taps and harvests
+//! ride the executor's sharding ([`tap_records_sharded`],
+//! [`decision_point_sharded`]), and the decision point itself — histogram
+//! tree-merge and candidate construction — runs on scoped workers through
+//! [`dr::parallel`](crate::dr::parallel) (DESIGN.md "Sharded DRM decision
+//! point"), so no serial region is left between the parallel shards.
 
 pub mod parallel;
 
@@ -80,19 +84,29 @@ pub fn decision_point(drm: &mut DrMaster, workers: &mut [DrWorker]) -> DrDecisio
     decision_point_sharded(drm, workers, 1)
 }
 
-/// [`decision_point`] with the DRW harvests sharded over `num_threads`
-/// scoped workers ([`parallel::harvest_sharded`]). Shards are contiguous
-/// and joined in worker order, so the DRM merges exactly the histogram
-/// sequence the sequential harvest produces and the decision is
-/// identical.
+/// [`decision_point`] with the whole decision point sharded over
+/// `num_threads` scoped workers: the DRW harvests ride
+/// [`parallel::harvest_sharded`] (contiguous shards joined in worker
+/// order, so the DRM receives exactly the sequential histogram sequence),
+/// and the DRM itself merges and constructs sharded
+/// ([`DrMaster::decide_sharded`], backed by
+/// [`dr::parallel`](crate::dr::parallel)). Decisions, epochs and
+/// migration plans are bitwise-identical at any thread count; the
+/// returned [`DrDecision::decision_wall_s`] is re-measured here to cover
+/// the full span — harvests, merge, blend, candidate construction — and
+/// is what the engines surface in their reports' `decision_wall_s`
+/// columns.
 pub fn decision_point_sharded(
     drm: &mut DrMaster,
     workers: &mut [DrWorker],
     num_threads: usize,
 ) -> DrDecision {
+    let wall_start = Instant::now();
     let k = drm.histogram_size();
     let hists: Vec<Histogram> = parallel::harvest_sharded(workers, k, num_threads);
-    drm.decide(hists)
+    let mut decision = drm.decide_sharded(hists, num_threads);
+    decision.decision_wall_s = wall_start.elapsed().as_secs_f64();
+    decision
 }
 
 /// How reduce work turns into virtual time.
@@ -125,9 +139,17 @@ pub struct StageReport {
     pub stage_time: VTime,
     /// Measured wall-clock seconds this stage's executor actually took
     /// (routing + keyed reduce). Unlike the virtual times above this is a
-    /// *measurement*, varies run to run, and is the only report field that
-    /// depends on [`EngineConfig::num_threads`].
+    /// *measurement*, varies run to run, and (with `decision_wall_s`) is
+    /// the only report field that depends on
+    /// [`EngineConfig::num_threads`].
     pub wall_s: f64,
+    /// Measured wall-clock seconds of the DRM decision point attributed to
+    /// this stage. Every report type carries the `wall_s` /
+    /// `decision_wall_s` pair of measured columns; a bare stage contains
+    /// no decision point, so [`ShuffleStage::run`] always reports `0.0`
+    /// here — the engines fill their own reports' column from the
+    /// [`decision_point_sharded`] they ran around the stage.
+    pub decision_wall_s: f64,
     pub imbalance: f64,
     /// Load of the most loaded partition relative to the mean — how hard
     /// backpressure bites in the pinned model.
@@ -222,6 +244,7 @@ impl<'a> ShuffleStage<'a> {
             reduce_time,
             stage_time,
             wall_s,
+            decision_wall_s: 0.0,
         }
     }
 }
@@ -432,6 +455,7 @@ mod tests {
         assert_eq!(d_seq.repartitioned(), d_par.repartitioned());
         assert_eq!(d_seq.epoch, d_par.epoch);
         assert_eq!(d_seq.histogram.entries(), d_par.histogram.entries());
+        assert!(d_seq.decision_wall_s >= 0.0 && d_par.decision_wall_s >= 0.0);
         let (sp, pp) = (
             d_seq.new_partitioner().expect("forced"),
             d_par.new_partitioner().expect("forced"),

@@ -27,7 +27,11 @@
 //!   [`DrWorker`]s, preserving each DRW's observation/harvest sequence so
 //!   sampling RNGs, counters and the DRM's histogram order advance
 //!   exactly as they do sequentially — the taps stay consistent with
-//!   where records actually ran.
+//!   where records actually ran. Downstream of the harvests, the DRM
+//!   decision point itself is sharded too
+//!   ([`dr::parallel`](crate::dr::parallel): parallel histogram
+//!   tree-merge + key-range candidate preparation), so no serial region
+//!   remains between the parallel shards.
 //!
 //! Engines opt in through
 //! [`EngineConfig::num_threads`](super::EngineConfig::num_threads); the

@@ -31,6 +31,11 @@ pub struct BatchReport {
     /// Measured wall-clock seconds of the stage executor (sequential or
     /// sharded per `num_threads`); `makespan` above is the virtual model.
     pub wall_s: f64,
+    /// Measured wall-clock seconds of this batch boundary's DRM decision
+    /// point (sharded DRW harvests + histogram tree-merge + candidate
+    /// construction). Compare against `wall_s` for the decision-latency
+    /// budget (EXPERIMENTS.md "Decision latency").
+    pub decision_wall_s: f64,
     /// Reduce-side weight per partition.
     pub loads: Vec<f64>,
     pub imbalance: f64,
@@ -94,12 +99,14 @@ impl MicroBatchEngine {
     }
 
     /// The DRM decision point at a micro-batch boundary. Returns the
-    /// migration pause time and migrated state fraction.
-    fn decision_point(&mut self) -> (VTime, f64, bool) {
+    /// migration pause time, migrated state fraction, whether a swap was
+    /// adopted, and the measured decision wall clock.
+    fn decision_point(&mut self) -> (VTime, f64, bool, f64) {
         let decision =
             exec::decision_point_sharded(&mut self.drm, &mut self.workers, self.cfg.num_threads);
+        let decision_wall_s = decision.decision_wall_s;
         let Some(swap) = decision.swap else {
-            return (0.0, 0.0, false);
+            return (0.0, 0.0, false, decision_wall_s);
         };
 
         // Spark migrates state "automatically in the shuffle phase": keys
@@ -112,7 +119,7 @@ impl MicroBatchEngine {
             &mut self.metrics,
             &swap,
         );
-        (mig.pause, mig.migrated_fraction, true)
+        (mig.pause, mig.migrated_fraction, true, decision_wall_s)
     }
 
     /// Run one micro-batch through map → shuffle → reduce → state.
@@ -120,7 +127,8 @@ impl MicroBatchEngine {
         self.batch_no += 1;
 
         // 1. decision point (uses histograms gathered in earlier batches)
-        let (migration_time, migrated_fraction, repartitioned) = self.decision_point();
+        let (migration_time, migrated_fraction, repartitioned, decision_wall_s) =
+            self.decision_point();
 
         // 2. map-tap: records split evenly over slots; the DRW tap runs on
         //    the map path and rides the executor's sharding.
@@ -146,6 +154,7 @@ impl MicroBatchEngine {
         self.metrics.reduce_vtime += stage.reduce_time;
         self.metrics.migration_vtime += migration_time;
         self.metrics.wall_s += stage.wall_s;
+        self.metrics.decision_wall_s += decision_wall_s;
 
         BatchReport {
             batch_no: self.batch_no,
@@ -154,6 +163,7 @@ impl MicroBatchEngine {
             reduce_time: stage.reduce_time,
             migration_time,
             wall_s: stage.wall_s,
+            decision_wall_s,
             imbalance: stage.imbalance,
             loads: stage.loads,
             migrated_fraction,

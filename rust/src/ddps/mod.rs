@@ -18,9 +18,10 @@
 //! implementation of the map-tap → shuffle → keyed-reduce → spill-cost
 //! loop — and swap partitioners exclusively through versioned
 //! [`PartitionerEpoch`](crate::partitioner::PartitionerEpoch)s whose
-//! migration plans derive from the epoch diff. The core runs either
-//! sequentially ([`EngineConfig::num_threads`] = 1) or sharded over scoped
-//! OS threads ([`exec::parallel`], `num_threads` > 1) with
+//! migration plans derive from the epoch diff. The core — and since PR 3
+//! the DRM decision point steering it ([`crate::dr::parallel`]) — runs
+//! either sequentially ([`EngineConfig::num_threads`] = 1) or sharded
+//! over scoped OS threads ([`exec::parallel`], `num_threads` > 1) with
 //! bitwise-identical reports.
 
 pub mod batch;
@@ -71,12 +72,14 @@ pub struct EngineConfig {
     pub spill_threshold_factor: f64,
     pub spill_penalty: f64,
     /// OS threads the [`exec::ShuffleStage`] executor shards its reduce
-    /// partitions (and the DRW taps / histogram harvests) over. `1` — the
-    /// default — is the sequential reference path; `> 1` runs the stage on
-    /// `std::thread::scope` workers, one contiguous partition shard per
-    /// worker, and produces bitwise-identical reports (see
-    /// [`exec::parallel`]). Virtual-time results never depend on this
-    /// knob — only the measured `wall_s` columns do.
+    /// partitions (and the DRW taps / histogram harvests) over, and that
+    /// the DRM decision point shards its histogram tree-merge and
+    /// candidate construction over ([`crate::dr::parallel`]). `1` — the
+    /// default — is the sequential reference path; `> 1` runs both on
+    /// `std::thread::scope` workers and produces bitwise-identical
+    /// reports (see [`exec::parallel`] and DESIGN.md "Sharded DRM
+    /// decision point"). Virtual-time results never depend on this knob —
+    /// only the measured `wall_s` / `decision_wall_s` columns do.
     pub num_threads: usize,
 }
 
@@ -204,6 +207,12 @@ pub struct EngineMetrics {
     /// runs. Virtual times above are the scheduling *model*; this is where
     /// the real (possibly sharded, `num_threads > 1`) executor shows up.
     pub wall_s: f64,
+    /// Measured wall-clock seconds spent inside DRM decision points
+    /// (harvests + histogram merge + candidate construction,
+    /// [`exec::decision_point_sharded`]). Comparing this against `wall_s`
+    /// is the paper's "negligible overhead" claim as a measurable column:
+    /// the decision point must stay small next to the stages it steers.
+    pub decision_wall_s: f64,
     pub state_weight_migrated: f64,
     pub repartition_count: u64,
 }

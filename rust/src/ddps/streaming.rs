@@ -30,6 +30,11 @@ pub struct IntervalReport {
     /// Measured wall-clock seconds of the stage executor (sequential or
     /// sharded per `num_threads`); `elapsed` above is the virtual model.
     pub wall_s: f64,
+    /// Measured wall-clock seconds of this barrier's DRM decision point
+    /// (sharded DRW harvests + histogram tree-merge + candidate
+    /// construction). Compare against `wall_s` for the decision-latency
+    /// budget (EXPERIMENTS.md "Decision latency").
+    pub decision_wall_s: f64,
     /// Records per virtual second in this interval.
     pub throughput: f64,
     pub imbalance: f64,
@@ -154,6 +159,7 @@ impl StreamingEngine {
         // the swap's derived plan migrates operator state explicitly.
         let decision =
             exec::decision_point_sharded(&mut self.drm, &mut self.workers, self.cfg.num_threads);
+        let decision_wall_s = decision.decision_wall_s;
         let (mut migration_pause, mut migrated_fraction, mut repartitioned) = (0.0, 0.0, false);
         if let Some(swap) = decision.swap {
             let mig = exec::adopt_swap(
@@ -175,11 +181,13 @@ impl StreamingEngine {
         self.metrics.reduce_vtime += stage.reduce_time;
         self.metrics.migration_vtime += migration_pause;
         self.metrics.wall_s += stage.wall_s;
+        self.metrics.decision_wall_s += decision_wall_s;
 
         IntervalReport {
             interval_no: self.interval_no,
             elapsed,
             wall_s: stage.wall_s,
+            decision_wall_s,
             throughput: if elapsed > 0.0 {
                 records.len() as f64 / elapsed
             } else {

@@ -9,8 +9,40 @@
 //! [`EpochSwap`], from which the engine derives its state-migration plan
 //! (decision → epoch bump → plan; see DESIGN.md "Epochs and the shared
 //! ShuffleStage core").
+//!
+//! The decision point runs sequentially or sharded over scoped workers
+//! ([`DrMaster::decide_sharded`], backed by [`super::parallel`]); both
+//! paths are the same deterministic computation, so decisions, epochs and
+//! migration plans are bitwise-identical at any thread count, and the
+//! measured cost of the step is returned in
+//! [`DrDecision::decision_wall_s`]:
+//!
+//! ```
+//! use dynrepart::dr::{DrConfig, DrMaster, PartitionerChoice};
+//! use dynrepart::sketch::Histogram;
+//!
+//! // one local histogram per DRW, merged at the decision point
+//! let locals = vec![
+//!     Histogram::from_counts(&[(1, 600.0), (2, 100.0)], 1000.0, 8),
+//!     Histogram::from_counts(&[(1, 300.0), (3, 200.0)], 1000.0, 8),
+//! ];
+//! let mut drm = DrMaster::new(DrConfig::forced(), PartitionerChoice::Kip, 4, 7);
+//! let d = drm.decide(locals.clone()); // == decide_sharded(locals, 1)
+//! assert!(d.repartitioned());
+//! assert_eq!(d.epoch, 1);
+//! assert_eq!(d.histogram.entries()[0].key, 1); // 900 of 2000 in the union
+//!
+//! // the sharded decision point reproduces it bitwise
+//! let mut drm4 = DrMaster::new(DrConfig::forced(), PartitionerChoice::Kip, 4, 7);
+//! let d4 = drm4.decide_sharded(locals, 4);
+//! assert_eq!(d.epoch, d4.epoch);
+//! assert_eq!(d.histogram.entries(), d4.histogram.entries());
+//! let (p, p4) = (d.new_partitioner().unwrap(), d4.new_partitioner().unwrap());
+//! assert!((0..1000u64).all(|k| p.partition(k) == p4.partition(k)));
+//! assert!(d.decision_wall_s >= 0.0 && d4.decision_wall_s >= 0.0);
+//! ```
 
-use super::DrConfig;
+use super::{parallel, DrConfig};
 use crate::partitioner::{
     EpochSwap, EpochedPartitioner, GedikConfig, GedikPartitioner, GedikStrategy, Kip, KipConfig,
     Mixed, Partitioner, PartitionerEpoch, Uhp,
@@ -19,6 +51,7 @@ use crate::sketch::Histogram;
 use crate::workload::Key;
 use std::collections::VecDeque;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Which partitioning function family DR maintains. KIP is the paper's
 /// contribution; the others are the Fig 2/3 baselines, runnable inside the
@@ -100,6 +133,15 @@ pub struct DrDecision {
     pub planned_max_share: f64,
     /// The merged histogram the decision was based on.
     pub histogram: Histogram,
+    /// Measured wall-clock seconds the decision took — histogram
+    /// tree-merge, blending with the past, candidate construction and the
+    /// install. [`decision_point_sharded`] widens this to the full
+    /// decision-point span (DRW harvests included). A *measurement*: it
+    /// varies run to run and is the only [`DrDecision`] field that depends
+    /// on the thread count.
+    ///
+    /// [`decision_point_sharded`]: crate::ddps::exec::decision_point_sharded
+    pub decision_wall_s: f64,
 }
 
 impl DrDecision {
@@ -226,10 +268,30 @@ impl DrMaster {
 
     /// The DRM decision point: merge worker histograms, maybe construct and
     /// install a new partitioner. This is the paper's central control loop,
-    /// now phrased as decision → epoch bump → plan.
+    /// now phrased as decision → epoch bump → plan. Sequential shorthand
+    /// for [`DrMaster::decide_sharded`] with one thread — the computation
+    /// is the same deterministic tree, so the two agree bitwise.
     pub fn decide(&mut self, worker_histograms: Vec<Histogram>) -> DrDecision {
+        self.decide_sharded(worker_histograms, 1)
+    }
+
+    /// [`DrMaster::decide`] with the decision point sharded over
+    /// `num_threads` scoped workers ([`super::parallel`]): the worker
+    /// histograms merge in a parallel tree reduction whose shape depends
+    /// only on their count, and the candidate's pure per-key preparation
+    /// splits by key range while the order-sensitive greedy core runs
+    /// unchanged. Decisions, epochs and migration plans are
+    /// bitwise-identical at any `num_threads`; only the measured
+    /// [`DrDecision::decision_wall_s`] varies.
+    pub fn decide_sharded(
+        &mut self,
+        worker_histograms: Vec<Histogram>,
+        num_threads: usize,
+    ) -> DrDecision {
+        let wall_start = Instant::now();
         self.decisions_made += 1;
-        let merged = Histogram::merge(&worker_histograms, self.histogram_size());
+        let merged =
+            parallel::merge_histograms_tree(worker_histograms, self.histogram_size(), num_threads);
         let hist = self.blended(merged);
 
         let current_max = Self::max_share(self.current.as_dyn(), &hist);
@@ -241,13 +303,20 @@ impl DrMaster {
                 current_max_share: current_max,
                 planned_max_share: current_max,
                 histogram: hist,
+                decision_wall_s: wall_start.elapsed().as_secs_f64(),
             };
         }
 
-        // Construct the candidate with the family's own update rule.
+        // Construct the candidate with the family's own update rule (KIP
+        // and Gedik with their pure preparation sharded; Mixed's bisection
+        // has nothing pure to hoist and stays sequential).
         let candidate = match self.current.as_ref() {
-            DynPartitioner::Kip(kip) => DynPartitioner::Kip(kip.updated(&hist)),
-            DynPartitioner::Gedik(g) => DynPartitioner::Gedik(g.update(&hist)),
+            DynPartitioner::Kip(kip) => {
+                DynPartitioner::Kip(parallel::kip_candidate(kip, &hist, num_threads))
+            }
+            DynPartitioner::Gedik(g) => {
+                DynPartitioner::Gedik(parallel::gedik_candidate(g, &hist, num_threads))
+            }
             DynPartitioner::Mixed(m) => DynPartitioner::Mixed(m.update(&hist)),
             DynPartitioner::Uhp(_) => unreachable!("handled above"),
         };
@@ -267,6 +336,7 @@ impl DrMaster {
                 current_max_share: current_max,
                 planned_max_share: planned_max,
                 histogram: hist,
+                decision_wall_s: wall_start.elapsed().as_secs_f64(),
             }
         } else {
             DrDecision {
@@ -275,6 +345,7 @@ impl DrMaster {
                 current_max_share: current_max,
                 planned_max_share: planned_max,
                 histogram: hist,
+                decision_wall_s: wall_start.elapsed().as_secs_f64(),
             }
         }
     }
@@ -428,6 +499,53 @@ mod tests {
             assert_eq!(drm.epoch(), expect);
         }
         assert_eq!(drm.updates_issued(), 4);
+    }
+
+    #[test]
+    fn sharded_decide_is_bitwise_identical_for_every_family() {
+        for choice in [
+            PartitionerChoice::Kip,
+            PartitionerChoice::Gedik(GedikStrategy::Scan),
+            PartitionerChoice::Gedik(GedikStrategy::Readj),
+            PartitionerChoice::Gedik(GedikStrategy::Redist),
+            PartitionerChoice::Mixed,
+            PartitionerChoice::Uhp,
+        ] {
+            let mut seq = DrMaster::new(DrConfig::forced(), choice, 8, 17);
+            let mut par = DrMaster::new(DrConfig::forced(), choice, 8, 17);
+            let mut z = Zipf::new(20_000, 1.2, 17);
+            for round in 0..3 {
+                let recs = z.batch(60_000);
+                let hists = worker_hists(&recs, 5, seq.histogram_size());
+                let ds = seq.decide(hists.clone());
+                let dp = par.decide_sharded(hists, 4);
+                let name = choice.name();
+                assert_eq!(ds.repartitioned(), dp.repartitioned(), "{name} r{round}");
+                assert_eq!(ds.epoch, dp.epoch, "{name} r{round}");
+                assert_eq!(
+                    ds.histogram.entries(),
+                    dp.histogram.entries(),
+                    "{name} r{round}: merged histograms diverged"
+                );
+                assert_eq!(
+                    ds.current_max_share.to_bits(),
+                    dp.current_max_share.to_bits(),
+                    "{name} r{round}"
+                );
+                assert_eq!(
+                    ds.planned_max_share.to_bits(),
+                    dp.planned_max_share.to_bits(),
+                    "{name} r{round}"
+                );
+                if let (Some(ss), Some(sp)) = (&ds.swap, &dp.swap) {
+                    let plan_s = ss.plan(0..5_000u64);
+                    let plan_p = sp.plan(0..5_000u64);
+                    assert_eq!(plan_s, plan_p, "{name} r{round}: migration plans diverged");
+                }
+                assert!(ds.decision_wall_s >= 0.0 && dp.decision_wall_s >= 0.0);
+            }
+            assert_eq!(seq.epoch(), par.epoch(), "{}", choice.name());
+        }
     }
 
     #[test]

@@ -1,0 +1,363 @@
+//! The sharded DRM decision point (see DESIGN.md "Sharded DRM decision
+//! point").
+//!
+//! PR 2 parallelized the `ShuffleStage` executor but left the DRM a
+//! single-threaded serial region between parallel shards. The paper's
+//! "negligible overhead" claim needs the decision point — merge DRW
+//! histograms, blend with the recent past, construct a candidate
+//! partitioner — to cost little compared to the stage it steers even as
+//! worker counts grow (AutoFlow and Fang et al. both stress that the
+//! rebalancing controller must scale with the workers or it becomes the
+//! new bottleneck). This module shards the two heavy steps over
+//! `std::thread::scope` workers:
+//!
+//! - **Histogram merge** ([`merge_histograms_tree`]): the DRW locals are
+//!   merged in a pairwise *tree reduction* through the existing
+//!   [`MergeableSketch::merge_from`] contract. The tree shape — always
+//!   merge adjacent nodes `(2i, 2i+1)`, level by level — is a pure
+//!   function of the local count and **never of the thread count**; a
+//!   level's pair-merges are independent, so they are distributed over
+//!   scoped workers (each owning a disjoint, pair-aligned `&mut` slice)
+//!   without changing a single float operation. `num_threads = 1` runs
+//!   the same tree serially: results are bitwise-identical at any thread
+//!   count by construction.
+//! - **Candidate construction** ([`kip_candidate`], [`gedik_candidate`]):
+//!   the greedy cores of KIP's Algorithm 1 and Gedik's strategies are
+//!   order-sensitive (every placement reads the load vector the previous
+//!   placements wrote), so they are *not* split. What is split — by key
+//!   range — are the pure per-key location reads that feed them
+//!   (line-4/line-7 lookups for KIP, current-location reads for
+//!   Readj/Scan), while KIP's host→partition bucketing (the tail
+//!   bin-packing input of lines 11–15) runs on the calling thread
+//!   concurrent with the heavy-key reads — at most `num_threads` scoped
+//!   workers ever run, the same budget the stage executor honours. The
+//!   cores then consume the precomputed tables
+//!   through [`Kip::update_with_locations`] /
+//!   [`GedikPartitioner::update_with_locations`] in the exact sequential
+//!   operation order — decisions, epochs and migration plans are
+//!   bitwise-identical to the sequential path. ([`Mixed`]'s bisection
+//!   loop does per-entry `argmin`s only — nothing pure to hoist — and
+//!   [`Uhp`](crate::partitioner::Uhp) never repartitions; both stay
+//!   sequential.)
+//!
+//! [`DrMaster::decide_sharded`](super::DrMaster::decide_sharded) drives
+//! both pieces;
+//! [`decision_point_sharded`](crate::ddps::exec::decision_point_sharded)
+//! adds the sharded DRW harvests in front and the engines thread
+//! [`EngineConfig::num_threads`](crate::ddps::EngineConfig::num_threads)
+//! through. The measured cost of the whole step lands in the
+//! `decision_wall_s` report columns (EXPERIMENTS.md "Decision latency";
+//! `cargo bench --bench micro_drm_decision`).
+//!
+//! ```
+//! use dynrepart::dr::parallel::merge_histograms_tree;
+//! use dynrepart::sketch::Histogram;
+//!
+//! // six DRW locals; key 99 is moderate in each but heavy in the union
+//! let locals: Vec<Histogram> = (0u64..6)
+//!     .map(|w| Histogram::from_counts(&[(w, 10.0 + w as f64), (99, 25.0)], 100.0, 8))
+//!     .collect();
+//! let seq = merge_histograms_tree(locals.clone(), 4, 1);
+//! let par = merge_histograms_tree(locals, 4, 4);
+//! assert_eq!(seq.entries(), par.entries()); // bitwise-identical at any thread count
+//! assert_eq!(seq.entries()[0].key, 99); // 6 × 25 / 600 = 25% of the union
+//! ```
+//!
+//! [`MergeableSketch::merge_from`]: crate::sketch::MergeableSketch::merge_from
+//! [`Mixed`]: crate::partitioner::Mixed
+
+use crate::partitioner::{GedikPartitioner, GedikStrategy, Kip, Partitioner};
+use crate::sketch::{Histogram, MergeableSketch};
+use crate::workload::Key;
+use std::thread;
+
+/// Merge worker-local histograms into the global top-`k` through a
+/// deterministic pairwise tree reduction over
+/// [`MergeableSketch::merge_from`](crate::sketch::MergeableSketch::merge_from).
+///
+/// The reduction pairs adjacent nodes `(2i, 2i+1)` level by level until
+/// one histogram remains, then re-bounds it with
+/// [`Histogram::truncate_top`]. The tree shape depends only on
+/// `locals.len()`; `num_threads` only chooses how many scoped workers a
+/// level's independent pair-merges are spread over, so the result is
+/// bitwise-identical at any thread count (`1` runs the same tree
+/// serially). Ranking of tied counts is stable by key — guaranteed by
+/// `merge_from` itself — so no fold shape can reorder heavy hitters.
+pub fn merge_histograms_tree(locals: Vec<Histogram>, k: usize, num_threads: usize) -> Histogram {
+    let mut nodes = locals;
+    if nodes.is_empty() {
+        return Histogram::empty();
+    }
+    while nodes.len() > 1 {
+        merge_adjacent_pairs(&mut nodes, num_threads);
+        // Every pair's merge landed in its left (even-index) node; an odd
+        // trailing node is also at an even index and carries up a level.
+        nodes = nodes.into_iter().step_by(2).collect();
+    }
+    let mut merged = nodes.pop().expect("non-empty");
+    merged.truncate_top(k);
+    merged
+}
+
+/// One tree level: `nodes[2i] ← merge(nodes[2i], nodes[2i+1])` for every
+/// adjacent pair, the pair-merges spread over up to `num_threads` scoped
+/// workers on disjoint pair-aligned slices. Which worker computes a pair
+/// cannot affect its value, so every thread count produces identical
+/// level results.
+fn merge_adjacent_pairs(nodes: &mut [Histogram], num_threads: usize) {
+    let pairs = nodes.len() / 2;
+    if pairs == 0 {
+        return;
+    }
+    let workers = num_threads.max(1).min(pairs);
+    if workers <= 1 {
+        for pair in nodes.chunks_mut(2) {
+            if let [left, right] = pair {
+                left.merge_from(right);
+            }
+        }
+        return;
+    }
+    let pair_chunk = pairs.div_ceil(workers);
+    // Restrict to the paired prefix: an odd trailing node needs no merge,
+    // so it never gets (or wastes) a worker.
+    thread::scope(|s| {
+        for slice in nodes[..pairs * 2].chunks_mut(pair_chunk * 2) {
+            s.spawn(move || {
+                for pair in slice.chunks_mut(2) {
+                    if let [left, right] = pair {
+                        left.merge_from(right);
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// Partition of every key in `keys` under `p`, computed over contiguous
+/// key-range chunks on up to `num_threads` scoped workers (`partition` is
+/// pure, so the output — in input order — is identical at any thread
+/// count).
+pub fn partitions_of(p: &dyn Partitioner, keys: &[Key], num_threads: usize) -> Vec<u32> {
+    let mut out = vec![0u32; keys.len()];
+    if num_threads <= 1 || keys.len() < 2 {
+        for (o, &k) in out.iter_mut().zip(keys) {
+            *o = p.partition(k) as u32;
+        }
+        return out;
+    }
+    let chunk = keys.len().div_ceil(num_threads).max(1);
+    thread::scope(|s| {
+        for (ks, os) in keys.chunks(chunk).zip(out.chunks_mut(chunk)) {
+            s.spawn(move || {
+                for (o, &k) in os.iter_mut().zip(ks) {
+                    *o = p.partition(k) as u32;
+                }
+            });
+        }
+    });
+    out
+}
+
+/// KIP candidate construction with the pure preparation sharded: the
+/// keys split into `num_threads` contiguous ranges, each worker reading
+/// both the line-4 (previous) and line-7 (hash) locations for its range.
+/// The calling thread takes the first range itself, after bucketing
+/// hosts by partition for lines 11–15's tail bin-packing — so at most
+/// `num_threads` threads are ever busy (caller + `num_threads - 1`
+/// spawned workers), the same budget the stage executor honours. The
+/// greedy core runs unchanged via [`Kip::update_with_locations`], so the
+/// result is bitwise-identical to [`Kip::updated`] at any `num_threads`.
+pub fn kip_candidate(kip: &Kip, hist: &Histogram, num_threads: usize) -> Kip {
+    if num_threads <= 1 || hist.len() < 2 {
+        return kip.updated(hist);
+    }
+    let cfg = kip.config();
+    let hash = kip.weighted_hash();
+    let keys: Vec<Key> = hist.entries().iter().map(|e| e.key).collect();
+    let mut prev_locs = vec![0u32; keys.len()];
+    let mut hash_locs = vec![0u32; keys.len()];
+    let chunk = keys.len().div_ceil(num_threads).max(1);
+    let fill = |ks: &[Key], ps: &mut [u32], hs: &mut [u32]| {
+        for ((&k, p), h) in ks.iter().zip(ps.iter_mut()).zip(hs.iter_mut()) {
+            *p = kip.partition(k) as u32;
+            *h = hash.partition(k) as u32;
+        }
+    };
+    let mut ranges = keys
+        .chunks(chunk)
+        .zip(prev_locs.chunks_mut(chunk))
+        .zip(hash_locs.chunks_mut(chunk));
+    let own = ranges.next();
+    let mut hosts_in = Vec::new();
+    thread::scope(|s| {
+        // Heavy-key side: both location reads per key, split by key range.
+        for ((ks, ps), hs) in ranges {
+            s.spawn(move || fill(ks, ps, hs));
+        }
+        // Tail side and the first key range on the calling thread, while
+        // the workers run.
+        hosts_in = hash.hosts_by_partition();
+        if let Some(((ks, ps), hs)) = own {
+            fill(ks, ps, hs);
+        }
+    });
+    Kip::update_with_locations(&prev_locs, &hash_locs, hosts_in, hash, hist, cfg)
+}
+
+/// Gedik candidate construction with the per-key current-location reads
+/// sharded by key range; the strategy's greedy core runs unchanged via
+/// [`GedikPartitioner::update_with_locations`], so the result is
+/// bitwise-identical to [`GedikPartitioner::update`] at any
+/// `num_threads`. Redist never reads current locations, so it has no
+/// parallel preparation and falls through to the sequential update.
+pub fn gedik_candidate(
+    g: &GedikPartitioner,
+    hist: &Histogram,
+    num_threads: usize,
+) -> GedikPartitioner {
+    if num_threads <= 1 || hist.len() < 2 || matches!(g.strategy(), GedikStrategy::Redist) {
+        return g.update(hist);
+    }
+    let keys: Vec<Key> = hist.entries().iter().map(|e| e.key).collect();
+    let cur_locs = partitions_of(g, &keys, num_threads);
+    g.update_with_locations(hist, &cur_locs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partitioner::{GedikConfig, KipConfig, Uhp, WeightedHash};
+    use crate::workload::{zipf::Zipf, Generator};
+
+    fn worker_locals(n_locals: usize, n_records: usize, exp: f64, seed: u64) -> Vec<Histogram> {
+        let mut z = Zipf::new(20_000, exp, seed);
+        let recs = z.batch(n_records);
+        let per = recs.len().div_ceil(n_locals).max(1);
+        recs.chunks(per).map(|c| Histogram::exact(c, 32)).collect()
+    }
+
+    #[test]
+    fn tree_merge_identical_at_any_thread_count() {
+        for n_locals in [1usize, 2, 3, 7, 8, 13] {
+            let locals = worker_locals(n_locals, 60_000, 1.2, n_locals as u64);
+            let seq = merge_histograms_tree(locals.clone(), 16, 1);
+            for threads in [2usize, 3, 4, 8] {
+                let par = merge_histograms_tree(locals.clone(), 16, threads);
+                assert_eq!(
+                    seq.entries(),
+                    par.entries(),
+                    "{n_locals} locals, {threads} threads: tree merge diverged"
+                );
+                assert_eq!(seq.total_weight().to_bits(), par.total_weight().to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn tree_merge_finds_union_heavy_key_and_conserves_weight() {
+        // key 9 moderate in each local, heavy in the union (the same
+        // scenario sketch::merge_tests pins for the pairwise fold)
+        let locals: Vec<Histogram> = (0..4u64)
+            .map(|w| {
+                Histogram::from_counts(
+                    &[(9, 300.0), ((w + 1) * 1000, 400.0), ((w + 1) * 2000, 300.0)],
+                    1000.0,
+                    8,
+                )
+            })
+            .collect();
+        let m = merge_histograms_tree(locals, 8, 4);
+        assert_eq!(m.entries()[0].key, 9);
+        assert!((m.entries()[0].freq - 0.3).abs() < 1e-9);
+        assert!((m.total_weight() - 4000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tree_merge_truncates_to_k() {
+        let locals = worker_locals(6, 30_000, 1.0, 5);
+        let m = merge_histograms_tree(locals, 4, 3);
+        assert!(m.len() <= 4);
+    }
+
+    #[test]
+    fn tree_merge_empty_inputs_are_safe() {
+        assert!(merge_histograms_tree(Vec::new(), 8, 4).is_empty());
+        let empties = vec![Histogram::empty(); 5];
+        assert!(merge_histograms_tree(empties, 8, 4).is_empty());
+    }
+
+    #[test]
+    fn partitions_of_matches_sequential() {
+        let p = Uhp::with_seed(11, 3);
+        let keys: Vec<Key> = (0..10_007u64).collect();
+        let seq = partitions_of(&p, &keys, 1);
+        for threads in [2usize, 3, 8] {
+            assert_eq!(partitions_of(&p, &keys, threads), seq, "{threads} threads");
+        }
+        assert!(partitions_of(&p, &[], 4).is_empty());
+    }
+
+    #[test]
+    fn kip_candidate_bitwise_matches_sequential_update() {
+        let n = 12;
+        let mut z = Zipf::new(50_000, 1.1, 7);
+        let recs = z.batch(200_000);
+        let cfg = KipConfig::default();
+        let hist = Histogram::exact(&recs, cfg.histogram_size(n));
+        let kip0 = Kip::update(
+            &Uhp::new(n),
+            &WeightedHash::with_default_hosts(n, 9),
+            &hist,
+            cfg,
+        );
+        let seq = kip0.updated(&hist);
+        for threads in [2usize, 4, 7] {
+            let par = kip_candidate(&kip0, &hist, threads);
+            assert_eq!(
+                seq.weighted_hash(),
+                par.weighted_hash(),
+                "{threads} threads: host maps diverged"
+            );
+            assert_eq!(seq.explicit_routes(), par.explicit_routes());
+            for e in hist.entries() {
+                assert_eq!(
+                    seq.explicit_table().get(&e.key),
+                    par.explicit_table().get(&e.key),
+                    "{threads} threads: explicit route for key {} diverged",
+                    e.key
+                );
+            }
+            for k in 0..20_000u64 {
+                assert_eq!(seq.partition(k), par.partition(k), "{threads} threads, key {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn gedik_candidate_bitwise_matches_sequential_update() {
+        for strategy in [GedikStrategy::Scan, GedikStrategy::Readj, GedikStrategy::Redist] {
+            let mut z = Zipf::new(30_000, 1.0, 11);
+            let recs = z.batch(150_000);
+            let hist = Histogram::exact(&recs, 24);
+            let g0 = GedikPartitioner::initial(strategy, 12, GedikConfig::default(), 4);
+            // second-generation update so current locations mix explicit
+            // routes and ring lookups
+            let g1 = g0.update(&hist);
+            let mut z2 = Zipf::new(30_000, 1.0, 12);
+            let hist2 = Histogram::exact(&z2.batch(150_000), 24);
+            let seq = g1.update(&hist2);
+            for threads in [2usize, 4, 7] {
+                let par = gedik_candidate(&g1, &hist2, threads);
+                assert_eq!(seq.explicit_routes(), par.explicit_routes(), "{strategy:?}");
+                for k in 0..20_000u64 {
+                    assert_eq!(
+                        seq.partition(k),
+                        par.partition(k),
+                        "{strategy:?}, {threads} threads, key {k}"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -4,6 +4,28 @@
 //! every (sampled) key into a bounded [`FreqCounter`]; at a histogram
 //! request from the DRM it harvests its local top-k and decays its
 //! counters so the next interval tracks the current distribution.
+//!
+//! DRWs share no state with each other, so the engines tap and harvest
+//! them on contiguous shards of scoped workers
+//! ([`tap_records_sharded`](crate::ddps::exec::tap_records_sharded),
+//! [`harvest_sharded`](crate::ddps::exec::parallel::harvest_sharded)) —
+//! each DRW sees its exact sequential observation sequence either way:
+//!
+//! ```
+//! use dynrepart::dr::DrWorker;
+//!
+//! let mut drw = DrWorker::new(16, 1.0, 42); // 16 counters, tap everything
+//! for _ in 0..90 {
+//!     drw.observe(7, 1.0);
+//! }
+//! for _ in 0..10 {
+//!     drw.observe(8, 1.0);
+//! }
+//! assert_eq!(drw.observed(), 100);
+//! let h = drw.harvest(2); // local top-2 for the DRM; decays the counters
+//! assert_eq!(h.entries()[0].key, 7);
+//! assert!((h.entries()[0].freq - 0.9).abs() < 1e-9);
+//! ```
 
 use crate::sketch::{FreqCounter, HeavyHitter, Histogram};
 use crate::util::Rng;

@@ -145,8 +145,40 @@ impl GedikPartitioner {
 
     /// Construct the updated function from a histogram. `prev` supplies the
     /// current location of each tracked key (consistent/explicit combined).
+    ///
+    /// The per-key current-location reads (a ring binary search or an
+    /// explicit-table hit per tracked key) are pure; this entry point
+    /// computes them inline and hands them to
+    /// [`GedikPartitioner::update_with_locations`], which the sharded
+    /// decision point ([`crate::dr::parallel::gedik_candidate`]) also
+    /// drives with the same table precomputed on scoped workers split by
+    /// key range — the greedy placement itself is identical either way.
     pub fn update(&self, hist: &Histogram) -> Self {
+        let cur_locs: Vec<u32> = match self.strategy {
+            // Redist re-places every tracked key from scratch and never
+            // reads its current location.
+            GedikStrategy::Redist => Vec::new(),
+            _ => hist
+                .entries()
+                .iter()
+                .map(|e| self.partition(e.key) as u32)
+                .collect(),
+        };
+        self.update_with_locations(hist, &cur_locs)
+    }
+
+    /// The order-sensitive core of [`GedikPartitioner::update`]:
+    /// `cur_locs[i]` is `self.partition(hist.entries()[i].key)` (unused —
+    /// and allowed empty — for [`GedikStrategy::Redist`]). The greedy
+    /// construction below is the unchanged sequential algorithm; only the
+    /// production of `cur_locs` is parallelized by the sharded decision
+    /// point.
+    pub fn update_with_locations(&self, hist: &Histogram, cur_locs: &[u32]) -> Self {
         let n = self.ring.n;
+        debug_assert!(
+            matches!(self.strategy, GedikStrategy::Redist) || cur_locs.len() == hist.len(),
+            "need one current location per tracked key"
+        );
         // Tail load per partition = ring arc share × residual mass.
         let residual = (1.0 - hist.heavy_mass()).max(0.0);
         let mut load: Vec<f64> = self
@@ -184,8 +216,8 @@ impl GedikPartitioner {
                 // migrates several times more state mass than KIP, whose
                 // line-4 "keep in place" test gives placement hysteresis.
                 let mut at: Vec<Vec<(Key, f64)>> = vec![Vec::new(); n];
-                for e in hist.entries() {
-                    let p = self.partition(e.key);
+                for (i, e) in hist.entries().iter().enumerate() {
+                    let p = cur_locs[i] as usize;
                     at[p].push((e.key, e.freq));
                     load[p] += e.freq;
                 }
@@ -212,8 +244,8 @@ impl GedikPartitioner {
                 // migration-first: stay if under bound, else first fit by
                 // scanning partitions in index order (cheap moves, coarse
                 // balance — matches its Fig 3 profile)
-                for e in hist.entries() {
-                    let p0 = self.partition(e.key);
+                for (i, e) in hist.entries().iter().enumerate() {
+                    let p0 = cur_locs[i] as usize;
                     let p = if load[p0] + e.freq <= bound {
                         p0
                     } else {

@@ -83,15 +83,66 @@ impl Kip {
     /// * `hash` — the weighted hash whose host map the update starts from
     ///   and rebalances (lines 11–15).
     /// * `hist` — the merged global histogram, decreasing frequency.
+    ///
+    /// The per-key location reads (lines 4 and 7) and the host→partition
+    /// bucketing (lines 11–13) are pure; this entry point computes them
+    /// inline and hands them to [`Kip::update_with_locations`], which the
+    /// sharded decision point ([`crate::dr::parallel::kip_candidate`])
+    /// also drives with the same tables precomputed on scoped workers —
+    /// so the sequential and sharded constructions are the same
+    /// operation sequence, bitwise.
     pub fn update(
         prev: &dyn Partitioner,
         hash: &WeightedHash,
         hist: &Histogram,
         cfg: KipConfig,
     ) -> Self {
+        assert_eq!(
+            prev.n_partitions(),
+            hash.n_partitions(),
+            "partition count change not supported here"
+        );
+        let prev_locs: Vec<u32> = hist
+            .entries()
+            .iter()
+            .map(|e| prev.partition(e.key) as u32)
+            .collect();
+        let hash_locs: Vec<u32> = hist
+            .entries()
+            .iter()
+            .map(|e| hash.partition(e.key) as u32)
+            .collect();
+        Self::update_with_locations(
+            &prev_locs,
+            &hash_locs,
+            hash.hosts_by_partition(),
+            hash,
+            hist,
+            cfg,
+        )
+    }
+
+    /// The order-sensitive core of **KIPUPDATE**, with every pure lookup
+    /// already tabulated: `prev_locs[i]` / `hash_locs[i]` are the line-4 /
+    /// line-7 locations of `hist.entries()[i]`, and `hosts_in` is
+    /// [`WeightedHash::hosts_by_partition`] of `hash`. The greedy heavy-key
+    /// placement and host bin-packing below run unchanged from the
+    /// sequential algorithm — parallelism lives entirely in *producing*
+    /// the tables (see DESIGN.md "Sharded DRM decision point" for why the
+    /// greedy itself must not be split).
+    pub fn update_with_locations(
+        prev_locs: &[u32],
+        hash_locs: &[u32],
+        mut hosts_in: Vec<Vec<usize>>,
+        hash: &WeightedHash,
+        hist: &Histogram,
+        cfg: KipConfig,
+    ) -> Self {
         let n = hash.n_partitions();
         let h = hash.n_hosts() as f64;
-        assert_eq!(prev.n_partitions(), n, "partition count change not supported here");
+        debug_assert_eq!(prev_locs.len(), hist.len());
+        debug_assert_eq!(hash_locs.len(), hist.len());
+        debug_assert_eq!(hosts_in.len(), n);
 
         // line 1: allowed level
         let maxload = (1.0 / n as f64).max(hist.top_freq()) + cfg.epsilon;
@@ -102,10 +153,10 @@ impl Kip {
         let mut explicit: KeyMap<u32> = key_map_with_capacity(hist.len());
 
         // lines 3–10: place heavy keys by decreasing frequency
-        for e in hist.entries() {
+        for (i, e) in hist.entries().iter().enumerate() {
             let (k, f) = (e.key, e.freq);
             // line 4: try to place k into the same partition as before
-            let p = prev.partition(k);
+            let p = prev_locs[i] as usize;
             if load[p] < maxload - f {
                 load[p] += f;
                 explicit.insert(k, p as u32);
@@ -113,7 +164,7 @@ impl Kip {
             }
             // line 7: try the hash location (its future home if it cools
             // down) to reduce potential migration later
-            let p = hash.partition(k);
+            let p = hash_locs[i] as usize;
             if load[p] < maxload - f {
                 load[p] += f;
                 explicit.insert(k, p as u32);
@@ -131,10 +182,6 @@ impl Kip {
 
         // lines 11–13: add tail mass — HOSTLOAD × hosts mapped to p
         let mut new_hash = hash.clone();
-        let mut hosts_in: Vec<Vec<usize>> = vec![Vec::new(); n];
-        for host in 0..new_hash.n_hosts() {
-            hosts_in[new_hash.partition_of_host(host)].push(host);
-        }
         for p in 0..n {
             load[p] += hostload * hosts_in[p].len() as f64;
         }

@@ -83,6 +83,19 @@ impl WeightedHash {
     pub fn host_map(&self) -> &[u32] {
         &self.host_to_partition
     }
+
+    /// Host *indices* currently mapped to each partition, each bucket in
+    /// ascending host order — the bin-packing input of Algorithm 1's
+    /// lines 11–15 ([`Kip::update`](super::Kip::update)). The sharded
+    /// decision point computes this concurrently with its key-range
+    /// location reads ([`crate::dr::parallel`]).
+    pub fn hosts_by_partition(&self) -> Vec<Vec<usize>> {
+        let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); self.n_partitions];
+        for (host, &p) in self.host_to_partition.iter().enumerate() {
+            buckets[p as usize].push(host);
+        }
+        buckets
+    }
 }
 
 impl Partitioner for WeightedHash {
@@ -116,6 +129,28 @@ mod tests {
         let w = WeightedHash::balanced(5, 50, 0);
         let counts = w.hosts_per_partition();
         assert_eq!(counts, vec![10; 5]);
+    }
+
+    #[test]
+    fn hosts_by_partition_lists_every_host_once_in_order() {
+        let mut w = WeightedHash::balanced(4, 16, 2);
+        w.set_host(0, 3);
+        w.set_host(9, 3);
+        let buckets = w.hosts_by_partition();
+        assert_eq!(buckets.len(), 4);
+        let mut seen = vec![false; 16];
+        for (p, bucket) in buckets.iter().enumerate() {
+            for win in bucket.windows(2) {
+                assert!(win[0] < win[1], "bucket {p} not in ascending host order");
+            }
+            for &h in bucket {
+                assert_eq!(w.partition_of_host(h), p);
+                assert!(!seen[h], "host {h} listed twice");
+                seen[h] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "some host missing from buckets");
+        assert!(buckets[3].contains(&0) && buckets[3].contains(&9));
     }
 
     #[test]

@@ -70,10 +70,13 @@ impl Histogram {
     ///
     /// This is the batch form of
     /// [`MergeableSketch::merge_from`](crate::sketch::MergeableSketch):
-    /// one accumulation pass over all locals (the decision-point hot path
-    /// merges every DRW histogram at once), where the pairwise trait fold
-    /// would re-sort per local. `merge_from_matches_batch_merge` pins
-    /// their equivalence.
+    /// one accumulation pass over all locals, where the pairwise trait
+    /// fold re-sorts per node. The DRM decision point merges the DRW
+    /// locals through the pairwise form — as a deterministic,
+    /// parallelizable tree
+    /// ([`merge_histograms_tree`](crate::dr::parallel::merge_histograms_tree))
+    /// — and keeps this batch form for blending the few past histograms.
+    /// `merge_from_matches_batch_merge` pins the two equivalent.
     pub fn merge(locals: &[Histogram], k: usize) -> Self {
         let total: f64 = locals.iter().map(|h| h.total_weight).sum();
         if total <= 0.0 {
@@ -156,6 +159,18 @@ impl super::MergeableSketch for Histogram {
     /// keys so no mass is lost mid-fold; callers re-bound the footprint
     /// with [`Histogram::truncate_top`] once the fold is done (exactly
     /// what [`Histogram::merge`]'s top-`k` build does implicitly).
+    ///
+    /// Ranking is on the accumulated *absolute* counts (ties broken by
+    /// key), not on the rounded relative frequencies: two distinct counts
+    /// can round to the same `c / total`, and ranking on the rounded
+    /// values would let division rounding — which varies with the fold
+    /// shape — reorder tied heavy hitters between a pairwise fold and the
+    /// batch merge. Count-space ranking is exactly what
+    /// [`Histogram::merge`]'s `from_counts` build sorts on, so any fold
+    /// shape (left fold, tree reduction) agrees with the batch merge on
+    /// ranking whenever it agrees on the counts. The DRM's parallel
+    /// tree-merge ([`crate::dr::parallel::merge_histograms_tree`]) relies
+    /// on this.
     fn merge_from(&mut self, other: &Self) {
         let total = self.total_weight + other.total_weight;
         if total <= 0.0 {
@@ -168,16 +183,15 @@ impl super::MergeableSketch for Histogram {
         for e in &other.entries {
             *acc.entry(e.key).or_insert(0.0) += e.freq * other.total_weight;
         }
-        let mut entries: Vec<HistogramEntry> = acc
+        let mut counts: Vec<(Key, f64)> = acc.into_iter().filter(|&(_, c)| c > 0.0).collect();
+        counts.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        self.entries = counts
             .into_iter()
-            .filter(|&(_, c)| c > 0.0)
             .map(|(key, c)| HistogramEntry {
                 key,
                 freq: (c / total).min(1.0),
             })
             .collect();
-        entries.sort_by(|a, b| b.freq.total_cmp(&a.freq).then(a.key.cmp(&b.key)));
-        self.entries = entries;
         self.total_weight = total;
     }
 }
@@ -269,6 +283,40 @@ mod tests {
                 assert!((x.freq - y.freq).abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn merge_from_ranking_is_fold_shape_independent() {
+        // Three locals with dyadic counts over power-of-two totals, so
+        // every non-root fold step divides exactly and both shapes hand
+        // the root the same exact integer counts; keys 5/6/7 tie at 8.
+        // The left fold and the right fold must produce identical
+        // entries, and tied counts must break by key — never by which
+        // merge step happened to see them first. (Ranking is compared in
+        // count space *before* the root's division, so the tie survives
+        // even where `c / total` rounds.)
+        let locals = [
+            Histogram::from_counts(&[(7, 8.0), (1, 16.0)], 64.0, 8),
+            Histogram::from_counts(&[(5, 4.0), (2, 32.0)], 64.0, 8),
+            Histogram::from_counts(&[(6, 8.0), (5, 4.0), (3, 2.0)], 64.0, 8),
+        ];
+        // left fold: (l0 + l1) + l2
+        let mut left = locals[0].clone();
+        left.merge_from(&locals[1]);
+        left.merge_from(&locals[2]);
+        // right fold: l0 + (l1 + l2)
+        let mut tail = locals[1].clone();
+        tail.merge_from(&locals[2]);
+        let mut right = locals[0].clone();
+        right.merge_from(&tail);
+        assert_eq!(left.entries(), right.entries(), "fold shape reordered ranking");
+        // counts: 1→16, 2→32, 3→2, 5→8, 6→8, 7→8; ties 5/6/7 rank by key
+        let keys: Vec<Key> = left.entries().iter().map(|e| e.key).collect();
+        assert_eq!(keys, vec![2, 1, 5, 6, 7, 3]);
+        // and the batch merge agrees (it ranks on counts too)
+        let batch = Histogram::merge(&locals, 8);
+        let bkeys: Vec<Key> = batch.entries().iter().map(|e| e.key).collect();
+        assert_eq!(keys, bkeys, "fold and batch merge rank differently");
     }
 
     #[test]

@@ -108,10 +108,15 @@ pub trait HeavyHitter {
 /// - bounded-memory sketches re-establish their capacity bound after the
 ///   merge (evicting smallest counters, as in mergeable SpaceSaving).
 ///
-/// [`Histogram::merge`] — the hot-path merge the DRM decision point
-/// runs — is the *batch* form of this fold: one accumulation pass over
-/// all locals rather than pairwise `merge_from` calls, with a test
-/// (`merge_from_matches_batch_merge`) pinning the two equivalent.
+/// The DRM decision point merges the DRW locals through this trait, as
+/// a deterministic pairwise tree that parallelizes without changing a
+/// bit ([`merge_histograms_tree`](crate::dr::parallel::merge_histograms_tree));
+/// `merge_from`'s ranking is on accumulated absolute counts with ties
+/// broken by key, so no fold shape can reorder tied heavy hitters.
+/// [`Histogram::merge`] is the *batch* form of the fold — one
+/// accumulation pass over all locals, used to blend the few past
+/// histograms — with a test (`merge_from_matches_batch_merge`) pinning
+/// the two equivalent.
 pub trait MergeableSketch {
     /// Fold `other`'s observations into `self`.
     fn merge_from(&mut self, other: &Self);

@@ -1,12 +1,17 @@
-//! Property tests for executor-sharding invariance: for every engine,
-//! `num_threads = N` must reproduce the `num_threads = 1` reports exactly —
-//! routing (loads / record counts), epochs and virtual times are compared
-//! bitwise. Wall-clock fields (`wall_s`) are measurements and are the only
+//! Property tests for executor- and DRM-sharding invariance: for every
+//! engine, `num_threads = N` must reproduce the `num_threads = 1` reports
+//! exactly — routing (loads / record counts), epochs, virtual times, DRM
+//! decisions and migration plans are compared bitwise. Wall-clock fields
+//! (`wall_s`, `decision_wall_s`) are measurements and are the only
 //! reported values allowed to differ. Replay failures with
 //! `PROP_SEED=<seed> PROP_CASES=1`.
 
-use dynrepart::ddps::{BatchJob, EngineConfig, MicroBatchEngine, StreamingEngine};
-use dynrepart::dr::{DrConfig, PartitionerChoice};
+use dynrepart::ddps::{
+    decision_point_sharded, tap_records_sharded, BatchJob, EngineConfig, MicroBatchEngine,
+    StreamingEngine, TapAssignment,
+};
+use dynrepart::dr::{DrConfig, DrMaster, DrWorker, PartitionerChoice};
+use dynrepart::partitioner::GedikStrategy;
 use dynrepart::prop::{forall, Gen};
 use dynrepart::workload::{zipf::Zipf, Generator, Record};
 
@@ -50,6 +55,80 @@ fn assert_vec_bits(a: &[f64], b: &[f64], what: &str) {
     for (x, y) in a.iter().zip(b) {
         assert_bits(*x, *y, what);
     }
+}
+
+/// The DRM-sharding invariant: for random workloads, partitioner families
+/// and thread counts, the sharded decision point (sharded harvests +
+/// histogram tree-merge + key-range candidate preparation) produces
+/// decisions, epoch sequences and migration plans bitwise-identical to
+/// the sequential path.
+#[test]
+fn drm_decisions_epochs_and_plans_identical_across_thread_counts() {
+    forall(8, |g| {
+        let n_partitions = g.usize(2..12);
+        let n_workers = g.usize(1..9);
+        let threads = g.usize(2..6);
+        let (batches, seed) = gen_batches(g, 3);
+        let dr = gen_dr(g);
+        let choice = match g.usize(0..6) {
+            0 => PartitionerChoice::Kip,
+            1 => PartitionerChoice::Mixed,
+            2 => PartitionerChoice::Gedik(GedikStrategy::Scan),
+            3 => PartitionerChoice::Gedik(GedikStrategy::Readj),
+            4 => PartitionerChoice::Gedik(GedikStrategy::Redist),
+            _ => PartitionerChoice::Uhp,
+        };
+        let mut drm_seq = DrMaster::new(dr, choice, n_partitions, seed);
+        let mut drm_par = DrMaster::new(dr, choice, n_partitions, seed);
+        let make_workers = |drm: &DrMaster| -> Vec<DrWorker> {
+            (0..n_workers)
+                .map(|w| {
+                    DrWorker::new(drm.worker_capacity(), dr.sample_rate, seed ^ (w as u64) << 8)
+                })
+                .collect()
+        };
+        let mut w_seq = make_workers(&drm_seq);
+        let mut w_par = make_workers(&drm_par);
+        for (round, b) in batches.iter().enumerate() {
+            tap_records_sharded(&mut w_seq, b, TapAssignment::Chunked, 1);
+            tap_records_sharded(&mut w_par, b, TapAssignment::Chunked, threads);
+            let ds = decision_point_sharded(&mut drm_seq, &mut w_seq, 1);
+            let dp = decision_point_sharded(&mut drm_par, &mut w_par, threads);
+            let tag = format!("{} round {round}, {threads} threads", choice.name());
+            assert_eq!(ds.repartitioned(), dp.repartitioned(), "{tag}");
+            assert_eq!(ds.epoch, dp.epoch, "{tag}: epoch diverged");
+            assert_eq!(
+                ds.histogram.entries(),
+                dp.histogram.entries(),
+                "{tag}: merged histograms diverged"
+            );
+            assert_bits(ds.current_max_share, dp.current_max_share, "current_max_share");
+            assert_bits(ds.planned_max_share, dp.planned_max_share, "planned_max_share");
+            match (&ds.swap, &dp.swap) {
+                (Some(ss), Some(sp)) => {
+                    assert_eq!(ss.from_epoch(), sp.from_epoch(), "{tag}");
+                    assert_eq!(ss.to_epoch(), sp.to_epoch(), "{tag}");
+                    let keys = 0..5_000u64;
+                    let plan_s = ss.plan(keys.clone());
+                    let plan_p = sp.plan(keys.clone());
+                    assert_eq!(plan_s, plan_p, "{tag}: migration plans diverged");
+                    for k in keys {
+                        assert_eq!(
+                            ss.to.partition(k),
+                            sp.to.partition(k),
+                            "{tag}: routing diverged at key {k}"
+                        );
+                    }
+                }
+                (None, None) => {}
+                _ => unreachable!("repartitioned() already compared"),
+            }
+            assert!(ds.decision_wall_s >= 0.0 && dp.decision_wall_s >= 0.0);
+        }
+        assert_eq!(drm_seq.epoch(), drm_par.epoch());
+        assert_eq!(drm_seq.updates_issued(), drm_par.updates_issued());
+        assert_eq!(drm_seq.decisions_made(), drm_par.decisions_made());
+    });
 }
 
 #[test]
