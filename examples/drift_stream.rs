@@ -26,12 +26,14 @@ fn main() {
         ("DR   ", DrConfig::default(), PartitionerChoice::Kip),
     ] {
         let mut engine = StreamingEngine::new(cfg, dr, choice, 7);
-        let mut lfm = Lfm::new(lfm_cfg.clone(), 7);
+        // the engine pulls intervals from the drifting source itself
+        // (unified pipelined loop; drift happens at each batch boundary)
+        let mut source = Lfm::new(lfm_cfg.clone(), 7).drifting();
         println!("== {label} ==");
-        for interval in 0..15 {
-            let report = engine.run_interval(&lfm.next_batch(100_000));
+        for report in engine.run_stream(&mut source, 100_000, 15) {
             println!(
-                "  interval {interval:>2}: {:>9.0} rec/s  imbalance {:.2}  migrated {:>5.2}%  {}",
+                "  interval {:>2}: {:>9.0} rec/s  imbalance {:.2}  migrated {:>5.2}%  {}",
+                report.interval_no - 1,
                 report.throughput,
                 report.imbalance,
                 report.migrated_fraction * 100.0,

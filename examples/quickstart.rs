@@ -6,13 +6,15 @@
 
 use dynrepart::ddps::{EngineConfig, MicroBatchEngine};
 use dynrepart::dr::{DrConfig, PartitionerChoice};
-use dynrepart::workload::{zipf::Zipf, Generator};
+use dynrepart::workload::zipf::Zipf;
 
 fn main() {
     let cfg = EngineConfig {
         n_partitions: 35,
         n_slots: 40,
-        ..Default::default()
+        // DYNREPART_THREADS > 1 shards the executor AND pipelines the
+        // drive loop (source ∥ decision point ∥ stage)
+        ..EngineConfig::from_env()
     };
 
     let run = |with_dr: bool| {
@@ -23,11 +25,13 @@ fn main() {
         };
         let mut engine = MicroBatchEngine::new(cfg, dr, choice, 42);
         let mut zipf = Zipf::new(100_000, 1.0, 42);
-        for batch_no in 0..10 {
-            let report = engine.run_batch(&zipf.batch(100_000));
+        // the engine pulls micro-batches from the source itself: the
+        // unified pipelined drive loop
+        for report in engine.run_stream(&mut zipf, 100_000, 10) {
             println!(
-                "  [{}] batch {batch_no}: {:.3}s  imbalance {:.2}  {}",
+                "  [{}] batch {}: {:.3}s  imbalance {:.2}  {}",
                 if with_dr { "DR  " } else { "hash" },
+                report.batch_no,
                 report.makespan,
                 report.imbalance,
                 if report.repartitioned { "(repartitioned)" } else { "" },

@@ -30,4 +30,30 @@ fn main() {
         with.imbalance, without.imbalance, with.replayed_records,
     );
     let _ = fig8::left(scale); // exercises the Fig 8 (left) path too
+
+    // The pipelined round sequence: the crawl is itself a Source, so with
+    // DYNREPART_THREADS > 1 round k+1's frontier expansion runs while
+    // round k's shuffle stage executes (watch source_wall_s disappear
+    // into the stage's shadow as pipeline_occupancy exceeds 1).
+    println!("\npipelined DR rounds over a CrawlSource (threads from DYNREPART_THREADS):");
+    let job = dynrepart::ddps::BatchJob::new(
+        fig7::engine_config(fig7::EXECUTORS * fig7::CORES),
+        dynrepart::dr::DrConfig {
+            counter_capacity_factor: 16,
+            lambda: 4,
+            ..Default::default()
+        },
+        dynrepart::dr::PartitionerChoice::Kip,
+        99,
+    );
+    let mut source = dynrepart::workload::webcrawl::Crawl::with_defaults(99).into_source();
+    for (i, r) in job.run_stream(&mut source, 0, 7).iter().enumerate() {
+        println!(
+            "  round {}: {:>10.2} virtual s  source {:>6.1} ms  occupancy {:.2}",
+            i + 1,
+            r.makespan,
+            r.source_wall_s * 1e3,
+            r.pipeline_occupancy,
+        );
+    }
 }

@@ -1,0 +1,123 @@
+//! Pipeline overlap: wall clock of the unified drive loop, lockstep
+//! (manual `batch` → `run_batch`, source on the critical path) vs
+//! pipelined (`run_stream`, source + decision point overlapped with the
+//! stage) at 1/2/4/8 threads. Virtual-time results are identical across
+//! both drives and all thread counts by construction (pinned by
+//! `tests/prop_parallel.rs`); this bench measures the real-time columns
+//! — `wall_s`, `decision_wall_s`, `source_wall_s` — and the
+//! pipeline-occupancy ratio. See EXPERIMENTS.md "Pipeline overlap".
+use dynrepart::bench::{bench_with, black_box, header, BenchOpts};
+use dynrepart::ddps::{EngineConfig, MicroBatchEngine, StreamingEngine};
+use dynrepart::dr::{DrConfig, PartitionerChoice};
+use dynrepart::workload::{zipf::Zipf, Generator};
+
+const THREAD_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let n_batches = 6usize;
+    let per_batch = if quick { 60_000 } else { 500_000 };
+    let n_partitions = 32;
+    let keys = 100_000;
+    let opts = BenchOpts {
+        budget_s: 1.0,
+        ..Default::default()
+    };
+
+    header(&format!(
+        "micro-batch drive: {n_batches} batches x {per_batch} records, {n_partitions} partitions"
+    ));
+    for threads in THREAD_SWEEP {
+        let cfg = EngineConfig {
+            n_partitions,
+            n_slots: 16,
+            num_threads: threads,
+            ..Default::default()
+        };
+        let lock = bench_with(
+            &format!("lockstep  (batch; run_batch), {threads} thread(s)"),
+            opts,
+            &mut || {
+                let mut e =
+                    MicroBatchEngine::new(cfg, DrConfig::default(), PartitionerChoice::Kip, 7);
+                let mut z = Zipf::new(keys, 1.1, 7);
+                for _ in 0..n_batches {
+                    black_box(e.run_batch(&z.batch(per_batch)));
+                }
+            },
+        );
+        println!("{}", lock.report());
+        let mut occupancy = 0.0;
+        let pipe = bench_with(
+            &format!("pipelined (run_stream),       {threads} thread(s)"),
+            opts,
+            &mut || {
+                let mut e =
+                    MicroBatchEngine::new(cfg, DrConfig::default(), PartitionerChoice::Kip, 7);
+                let mut z = Zipf::new(keys, 1.1, 7);
+                black_box(e.run_stream(&mut z, per_batch, n_batches));
+                occupancy = e.metrics().pipeline_occupancy();
+            },
+        );
+        println!(
+            "{}  overlap gain vs lockstep: {:.2}x  occupancy {:.2}",
+            pipe.report(),
+            lock.mean_ns / pipe.mean_ns,
+            occupancy
+        );
+    }
+
+    header("streaming drive (pinned stage, barrier decision overlapped)");
+    for threads in THREAD_SWEEP {
+        let cfg = EngineConfig {
+            n_partitions,
+            n_slots: n_partitions,
+            num_threads: threads,
+            task_overhead: 0.0,
+            ..Default::default()
+        };
+        let mut occupancy = 0.0;
+        let m = bench_with(
+            &format!("run_stream, {threads} thread(s)"),
+            opts,
+            &mut || {
+                let mut e =
+                    StreamingEngine::new(cfg, DrConfig::default(), PartitionerChoice::Kip, 9);
+                let mut z = Zipf::new(keys, 1.1, 9);
+                black_box(e.run_stream(&mut z, per_batch, n_batches));
+                occupancy = e.metrics().pipeline_occupancy();
+            },
+        );
+        println!("{}  occupancy {:.2}", m.report(), occupancy);
+    }
+
+    // Identity assertion: the 8-thread pipelined drive must reproduce the
+    // sequential lockstep reports bitwise (virtual columns + state).
+    let seq_cfg = EngineConfig {
+        n_partitions,
+        n_slots: 16,
+        ..Default::default()
+    };
+    let par_cfg = EngineConfig {
+        num_threads: 8,
+        ..seq_cfg
+    };
+    let mut seq = MicroBatchEngine::new(seq_cfg, DrConfig::default(), PartitionerChoice::Kip, 11);
+    let mut zs = Zipf::new(keys, 1.1, 11);
+    let manual: Vec<_> = (0..n_batches).map(|_| seq.run_batch(&zs.batch(per_batch))).collect();
+    let mut par = MicroBatchEngine::new(par_cfg, DrConfig::default(), PartitionerChoice::Kip, 11);
+    let mut zp = Zipf::new(keys, 1.1, 11);
+    let streamed = par.run_stream(&mut zp, per_batch, n_batches);
+    assert_eq!(manual.len(), streamed.len());
+    for (a, b) in manual.iter().zip(&streamed) {
+        assert_eq!(a.epoch, b.epoch);
+        assert_eq!(a.repartitioned, b.repartitioned);
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.loads, b.loads);
+    }
+    assert_eq!(
+        seq.total_state_weight().to_bits(),
+        par.total_state_weight().to_bits()
+    );
+    println!("\n8-thread pipelined drive bitwise-identical to sequential lockstep: ok");
+}

@@ -12,15 +12,19 @@
 //! an early stage of the execution so that the cost of replay does not
 //! exceed the expected gains of better partitioning."
 //!
-//! Thin driver over the shared [`ShuffleStage`] core: one stage per job,
-//! with a single mid-map decision point whose epoch swap prices the
-//! replay of already-evicted prefix records.
+//! Thin wrapper over the unified loop's one-shot job step
+//! ([`pipeline::job_step`]): one stage per job, with a single mid-map
+//! decision point whose epoch swap prices the replay of already-evicted
+//! prefix records. [`BatchJob::run_stream`] drives a *sequence* of jobs
+//! (crawl rounds) over a [`Source`], materializing round *k+1*'s records
+//! while round *k*'s stage runs ([`pipeline::drive_jobs`]).
 
-use super::exec::{self, Scheduling, ShuffleStage, TapAssignment};
+use super::pipeline::{self, StepReport};
 use super::{EngineConfig, EngineMetrics};
-use crate::dr::{DrConfig, DrMaster, DrWorker, PartitionerChoice};
+use crate::dr::{DrConfig, PartitionerChoice};
 use crate::util::VTime;
-use crate::workload::Record;
+use crate::workload::{Record, Source};
+use std::time::Instant;
 
 #[derive(Debug, Clone)]
 pub struct JobReport {
@@ -39,6 +43,20 @@ pub struct JobReport {
     /// construction). Compare against `wall_s` for the decision-latency
     /// budget (EXPERIMENTS.md "Decision latency").
     pub decision_wall_s: f64,
+    /// Measured wall-clock seconds materializing this job's records from
+    /// its [`Source`] — the round-pipeline's prefetch lane. 0.0 when the
+    /// records were handed to [`BatchJob::run`] directly.
+    pub source_wall_s: f64,
+    /// Measured wall-clock seconds of this job's drive span (the
+    /// occupancy denominator); [`BatchJob::aggregate`] sums it so the
+    /// aggregated [`EngineMetrics::pipeline_occupancy`] works for round
+    /// sequences, which have no persistent engine to accumulate it.
+    pub pipeline_wall_s: f64,
+    /// Measured work seconds attributed to this job (stage + decision
+    /// point + source) per wall second of its drive span: ≲ 1 for a
+    /// standalone job, > 1 when [`BatchJob::run_stream`] overlaps the
+    /// next round's materialization (EXPERIMENTS.md "Pipeline overlap").
+    pub pipeline_occupancy: f64,
     pub replayed_records: u64,
     pub repartitioned: bool,
     pub loads: Vec<f64>,
@@ -73,64 +91,70 @@ impl BatchJob {
         }
     }
 
-    /// Execute the job. The DRM decision fires once, after `decision_at`
-    /// of the input has been mapped; earlier output is replayed.
-    pub fn run(&self, records: &[Record]) -> JobReport {
-        let n = self.cfg.n_partitions;
-        let mut drm = DrMaster::new(self.dr, self.choice, n, self.seed);
-        let mut workers: Vec<DrWorker> = (0..self.cfg.n_slots)
-            .map(|w| {
-                DrWorker::new(
-                    drm.worker_capacity(),
-                    self.dr.sample_rate,
-                    self.seed ^ (w as u64) << 8,
-                )
-            })
-            .collect();
-        let mut partitioner = drm.handle();
-
-        let cut = ((records.len() as f64 * self.decision_at) as usize).min(records.len());
-
-        // Map phase part 1: the prefix, observed by the DRWs and already
-        // evicted with the initial (epoch-0) partitioner. Taps and the
-        // decision-point harvest ride the executor's sharding.
-        exec::tap_records_sharded(
-            &mut workers,
-            &records[..cut],
-            TapAssignment::Chunked,
-            self.cfg.num_threads,
-        );
-
-        // DRM decision point: decision → epoch bump → replay plan.
-        let decision = exec::decision_point_sharded(&mut drm, &mut workers, self.cfg.num_threads);
-        let decision_wall_s = decision.decision_wall_s;
-        let (repartitioned, replayed, replay_time) = match decision.swap {
-            Some(swap) => {
-                partitioner = swap.to.clone();
-                // prefix assignments recomputed with the new partitioner
-                (true, cut as u64, cut as f64 * self.cfg.replay_cost)
-            }
-            None => (false, 0, 0.0),
-        };
-
-        // Map phase part 2 + shuffle + wave-scheduled reduce with the
-        // (possibly new) epoch, through the shared core.
-        let stage = ShuffleStage::new(&self.cfg, Scheduling::Wave).run(records, &partitioner, None);
-
+    fn report(step: StepReport) -> JobReport {
         JobReport {
-            makespan: stage.map_time + replay_time + stage.reduce_time,
-            map_time: stage.map_time,
-            reduce_time: stage.reduce_time,
-            replay_time,
-            wall_s: stage.wall_s,
-            decision_wall_s,
-            replayed_records: replayed,
-            repartitioned,
-            imbalance: stage.imbalance,
-            loads: stage.loads,
-            record_counts: stage.record_counts,
-            epoch: partitioner.epoch(),
+            makespan: step.makespan,
+            map_time: step.stage.map_time,
+            reduce_time: step.stage.reduce_time,
+            replay_time: step.replay_time,
+            wall_s: step.stage.wall_s,
+            decision_wall_s: step.decision_wall_s,
+            source_wall_s: step.source_wall_s,
+            pipeline_wall_s: step.pipeline_wall_s,
+            pipeline_occupancy: step.pipeline_occupancy,
+            replayed_records: step.replayed_records,
+            repartitioned: step.repartitioned,
+            imbalance: step.stage.imbalance,
+            loads: step.stage.loads,
+            record_counts: step.stage.record_counts,
+            epoch: step.epoch,
         }
+    }
+
+    /// Execute the job. The DRM decision fires once, after `decision_at`
+    /// of the input has been mapped; earlier output is replayed. One
+    /// one-shot step of the unified loop ([`pipeline::job_step`]).
+    pub fn run(&self, records: &[Record]) -> JobReport {
+        Self::report(pipeline::job_step(
+            &self.cfg,
+            self.dr,
+            self.choice,
+            self.seed,
+            self.decision_at,
+            records,
+            0.0,
+            Instant::now(),
+            &mut || {},
+        ))
+    }
+
+    /// Run a sequence of independent jobs — one per batch pulled from
+    /// `source` (e.g. a [`CrawlSource`]'s rounds), up to `max_jobs`. With
+    /// `num_threads > 1`, round *k+1*'s records materialize on the
+    /// prefetch lane while round *k*'s shuffle stage runs; each job's
+    /// report is bitwise-identical to a standalone [`BatchJob::run`] on
+    /// the same records.
+    ///
+    /// [`CrawlSource`]: crate::workload::webcrawl::CrawlSource
+    pub fn run_stream(
+        &self,
+        source: &mut dyn Source,
+        batch_size: usize,
+        max_jobs: usize,
+    ) -> Vec<JobReport> {
+        pipeline::drive_jobs(
+            &self.cfg,
+            self.dr,
+            self.choice,
+            self.seed,
+            self.decision_at,
+            source,
+            batch_size,
+            max_jobs,
+        )
+        .into_iter()
+        .map(Self::report)
+        .collect()
     }
 
     /// Convenience: run with DR on and off, returning (with, without).
@@ -155,6 +179,8 @@ impl BatchJob {
             m.replay_vtime += r.replay_time;
             m.wall_s += r.wall_s;
             m.decision_wall_s += r.decision_wall_s;
+            m.source_wall_s += r.source_wall_s;
+            m.pipeline_wall_s += r.pipeline_wall_s;
             m.repartition_count += r.repartitioned as u64;
         }
         m
@@ -164,7 +190,7 @@ impl BatchJob {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::workload::{zipf::Zipf, Generator};
+    use crate::workload::{zipf::Zipf, Generator, ReplaySource};
 
     fn cfg() -> EngineConfig {
         EngineConfig {
@@ -261,5 +287,37 @@ mod tests {
         let m = BatchJob::aggregate(&reports);
         let sum: f64 = reports.iter().map(|r| r.makespan).sum();
         assert!((m.total_vtime - sum).abs() < 1e-9);
+    }
+
+    #[test]
+    fn run_stream_jobs_match_standalone_runs() {
+        // each job in a pipelined round sequence must be bitwise-identical
+        // to a standalone run on the same records, at any thread count.
+        let mut z = Zipf::new(20_000, 1.2, 7);
+        let rounds: Vec<Vec<crate::workload::Record>> =
+            (0..3).map(|_| z.batch(40_000)).collect();
+        let job = BatchJob::new(cfg(), DrConfig::default(), PartitionerChoice::Kip, 7);
+        let standalone: Vec<JobReport> = rounds.iter().map(|r| job.run(r)).collect();
+        for threads in [1usize, 4] {
+            let par_job = BatchJob::new(
+                EngineConfig {
+                    num_threads: threads,
+                    ..cfg()
+                },
+                DrConfig::default(),
+                PartitionerChoice::Kip,
+                7,
+            );
+            let mut src = ReplaySource::new(rounds.clone());
+            let streamed = par_job.run_stream(&mut src, 0, 10);
+            assert_eq!(streamed.len(), standalone.len(), "{threads} threads");
+            for (a, b) in standalone.iter().zip(&streamed) {
+                assert_eq!(a.repartitioned, b.repartitioned, "{threads} threads");
+                assert_eq!(a.epoch, b.epoch, "{threads} threads");
+                assert_eq!(a.replayed_records, b.replayed_records, "{threads} threads");
+                assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{threads} threads");
+                assert_eq!(a.record_counts, b.record_counts, "{threads} threads");
+            }
+        }
     }
 }

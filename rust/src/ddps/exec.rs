@@ -12,10 +12,15 @@
 //! | microbatch | chunked, every batch  | [`Scheduling::Wave`]   | between batches       |
 //! | streaming  | round-robin sources   | [`Scheduling::Pinned`] | checkpoint barrier    |
 //!
-//! [`ShuffleStage`] implements the loop once; the engines are thin drivers
-//! that sequence decision points, stages and epoch swaps. The stage
-//! executes in one of two modes, selected by
-//! [`EngineConfig::num_threads`]:
+//! [`ShuffleStage`] implements the loop once; the sequencing of decision
+//! points, stages and epoch swaps lives in the unified drive loop
+//! ([`pipeline`](super::pipeline)), with the engines as thin wrappers
+//! over it. The full decision step (harvest → decide → adopt) has a
+//! single entry point here, [`decide_and_adopt`], split into its
+//! [`decision_point_sharded`] and [`adopt_decision`] halves so the
+//! pipelined loop can compute a decision concurrently with a stage and
+//! adopt it at the epoch-swap barrier. The stage executes in one of two
+//! modes, selected by [`EngineConfig::num_threads`]:
 //!
 //! | mode       | `num_threads` | execution                                             |
 //! |------------|---------------|-------------------------------------------------------|
@@ -260,6 +265,17 @@ pub struct MigrationReport {
     pub migrated_fraction: f64,
 }
 
+impl MigrationReport {
+    /// The no-migration report (kept decision, or stateless adoption).
+    pub fn none() -> Self {
+        Self {
+            pause: 0.0,
+            moved_weight: 0.0,
+            migrated_fraction: 0.0,
+        }
+    }
+}
+
 /// Execute `swap`'s migration plan over the per-partition stores: every
 /// key whose partition changed drags its operator state, paying
 /// `migration_cost` per unit of weight. The plan is derived from the
@@ -291,6 +307,86 @@ pub fn apply_epoch_swap(
         moved_weight: moved,
         migrated_fraction: if total_weight > 0.0 { moved / total_weight } else { 0.0 },
     }
+}
+
+/// Outcome of one full DRM decision step ([`decide_and_adopt`] /
+/// [`adopt_decision`]): the measured decision-point cost, whether a new
+/// partitioner was installed, and the resulting state migration (zeroed
+/// when the decision kept the current function or no stores were given).
+#[derive(Debug, Clone, Copy)]
+pub struct DecisionOutcome {
+    /// Measured wall-clock seconds of the decision point (harvests +
+    /// merge + candidate construction), copied from
+    /// [`DrDecision::decision_wall_s`].
+    pub decision_wall_s: f64,
+    /// Did this step install a new partitioner (epoch bump)?
+    pub repartitioned: bool,
+    /// State migration performed by the adoption;
+    /// [`MigrationReport::none`] when nothing moved.
+    pub migration: MigrationReport,
+    /// The epoch in force after adoption.
+    pub epoch: u64,
+}
+
+/// Adopt a [`DrDecision`]: on an accepted swap, migrate keyed state along
+/// the derived plan (when `stores` are given — stateless batch jobs pass
+/// `None` and price a *replay* instead) and switch the engine's routing
+/// snapshot to the new epoch. This is the adoption half of the decision
+/// step; [`decide_and_adopt`] fuses it with the harvest half. The
+/// split exists for the pipelined loop
+/// ([`pipeline`](crate::ddps::pipeline)), which computes the decision
+/// concurrently with the previous stage and adopts it at the epoch-swap
+/// barrier.
+pub fn adopt_decision(
+    cfg: &EngineConfig,
+    decision: DrDecision,
+    partitioner: &mut PartitionerEpoch,
+    stores: Option<&mut [StateStore]>,
+    metrics: &mut EngineMetrics,
+) -> DecisionOutcome {
+    let decision_wall_s = decision.decision_wall_s;
+    let Some(swap) = decision.swap else {
+        return DecisionOutcome {
+            decision_wall_s,
+            repartitioned: false,
+            migration: MigrationReport::none(),
+            epoch: partitioner.epoch(),
+        };
+    };
+    let migration = match stores {
+        Some(stores) => adopt_swap(cfg, stores, partitioner, metrics, &swap),
+        None => {
+            // Stateless adoption (batch jobs): only the routing snapshot
+            // switches; the caller prices the mapper-output replay.
+            *partitioner = swap.to.clone();
+            metrics.repartition_count += 1;
+            MigrationReport::none()
+        }
+    };
+    DecisionOutcome {
+        decision_wall_s,
+        repartitioned: true,
+        migration,
+        epoch: partitioner.epoch(),
+    }
+}
+
+/// The full DRM decision step every engine performs the same way —
+/// sharded DRW harvest → merge/decide ([`decision_point_sharded`]) →
+/// adoption ([`adopt_decision`]). One entry point instead of three
+/// per-engine copies of the harvest → swap → adopt boilerplate; the
+/// unified loop in [`pipeline`](crate::ddps::pipeline) is its only
+/// caller besides tests.
+pub fn decide_and_adopt(
+    cfg: &EngineConfig,
+    drm: &mut DrMaster,
+    workers: &mut [DrWorker],
+    partitioner: &mut PartitionerEpoch,
+    stores: Option<&mut [StateStore]>,
+    metrics: &mut EngineMetrics,
+) -> DecisionOutcome {
+    let decision = decision_point_sharded(drm, workers, cfg.num_threads);
+    adopt_decision(cfg, decision, partitioner, stores, metrics)
 }
 
 /// Adopt an accepted decision — the step every engine performs the same
@@ -462,6 +558,69 @@ mod tests {
         );
         for k in 0..5_000u64 {
             assert_eq!(sp.partition(k), pp.partition(k), "routing diverged at key {k}");
+        }
+    }
+
+    #[test]
+    fn decide_and_adopt_equals_manual_decision_then_adoption() {
+        use crate::dr::{DrConfig, PartitionerChoice};
+        let cfg = cfg(6, 6);
+        let make = || {
+            let drm = DrMaster::new(DrConfig::forced(), PartitionerChoice::Kip, 6, 21);
+            let workers: Vec<DrWorker> = (0..4)
+                .map(|w| DrWorker::new(drm.worker_capacity(), 1.0, 21 ^ (w as u64) << 8))
+                .collect();
+            let partitioner = drm.handle();
+            let stores: Vec<StateStore> = (0..6).map(|_| StateStore::new()).collect();
+            (drm, workers, partitioner, stores)
+        };
+        let mut z = Zipf::new(2_000, 1.3, 21);
+        let recs = z.batch(30_000);
+
+        // fused path, with stores (micro-batch / streaming shape)
+        let (mut drm_a, mut w_a, mut p_a, mut s_a) = make();
+        for r in &recs {
+            s_a[p_a.partition(r.key)].fold_count(r.key, r.weight);
+        }
+        tap_records(&mut w_a, &recs, TapAssignment::Chunked);
+        let mut m_a = EngineMetrics::default();
+        let out_a = decide_and_adopt(
+            &cfg,
+            &mut drm_a,
+            &mut w_a,
+            &mut p_a,
+            Some(s_a.as_mut_slice()),
+            &mut m_a,
+        );
+        assert!(out_a.repartitioned, "forced update must fire");
+        assert_eq!(out_a.epoch, 1);
+        assert_eq!(p_a.epoch(), 1);
+        assert!(out_a.migration.moved_weight > 0.0);
+        assert_eq!(m_a.repartition_count, 1);
+        assert!(
+            (m_a.state_weight_migrated - out_a.migration.moved_weight).abs() < 1e-12
+        );
+        // stores follow the new routing
+        for (p, s) in s_a.iter().enumerate() {
+            for k in s.keys() {
+                assert_eq!(p_a.partition(k), p);
+            }
+        }
+
+        // split path (decision then adoption), stateless (batch-job shape)
+        let (mut drm_b, mut w_b, mut p_b, _) = make();
+        tap_records(&mut w_b, &recs, TapAssignment::Chunked);
+        let decision = decision_point_sharded(&mut drm_b, &mut w_b, 1);
+        let mut m_b = EngineMetrics::default();
+        let out_b = adopt_decision(&cfg, decision, &mut p_b, None, &mut m_b);
+        assert!(out_b.repartitioned);
+        assert_eq!(out_b.epoch, 1);
+        assert_eq!(out_b.migration.moved_weight, 0.0, "stateless adoption");
+        assert_eq!(m_b.repartition_count, 1);
+        assert_eq!(m_b.state_weight_migrated, 0.0);
+        // both paths install the same routing
+        for k in 0..2_000u64 {
+            assert_eq!(p_a.partition(k), p_b.partition(k), "routing diverged at {k}");
         }
     }
 

@@ -4,21 +4,30 @@
 //! partitioner when it generates micro-batches from the streaming DAG.
 //! Spark performs state migration automatically in the shuffle phase."
 //!
-//! Thin driver over the shared [`ShuffleStage`] core. Per micro-batch:
+//! Thin wrapper over the unified drive loop ([`pipeline`],
+//! [`Discipline::MicroBatch`]). Per micro-batch:
 //! 1. the DRM decision point — harvest DRW histograms from *previous*
 //!    batches; an accepted decision bumps the partitioner epoch, and the
 //!    migration plan derived from the epoch swap moves keyed state;
 //! 2. map-tap over the executor slots (chunked assignment);
-//! 3. one wave-scheduled [`ShuffleStage`] (shuffle → keyed reduce → state
-//!    fold; this is where skew turns into stragglers).
+//! 3. one wave-scheduled [`ShuffleStage`](super::ShuffleStage) (shuffle →
+//!    keyed reduce → state fold; this is where skew turns into
+//!    stragglers).
+//!
+//! [`MicroBatchEngine::run_batch`] performs exactly that lockstep step on
+//! a caller-supplied batch; [`MicroBatchEngine::run_stream`] pulls the
+//! batches from a [`Source`] and — with `num_threads > 1` — overlaps the
+//! source prefetch and the next batch's decision point with the running
+//! stage, with bitwise-identical reports.
 
-use super::exec::{self, Scheduling, ShuffleStage, TapAssignment};
+use super::pipeline::{self, Discipline, EngineCore, StepReport};
 use super::{EngineConfig, EngineMetrics};
-use crate::dr::{DrConfig, DrMaster, DrWorker, PartitionerChoice};
+use crate::dr::{DrConfig, DrMaster, PartitionerChoice};
 use crate::partitioner::PartitionerEpoch;
 use crate::state::StateStore;
 use crate::util::VTime;
-use crate::workload::Record;
+use crate::workload::{Record, Source};
+use std::time::Instant;
 
 #[derive(Debug, Clone)]
 pub struct BatchReport {
@@ -36,6 +45,15 @@ pub struct BatchReport {
     /// construction). Compare against `wall_s` for the decision-latency
     /// budget (EXPERIMENTS.md "Decision latency").
     pub decision_wall_s: f64,
+    /// Measured wall-clock seconds materializing this batch from its
+    /// [`Source`] — the pipelined loop's prefetch lane. 0.0 when the
+    /// batch was handed to [`MicroBatchEngine::run_batch`] directly.
+    pub source_wall_s: f64,
+    /// Measured work seconds attributed to this batch (stage + decision
+    /// point + source) per wall second of its drive-loop span: ≲ 1 in
+    /// lockstep, > 1 when the pipelined lanes overlap (EXPERIMENTS.md
+    /// "Pipeline overlap").
+    pub pipeline_occupancy: f64,
     /// Reduce-side weight per partition.
     pub loads: Vec<f64>,
     pub imbalance: f64,
@@ -47,134 +65,108 @@ pub struct BatchReport {
 }
 
 pub struct MicroBatchEngine {
-    cfg: EngineConfig,
-    drm: DrMaster,
-    workers: Vec<DrWorker>,
-    partitioner: PartitionerEpoch,
-    stores: Vec<StateStore>,
-    metrics: EngineMetrics,
+    core: EngineCore,
     batch_no: u64,
 }
 
 impl MicroBatchEngine {
     pub fn new(cfg: EngineConfig, dr: DrConfig, choice: PartitionerChoice, seed: u64) -> Self {
-        cfg.validate();
-        let drm = DrMaster::new(dr, choice, cfg.n_partitions, seed);
-        let workers = (0..cfg.n_slots)
-            .map(|w| DrWorker::new(drm.worker_capacity(), dr.sample_rate, seed ^ (w as u64) << 8))
-            .collect();
-        let partitioner = drm.handle();
-        let stores = (0..cfg.n_partitions).map(|_| StateStore::new()).collect();
+        let n_workers = cfg.n_slots;
         Self {
-            cfg,
-            drm,
-            workers,
-            partitioner,
-            stores,
-            metrics: EngineMetrics::default(),
+            core: EngineCore::new(cfg, dr, choice, n_workers, seed),
             batch_no: 0,
         }
     }
 
     pub fn metrics(&self) -> &EngineMetrics {
-        &self.metrics
+        &self.core.metrics
     }
 
     pub fn stores(&self) -> &[StateStore] {
-        &self.stores
+        &self.core.stores
     }
 
     pub fn drm(&self) -> &DrMaster {
-        &self.drm
+        &self.core.drm
     }
 
     /// The routing epoch currently in force.
     pub fn partitioner(&self) -> &PartitionerEpoch {
-        &self.partitioner
+        &self.core.partitioner
     }
 
     /// The current epoch number (observable in every [`BatchReport`]).
     pub fn epoch(&self) -> u64 {
-        self.partitioner.epoch()
+        self.core.partitioner.epoch()
     }
 
-    /// The DRM decision point at a micro-batch boundary. Returns the
-    /// migration pause time, migrated state fraction, whether a swap was
-    /// adopted, and the measured decision wall clock.
-    fn decision_point(&mut self) -> (VTime, f64, bool, f64) {
-        let decision =
-            exec::decision_point_sharded(&mut self.drm, &mut self.workers, self.cfg.num_threads);
-        let decision_wall_s = decision.decision_wall_s;
-        let Some(swap) = decision.swap else {
-            return (0.0, 0.0, false, decision_wall_s);
-        };
-
-        // Spark migrates state "automatically in the shuffle phase": keys
-        // whose partition changed drag their state. The plan derives from
-        // the epoch swap; the cost is charged against the batch makespan.
-        let mig = exec::adopt_swap(
-            &self.cfg,
-            &mut self.stores,
-            &mut self.partitioner,
-            &mut self.metrics,
-            &swap,
-        );
-        (mig.pause, mig.migrated_fraction, true, decision_wall_s)
-    }
-
-    /// Run one micro-batch through map → shuffle → reduce → state.
-    pub fn run_batch(&mut self, records: &[Record]) -> BatchReport {
-        self.batch_no += 1;
-
-        // 1. decision point (uses histograms gathered in earlier batches)
-        let (migration_time, migrated_fraction, repartitioned, decision_wall_s) =
-            self.decision_point();
-
-        // 2. map-tap: records split evenly over slots; the DRW tap runs on
-        //    the map path and rides the executor's sharding.
-        exec::tap_records_sharded(
-            &mut self.workers,
-            records,
-            TapAssignment::Chunked,
-            self.cfg.num_threads,
-        );
-
-        // 3. the shared stage: shuffle by the current epoch, wave-scheduled
-        //    keyed reduce (spill model applies), state folded per partition.
-        let stage = ShuffleStage::new(&self.cfg, Scheduling::Wave).run(
-            records,
-            &self.partitioner,
-            Some(self.stores.as_mut_slice()),
-        );
-
-        let makespan = migration_time + stage.stage_time;
-        self.metrics.records_processed += records.len() as u64;
-        self.metrics.total_vtime += makespan;
-        self.metrics.map_vtime += stage.map_time;
-        self.metrics.reduce_vtime += stage.reduce_time;
-        self.metrics.migration_vtime += migration_time;
-        self.metrics.wall_s += stage.wall_s;
-        self.metrics.decision_wall_s += decision_wall_s;
-
+    fn report(&self, step: StepReport) -> BatchReport {
         BatchReport {
             batch_no: self.batch_no,
-            makespan,
-            map_time: stage.map_time,
-            reduce_time: stage.reduce_time,
-            migration_time,
-            wall_s: stage.wall_s,
-            decision_wall_s,
-            imbalance: stage.imbalance,
-            loads: stage.loads,
-            migrated_fraction,
-            repartitioned,
-            epoch: self.partitioner.epoch(),
+            makespan: step.makespan,
+            map_time: step.stage.map_time,
+            reduce_time: step.stage.reduce_time,
+            migration_time: step.migration_pause,
+            wall_s: step.stage.wall_s,
+            decision_wall_s: step.decision_wall_s,
+            source_wall_s: step.source_wall_s,
+            pipeline_occupancy: step.pipeline_occupancy,
+            imbalance: step.stage.imbalance,
+            loads: step.stage.loads,
+            migrated_fraction: step.migrated_fraction,
+            repartitioned: step.repartitioned,
+            epoch: step.epoch,
         }
+    }
+
+    /// Run one micro-batch through decision point → map-tap → shuffle →
+    /// reduce → state: one lockstep step of the unified loop.
+    pub fn run_batch(&mut self, records: &[Record]) -> BatchReport {
+        self.batch_no += 1;
+        let step = pipeline::lockstep_step(
+            &mut self.core,
+            records,
+            Discipline::MicroBatch,
+            0.0,
+            Instant::now(),
+            &mut |_, _| {},
+        );
+        self.report(step)
+    }
+
+    /// Drive the engine over `source` for up to `max_batches` batches of
+    /// `batch_size` records (stopping early if the source exhausts).
+    /// With `num_threads > 1` the loop pipelines: while batch *k*'s
+    /// stage runs, the source materializes batch *k+1* and the DRM
+    /// computes batch *k+1*'s decision ([`pipeline::drive`]) — reports
+    /// stay bitwise-identical to a `run_batch` loop over the same
+    /// batches; only the measured wall-clock columns change.
+    pub fn run_stream(
+        &mut self,
+        source: &mut dyn Source,
+        batch_size: usize,
+        max_batches: usize,
+    ) -> Vec<BatchReport> {
+        let steps = pipeline::drive(
+            &mut self.core,
+            source,
+            batch_size,
+            max_batches,
+            Discipline::MicroBatch,
+            &mut |_, _| {},
+        );
+        steps
+            .into_iter()
+            .map(|step| {
+                self.batch_no += 1;
+                self.report(step)
+            })
+            .collect()
     }
 
     /// Total state weight currently held (all partitions).
     pub fn total_state_weight(&self) -> f64 {
-        self.stores.iter().map(|s| s.total_weight()).sum()
+        self.core.stores.iter().map(|s| s.total_weight()).sum()
     }
 }
 
@@ -293,5 +285,48 @@ mod tests {
             assert_eq!(r.epoch, expect, "forced update must bump the epoch each batch");
         }
         assert_eq!(e.drm().epoch(), 4);
+    }
+
+    #[test]
+    fn run_stream_equals_run_batch_loop() {
+        // run_stream over a generator must reproduce a manual
+        // z.batch → run_batch loop exactly (records, reports, state).
+        let mut a = MicroBatchEngine::new(cfg(8, 8), DrConfig::default(), PartitionerChoice::Kip, 9);
+        let mut za = Zipf::new(20_000, 1.2, 9);
+        let manual: Vec<BatchReport> = (0..4).map(|_| a.run_batch(&za.batch(30_000))).collect();
+
+        let mut b = MicroBatchEngine::new(cfg(8, 8), DrConfig::default(), PartitionerChoice::Kip, 9);
+        let mut zb = Zipf::new(20_000, 1.2, 9);
+        let streamed = b.run_stream(&mut zb, 30_000, 4);
+
+        assert_eq!(streamed.len(), manual.len());
+        for (x, y) in manual.iter().zip(&streamed) {
+            assert_eq!(x.batch_no, y.batch_no);
+            assert_eq!(x.repartitioned, y.repartitioned);
+            assert_eq!(x.epoch, y.epoch);
+            assert_eq!(x.makespan.to_bits(), y.makespan.to_bits());
+            assert_eq!(x.imbalance.to_bits(), y.imbalance.to_bits());
+        }
+        assert_eq!(
+            a.total_state_weight().to_bits(),
+            b.total_state_weight().to_bits()
+        );
+        assert_eq!(
+            a.metrics().total_vtime.to_bits(),
+            b.metrics().total_vtime.to_bits()
+        );
+        assert!(b.metrics().source_wall_s >= 0.0);
+        assert!(b.metrics().pipeline_occupancy() > 0.0);
+    }
+
+    #[test]
+    fn run_stream_stops_on_bounded_source() {
+        use crate::workload::Bounded;
+        let mut e = MicroBatchEngine::new(cfg(4, 4), DrConfig::default(), PartitionerChoice::Kip, 10);
+        let src = Zipf::new(1_000, 1.0, 10);
+        let mut bounded = Bounded::new(src, 25_000);
+        let reports = e.run_stream(&mut bounded, 10_000, 100);
+        assert_eq!(reports.len(), 3, "10k + 10k + 5k then exhaustion");
+        assert_eq!(e.metrics().records_processed, 25_000);
     }
 }

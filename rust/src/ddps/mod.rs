@@ -23,18 +23,30 @@
 //! either sequentially ([`EngineConfig::num_threads`] = 1) or sharded
 //! over scoped OS threads ([`exec::parallel`], `num_threads` > 1) with
 //! bitwise-identical reports.
+//!
+//! The engines themselves are driven by the unified loop in
+//! [`pipeline`]: every `run_batch` / `run_interval` / `BatchJob::run`
+//! call is one lockstep step of it, and the `run_stream` entry points
+//! pull batches from a [`Source`](crate::workload::Source), overlapping
+//! source materialization, the DRM decision point and the shuffle stage
+//! on scoped threads (same `num_threads` knob, same bitwise-identical
+//! reports — only the measured `wall_s` / `decision_wall_s` /
+//! `source_wall_s` columns and the pipeline-occupancy ratio change).
 
 pub mod batch;
 pub mod exec;
 pub mod microbatch;
+pub mod pipeline;
 pub mod streaming;
 
 pub use batch::{BatchJob, JobReport};
 pub use exec::{
-    adopt_swap, apply_epoch_swap, decision_point, decision_point_sharded, tap_records,
-    tap_records_sharded, MigrationReport, Scheduling, ShuffleStage, StageReport, TapAssignment,
+    adopt_decision, adopt_swap, apply_epoch_swap, decide_and_adopt, decision_point,
+    decision_point_sharded, tap_records, tap_records_sharded, DecisionOutcome, MigrationReport,
+    Scheduling, ShuffleStage, StageReport, TapAssignment,
 };
 pub use microbatch::{BatchReport, MicroBatchEngine};
+pub use pipeline::{Discipline, EngineCore, StepReport};
 pub use streaming::{IntervalReport, StreamingEngine};
 
 use crate::util::VTime;
@@ -72,14 +84,17 @@ pub struct EngineConfig {
     pub spill_threshold_factor: f64,
     pub spill_penalty: f64,
     /// OS threads the [`exec::ShuffleStage`] executor shards its reduce
-    /// partitions (and the DRW taps / histogram harvests) over, and that
-    /// the DRM decision point shards its histogram tree-merge and
-    /// candidate construction over ([`crate::dr::parallel`]). `1` — the
-    /// default — is the sequential reference path; `> 1` runs both on
-    /// `std::thread::scope` workers and produces bitwise-identical
-    /// reports (see [`exec::parallel`] and DESIGN.md "Sharded DRM
-    /// decision point"). Virtual-time results never depend on this knob —
-    /// only the measured `wall_s` / `decision_wall_s` columns do.
+    /// partitions (and the DRW taps / histogram harvests) over, that the
+    /// DRM decision point shards its histogram tree-merge and candidate
+    /// construction over ([`crate::dr::parallel`]), and that gates the
+    /// [`pipeline`] drive loop's lane overlap (source prefetch ∥ decision
+    /// point ∥ stage). `1` — the default — is the sequential lockstep
+    /// reference path; `> 1` runs all of them on `std::thread::scope`
+    /// workers and produces bitwise-identical reports (see
+    /// [`exec::parallel`] and DESIGN.md "Sharded DRM decision point" /
+    /// "Pipelined engine loop"). Virtual-time results never depend on
+    /// this knob — only the measured `wall_s` / `decision_wall_s` /
+    /// `source_wall_s` columns and the pipeline-occupancy ratio do.
     pub num_threads: usize,
 }
 
@@ -213,6 +228,16 @@ pub struct EngineMetrics {
     /// is the paper's "negligible overhead" claim as a measurable column:
     /// the decision point must stay small next to the stages it steers.
     pub decision_wall_s: f64,
+    /// Measured wall-clock seconds spent materializing batches from the
+    /// workload [`Source`](crate::workload::Source) — the [`pipeline`]
+    /// loop's prefetch lane. 0.0 when records were handed in
+    /// pre-materialized (`run_batch` / `run_interval` with a slice).
+    pub source_wall_s: f64,
+    /// Measured wall-clock seconds of the unified drive loop itself,
+    /// barrier to barrier (covers the overlapped stage / decision /
+    /// source lanes plus the serial barrier work). Denominator of
+    /// [`EngineMetrics::pipeline_occupancy`].
+    pub pipeline_wall_s: f64,
     pub state_weight_migrated: f64,
     pub repartition_count: u64,
 }
@@ -224,5 +249,17 @@ impl EngineMetrics {
         } else {
             self.records_processed as f64 / self.total_vtime
         }
+    }
+
+    /// Measured work seconds (stage executors + decision points + source
+    /// materialization) per wall second of the drive loop: ≲ 1 on the
+    /// lockstep path (the three are serialized inside the span), > 1 when
+    /// the pipelined loop overlaps its lanes ([`pipeline`]). 0.0 before
+    /// any step ran.
+    pub fn pipeline_occupancy(&self) -> f64 {
+        if self.pipeline_wall_s <= 0.0 {
+            return 0.0;
+        }
+        (self.wall_s + self.decision_wall_s + self.source_wall_s) / self.pipeline_wall_s
     }
 }

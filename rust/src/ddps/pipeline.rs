@@ -1,0 +1,792 @@
+//! The unified, pipelined engine drive loop (see DESIGN.md "Pipelined
+//! engine loop").
+//!
+//! Before this module the three engines ran source generation → DRM
+//! decision point → [`ShuffleStage`] in strict lockstep: the sharded
+//! executor and the sharded decision point idled while the source
+//! materialized the next batch. The paper's DR module wins precisely by
+//! keeping the decision point *off* the critical path, so the loop here
+//! overlaps three lanes on `std::thread::scope` workers, gated by the
+//! same [`EngineConfig::num_threads`] knob that shards the executor:
+//!
+//! | lane      | interval *k* runs…                 | state it touches        |
+//! |-----------|------------------------------------|-------------------------|
+//! | stage     | the [`ShuffleStage`] of batch *k*  | epoch snapshot, stores  |
+//! | source    | materializing batch *k+1*          | the [`Source`] only     |
+//! | decision  | the DRM decision point (harvest → merge → candidate) | DRM + DRWs |
+//!
+//! The lanes touch disjoint engine state, so they commute with the
+//! lockstep order; the only synchronization is the **epoch-swap barrier**
+//! between intervals, where the adopted decision migrates keyed state and
+//! switches the routing snapshot ([`exec::adopt_decision`]) — stores and
+//! partitioner are only ever mutated there. Decisions, epochs, migration
+//! plans and every virtual-time report column are therefore
+//! bitwise-identical to the lockstep path at any thread count (pinned by
+//! `tests/prop_parallel.rs`); the overlap shows up only in the measured
+//! `wall_s` / `decision_wall_s` / `source_wall_s` columns and the
+//! per-step pipeline-occupancy ratio.
+//!
+//! Discipline differences (who decides when) are preserved exactly:
+//!
+//! - **micro-batch** (`D_k A_k T_k S_k` per batch): batch *k*'s decision
+//!   uses taps from batches `1..k-1`, so the loop computes batch *k+1*'s
+//!   decision concurrently with stage *k* — it only needs taps `1..k`,
+//!   which exist once tap *k* ran — and adopts it at the next barrier.
+//!   The decision lane starts only after the prefetch lane confirms a
+//!   batch *k+1* exists: no speculative harvests, so a pipelined engine
+//!   left mid-stream is in exactly the state a lockstep engine would be.
+//! - **streaming** (`T_k S_k C_k D_k A_k` per interval): the barrier
+//!   decision needs only interval *k*'s taps (taken before the stage), so
+//!   it overlaps its *own* stage; the checkpoint still snapshots
+//!   post-stage, pre-migration state at the barrier.
+//! - **batch jobs** ([`job_step`] / [`drive_jobs`]): one mid-map decision
+//!   inside each independent job; across a round sequence the next
+//!   round's records materialize while the current job's stage runs.
+//!
+//! The engines' `run_batch` / `run_interval` single-batch entry points
+//! call [`lockstep_step`] — the same phases in lockstep order — so *all*
+//! engine traffic flows through this one loop implementation.
+
+use super::exec::{self, Scheduling, ShuffleStage, StageReport, TapAssignment};
+use super::{EngineConfig, EngineMetrics};
+use crate::dr::{DrConfig, DrMaster, DrWorker, PartitionerChoice};
+use crate::partitioner::PartitionerEpoch;
+use crate::state::StateStore;
+use crate::util::VTime;
+use crate::workload::{Record, Source};
+use std::thread;
+use std::time::Instant;
+
+/// The engine state the unified loop drives: the DRM and its DRWs, the
+/// routing-epoch snapshot, per-partition keyed state and cumulative
+/// metrics. The three engines are thin wrappers holding one of these plus
+/// their discipline-specific extras (checkpoint store, counters); the
+/// loop splits its fields across the pipeline lanes, which is why it is a
+/// struct of independently borrowable parts rather than trait methods.
+pub struct EngineCore {
+    pub(crate) cfg: EngineConfig,
+    pub(crate) drm: DrMaster,
+    pub(crate) workers: Vec<DrWorker>,
+    pub(crate) partitioner: PartitionerEpoch,
+    pub(crate) stores: Vec<StateStore>,
+    pub(crate) metrics: EngineMetrics,
+}
+
+impl EngineCore {
+    /// Build the shared core: DRM, `n_workers` DRWs (slots for chunked
+    /// map taps, partitions for pinned source taps), the epoch-0 routing
+    /// snapshot and one empty state store per partition.
+    pub fn new(
+        cfg: EngineConfig,
+        dr: DrConfig,
+        choice: PartitionerChoice,
+        n_workers: usize,
+        seed: u64,
+    ) -> Self {
+        cfg.validate();
+        let drm = DrMaster::new(dr, choice, cfg.n_partitions, seed);
+        let workers = (0..n_workers)
+            .map(|w| DrWorker::new(drm.worker_capacity(), dr.sample_rate, seed ^ (w as u64) << 8))
+            .collect();
+        let partitioner = drm.handle();
+        let stores = (0..cfg.n_partitions).map(|_| StateStore::new()).collect();
+        Self {
+            cfg,
+            drm,
+            workers,
+            partitioner,
+            stores,
+            metrics: EngineMetrics::default(),
+        }
+    }
+}
+
+/// What distinguishes the micro-batch and streaming engines inside the
+/// shared loop: tap assignment, scheduling model, and on which side of
+/// the stage the DRM decision point fires. (One-shot batch jobs have
+/// their own single-stage step, [`job_step`].)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Discipline {
+    /// Spark-Streaming-like: the decision point fires at the batch
+    /// boundary *before* the batch (histograms from earlier batches),
+    /// chunked map taps, wave-scheduled stage, keyed state folded and
+    /// migrated at adoption.
+    MicroBatch,
+    /// Flink-like: round-robin source taps, pinned backpressure stage,
+    /// checkpoint and decision point at the barrier *after* the interval.
+    Streaming,
+}
+
+/// Everything one step (batch / interval) of the unified loop produced;
+/// the engines wrap this into their public report types.
+#[derive(Debug, Clone)]
+pub struct StepReport {
+    /// The shuffle-stage outcome (loads, virtual times, measured
+    /// `wall_s`).
+    pub stage: StageReport,
+    /// Virtual makespan of the step: `migration + stage_time` for the
+    /// engines, `map + replay + reduce` for batch jobs.
+    pub makespan: VTime,
+    /// Records in this step's batch.
+    pub n_records: usize,
+    /// Measured wall seconds of this step's DRM decision point.
+    pub decision_wall_s: f64,
+    pub repartitioned: bool,
+    pub migration_pause: VTime,
+    pub migrated_fraction: f64,
+    /// Batch jobs only: prefix records whose assignments were recomputed.
+    pub replayed_records: u64,
+    pub replay_time: VTime,
+    /// Measured wall seconds materializing this step's batch from its
+    /// [`Source`] (0.0 when the caller handed in records directly).
+    pub source_wall_s: f64,
+    /// Measured wall seconds of this step's barrier-to-barrier drive
+    /// span — the denominator of `pipeline_occupancy`, accumulated into
+    /// [`EngineMetrics::pipeline_wall_s`].
+    pub pipeline_wall_s: f64,
+    /// Measured work seconds attributed to this step (stage executor +
+    /// decision point + source materialization) per wall second of the
+    /// step's barrier-to-barrier span: ≲ 1 on the lockstep path, > 1
+    /// when the pipelined lanes overlap. Steady-state attribution — the
+    /// overlapped work of step *k* partly ran inside step *k−1*'s span,
+    /// so read the cumulative [`EngineMetrics::pipeline_occupancy`] for
+    /// the run-level number.
+    pub pipeline_occupancy: f64,
+    /// Partitioner epoch in force after this step's barrier.
+    pub epoch: u64,
+}
+
+/// Metrics accounting + report assembly shared by every path through the
+/// loop — one place, so lockstep and pipelined accumulate identically.
+fn assemble(
+    core: &mut EngineCore,
+    disc: Discipline,
+    n_records: usize,
+    stage: StageReport,
+    outcome: exec::DecisionOutcome,
+    source_wall_s: f64,
+    span: Instant,
+) -> StepReport {
+    let pipeline_wall_s = span.elapsed().as_secs_f64();
+    let busy = stage.wall_s + outcome.decision_wall_s + source_wall_s;
+    let makespan = outcome.migration.pause + stage.stage_time;
+    let m = &mut core.metrics;
+    m.records_processed += n_records as u64;
+    m.total_vtime += makespan;
+    if disc == Discipline::MicroBatch {
+        // The wave model runs map before reduce; the pinned model folds
+        // source time into the stage's max() and reports no map phase.
+        m.map_vtime += stage.map_time;
+    }
+    m.reduce_vtime += stage.reduce_time;
+    m.migration_vtime += outcome.migration.pause;
+    m.wall_s += stage.wall_s;
+    m.decision_wall_s += outcome.decision_wall_s;
+    m.source_wall_s += source_wall_s;
+    m.pipeline_wall_s += pipeline_wall_s;
+    StepReport {
+        makespan,
+        n_records,
+        decision_wall_s: outcome.decision_wall_s,
+        repartitioned: outcome.repartitioned,
+        migration_pause: outcome.migration.pause,
+        migrated_fraction: outcome.migration.migrated_fraction,
+        replayed_records: 0,
+        replay_time: 0.0,
+        source_wall_s,
+        pipeline_wall_s,
+        pipeline_occupancy: if pipeline_wall_s > 0.0 {
+            busy / pipeline_wall_s
+        } else {
+            1.0
+        },
+        epoch: core.partitioner.epoch(),
+        stage,
+    }
+}
+
+/// One batch/interval in lockstep order — the engines' single-batch
+/// `run_batch` / `run_interval` entry points, and the `num_threads = 1`
+/// path of [`drive`]. `after_stage` runs post-stage, pre-adoption (the
+/// streaming engine checkpoints there); pass a no-op otherwise.
+pub fn lockstep_step(
+    core: &mut EngineCore,
+    records: &[Record],
+    disc: Discipline,
+    source_wall_s: f64,
+    span: Instant,
+    after_stage: &mut dyn FnMut(&[Record], &[StateStore]),
+) -> StepReport {
+    let threads = core.cfg.num_threads;
+    match disc {
+        Discipline::MicroBatch => {
+            let decision = exec::decision_point_sharded(&mut core.drm, &mut core.workers, threads);
+            let outcome = exec::adopt_decision(
+                &core.cfg,
+                decision,
+                &mut core.partitioner,
+                Some(core.stores.as_mut_slice()),
+                &mut core.metrics,
+            );
+            exec::tap_records_sharded(&mut core.workers, records, TapAssignment::Chunked, threads);
+            let stage = ShuffleStage::new(&core.cfg, Scheduling::Wave).run(
+                records,
+                &core.partitioner,
+                Some(core.stores.as_mut_slice()),
+            );
+            after_stage(records, &core.stores);
+            assemble(core, disc, records.len(), stage, outcome, source_wall_s, span)
+        }
+        Discipline::Streaming => {
+            exec::tap_records_sharded(
+                &mut core.workers,
+                records,
+                TapAssignment::RoundRobin,
+                threads,
+            );
+            let stage = ShuffleStage::new(&core.cfg, Scheduling::Pinned).run(
+                records,
+                &core.partitioner,
+                Some(core.stores.as_mut_slice()),
+            );
+            after_stage(records, &core.stores);
+            let decision = exec::decision_point_sharded(&mut core.drm, &mut core.workers, threads);
+            let outcome = exec::adopt_decision(
+                &core.cfg,
+                decision,
+                &mut core.partitioner,
+                Some(core.stores.as_mut_slice()),
+                &mut core.metrics,
+            );
+            assemble(core, disc, records.len(), stage, outcome, source_wall_s, span)
+        }
+    }
+}
+
+/// Drive `core` over `source` for up to `max_batches` batches of
+/// `batch_size` records. With `cfg.num_threads > 1` the loop pipelines —
+/// stage, prefetch and decision lanes run on scoped threads as described
+/// in the module docs; otherwise it degenerates to fetch + lockstep
+/// steps. Reports are bitwise-identical either way except the measured
+/// wall-clock columns. Stops early when the source exhausts; the source
+/// is never pulled past `max_batches`, so a bounded source can be resumed
+/// afterwards exactly where a lockstep driver would have left it.
+pub fn drive(
+    core: &mut EngineCore,
+    source: &mut dyn Source,
+    batch_size: usize,
+    max_batches: usize,
+    disc: Discipline,
+    after_stage: &mut dyn FnMut(&[Record], &[StateStore]),
+) -> Vec<StepReport> {
+    if max_batches == 0 {
+        return Vec::new();
+    }
+    if core.cfg.num_threads <= 1 {
+        let mut reports = Vec::new();
+        let mut buf = Vec::new();
+        for _ in 0..max_batches {
+            let span = Instant::now();
+            if !source.next_batch_into(batch_size, &mut buf) {
+                break;
+            }
+            let source_wall_s = span.elapsed().as_secs_f64();
+            reports.push(lockstep_step(core, &buf, disc, source_wall_s, span, after_stage));
+        }
+        return reports;
+    }
+    match disc {
+        Discipline::MicroBatch => {
+            drive_microbatch(core, source, batch_size, max_batches, after_stage)
+        }
+        Discipline::Streaming => {
+            drive_streaming(core, source, batch_size, max_batches, after_stage)
+        }
+    }
+}
+
+/// Pipelined micro-batch drive: per iteration *k*, adopt the decision
+/// precomputed for batch *k*, tap, then overlap stage *k* with the
+/// prefetch of batch *k+1* and — once the prefetch confirms it exists —
+/// batch *k+1*'s decision point.
+fn drive_microbatch(
+    core: &mut EngineCore,
+    source: &mut dyn Source,
+    batch_size: usize,
+    max_batches: usize,
+    after_stage: &mut dyn FnMut(&[Record], &[StateStore]),
+) -> Vec<StepReport> {
+    let mut reports = Vec::new();
+    let mut cur: Vec<Record> = Vec::new();
+    let mut next: Vec<Record> = Vec::new();
+
+    // Prime the pipeline: materialize batch 1 and run its decision point
+    // (there is no previous stage to hide either behind).
+    let mut span = Instant::now();
+    if !source.next_batch_into(batch_size, &mut cur) {
+        return reports;
+    }
+    let mut source_wall_s = span.elapsed().as_secs_f64();
+    let mut pending = Some(exec::decision_point_sharded(
+        &mut core.drm,
+        &mut core.workers,
+        core.cfg.num_threads,
+    ));
+
+    for k in 1..=max_batches {
+        // Epoch-swap barrier: adopt batch k's decision (state migration +
+        // routing switch), then tap batch k — both before the stage, as
+        // in lockstep.
+        let decision = pending.take().expect("pipeline invariant: decision precomputed");
+        let outcome = exec::adopt_decision(
+            &core.cfg,
+            decision,
+            &mut core.partitioner,
+            Some(core.stores.as_mut_slice()),
+            &mut core.metrics,
+        );
+        exec::tap_records_sharded(
+            &mut core.workers,
+            &cur,
+            TapAssignment::Chunked,
+            core.cfg.num_threads,
+        );
+
+        // Overlap region: stage(k) ∥ prefetch(k+1) ∥ decision(k+1).
+        let want_next = k < max_batches;
+        let mut have_next = false;
+        let mut next_wall = 0.0;
+        let mut stage_res: Option<StageReport> = None;
+        {
+            let EngineCore {
+                cfg,
+                drm,
+                workers,
+                partitioner,
+                stores,
+                ..
+            } = &mut *core;
+            let num_threads = cfg.num_threads;
+            let stage_cfg: &EngineConfig = cfg;
+            let epoch_snapshot: &PartitionerEpoch = partitioner;
+            let records: &[Record] = &cur;
+            thread::scope(|s| {
+                let stage_handle = {
+                    let stores: &mut [StateStore] = stores;
+                    s.spawn(move || {
+                        ShuffleStage::new(stage_cfg, Scheduling::Wave).run(
+                            records,
+                            epoch_snapshot,
+                            Some(stores),
+                        )
+                    })
+                };
+                // Prefetch lane (this thread): materialize batch k+1.
+                if want_next {
+                    let t0 = Instant::now();
+                    have_next = source.next_batch_into(batch_size, &mut next);
+                    next_wall = t0.elapsed().as_secs_f64();
+                }
+                // Decision lane — only once batch k+1 is known to exist,
+                // so the DRM/DRW state never runs ahead of lockstep.
+                let dec_handle = if want_next && have_next {
+                    Some(s.spawn(move || exec::decision_point_sharded(drm, workers, num_threads)))
+                } else {
+                    None
+                };
+                stage_res = Some(stage_handle.join().expect("pipeline stage worker panicked"));
+                pending =
+                    dec_handle.map(|h| h.join().expect("pipeline decision worker panicked"));
+            });
+        }
+        let stage = stage_res.expect("stage lane always runs");
+        after_stage(&cur, &core.stores);
+        reports.push(assemble(
+            core,
+            Discipline::MicroBatch,
+            cur.len(),
+            stage,
+            outcome,
+            source_wall_s,
+            span,
+        ));
+        if !want_next || !have_next {
+            break;
+        }
+        std::mem::swap(&mut cur, &mut next);
+        source_wall_s = next_wall;
+        span = Instant::now();
+    }
+    reports
+}
+
+/// Pipelined streaming drive: per interval *k*, tap, then overlap stage
+/// *k* with its *own* barrier decision point (which needs only interval
+/// *k*'s taps) and the prefetch of interval *k+1*; checkpoint and adopt
+/// at the barrier.
+fn drive_streaming(
+    core: &mut EngineCore,
+    source: &mut dyn Source,
+    batch_size: usize,
+    max_batches: usize,
+    after_stage: &mut dyn FnMut(&[Record], &[StateStore]),
+) -> Vec<StepReport> {
+    let mut reports = Vec::new();
+    let mut cur: Vec<Record> = Vec::new();
+    let mut next: Vec<Record> = Vec::new();
+
+    let mut span = Instant::now();
+    if !source.next_batch_into(batch_size, &mut cur) {
+        return reports;
+    }
+    let mut source_wall_s = span.elapsed().as_secs_f64();
+
+    for k in 1..=max_batches {
+        exec::tap_records_sharded(
+            &mut core.workers,
+            &cur,
+            TapAssignment::RoundRobin,
+            core.cfg.num_threads,
+        );
+
+        // Overlap region: stage(k) ∥ decision(k) ∥ prefetch(k+1).
+        let want_next = k < max_batches;
+        let mut have_next = false;
+        let mut next_wall = 0.0;
+        let mut stage_res: Option<StageReport> = None;
+        let mut dec_res = None;
+        {
+            let EngineCore {
+                cfg,
+                drm,
+                workers,
+                partitioner,
+                stores,
+                ..
+            } = &mut *core;
+            let num_threads = cfg.num_threads;
+            let stage_cfg: &EngineConfig = cfg;
+            let epoch_snapshot: &PartitionerEpoch = partitioner;
+            let records: &[Record] = &cur;
+            thread::scope(|s| {
+                let stage_handle = {
+                    let stores: &mut [StateStore] = stores;
+                    s.spawn(move || {
+                        ShuffleStage::new(stage_cfg, Scheduling::Pinned).run(
+                            records,
+                            epoch_snapshot,
+                            Some(stores),
+                        )
+                    })
+                };
+                let dec_handle =
+                    s.spawn(move || exec::decision_point_sharded(drm, workers, num_threads));
+                if want_next {
+                    let t0 = Instant::now();
+                    have_next = source.next_batch_into(batch_size, &mut next);
+                    next_wall = t0.elapsed().as_secs_f64();
+                }
+                stage_res = Some(stage_handle.join().expect("pipeline stage worker panicked"));
+                dec_res =
+                    Some(dec_handle.join().expect("pipeline decision worker panicked"));
+            });
+        }
+        let stage = stage_res.expect("stage lane always runs");
+        // Checkpoint sees post-stage, pre-migration state, as in lockstep
+        // (the barrier decision point touches no stores, so computing it
+        // concurrently cannot change what the snapshot contains).
+        after_stage(&cur, &core.stores);
+        let outcome = exec::adopt_decision(
+            &core.cfg,
+            dec_res.expect("decision lane always runs"),
+            &mut core.partitioner,
+            Some(core.stores.as_mut_slice()),
+            &mut core.metrics,
+        );
+        reports.push(assemble(
+            core,
+            Discipline::Streaming,
+            cur.len(),
+            stage,
+            outcome,
+            source_wall_s,
+            span,
+        ));
+        if !want_next || !have_next {
+            break;
+        }
+        std::mem::swap(&mut cur, &mut next);
+        source_wall_s = next_wall;
+        span = Instant::now();
+    }
+    reports
+}
+
+/// One one-shot batch job through the shared loop: prefix tap → mid-map
+/// decision ([`exec::decide_and_adopt`], stateless — the already-evicted
+/// prefix is priced as *replay*) → full-input wave stage. `overlap` runs
+/// on the calling thread while the stage executes on a scoped worker
+/// (`num_threads > 1`); [`drive_jobs`] materializes the next round's
+/// records there, standalone jobs pass a no-op.
+pub fn job_step(
+    cfg: &EngineConfig,
+    dr: DrConfig,
+    choice: PartitionerChoice,
+    seed: u64,
+    decision_at: f64,
+    records: &[Record],
+    source_wall_s: f64,
+    span: Instant,
+    overlap: &mut dyn FnMut(),
+) -> StepReport {
+    let mut drm = DrMaster::new(dr, choice, cfg.n_partitions, seed);
+    let mut workers: Vec<DrWorker> = (0..cfg.n_slots)
+        .map(|w| DrWorker::new(drm.worker_capacity(), dr.sample_rate, seed ^ (w as u64) << 8))
+        .collect();
+    let mut partitioner = drm.handle();
+
+    // Map phase part 1: the prefix, observed by the DRWs and already
+    // evicted with the epoch-0 partitioner.
+    let cut = ((records.len() as f64 * decision_at) as usize).min(records.len());
+    exec::tap_records_sharded(
+        &mut workers,
+        &records[..cut],
+        TapAssignment::Chunked,
+        cfg.num_threads,
+    );
+
+    // The single mid-map decision point; adoption is stateless (batch
+    // jobs have no operator state) — the prefix replays instead.
+    let mut scratch = EngineMetrics::default();
+    let outcome =
+        exec::decide_and_adopt(cfg, &mut drm, &mut workers, &mut partitioner, None, &mut scratch);
+    let (replayed_records, replay_time) = if outcome.repartitioned {
+        (cut as u64, cut as f64 * cfg.replay_cost)
+    } else {
+        (0, 0.0)
+    };
+
+    // Map phase part 2 + shuffle + wave reduce with the (possibly new)
+    // epoch; the caller's overlap lane runs alongside.
+    let stage = if cfg.num_threads > 1 {
+        let mut stage_res: Option<StageReport> = None;
+        let epoch_snapshot = &partitioner;
+        thread::scope(|s| {
+            let h = s.spawn(move || {
+                ShuffleStage::new(cfg, Scheduling::Wave).run(records, epoch_snapshot, None)
+            });
+            overlap();
+            stage_res = Some(h.join().expect("pipeline stage worker panicked"));
+        });
+        stage_res.expect("stage lane always runs")
+    } else {
+        let stage = ShuffleStage::new(cfg, Scheduling::Wave).run(records, &partitioner, None);
+        overlap();
+        stage
+    };
+
+    let pipeline_wall_s = span.elapsed().as_secs_f64();
+    let busy = stage.wall_s + outcome.decision_wall_s + source_wall_s;
+    StepReport {
+        makespan: stage.map_time + replay_time + stage.reduce_time,
+        n_records: records.len(),
+        decision_wall_s: outcome.decision_wall_s,
+        repartitioned: outcome.repartitioned,
+        migration_pause: 0.0,
+        migrated_fraction: 0.0,
+        replayed_records,
+        replay_time,
+        source_wall_s,
+        pipeline_wall_s,
+        pipeline_occupancy: if pipeline_wall_s > 0.0 {
+            busy / pipeline_wall_s
+        } else {
+            1.0
+        },
+        epoch: partitioner.epoch(),
+        stage,
+    }
+}
+
+/// Drive a sequence of independent one-shot batch jobs over `source` —
+/// one job per pulled batch, each with a fresh DRM/DRW set (§3: a batch
+/// job decides once, mid-map). While job *k*'s shuffle stage runs, the
+/// calling thread materializes round *k+1*'s records — the crawl-rounds
+/// overlap. Like [`drive`], the source is never pulled past `max_jobs`.
+pub fn drive_jobs(
+    cfg: &EngineConfig,
+    dr: DrConfig,
+    choice: PartitionerChoice,
+    seed: u64,
+    decision_at: f64,
+    source: &mut dyn Source,
+    batch_size: usize,
+    max_jobs: usize,
+) -> Vec<StepReport> {
+    let mut reports = Vec::new();
+    if max_jobs == 0 {
+        return reports;
+    }
+    let mut cur: Vec<Record> = Vec::new();
+    let mut next: Vec<Record> = Vec::new();
+    let mut span = Instant::now();
+    if !source.next_batch_into(batch_size, &mut cur) {
+        return reports;
+    }
+    let mut source_wall_s = span.elapsed().as_secs_f64();
+    for k in 1..=max_jobs {
+        let want_next = k < max_jobs;
+        let mut have_next = false;
+        let mut next_wall = 0.0;
+        let step = {
+            let mut overlap = || {
+                if want_next {
+                    let t0 = Instant::now();
+                    have_next = source.next_batch_into(batch_size, &mut next);
+                    next_wall = t0.elapsed().as_secs_f64();
+                }
+            };
+            job_step(
+                cfg,
+                dr,
+                choice,
+                seed,
+                decision_at,
+                &cur,
+                source_wall_s,
+                span,
+                &mut overlap,
+            )
+        };
+        reports.push(step);
+        if !want_next || !have_next {
+            break;
+        }
+        std::mem::swap(&mut cur, &mut next);
+        source_wall_s = next_wall;
+        span = Instant::now();
+    }
+    reports
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{zipf::Zipf, Generator, ReplaySource};
+
+    fn core(n_partitions: usize, n_slots: usize, num_threads: usize, seed: u64) -> EngineCore {
+        let cfg = EngineConfig {
+            n_partitions,
+            n_slots,
+            num_threads,
+            ..Default::default()
+        };
+        EngineCore::new(cfg, DrConfig::forced(), PartitionerChoice::Kip, n_slots, seed)
+    }
+
+    fn batches(n: usize, per: usize, seed: u64) -> Vec<Vec<Record>> {
+        let mut z = Zipf::new(3_000, 1.2, seed);
+        (0..n).map(|_| z.batch(per)).collect()
+    }
+
+    #[test]
+    fn pipelined_drive_matches_lockstep_steps_bitwise() {
+        for disc in [Discipline::MicroBatch, Discipline::Streaming] {
+            let bs = batches(4, 10_000, 9);
+            let mut seq = core(8, 8, 1, 9);
+            let mut seq_steps = Vec::new();
+            for b in &bs {
+                seq_steps.push(lockstep_step(
+                    &mut seq,
+                    b,
+                    disc,
+                    0.0,
+                    Instant::now(),
+                    &mut |_, _| {},
+                ));
+            }
+            for threads in [2, 4] {
+                let mut par = core(8, 8, threads, 9);
+                let mut src = ReplaySource::new(bs.clone());
+                let par_steps =
+                    drive(&mut par, &mut src, 0, bs.len(), disc, &mut |_, _| {});
+                assert_eq!(par_steps.len(), seq_steps.len(), "{disc:?} {threads}");
+                for (a, b) in seq_steps.iter().zip(&par_steps) {
+                    let tag = format!("{disc:?} {threads} threads");
+                    assert_eq!(a.n_records, b.n_records, "{tag}");
+                    assert_eq!(a.repartitioned, b.repartitioned, "{tag}");
+                    assert_eq!(a.epoch, b.epoch, "{tag}");
+                    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{tag}");
+                    assert_eq!(
+                        a.migration_pause.to_bits(),
+                        b.migration_pause.to_bits(),
+                        "{tag}"
+                    );
+                    assert_eq!(
+                        a.migrated_fraction.to_bits(),
+                        b.migrated_fraction.to_bits(),
+                        "{tag}"
+                    );
+                    assert_eq!(a.stage.record_counts, b.stage.record_counts, "{tag}");
+                    for (x, y) in a.stage.loads.iter().zip(&b.stage.loads) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: loads");
+                    }
+                }
+                assert_eq!(seq.partitioner.epoch(), par.partitioner.epoch());
+                let (ws, wp) = (
+                    seq.stores.iter().map(|s| s.total_weight()).sum::<f64>(),
+                    par.stores.iter().map(|s| s.total_weight()).sum::<f64>(),
+                );
+                assert_eq!(ws.to_bits(), wp.to_bits(), "{disc:?} {threads}: state weight");
+            }
+        }
+    }
+
+    #[test]
+    fn drive_stops_at_source_exhaustion_without_overrunning_drm_state() {
+        // 3 stored batches, max 10 requested: the pipelined loop must
+        // leave the engine exactly where a 3-batch lockstep loop does
+        // (same decision count — no speculative harvest for a batch that
+        // never arrives).
+        let bs = batches(3, 5_000, 11);
+        let mut seq = core(6, 6, 1, 11);
+        for b in &bs {
+            lockstep_step(
+                &mut seq,
+                b,
+                Discipline::MicroBatch,
+                0.0,
+                Instant::now(),
+                &mut |_, _| {},
+            );
+        }
+        let mut par = core(6, 6, 3, 11);
+        let mut src = ReplaySource::new(bs.clone());
+        let steps = drive(
+            &mut par,
+            &mut src,
+            0,
+            10,
+            Discipline::MicroBatch,
+            &mut |_, _| {},
+        );
+        assert_eq!(steps.len(), 3);
+        assert_eq!(seq.drm.decisions_made(), par.drm.decisions_made());
+        assert_eq!(seq.drm.epoch(), par.drm.epoch());
+        assert_eq!(seq.partitioner.epoch(), par.partitioner.epoch());
+    }
+
+    #[test]
+    fn occupancy_and_source_wall_are_measured() {
+        let bs = batches(3, 8_000, 13);
+        let mut c = core(6, 6, 4, 13);
+        let mut src = ReplaySource::new(bs);
+        let steps = drive(&mut c, &mut src, 0, 3, Discipline::Streaming, &mut |_, _| {});
+        for s in &steps {
+            assert!(s.source_wall_s >= 0.0);
+            assert!(s.pipeline_occupancy >= 0.0);
+        }
+        assert!(c.metrics.pipeline_wall_s > 0.0);
+        assert!(c.metrics.pipeline_occupancy() >= 0.0);
+    }
+}

@@ -9,18 +9,25 @@
 //! at checkpoint barriers, riding the Asynchronous Distributed Snapshot
 //! mechanism, with explicit operator-state migration.
 //!
-//! Thin driver over the shared [`ShuffleStage`] core in its
-//! [`Scheduling::Pinned`] discipline; epoch swaps are aligned with the
-//! checkpoint barrier, and the state-migration plan derives from the
-//! epoch diff.
+//! Thin wrapper over the unified drive loop ([`pipeline`],
+//! [`Discipline::Streaming`]) in the
+//! [`Scheduling::Pinned`](super::Scheduling::Pinned) discipline; epoch
+//! swaps are aligned with the checkpoint barrier, and the state-migration
+//! plan derives from the epoch diff. [`StreamingEngine::run_interval`]
+//! processes one caller-supplied interval in lockstep;
+//! [`StreamingEngine::run_stream`] pulls intervals from a [`Source`] and
+//! — with `num_threads > 1` — overlaps the source prefetch and the
+//! barrier's decision point with the running stage, with
+//! bitwise-identical reports.
 
-use super::exec::{self, Scheduling, ShuffleStage, TapAssignment};
+use super::pipeline::{self, Discipline, EngineCore, StepReport};
 use super::{EngineConfig, EngineMetrics};
-use crate::dr::{DrConfig, DrMaster, DrWorker, PartitionerChoice};
+use crate::dr::{DrConfig, DrMaster, PartitionerChoice};
 use crate::partitioner::PartitionerEpoch;
 use crate::state::{Checkpoint, CheckpointStore, StateStore};
 use crate::util::VTime;
-use crate::workload::Record;
+use crate::workload::{Record, Source};
+use std::time::Instant;
 
 #[derive(Debug, Clone)]
 pub struct IntervalReport {
@@ -35,6 +42,15 @@ pub struct IntervalReport {
     /// construction). Compare against `wall_s` for the decision-latency
     /// budget (EXPERIMENTS.md "Decision latency").
     pub decision_wall_s: f64,
+    /// Measured wall-clock seconds materializing this interval from its
+    /// [`Source`] — the pipelined loop's prefetch lane. 0.0 when the
+    /// interval was handed to [`StreamingEngine::run_interval`] directly.
+    pub source_wall_s: f64,
+    /// Measured work seconds attributed to this interval (stage +
+    /// decision point + source) per wall second of its drive-loop span:
+    /// ≲ 1 in lockstep, > 1 when the pipelined lanes overlap
+    /// (EXPERIMENTS.md "Pipeline overlap").
+    pub pipeline_occupancy: f64,
     /// Records per virtual second in this interval.
     pub throughput: f64,
     pub imbalance: f64,
@@ -49,14 +65,8 @@ pub struct IntervalReport {
 }
 
 pub struct StreamingEngine {
-    cfg: EngineConfig,
-    drm: DrMaster,
-    /// One DRW per source task (sources tap keys before the key-grouping).
-    workers: Vec<DrWorker>,
-    partitioner: PartitionerEpoch,
-    stores: Vec<StateStore>,
+    core: EngineCore,
     checkpoints: CheckpointStore,
-    metrics: EngineMetrics,
     interval_no: u64,
     vtime: VTime,
 }
@@ -64,34 +74,23 @@ pub struct StreamingEngine {
 impl StreamingEngine {
     /// In the streaming engine every partition is a pinned long-running
     /// task, so `cfg.n_slots` must be ≥ `cfg.n_partitions` (the paper runs
-    /// them equal: parallelism 14 / 28).
+    /// them equal: parallelism 14 / 28). One DRW per source task.
     pub fn new(cfg: EngineConfig, dr: DrConfig, choice: PartitionerChoice, seed: u64) -> Self {
-        cfg.validate();
         assert!(
             cfg.n_slots >= cfg.n_partitions,
             "streaming tasks are pinned: need slots >= partitions"
         );
-        let drm = DrMaster::new(dr, choice, cfg.n_partitions, seed);
-        let workers = (0..cfg.n_partitions)
-            .map(|w| DrWorker::new(drm.worker_capacity(), dr.sample_rate, seed ^ (w as u64) << 8))
-            .collect();
-        let partitioner = drm.handle();
-        let stores = (0..cfg.n_partitions).map(|_| StateStore::new()).collect();
+        let n_workers = cfg.n_partitions;
         Self {
-            cfg,
-            drm,
-            workers,
-            partitioner,
-            stores,
+            core: EngineCore::new(cfg, dr, choice, n_workers, seed),
             checkpoints: CheckpointStore::new(3),
-            metrics: EngineMetrics::default(),
             interval_no: 0,
             vtime: 0.0,
         }
     }
 
     pub fn metrics(&self) -> &EngineMetrics {
-        &self.metrics
+        &self.core.metrics
     }
 
     pub fn vtime(&self) -> VTime {
@@ -99,7 +98,7 @@ impl StreamingEngine {
     }
 
     pub fn stores(&self) -> &[StateStore] {
-        &self.stores
+        &self.core.stores
     }
 
     pub fn checkpoints(&self) -> &CheckpointStore {
@@ -107,99 +106,109 @@ impl StreamingEngine {
     }
 
     pub fn drm(&self) -> &DrMaster {
-        &self.drm
+        &self.core.drm
     }
 
     /// The routing epoch currently in force.
     pub fn partitioner(&self) -> &PartitionerEpoch {
-        &self.partitioner
+        &self.core.partitioner
     }
 
     /// The current epoch number (observable in every [`IntervalReport`]).
     pub fn epoch(&self) -> u64 {
-        self.partitioner.epoch()
+        self.core.partitioner.epoch()
     }
 
     pub fn total_state_weight(&self) -> f64 {
-        self.stores.iter().map(|s| s.total_weight()).sum()
+        self.core.stores.iter().map(|s| s.total_weight()).sum()
     }
 
-    /// Process one checkpoint interval of records, then take the barrier:
-    /// snapshot, DRM decision, possible epoch swap + state migration.
-    pub fn run_interval(&mut self, records: &[Record]) -> IntervalReport {
-        self.interval_no += 1;
-        let n = self.cfg.n_partitions;
-
-        // Sources tap the stream (round-robin source assignment), sharded
-        // with the executor.
-        exec::tap_records_sharded(
-            &mut self.workers,
-            records,
-            TapAssignment::RoundRobin,
-            self.cfg.num_threads,
-        );
-
-        // Key-grouped routing to the pinned reducers through the shared
-        // stage: backpressure model — all channels drain at the pace of
-        // the bottleneck reducer.
-        let stage = ShuffleStage::new(&self.cfg, Scheduling::Pinned).run(
-            records,
-            &self.partitioner,
-            Some(self.stores.as_mut_slice()),
-        );
-
-        // Barrier: snapshot.
-        self.checkpoints.save(Checkpoint {
-            id: self.interval_no,
-            records_at: vec![records.len() as u64; n],
-            stores: self.stores.clone(),
-        });
-
-        // Barrier: DRM decision; an accepted decision bumps the epoch and
-        // the swap's derived plan migrates operator state explicitly.
-        let decision =
-            exec::decision_point_sharded(&mut self.drm, &mut self.workers, self.cfg.num_threads);
-        let decision_wall_s = decision.decision_wall_s;
-        let (mut migration_pause, mut migrated_fraction, mut repartitioned) = (0.0, 0.0, false);
-        if let Some(swap) = decision.swap {
-            let mig = exec::adopt_swap(
-                &self.cfg,
-                &mut self.stores,
-                &mut self.partitioner,
-                &mut self.metrics,
-                &swap,
-            );
-            migration_pause = mig.pause;
-            migrated_fraction = mig.migrated_fraction;
-            repartitioned = true;
-        }
-
-        let elapsed = stage.stage_time + migration_pause;
-        self.vtime += elapsed;
-        self.metrics.records_processed += records.len() as u64;
-        self.metrics.total_vtime += elapsed;
-        self.metrics.reduce_vtime += stage.reduce_time;
-        self.metrics.migration_vtime += migration_pause;
-        self.metrics.wall_s += stage.wall_s;
-        self.metrics.decision_wall_s += decision_wall_s;
-
+    fn report(&self, step: StepReport) -> IntervalReport {
         IntervalReport {
             interval_no: self.interval_no,
-            elapsed,
-            wall_s: stage.wall_s,
-            decision_wall_s,
-            throughput: if elapsed > 0.0 {
-                records.len() as f64 / elapsed
+            elapsed: step.makespan,
+            wall_s: step.stage.wall_s,
+            decision_wall_s: step.decision_wall_s,
+            source_wall_s: step.source_wall_s,
+            pipeline_occupancy: step.pipeline_occupancy,
+            throughput: if step.makespan > 0.0 {
+                step.n_records as f64 / step.makespan
             } else {
                 0.0
             },
-            imbalance: stage.imbalance,
-            migrated_fraction,
-            migration_pause,
-            repartitioned,
-            bottleneck_ratio: stage.bottleneck_ratio,
-            epoch: self.partitioner.epoch(),
+            imbalance: step.stage.imbalance,
+            migrated_fraction: step.migrated_fraction,
+            migration_pause: step.migration_pause,
+            repartitioned: step.repartitioned,
+            bottleneck_ratio: step.stage.bottleneck_ratio,
+            epoch: step.epoch,
         }
+    }
+
+    /// Process one checkpoint interval of records, then take the barrier:
+    /// snapshot, DRM decision, possible epoch swap + state migration —
+    /// one lockstep step of the unified loop.
+    pub fn run_interval(&mut self, records: &[Record]) -> IntervalReport {
+        self.interval_no += 1;
+        let id = self.interval_no;
+        let checkpoints = &mut self.checkpoints;
+        let step = pipeline::lockstep_step(
+            &mut self.core,
+            records,
+            Discipline::Streaming,
+            0.0,
+            Instant::now(),
+            &mut |recs, stores| {
+                checkpoints.save(Checkpoint {
+                    id,
+                    records_at: vec![recs.len() as u64; stores.len()],
+                    stores: stores.to_vec(),
+                });
+            },
+        );
+        self.vtime += step.makespan;
+        self.report(step)
+    }
+
+    /// Drive the engine over `source` for up to `max_intervals`
+    /// checkpoint intervals of `batch_size` records (stopping early if
+    /// the source exhausts). With `num_threads > 1` the loop pipelines:
+    /// while interval *k*'s stage drains, the source materializes
+    /// interval *k+1* and the barrier's decision point harvests and
+    /// merges concurrently ([`pipeline::drive`]) — reports stay
+    /// bitwise-identical to a `run_interval` loop over the same
+    /// intervals; only the measured wall-clock columns change.
+    pub fn run_stream(
+        &mut self,
+        source: &mut dyn Source,
+        batch_size: usize,
+        max_intervals: usize,
+    ) -> Vec<IntervalReport> {
+        let mut id = self.interval_no;
+        let checkpoints = &mut self.checkpoints;
+        let steps = pipeline::drive(
+            &mut self.core,
+            source,
+            batch_size,
+            max_intervals,
+            Discipline::Streaming,
+            &mut |recs, stores| {
+                id += 1;
+                checkpoints.save(Checkpoint {
+                    id,
+                    records_at: vec![recs.len() as u64; stores.len()],
+                    stores: stores.to_vec(),
+                });
+            },
+        );
+        steps
+            .into_iter()
+            .map(|step| {
+                self.interval_no += 1;
+                self.vtime += step.makespan;
+                self.report(step)
+            })
+            .collect()
     }
 }
 
@@ -305,5 +314,39 @@ mod tests {
             last = r.epoch;
         }
         assert_eq!(e.epoch(), last);
+    }
+
+    #[test]
+    fn run_stream_equals_run_interval_loop_with_drift() {
+        // run_stream over a drifting LFM source must reproduce a manual
+        // next_batch → run_interval loop exactly, checkpoints included.
+        let mut a = StreamingEngine::new(cfg(6), DrConfig::forced(), PartitionerChoice::Kip, 8);
+        let mut la = Lfm::with_defaults(8);
+        let manual: Vec<IntervalReport> =
+            (0..4).map(|_| a.run_interval(&la.next_batch(15_000))).collect();
+
+        let mut b = StreamingEngine::new(cfg(6), DrConfig::forced(), PartitionerChoice::Kip, 8);
+        let mut src = Lfm::with_defaults(8).drifting();
+        let streamed = b.run_stream(&mut src, 15_000, 4);
+
+        assert_eq!(streamed.len(), manual.len());
+        for (x, y) in manual.iter().zip(&streamed) {
+            assert_eq!(x.interval_no, y.interval_no);
+            assert_eq!(x.repartitioned, y.repartitioned);
+            assert_eq!(x.epoch, y.epoch);
+            assert_eq!(x.elapsed.to_bits(), y.elapsed.to_bits());
+            assert_eq!(x.migrated_fraction.to_bits(), y.migrated_fraction.to_bits());
+        }
+        assert_eq!(a.vtime().to_bits(), b.vtime().to_bits());
+        assert_eq!(a.checkpoints().len(), b.checkpoints().len());
+        let (ca, cb) = (
+            a.checkpoints().latest().unwrap(),
+            b.checkpoints().latest().unwrap(),
+        );
+        assert_eq!(ca.id, cb.id);
+        assert_eq!(
+            ca.total_state_weight().to_bits(),
+            cb.total_state_weight().to_bits()
+        );
     }
 }

@@ -100,8 +100,10 @@ fn run_stream(method: Method, seed: u64, batch_size: usize) -> Series {
         )),
     };
 
+    // steady-state batches reuse one allocation (Generator::batch_into)
+    let mut batch = Vec::new();
     for _batch_no in 0..setup::LFM_BATCHES {
-        let batch = lfm.next_batch(batch_size);
+        lfm.next_batch_into(batch_size, &mut batch);
 
         // keygroup weights of this batch
         let mut kg: HashMap<Key, f64> = HashMap::new();

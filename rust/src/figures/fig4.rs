@@ -10,7 +10,7 @@ use super::setup;
 use crate::ddps::{EngineConfig, MicroBatchEngine};
 use crate::dr::{DrConfig, PartitionerChoice};
 use crate::util::Table;
-use crate::workload::{zipf::Zipf, Generator};
+use crate::workload::zipf::Zipf;
 
 /// NB: our exact-Zipf sampler parametrizes skew more aggressively than the
 /// paper's generator — a single key already takes ≥18% of the stream at
@@ -39,7 +39,10 @@ fn engine_config() -> EngineConfig {
 }
 
 /// Run the 10M-record job as a stream of micro-batches and report the
-/// steady-state imbalance (last batch) and total processing time.
+/// steady-state imbalance (last batch) and total processing time. The
+/// engine pulls the batches straight from the Zipf source through the
+/// unified loop (`run_stream`), so with `DYNREPART_THREADS > 1` batch
+/// generation overlaps stage execution.
 pub fn run_point(exponent: f64, scale: f64, with_dr: bool) -> (f64, f64) {
     let total_records = ((10_000_000 as f64) * scale).max(100_000.0) as usize;
     let n_batches = 10usize;
@@ -53,11 +56,8 @@ pub fn run_point(exponent: f64, scale: f64, with_dr: bool) -> (f64, f64) {
     };
     let mut engine = MicroBatchEngine::new(engine_config(), dr, choice, 42);
     let mut z = Zipf::new(keys, exponent, 42);
-    let mut last_imbalance = 1.0;
-    for _ in 0..n_batches {
-        let r = engine.run_batch(&z.batch(per_batch));
-        last_imbalance = r.imbalance;
-    }
+    let reports = engine.run_stream(&mut z, per_batch, n_batches);
+    let last_imbalance = reports.last().map_or(1.0, |r| r.imbalance);
     (last_imbalance, engine.metrics().total_vtime)
 }
 

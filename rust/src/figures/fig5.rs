@@ -16,7 +16,7 @@ use super::setup;
 use crate::ddps::{EngineConfig, MicroBatchEngine};
 use crate::dr::{DrConfig, PartitionerChoice};
 use crate::util::Table;
-use crate::workload::{zipf::Zipf, Generator};
+use crate::workload::zipf::Zipf;
 
 pub const PARTITION_SWEEP: [usize; 7] = [20, 40, 60, 80, 120, 180, 280];
 /// Paper: exponent 1.5; ours: the equivalent moderate-skew point.
@@ -41,10 +41,9 @@ pub fn run_point(n_partitions: usize, scale: f64, with_dr: bool) -> (f64, f64) {
     };
     let mut engine = MicroBatchEngine::new(cfg, dr, choice, 7);
     let mut z = Zipf::new(keys, SWEEP_EXPONENT, 7);
-    let mut last_imbalance = 1.0;
-    for _ in 0..n_batches {
-        last_imbalance = engine.run_batch(&z.batch(per_batch)).imbalance;
-    }
+    // unified loop: batch generation rides the prefetch lane
+    let reports = engine.run_stream(&mut z, per_batch, n_batches);
+    let last_imbalance = reports.last().map_or(1.0, |r| r.imbalance);
     (engine.metrics().total_vtime, last_imbalance)
 }
 

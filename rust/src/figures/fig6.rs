@@ -10,7 +10,7 @@ use super::setup;
 use crate::ddps::{EngineConfig, StreamingEngine};
 use crate::dr::{DrConfig, PartitionerChoice};
 use crate::util::Table;
-use crate::workload::{zipf::Zipf, Generator};
+use crate::workload::zipf::Zipf;
 
 /// See fig4::EXPONENTS on the parametrization shift vs the paper.
 pub const EXPONENTS: [f64; 7] = [0.8, 1.0, 1.2, 1.4, 1.6, 1.8, 2.0];
@@ -39,15 +39,14 @@ pub fn throughput(parallelism: usize, exponent: f64, scale: f64, with_dr: bool) 
     let per_interval = ((1_000_000 as f64) * scale).max(50_000.0) as usize;
     let mut e = engine(parallelism, with_dr, 11);
     let mut z = Zipf::new(keys, exponent, 11);
+    // unified loop: interval generation rides the prefetch lane
+    let reports = e.run_stream(&mut z, per_interval, 10);
     let mut records = 0u64;
     let mut elapsed = 0.0;
-    for i in 0..10 {
-        let r = e.run_interval(&z.batch(per_interval));
-        if i >= 2 {
-            // skip warmup + first repartition
-            records += per_interval as u64;
-            elapsed += r.elapsed;
-        }
+    for r in reports.iter().skip(2) {
+        // skip warmup + first repartition
+        records += per_interval as u64;
+        elapsed += r.elapsed;
     }
     records as f64 / elapsed
 }
@@ -59,9 +58,7 @@ pub fn running_time(parallelism: usize, exponent: f64, scale: f64, with_dr: bool
     let intervals = 10usize;
     let mut e = engine(parallelism, with_dr, 13);
     let mut z = Zipf::new(keys, exponent, 13);
-    for _ in 0..intervals {
-        e.run_interval(&z.batch(total / intervals));
-    }
+    e.run_stream(&mut z, total / intervals, intervals);
     e.vtime()
 }
 

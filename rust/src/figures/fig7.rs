@@ -52,10 +52,13 @@ pub fn run_crawl(scale: f64, n_partitions: usize, seed: u64) -> Vec<(JobReport, 
     // decide after 20% of the fetch list: still early (replay stays cheap)
     // but the host sample is dense enough for a faithful histogram
     job.decision_at = 0.2;
+    // DR and hash must see the same records, so the rounds are expanded
+    // here (into one reused buffer) rather than pulled per-job through a
+    // CrawlSource; each job still drives the unified loop.
+    let mut records = Vec::new();
     (0..7)
         .map(|round| {
-            let list = crawl.next_round(round);
-            let records = list.records();
+            crawl.next_round(round).records_into(&mut records);
             job.compare(&records)
         })
         .collect()

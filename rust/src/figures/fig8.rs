@@ -14,7 +14,7 @@ use crate::ddps::{BatchJob, EngineConfig, MicroBatchEngine};
 use crate::dr::{DrConfig, PartitionerChoice};
 use crate::util::Table;
 use crate::workload::webcrawl::Crawl;
-use crate::workload::{ner::NerGen, Record};
+use crate::workload::{ner::NerGen, Record, SliceSource};
 
 pub const NER_EXECUTORS: usize = 6;
 pub const NER_CORES: usize = 6;
@@ -106,10 +106,11 @@ pub fn right(scale: f64, reduce_cost: f64) -> Table {
                 (DrConfig::disabled(), PartitionerChoice::Uhp)
             };
             let mut engine = MicroBatchEngine::new(cfg, dr, choice, 77);
-            // stream as 8 micro-batches
-            for chunk in records.chunks(records.len().div_ceil(8)) {
-                engine.run_batch(chunk);
-            }
+            // stream as 8 micro-batches through the unified loop — the
+            // same pre-materialized records for DR and hash, borrowed
+            // (not copied) into the prefetch lane
+            let mut src = SliceSource::new(records.chunks(records.len().div_ceil(8)));
+            engine.run_stream(&mut src, 0, 8);
             engine.metrics().total_vtime
         };
         let with = run(true);

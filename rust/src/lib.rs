@@ -7,9 +7,11 @@
 //! - **L3 (this crate)** — the Dynamic Repartitioning framework ([`dr`]),
 //!   the Key Isolator Partitioner and baselines ([`partitioner`]), the
 //!   heavy-hitter sketches ([`sketch`]), and the mini-DDPS substrate
-//!   ([`ddps`]) with micro-batch (spark-like) and continuous (flink-like)
-//!   engines, keyed state with migration ([`state`]), and the workload
-//!   generators of the paper's evaluation ([`workload`]).
+//!   ([`ddps`]) with batch, micro-batch (spark-like) and continuous
+//!   (flink-like) engines driven by one pipelined loop
+//!   ([`ddps::pipeline`]: source prefetch ∥ DRM decision ∥ stage), keyed
+//!   state with migration ([`state`]), and the pull-based sources /
+//!   workload generators of the paper's evaluation ([`workload`]).
 //! - **L2/L1 (python, build-time only)** — the §6 NER reducer compute,
 //!   AOT-lowered to HLO text and executed from rust through [`runtime`]
 //!   (PJRT CPU via the `xla` crate).

@@ -91,11 +91,15 @@ fn main() {
             ] {
                 let mut engine = dynrepart::ddps::MicroBatchEngine::new(cfg, dr, choice, 1);
                 let mut z = dynrepart::workload::zipf::Zipf::new(100_000, 1.0, 1);
-                use dynrepart::workload::Generator;
-                for _ in 0..8 {
-                    engine.run_batch(&z.batch(100_000));
-                }
-                println!("{label}: {:.3} virtual s", engine.metrics().total_vtime);
+                // unified loop: source generation overlaps the stages
+                // when DYNREPART_THREADS > 1
+                engine.run_stream(&mut z, 100_000, 8);
+                let m = engine.metrics();
+                println!(
+                    "{label}: {:.3} virtual s  (pipeline occupancy {:.2})",
+                    m.total_vtime,
+                    m.pipeline_occupancy()
+                );
             }
         }
         _ => {

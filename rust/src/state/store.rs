@@ -41,6 +41,13 @@ impl Default for KeyState {
 #[derive(Debug, Clone, Default)]
 pub struct StateStore {
     states: KeyMap<KeyState>,
+    /// Incrementally maintained sum of all per-key weights: every fold
+    /// ([`StateStore::update`]) and migration step ([`StateStore::extract`]
+    /// / [`StateStore::install`]) adjusts it by the delta, so
+    /// [`StateStore::total_weight`] is O(1) — the engines read it per
+    /// report and at every epoch-swap barrier, which must never cost
+    /// O(keys). Pinned against the recomputed sum by
+    /// `cached_total_weight_tracks_recomputed_sum_through_migrations`.
     total_weight: f64,
 }
 
@@ -72,8 +79,16 @@ impl StateStore {
         self.states.len()
     }
 
+    /// Total state weight of this partition — the incrementally cached
+    /// sum, O(1) (see the field docs; never recomputed over the keys).
     pub fn total_weight(&self) -> f64 {
         self.total_weight
+    }
+
+    /// Recompute the total weight from scratch, O(keys). Test/debug
+    /// oracle for the cached [`StateStore::total_weight`].
+    pub fn recomputed_total_weight(&self) -> f64 {
+        self.states.values().map(|s| s.weight).sum()
     }
 
     pub fn keys(&self) -> impl Iterator<Item = Key> + '_ {
@@ -178,6 +193,47 @@ mod tests {
         let mut sw = s.state_weights();
         sw.sort_by_key(|e| e.0);
         assert_eq!(sw, vec![(1, 2.0), (2, 8.0)]);
+    }
+
+    #[test]
+    fn cached_total_weight_tracks_recomputed_sum_through_migrations() {
+        // the O(1) cached total must equal the O(keys) recomputed sum at
+        // every point of a fold → extract → install (migration) history,
+        // including merge-installs and removed keys
+        let mut stores = vec![StateStore::new(), StateStore::new(), StateStore::new()];
+        let check = |stores: &[StateStore], when: &str| {
+            for (i, s) in stores.iter().enumerate() {
+                assert!(
+                    (s.total_weight() - s.recomputed_total_weight()).abs() < 1e-9,
+                    "store {i} {when}: cached {} vs recomputed {}",
+                    s.total_weight(),
+                    s.recomputed_total_weight()
+                );
+            }
+        };
+        for k in 0..300u64 {
+            stores[(k % 3) as usize].fold_count(k, 0.5 + (k % 7) as f64);
+        }
+        check(&stores, "after folds");
+        // migrate every key whose id is even from its store to store (p+1)%3
+        for p in 0..3usize {
+            let keys: Vec<Key> = stores[p].keys().filter(|k| k % 2 == 0).collect();
+            for k in keys {
+                let st = stores[p].extract(k).unwrap();
+                stores[(p + 1) % 3].install(k, st);
+            }
+            check(&stores, "mid-migration");
+        }
+        // merge-install: move a key onto a partition that already has it
+        let st = stores[1].extract(1).or_else(|| stores[2].extract(1)).or_else(|| stores[0].extract(1)).unwrap();
+        stores[0].fold_count(1, 2.0);
+        stores[0].install(1, st);
+        check(&stores, "after merge-install");
+        // keep folding after migration
+        for k in 0..50u64 {
+            stores[0].fold_count(k * 3, 1.25);
+        }
+        check(&stores, "after post-migration folds");
     }
 
     #[test]

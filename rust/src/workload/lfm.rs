@@ -115,9 +115,21 @@ impl Lfm {
 
     /// Generate one batch of `n` records, then drift.
     pub fn next_batch(&mut self, n: usize) -> Vec<Record> {
-        let out = self.batch(n);
-        self.drift();
+        let mut out = Vec::new();
+        self.next_batch_into(n, &mut out);
         out
+    }
+
+    /// [`Lfm::next_batch`] into a reused buffer (cleared first): batch,
+    /// then one drift step.
+    pub fn next_batch_into(&mut self, n: usize, out: &mut Vec<Record>) {
+        self.batch_into(n, out);
+        self.drift();
+    }
+
+    /// Wrap into a [`DriftingLfm`] source whose batch boundaries drift.
+    pub fn drifting(self) -> DriftingLfm {
+        DriftingLfm(self)
     }
 
     #[inline]
@@ -132,6 +144,20 @@ impl Generator for Lfm {
         let rank = self.sample_rank();
         self.ts += 1;
         Record::unit(self.rank_to_key[rank], self.ts)
+    }
+}
+
+/// [`Lfm`] as a drifting [`Source`](super::Source): every pulled batch is
+/// followed by one [`Lfm::drift`] step, exactly like [`Lfm::next_batch`].
+/// (The blanket `Generator` source impl never drifts — use this wherever
+/// the Fig 3 protocol's per-batch concept drift is wanted.)
+#[derive(Debug, Clone)]
+pub struct DriftingLfm(pub Lfm);
+
+impl super::Source for DriftingLfm {
+    fn next_batch_into(&mut self, n: usize, buf: &mut Vec<Record>) -> bool {
+        self.0.next_batch_into(n, buf);
+        !buf.is_empty()
     }
 }
 
@@ -208,5 +234,18 @@ mod tests {
         let mut b = Lfm::with_defaults(42);
         assert_eq!(a.next_batch(1000), b.next_batch(1000));
         assert_eq!(a.next_batch(1000), b.next_batch(1000));
+    }
+
+    #[test]
+    fn drifting_source_matches_next_batch() {
+        use crate::workload::Source;
+        let mut direct = Lfm::with_defaults(6);
+        let mut src = Lfm::with_defaults(6).drifting();
+        let mut buf = Vec::new();
+        for _ in 0..3 {
+            assert!(src.next_batch_into(2_000, &mut buf));
+            assert_eq!(buf, direct.next_batch(2_000));
+        }
+        assert_eq!(src.0.batch_no(), direct.batch_no());
     }
 }

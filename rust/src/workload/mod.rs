@@ -10,6 +10,15 @@
 //!   dynamic-page parse costs.
 //! - [`ner`] — variable-length text records for the §6 NER streaming
 //!   application (token ids consumed by the AOT-compiled scorer).
+//!
+//! Records are produced one at a time by a [`Generator`] or pulled in
+//! batches through the [`Source`] trait, which is what the pipelined
+//! engine loop ([`crate::ddps::pipeline`]) drives: every generator is an
+//! unbounded source via the blanket impl, [`Bounded`] caps one at a record
+//! budget, [`ReplaySource`] / [`SliceSource`] replay pre-materialized
+//! batches (owned / borrowed), and workload-specific adapters
+//! ([`lfm::DriftingLfm`], [`webcrawl::CrawlSource`]) batch with their own
+//! boundary semantics.
 
 pub mod lfm;
 pub mod ner;
@@ -47,9 +56,166 @@ pub trait Generator {
     /// Produce the next record, advancing internal state (time, drift).
     fn next_record(&mut self) -> Record;
 
-    /// Produce `n` records into a vector.
+    /// Produce `n` records into `out`, reusing its allocation (`out` is
+    /// cleared first). The pipelined engine loop and the figure drivers
+    /// call this in steady state so per-batch buffers are allocated once.
+    fn batch_into(&mut self, n: usize, out: &mut Vec<Record>) {
+        out.clear();
+        out.reserve(n);
+        for _ in 0..n {
+            out.push(self.next_record());
+        }
+    }
+
+    /// Produce `n` records into a fresh vector ([`Generator::batch_into`]
+    /// with a new allocation).
     fn batch(&mut self, n: usize) -> Vec<Record> {
-        (0..n).map(|_| self.next_record()).collect()
+        let mut out = Vec::new();
+        self.batch_into(n, &mut out);
+        out
+    }
+}
+
+/// A pull-based batch source feeding the pipelined engine loop
+/// ([`crate::ddps::pipeline`]): the engine asks for the *next* batch and
+/// the source materializes it — on the loop's prefetch lane, concurrently
+/// with the stage executing the previous batch.
+///
+/// Sources are bounded or unbounded: a bounded source eventually returns
+/// `false` (no records produced) and the drive loop stops; the blanket
+/// impl below makes every [`Generator`] an unbounded source.
+pub trait Source {
+    /// Fill `buf` (cleared first) with the next batch of up to `n`
+    /// records. Returns `true` if any records were produced; `false`
+    /// means the source is exhausted (`buf` is left empty).
+    ///
+    /// Adapters over naturally-batched inputs (a crawl round, a replayed
+    /// batch sequence) may ignore `n` and produce their own batch size.
+    fn next_batch_into(&mut self, n: usize, buf: &mut Vec<Record>) -> bool;
+}
+
+/// Every generator is an unbounded source: each pull materializes exactly
+/// `n` fresh records.
+impl<G: Generator> Source for G {
+    fn next_batch_into(&mut self, n: usize, buf: &mut Vec<Record>) -> bool {
+        self.batch_into(n, buf);
+        !buf.is_empty()
+    }
+}
+
+/// Caps any source at a total record budget, turning an unbounded
+/// generator into a bounded source (the last batch may be partial).
+pub struct Bounded<S> {
+    inner: S,
+    remaining: usize,
+}
+
+impl<S: Source> Bounded<S> {
+    pub fn new(inner: S, total_records: usize) -> Self {
+        Self {
+            inner,
+            remaining: total_records,
+        }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.remaining
+    }
+
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+}
+
+impl<S: Source> Source for Bounded<S> {
+    fn next_batch_into(&mut self, n: usize, buf: &mut Vec<Record>) -> bool {
+        if self.remaining == 0 {
+            buf.clear();
+            return false;
+        }
+        self.inner.next_batch_into(n.min(self.remaining), buf);
+        // an inner source that ignores `n` (a crawl round, a replayed
+        // batch) may overfill: the budget truncates, never overruns
+        buf.truncate(self.remaining);
+        self.remaining -= buf.len();
+        !buf.is_empty()
+    }
+}
+
+/// Replays pre-materialized batches in order — how tests and drivers feed
+/// the pipelined loop the *exact* batch sequence a lockstep loop consumed
+/// (`n` is ignored; each pull yields one stored batch verbatim).
+pub struct ReplaySource {
+    batches: std::collections::VecDeque<Vec<Record>>,
+}
+
+impl ReplaySource {
+    pub fn new<I: IntoIterator<Item = Vec<Record>>>(batches: I) -> Self {
+        Self {
+            batches: batches.into_iter().collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.batches.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.batches.is_empty()
+    }
+}
+
+impl Source for ReplaySource {
+    fn next_batch_into(&mut self, _n: usize, buf: &mut Vec<Record>) -> bool {
+        match self.batches.pop_front() {
+            // hand over the already-materialized allocation instead of
+            // copying it; the caller's old buffer is dropped in its place
+            Some(mut b) => {
+                std::mem::swap(buf, &mut b);
+                !buf.is_empty()
+            }
+            None => {
+                buf.clear();
+                false
+            }
+        }
+    }
+}
+
+/// Replays *borrowed* record slices in order without copying the data up
+/// front (each pull copies one slice into the caller's buffer). Use this
+/// to stream pre-materialized records that must stay shared — e.g. the
+/// same record set driven through a DR and a hash engine.
+pub struct SliceSource<'a> {
+    slices: std::collections::VecDeque<&'a [Record]>,
+}
+
+impl<'a> SliceSource<'a> {
+    pub fn new<I: IntoIterator<Item = &'a [Record]>>(slices: I) -> Self {
+        Self {
+            slices: slices.into_iter().collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slices.is_empty()
+    }
+}
+
+impl Source for SliceSource<'_> {
+    fn next_batch_into(&mut self, _n: usize, buf: &mut Vec<Record>) -> bool {
+        buf.clear();
+        match self.slices.pop_front() {
+            Some(s) => {
+                buf.extend_from_slice(s);
+                !buf.is_empty()
+            }
+            None => false,
+        }
     }
 }
 
@@ -72,5 +238,93 @@ mod tests {
         assert_eq!(b.len(), 5);
         assert_eq!(b[4].ts, 5);
         assert!(b.iter().all(|r| r.key == 7 && r.weight == 1.0));
+    }
+
+    #[test]
+    fn batch_into_reuses_allocation_and_matches_batch() {
+        let mut a = Constant(0);
+        let mut b = Constant(0);
+        let mut buf = Vec::new();
+        a.batch_into(5, &mut buf);
+        assert_eq!(buf, b.batch(5));
+        let cap = buf.capacity();
+        let ptr = buf.as_ptr();
+        a.batch_into(5, &mut buf);
+        assert_eq!(buf.len(), 5);
+        assert_eq!(buf.capacity(), cap, "steady-state batch must not reallocate");
+        assert_eq!(buf.as_ptr(), ptr);
+        assert_eq!(buf[0].ts, 6, "generator state advances across refills");
+    }
+
+    #[test]
+    fn generators_are_unbounded_sources() {
+        let mut g = Constant(0);
+        let mut buf = Vec::new();
+        for pull in 1..=3u64 {
+            assert!(Source::next_batch_into(&mut g, 4, &mut buf));
+            assert_eq!(buf.len(), 4);
+            assert_eq!(buf[0].ts, (pull - 1) * 4 + 1);
+        }
+    }
+
+    #[test]
+    fn bounded_source_exhausts_at_budget() {
+        let mut s = Bounded::new(Constant(0), 10);
+        let mut buf = Vec::new();
+        assert!(s.next_batch_into(4, &mut buf));
+        assert_eq!(buf.len(), 4);
+        assert!(s.next_batch_into(4, &mut buf));
+        assert!(s.next_batch_into(4, &mut buf));
+        assert_eq!(buf.len(), 2, "final batch is partial");
+        assert!(!s.next_batch_into(4, &mut buf));
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn bounded_caps_sources_that_ignore_n() {
+        // an inner source that produces its own batch size (ReplaySource
+        // ignores n) must be truncated at the budget, never overrun —
+        // including under the batch_size = 0 pull convention
+        let batches = vec![vec![Record::unit(1, 1); 6], vec![Record::unit(2, 2); 6]];
+        let mut s = Bounded::new(ReplaySource::new(batches), 8);
+        let mut buf = Vec::new();
+        assert!(s.next_batch_into(0, &mut buf));
+        assert_eq!(buf.len(), 6);
+        assert!(s.next_batch_into(0, &mut buf));
+        assert_eq!(buf.len(), 2, "second batch truncated at the budget");
+        assert!(!s.next_batch_into(0, &mut buf));
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn slice_source_replays_borrowed_slices() {
+        let records: Vec<Record> = (0..10u64).map(|k| Record::unit(k, k)).collect();
+        let mut s = SliceSource::new(records.chunks(4));
+        assert_eq!(s.len(), 3);
+        let mut buf = Vec::new();
+        assert!(s.next_batch_into(0, &mut buf));
+        assert_eq!(buf, &records[..4]);
+        assert!(s.next_batch_into(0, &mut buf));
+        assert!(s.next_batch_into(0, &mut buf));
+        assert_eq!(buf, &records[8..]);
+        assert!(!s.next_batch_into(0, &mut buf));
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn replay_source_replays_verbatim_and_ignores_n() {
+        let batches = vec![
+            vec![Record::unit(1, 1), Record::unit(2, 2)],
+            vec![Record::unit(3, 3)],
+        ];
+        let mut s = ReplaySource::new(batches.clone());
+        assert_eq!(s.len(), 2);
+        let mut buf = Vec::new();
+        assert!(s.next_batch_into(999, &mut buf));
+        assert_eq!(buf, batches[0]);
+        assert!(s.next_batch_into(0, &mut buf));
+        assert_eq!(buf, batches[1]);
+        assert!(!s.next_batch_into(10, &mut buf));
+        assert!(buf.is_empty());
     }
 }

@@ -92,7 +92,17 @@ impl FetchList {
     /// are spread deterministically around the mean so the expansion is
     /// cheap and reproducible.
     pub fn records(&self) -> Vec<Record> {
-        let mut out = Vec::with_capacity(self.total_pages() as usize);
+        let mut out = Vec::new();
+        self.records_into(&mut out);
+        out
+    }
+
+    /// [`FetchList::records`] into a reused buffer (cleared first) — the
+    /// per-round expansion is the crawl's steady-state allocation, so the
+    /// pipelined prefetcher and the figure drivers recycle it.
+    pub fn records_into(&self, out: &mut Vec<Record>) {
+        out.clear();
+        out.reserve(self.total_pages() as usize);
         let mut ts = (self.round as u64) << 32;
         let max_pages = self.entries.iter().map(|e| e.1).max().unwrap_or(0);
         for i in 0..max_pages {
@@ -107,7 +117,6 @@ impl FetchList {
                 out.push(Record::new(key, ts, mean * f));
             }
         }
-        out
     }
 }
 
@@ -208,6 +217,21 @@ impl Crawl {
         (0..self.cfg.rounds).map(|r| self.next_round(r)).collect()
     }
 
+    /// Configured number of crawl rounds.
+    pub fn rounds(&self) -> usize {
+        self.cfg.rounds
+    }
+
+    /// Turn the crawl into a bounded [`Source`](super::Source) of
+    /// per-round fetch-list records (one pull = one round, exhausting
+    /// after the configured rounds).
+    pub fn into_source(self) -> CrawlSource {
+        CrawlSource {
+            crawl: self,
+            round: 0,
+        }
+    }
+
     /// Exact per-host frequency map of a fetch list (for oracle tests).
     pub fn host_freqs(list: &FetchList) -> HashMap<Key, f64> {
         let total = list.total_pages() as f64;
@@ -215,6 +239,42 @@ impl Crawl {
             .iter()
             .map(|&(k, p, _)| (k, p as f64 / total))
             .collect()
+    }
+}
+
+/// The crawl as a bounded [`Source`](super::Source): each pull expands
+/// the next round's fetch list into records (`n` is ignored — a round's
+/// size is set by the frontier, not the caller) and the source exhausts
+/// after the configured number of rounds. This is what feeds
+/// [`BatchJob::run_stream`](crate::ddps::BatchJob::run_stream): round
+/// k+1's frontier materializes while round k's job is still shuffling.
+#[derive(Debug)]
+pub struct CrawlSource {
+    crawl: Crawl,
+    round: usize,
+}
+
+impl CrawlSource {
+    /// Rounds already pulled.
+    pub fn rounds_done(&self) -> usize {
+        self.round
+    }
+
+    pub fn crawl(&self) -> &Crawl {
+        &self.crawl
+    }
+}
+
+impl super::Source for CrawlSource {
+    fn next_batch_into(&mut self, _n: usize, buf: &mut Vec<Record>) -> bool {
+        if self.round >= self.crawl.rounds() {
+            buf.clear();
+            return false;
+        }
+        let list = self.crawl.next_round(self.round);
+        self.round += 1;
+        list.records_into(buf);
+        !buf.is_empty()
     }
 }
 
@@ -293,5 +353,20 @@ mod tests {
         for (x, y) in la.iter().zip(&lb) {
             assert_eq!(x.entries, y.entries);
         }
+    }
+
+    #[test]
+    fn crawl_source_replays_the_rounds_then_exhausts() {
+        use crate::workload::Source;
+        let mut direct = Crawl::with_defaults(8);
+        let mut src = Crawl::with_defaults(8).into_source();
+        let mut buf = Vec::new();
+        for round in 0..7 {
+            assert!(src.next_batch_into(0, &mut buf), "round {round}");
+            assert_eq!(buf, direct.next_round(round).records(), "round {round}");
+        }
+        assert!(!src.next_batch_into(0, &mut buf));
+        assert!(buf.is_empty());
+        assert_eq!(src.rounds_done(), 7);
     }
 }

@@ -1,10 +1,13 @@
-//! Property tests for executor- and DRM-sharding invariance: for every
-//! engine, `num_threads = N` must reproduce the `num_threads = 1` reports
-//! exactly — routing (loads / record counts), epochs, virtual times, DRM
-//! decisions and migration plans are compared bitwise. Wall-clock fields
-//! (`wall_s`, `decision_wall_s`) are measurements and are the only
-//! reported values allowed to differ. Replay failures with
-//! `PROP_SEED=<seed> PROP_CASES=1`.
+//! Property tests for executor-, DRM- and pipeline-sharding invariance:
+//! for every engine, `num_threads = N` must reproduce the
+//! `num_threads = 1` reports exactly — routing (loads / record counts),
+//! epochs, virtual times, DRM decisions and migration plans are compared
+//! bitwise — and the pipelined drive loop (`run_stream` over a
+//! [`Source`](dynrepart::workload::Source)) must reproduce the lockstep
+//! per-batch loop over the same batches. Wall-clock fields (`wall_s`,
+//! `decision_wall_s`, `source_wall_s`, `pipeline_occupancy`) are
+//! measurements and are the only reported values allowed to differ.
+//! Replay failures with `PROP_SEED=<seed> PROP_CASES=1`.
 
 use dynrepart::ddps::{
     decision_point_sharded, tap_records_sharded, BatchJob, EngineConfig, MicroBatchEngine,
@@ -13,7 +16,7 @@ use dynrepart::ddps::{
 use dynrepart::dr::{DrConfig, DrMaster, DrWorker, PartitionerChoice};
 use dynrepart::partitioner::GedikStrategy;
 use dynrepart::prop::{forall, Gen};
-use dynrepart::workload::{zipf::Zipf, Generator, Record};
+use dynrepart::workload::{zipf::Zipf, Generator, Record, ReplaySource};
 
 fn cfg(n_partitions: usize, n_slots: usize, num_threads: usize) -> EngineConfig {
     EngineConfig {
@@ -192,6 +195,141 @@ fn streaming_reports_identical_across_thread_counts() {
         assert_bits(seq.vtime(), par.vtime(), "vtime");
         assert_bits(seq.total_state_weight(), par.total_state_weight(), "state weight");
         assert_eq!(seq.epoch(), par.epoch());
+    });
+}
+
+/// The pipelining invariant: for random workloads, DR configs and thread
+/// counts, driving each engine through the pipelined loop (`run_stream`
+/// over a replayed batch sequence) produces reports — virtual-time
+/// fields, epochs, migration plans (via migrated fractions / pauses /
+/// replay counts) — bitwise-identical to the lockstep per-batch loop
+/// over the same batches, and leaves identical engine state behind.
+#[test]
+fn pipelined_run_stream_identical_to_lockstep_for_all_engines() {
+    forall(8, |g| {
+        let n_partitions = g.usize(2..10);
+        let n_slots = n_partitions + g.usize(0..4);
+        // 1 = sequential drive, >1 = overlapped lanes; both must pin
+        let threads = g.usize(1..6);
+        let (batches, seed) = gen_batches(g, 4);
+        let dr = gen_dr(g);
+
+        // micro-batch
+        let mut mb_seq =
+            MicroBatchEngine::new(cfg(n_partitions, n_slots, 1), dr, PartitionerChoice::Kip, seed);
+        let mut mb_par = MicroBatchEngine::new(
+            cfg(n_partitions, n_slots, threads),
+            dr,
+            PartitionerChoice::Kip,
+            seed,
+        );
+        let manual: Vec<_> = batches.iter().map(|b| mb_seq.run_batch(b)).collect();
+        let mut src = ReplaySource::new(batches.clone());
+        let streamed = mb_par.run_stream(&mut src, 0, batches.len());
+        assert_eq!(manual.len(), streamed.len());
+        for (a, b) in manual.iter().zip(&streamed) {
+            let tag = format!("microbatch {} threads batch {}", threads, a.batch_no);
+            assert_eq!(a.batch_no, b.batch_no, "{tag}");
+            assert_eq!(a.repartitioned, b.repartitioned, "{tag}");
+            assert_eq!(a.epoch, b.epoch, "{tag}");
+            assert_bits(a.makespan, b.makespan, &tag);
+            assert_bits(a.map_time, b.map_time, &tag);
+            assert_bits(a.reduce_time, b.reduce_time, &tag);
+            assert_bits(a.migration_time, b.migration_time, &tag);
+            assert_bits(a.imbalance, b.imbalance, &tag);
+            assert_bits(a.migrated_fraction, b.migrated_fraction, &tag);
+            assert_vec_bits(&a.loads, &b.loads, &tag);
+            assert!(b.source_wall_s >= 0.0 && b.pipeline_occupancy >= 0.0, "{tag}");
+        }
+        assert_eq!(mb_seq.epoch(), mb_par.epoch());
+        assert_eq!(mb_seq.drm().decisions_made(), mb_par.drm().decisions_made());
+        assert_bits(
+            mb_seq.total_state_weight(),
+            mb_par.total_state_weight(),
+            "microbatch state weight",
+        );
+        assert_bits(
+            mb_seq.metrics().total_vtime,
+            mb_par.metrics().total_vtime,
+            "microbatch total_vtime",
+        );
+
+        // streaming
+        let mut st_seq =
+            StreamingEngine::new(cfg(n_partitions, n_slots, 1), dr, PartitionerChoice::Kip, seed);
+        let mut st_par = StreamingEngine::new(
+            cfg(n_partitions, n_slots, threads),
+            dr,
+            PartitionerChoice::Kip,
+            seed,
+        );
+        let manual: Vec<_> = batches.iter().map(|b| st_seq.run_interval(b)).collect();
+        let mut src = ReplaySource::new(batches.clone());
+        let streamed = st_par.run_stream(&mut src, 0, batches.len());
+        assert_eq!(manual.len(), streamed.len());
+        for (a, b) in manual.iter().zip(&streamed) {
+            let tag = format!("streaming {} threads interval {}", threads, a.interval_no);
+            assert_eq!(a.interval_no, b.interval_no, "{tag}");
+            assert_eq!(a.repartitioned, b.repartitioned, "{tag}");
+            assert_eq!(a.epoch, b.epoch, "{tag}");
+            assert_bits(a.elapsed, b.elapsed, &tag);
+            assert_bits(a.throughput, b.throughput, &tag);
+            assert_bits(a.imbalance, b.imbalance, &tag);
+            assert_bits(a.migrated_fraction, b.migrated_fraction, &tag);
+            assert_bits(a.migration_pause, b.migration_pause, &tag);
+            assert_bits(a.bottleneck_ratio, b.bottleneck_ratio, &tag);
+        }
+        assert_eq!(st_seq.epoch(), st_par.epoch());
+        assert_bits(st_seq.vtime(), st_par.vtime(), "streaming vtime");
+        assert_bits(
+            st_seq.total_state_weight(),
+            st_par.total_state_weight(),
+            "streaming state weight",
+        );
+        // checkpoints are part of the barrier contract too
+        assert_eq!(st_seq.checkpoints().len(), st_par.checkpoints().len());
+        if let (Some(ca), Some(cb)) =
+            (st_seq.checkpoints().latest(), st_par.checkpoints().latest())
+        {
+            assert_eq!(ca.id, cb.id);
+            assert_bits(
+                ca.total_state_weight(),
+                cb.total_state_weight(),
+                "checkpoint state weight",
+            );
+        }
+
+        // batch jobs (round sequence)
+        let decision_at = g.f64(0.05..0.5);
+        let mut job_seq = BatchJob::new(
+            cfg(n_partitions, n_slots, 1),
+            dr,
+            PartitionerChoice::Kip,
+            seed,
+        );
+        job_seq.decision_at = decision_at;
+        let mut job_par = BatchJob::new(
+            cfg(n_partitions, n_slots, threads),
+            dr,
+            PartitionerChoice::Kip,
+            seed,
+        );
+        job_par.decision_at = decision_at;
+        let manual: Vec<_> = batches.iter().map(|b| job_seq.run(b)).collect();
+        let mut src = ReplaySource::new(batches.clone());
+        let streamed = job_par.run_stream(&mut src, 0, batches.len());
+        assert_eq!(manual.len(), streamed.len());
+        for (round, (a, b)) in manual.iter().zip(&streamed).enumerate() {
+            let tag = format!("batch job {} threads round {round}", threads);
+            assert_eq!(a.repartitioned, b.repartitioned, "{tag}");
+            assert_eq!(a.epoch, b.epoch, "{tag}");
+            assert_eq!(a.replayed_records, b.replayed_records, "{tag}");
+            assert_eq!(a.record_counts, b.record_counts, "{tag}");
+            assert_bits(a.makespan, b.makespan, &tag);
+            assert_bits(a.replay_time, b.replay_time, &tag);
+            assert_bits(a.imbalance, b.imbalance, &tag);
+            assert_vec_bits(&a.loads, &b.loads, &tag);
+        }
     });
 }
 
