@@ -1,0 +1,252 @@
+//! Millions-of-keys hot path: throughput and memory of the three
+//! per-record/per-decision paths at 10^5 → 10^7 live keys.
+//!
+//! - **route** — `PartitionerEpoch::partition` through the flat-array
+//!   fast path vs the `dyn Partitioner` call it lowers (bitwise-equal
+//!   routing, asserted here).
+//! - **update** — `StateStore::fold_count` into the open-addressing
+//!   arena; reports records/sec *and* bytes/key (asserted ≤ 256 for
+//!   count-only states).
+//! - **decide** — the sharded DRM decision point with bounded sketches
+//!   (`SketchConfig` at the reference knobs) vs the exact path, plus the
+//!   identity assertion that bounded-sketch-*off* equals exact bitwise.
+//!
+//! `BENCH_QUICK=1` trims the key sweep to 10^6 (the CI mode); the full
+//! sweep ends at 10^7. See EXPERIMENTS.md "Hot path".
+
+use dynrepart::bench::{bench_with, black_box, header, BenchOpts};
+use dynrepart::dr::{DrConfig, DrMaster, DrWorker, PartitionerChoice};
+use dynrepart::hash::fmix64;
+use dynrepart::partitioner::{Kip, KipConfig, Partitioner, PartitionerEpoch, Uhp, WeightedHash};
+use dynrepart::sketch::{Histogram, SketchConfig};
+use dynrepart::state::StateStore;
+use dynrepart::workload::Key;
+use std::sync::Arc;
+
+/// Bounding knobs scaled to this bench's λN — the same three-knob shape
+/// as the original system's repartitioning.conf (histogram-compaction /
+/// histogram-size-boundary / take).
+const BOUNDED: SketchConfig = SketchConfig {
+    compaction_interval: 1250,
+    size_boundary: 1024,
+    take_top_k: 128,
+};
+
+const N_PARTITIONS: usize = 64;
+
+/// A deterministic stream of `n` keys drawn uniformly from `n_keys` live
+/// keys — millions of live keys without a workload-generator table.
+fn keystream(n_keys: usize, n: usize, seed: u64) -> Vec<Key> {
+    (0..n as u64).map(|i| fmix64(i ^ seed) % n_keys as u64).collect()
+}
+
+fn fmt_rate(records_per_s: f64) -> String {
+    if records_per_s >= 1e6 {
+        format!("{:.1} Mrec/s", records_per_s / 1e6)
+    } else {
+        format!("{:.0} krec/s", records_per_s / 1e3)
+    }
+}
+
+/// A KIP epoch with λN explicit heavy routes over `n_keys` live keys.
+fn kip_epoch(n_keys: usize) -> PartitionerEpoch {
+    let cfg = KipConfig::default();
+    let b = cfg.histogram_size(N_PARTITIONS);
+    // heavy keys spread across the key space, 30% of total mass
+    let freqs: Vec<(Key, f64)> = (0..b as u64)
+        .map(|i| (fmix64(i) % n_keys as u64, 0.3 / b as f64))
+        .collect();
+    let mut dedup = freqs;
+    dedup.sort_unstable_by_key(|&(k, _)| k);
+    dedup.dedup_by_key(|&mut (k, _)| k);
+    let hist = Histogram::from_freqs(&dedup, 1.0);
+    let kip = Kip::update(
+        &Uhp::new(N_PARTITIONS),
+        &WeightedHash::with_default_hosts(N_PARTITIONS, 3),
+        &hist,
+        cfg,
+    );
+    PartitionerEpoch::new(1, Arc::new(kip))
+}
+
+fn route_bench(sweep: &[usize], opts: BenchOpts, batch: usize) {
+    header("route: PartitionerEpoch::partition, KIP flat vs dyn");
+    for &n_keys in sweep {
+        let ep = kip_epoch(n_keys);
+        let keys = keystream(n_keys, batch, 0x5EED);
+
+        // identity: the flat fast path must route bitwise like the dyn
+        // partitioner it was lowered from
+        for &k in keys.iter().take(100_000) {
+            assert_eq!(
+                ep.partition(k),
+                ep.as_dyn().partition(k),
+                "flat/dyn routing diverged at key {k}"
+            );
+        }
+
+        let m = bench_with(&format!("route/flat, {n_keys} keys"), opts, &mut || {
+            let mut acc = 0usize;
+            for &k in &keys {
+                acc += ep.partition(k);
+            }
+            black_box(acc);
+        });
+        println!("{}  {}", m.report(), fmt_rate(m.throughput(batch as f64)));
+
+        let m = bench_with(&format!("route/dyn, {n_keys} keys"), opts, &mut || {
+            let mut acc = 0usize;
+            for &k in &keys {
+                acc += ep.as_dyn().partition(k);
+            }
+            black_box(acc);
+        });
+        println!("{}  {}", m.report(), fmt_rate(m.throughput(batch as f64)));
+    }
+}
+
+fn update_bench(sweep: &[usize], opts: BenchOpts, batch: usize) {
+    header("update: StateStore::fold_count, open-addressing arena");
+    for &n_keys in sweep {
+        let mut store = StateStore::new();
+        for k in 0..n_keys as u64 {
+            store.fold_count(k, 1.0);
+        }
+        assert_eq!(store.n_keys(), n_keys);
+        let bytes_per_key = store.footprint_bytes() as f64 / n_keys as f64;
+        // count-only states must stay inline: no per-key heap Vec
+        assert!(
+            bytes_per_key <= 256.0,
+            "{n_keys} keys: {bytes_per_key:.1} bytes/key exceeds the inline budget"
+        );
+
+        let keys = keystream(n_keys, batch, 0xF01D);
+        let m = bench_with(&format!("update/fold, {n_keys} keys"), opts, &mut || {
+            for &k in &keys {
+                store.fold_count(k, 1.0);
+            }
+            black_box(store.total_weight());
+        });
+        println!(
+            "{}  {}  {:.1} bytes/key",
+            m.report(),
+            fmt_rate(m.throughput(batch as f64)),
+            bytes_per_key
+        );
+    }
+}
+
+fn drm(sketch: SketchConfig) -> DrMaster {
+    // generous exact-path counters (16× λN) so the bounded knobs above
+    // actually bite: boundary < capacity, take < histogram size
+    let cfg = DrConfig {
+        lambda: 4,
+        counter_capacity_factor: 16,
+        force_updates: true,
+        ..Default::default()
+    };
+    DrMaster::with_sketch(cfg, PartitionerChoice::Kip, N_PARTITIONS, 1, sketch)
+}
+
+/// Local histograms as `n_workers` DRWs would deliver them after
+/// observing the stream, under the given sketch knobs.
+fn worker_histograms(
+    master: &DrMaster,
+    keys: &[Key],
+    n_workers: usize,
+    sketch: SketchConfig,
+) -> Vec<Histogram> {
+    let dr = *master.config();
+    let per = keys.len().div_ceil(n_workers).max(1);
+    keys.chunks(per)
+        .enumerate()
+        .map(|(w, chunk)| {
+            let mut drw = DrWorker::with_sketch(
+                master.worker_capacity(),
+                dr.sample_rate,
+                1 ^ (w as u64) << 8,
+                sketch,
+            );
+            for &k in chunk {
+                drw.observe(k, 1.0);
+            }
+            if sketch.size_boundary > 0 {
+                assert!(
+                    drw.footprint() <= sketch.size_boundary + sketch.compaction_interval,
+                    "worker sketch exceeded its bound"
+                );
+            }
+            drw.harvest(master.ship_size())
+        })
+        .collect()
+}
+
+fn decide_bench(sweep: &[usize], opts: BenchOpts, batch: usize, threads: usize) {
+    header(&format!(
+        "decide: sharded DRM decision point, {threads} threads, bounded vs exact"
+    ));
+    for &n_keys in sweep {
+        let keys = keystream(n_keys, batch, 0xDEC1);
+        for (label, sketch) in [("exact", SketchConfig::unbounded()), ("bounded", BOUNDED)] {
+            let mut master = drm(sketch);
+            let hists = worker_histograms(&master, &keys, 8, sketch);
+            let ship: usize = hists.iter().map(|h| h.len()).sum();
+            let m = bench_with(&format!("decide/{label}, {n_keys} keys"), opts, &mut || {
+                black_box(master.decide_sharded(hists.clone(), threads));
+            });
+            println!("{}  ship={ship} entries", m.report());
+        }
+    }
+}
+
+/// Bounded-sketch-*off* must reproduce the exact decision path bitwise.
+fn identity_check(batch: usize) {
+    let keys = keystream(500_000, batch, 0x1DE4);
+    let mut exact = drm(SketchConfig::unbounded());
+    let mut dflt = drm(SketchConfig::default());
+    let h_exact = worker_histograms(&exact, &keys, 8, SketchConfig::unbounded());
+    let h_dflt = worker_histograms(&dflt, &keys, 8, SketchConfig::default());
+    for (a, b) in h_exact.iter().zip(&h_dflt) {
+        assert_eq!(a.entries(), b.entries(), "default sketch altered a DRW harvest");
+    }
+    let da = exact.decide_sharded(h_exact, 4);
+    let db = dflt.decide_sharded(h_dflt, 4);
+    assert_eq!(da.epoch, db.epoch);
+    assert_eq!(da.histogram.entries(), db.histogram.entries());
+    let (pa, pb) = (
+        da.new_partitioner().expect("forced"),
+        db.new_partitioner().expect("forced"),
+    );
+    for k in 0..200_000u64 {
+        assert_eq!(pa.partition(k), pb.partition(k), "routing diverged at key {k}");
+    }
+    println!("\ndefault SketchConfig bitwise-identical to the exact path: ok");
+
+    // and with bounding on, the merged histogram honours the take cut
+    let mut bounded = drm(BOUNDED);
+    let hb = worker_histograms(&bounded, &keys, 8, BOUNDED);
+    assert!(hb.iter().all(|h| h.len() <= BOUNDED.take_top_k));
+    let d = bounded.decide_sharded(hb, 4);
+    assert!(d.histogram.len() <= bounded.histogram_size());
+    println!("bounded sketch honours ship/take bounds: ok");
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let sweep: &[usize] = if quick {
+        &[100_000, 1_000_000]
+    } else {
+        &[100_000, 1_000_000, 10_000_000]
+    };
+    let batch = if quick { 500_000 } else { 2_000_000 };
+    let opts = BenchOpts {
+        budget_s: if quick { 0.3 } else { 1.0 },
+        max_iters: if quick { 50 } else { 10_000 },
+        ..Default::default()
+    };
+
+    route_bench(sweep, opts, batch);
+    update_bench(sweep, opts, batch);
+    decide_bench(sweep, opts, batch, 4);
+    identity_check(batch);
+}

@@ -107,7 +107,9 @@ pub fn decision_point_sharded(
     num_threads: usize,
 ) -> DrDecision {
     let wall_start = Instant::now();
-    let k = drm.histogram_size();
+    // The worker→master `take` cut: each harvest ships only
+    // `drm.ship_size()` entries (== histogram_size unless take_top_k set).
+    let k = drm.ship_size();
     let hists: Vec<Histogram> = parallel::harvest_sharded(workers, k, num_threads);
     let mut decision = drm.decide_sharded(hists, num_threads);
     decision.decision_wall_s = wall_start.elapsed().as_secs_f64();

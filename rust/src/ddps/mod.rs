@@ -49,6 +49,7 @@ pub use microbatch::{BatchReport, MicroBatchEngine};
 pub use pipeline::{Discipline, EngineCore, StepReport};
 pub use streaming::{IntervalReport, StreamingEngine};
 
+use crate::sketch::SketchConfig;
 use crate::util::VTime;
 
 /// Cost model of one executor cluster. All costs are in virtual seconds;
@@ -96,6 +97,13 @@ pub struct EngineConfig {
     /// this knob — only the measured `wall_s` / `decision_wall_s` /
     /// `source_wall_s` columns and the pipeline-occupancy ratio do.
     pub num_threads: usize,
+    /// Sketch-bounding knobs for the DR layer — DRW counter compaction,
+    /// histogram size boundary, and the worker→master `take` cut
+    /// ([`SketchConfig`]). The default is unbounded: every DR code path
+    /// is bit-identical to the exact implementation. Env-overridable via
+    /// `DYNREPART_SKETCH_COMPACTION` / `DYNREPART_SKETCH_BOUND` /
+    /// `DYNREPART_SKETCH_TAKE` through [`EngineConfig::from_env`].
+    pub sketch: SketchConfig,
 }
 
 impl Default for EngineConfig {
@@ -112,6 +120,7 @@ impl Default for EngineConfig {
             spill_threshold_factor: 1.5,
             spill_penalty: 2.5,
             num_threads: 1,
+            sketch: SketchConfig::default(),
         }
     }
 }
@@ -138,10 +147,13 @@ impl EngineConfig {
             .unwrap_or(1)
     }
 
-    /// [`Default`], with `num_threads` taken from `DYNREPART_THREADS`.
+    /// [`Default`], with `num_threads` taken from `DYNREPART_THREADS` and
+    /// the sketch knobs from `DYNREPART_SKETCH_*`
+    /// ([`SketchConfig::from_env`]).
     pub fn from_env() -> Self {
         Self {
             num_threads: Self::threads_from_env(),
+            sketch: SketchConfig::from_env(),
             ..Default::default()
         }
     }
@@ -193,6 +205,8 @@ mod tests {
     #[test]
     fn default_is_sequential_and_env_threads_sane() {
         assert_eq!(EngineConfig::default().num_threads, 1);
+        // the default sketch config is the exact, unbounded path
+        assert!(EngineConfig::default().sketch.is_unbounded());
         // unset/garbage env must degrade to the sequential path
         assert!(EngineConfig::threads_from_env() >= 1);
         assert!(EngineConfig::from_env().num_threads >= 1);

@@ -84,9 +84,16 @@ impl EngineCore {
         seed: u64,
     ) -> Self {
         cfg.validate();
-        let drm = DrMaster::new(dr, choice, cfg.n_partitions, seed);
+        let drm = DrMaster::with_sketch(dr, choice, cfg.n_partitions, seed, cfg.sketch);
         let workers = (0..n_workers)
-            .map(|w| DrWorker::new(drm.worker_capacity(), dr.sample_rate, seed ^ (w as u64) << 8))
+            .map(|w| {
+                DrWorker::with_sketch(
+                    drm.worker_capacity(),
+                    dr.sample_rate,
+                    seed ^ (w as u64) << 8,
+                    cfg.sketch,
+                )
+            })
             .collect();
         let partitioner = drm.handle();
         let stores = (0..cfg.n_partitions).map(|_| StateStore::new()).collect();
@@ -539,9 +546,16 @@ pub fn job_step(
     span: Instant,
     overlap: &mut dyn FnMut(),
 ) -> StepReport {
-    let mut drm = DrMaster::new(dr, choice, cfg.n_partitions, seed);
+    let mut drm = DrMaster::with_sketch(dr, choice, cfg.n_partitions, seed, cfg.sketch);
     let mut workers: Vec<DrWorker> = (0..cfg.n_slots)
-        .map(|w| DrWorker::new(drm.worker_capacity(), dr.sample_rate, seed ^ (w as u64) << 8))
+        .map(|w| {
+            DrWorker::with_sketch(
+                drm.worker_capacity(),
+                dr.sample_rate,
+                seed ^ (w as u64) << 8,
+                cfg.sketch,
+            )
+        })
         .collect();
     let mut partitioner = drm.handle();
 

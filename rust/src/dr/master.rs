@@ -47,7 +47,7 @@ use crate::partitioner::{
     EpochSwap, EpochedPartitioner, GedikConfig, GedikPartitioner, GedikStrategy, Kip, KipConfig,
     Mixed, Partitioner, PartitionerEpoch, Uhp,
 };
-use crate::sketch::Histogram;
+use crate::sketch::{Histogram, SketchConfig};
 use crate::workload::Key;
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -117,6 +117,11 @@ impl Partitioner for DynPartitioner {
     fn tail_shares(&self) -> Vec<f64> {
         self.as_dyn().tail_shares()
     }
+
+    fn flat_routes(&self) -> Option<crate::partitioner::FlatRoutes> {
+        // delegate so DRM-installed epochs get the flat fast path too
+        self.as_dyn().flat_routes()
+    }
 }
 
 /// Outcome of a DRM decision point.
@@ -170,12 +175,29 @@ pub struct DrMaster {
     epoched: EpochedPartitioner,
     /// Record of past histograms (§3) blended into each decision.
     past: VecDeque<Histogram>,
+    /// Sketch-bounding knobs (default: unbounded — exact path, bitwise).
+    sketch: SketchConfig,
     updates_issued: u64,
     decisions_made: u64,
 }
 
 impl DrMaster {
     pub fn new(cfg: DrConfig, choice: PartitionerChoice, n_partitions: usize, seed: u64) -> Self {
+        Self::with_sketch(cfg, choice, n_partitions, seed, SketchConfig::default())
+    }
+
+    /// [`DrMaster::new`] with sketch-bounding knobs: `size_boundary` caps
+    /// the DRW counter capacity and the per-node size of the decision
+    /// point's histogram tree-merge, and `take_top_k` caps how many
+    /// entries each DRW harvest ships ([`DrMaster::ship_size`]). The
+    /// default [`SketchConfig`] reproduces [`DrMaster::new`] bit-for-bit.
+    pub fn with_sketch(
+        cfg: DrConfig,
+        choice: PartitionerChoice,
+        n_partitions: usize,
+        seed: u64,
+        sketch: SketchConfig,
+    ) -> Self {
         let kip_cfg = KipConfig {
             lambda: cfg.lambda,
             epsilon: cfg.epsilon,
@@ -203,6 +225,7 @@ impl DrMaster {
             current,
             epoched,
             past: VecDeque::new(),
+            sketch,
             updates_issued: 0,
             decisions_made: 0,
         }
@@ -210,6 +233,10 @@ impl DrMaster {
 
     pub fn config(&self) -> &DrConfig {
         &self.cfg
+    }
+
+    pub fn sketch(&self) -> SketchConfig {
+        self.sketch
     }
 
     pub fn choice(&self) -> PartitionerChoice {
@@ -220,9 +247,26 @@ impl DrMaster {
         self.cfg.lambda * self.n_partitions
     }
 
-    /// Per-worker counter capacity the DRWs should be created with.
+    /// Per-worker counter capacity the DRWs should be created with —
+    /// capped at `sketch.size_boundary` when a boundary is set.
     pub fn worker_capacity(&self) -> usize {
-        self.cfg.counter_capacity_factor * self.histogram_size()
+        let cap = self.cfg.counter_capacity_factor * self.histogram_size();
+        if self.sketch.size_boundary > 0 {
+            cap.min(self.sketch.size_boundary)
+        } else {
+            cap
+        }
+    }
+
+    /// How many entries each DRW harvest ships to this master — the
+    /// `take` cut of the original system. Without a `take_top_k` knob
+    /// this is the full global histogram size B = λN.
+    pub fn ship_size(&self) -> usize {
+        if self.sketch.take_top_k > 0 {
+            self.histogram_size().min(self.sketch.take_top_k)
+        } else {
+            self.histogram_size()
+        }
     }
 
     /// Snapshot of the currently installed routing epoch.
@@ -290,8 +334,12 @@ impl DrMaster {
     ) -> DrDecision {
         let wall_start = Instant::now();
         self.decisions_made += 1;
-        let merged =
-            parallel::merge_histograms_tree(worker_histograms, self.histogram_size(), num_threads);
+        let merged = parallel::merge_histograms_tree_bounded(
+            worker_histograms,
+            self.histogram_size(),
+            self.sketch.size_boundary,
+            num_threads,
+        );
         let hist = self.blended(merged);
 
         let current_max = Self::max_share(self.current.as_dyn(), &hist);
@@ -545,6 +593,81 @@ mod tests {
                 assert!(ds.decision_wall_s >= 0.0 && dp.decision_wall_s >= 0.0);
             }
             assert_eq!(seq.epoch(), par.epoch(), "{}", choice.name());
+        }
+    }
+
+    #[test]
+    fn default_sketch_reproduces_plain_master_bitwise() {
+        let mut plain = DrMaster::new(DrConfig::forced(), PartitionerChoice::Kip, 8, 21);
+        let mut sk = DrMaster::with_sketch(
+            DrConfig::forced(),
+            PartitionerChoice::Kip,
+            8,
+            21,
+            SketchConfig::default(),
+        );
+        assert_eq!(plain.worker_capacity(), sk.worker_capacity());
+        assert_eq!(plain.ship_size(), sk.ship_size());
+        assert_eq!(plain.ship_size(), plain.histogram_size());
+        let mut z = Zipf::new(20_000, 1.2, 21);
+        for _ in 0..3 {
+            let recs = z.batch(60_000);
+            let hists = worker_hists(&recs, 4, plain.histogram_size());
+            let dp = plain.decide(hists.clone());
+            let dsk = sk.decide(hists);
+            assert_eq!(dp.repartitioned(), dsk.repartitioned());
+            assert_eq!(dp.epoch, dsk.epoch);
+            assert_eq!(dp.histogram.entries(), dsk.histogram.entries());
+            assert_eq!(dp.current_max_share.to_bits(), dsk.current_max_share.to_bits());
+            assert_eq!(dp.planned_max_share.to_bits(), dsk.planned_max_share.to_bits());
+        }
+    }
+
+    #[test]
+    fn sketch_knobs_cap_capacity_and_shipping() {
+        let sketch = SketchConfig {
+            compaction_interval: 1250,
+            size_boundary: 12,
+            take_top_k: 6,
+        };
+        let drm = DrMaster::with_sketch(DrConfig::default(), PartitionerChoice::Kip, 8, 22, sketch);
+        assert_eq!(drm.sketch(), sketch);
+        assert_eq!(drm.worker_capacity(), 12); // 4 * λN = 64, capped
+        assert_eq!(drm.ship_size(), 6); // λN = 16, capped by take
+    }
+
+    #[test]
+    fn bounded_decide_is_bitwise_identical_across_thread_counts() {
+        let sketch = SketchConfig {
+            compaction_interval: 0,
+            size_boundary: 10,
+            take_top_k: 8,
+        };
+        let mk =
+            || DrMaster::with_sketch(DrConfig::forced(), PartitionerChoice::Kip, 8, 23, sketch);
+        let mut seq = mk();
+        let mut z = Zipf::new(20_000, 1.2, 23);
+        let batches: Vec<_> = (0..3).map(|_| z.batch(60_000)).collect();
+        let all_hists: Vec<Vec<Histogram>> =
+            batches.iter().map(|r| worker_hists(r, 5, seq.ship_size())).collect();
+        let seq_decisions: Vec<_> = all_hists.iter().map(|h| seq.decide(h.clone())).collect();
+        for threads in [2usize, 4, 7] {
+            let mut par = mk();
+            for (ds, hists) in seq_decisions.iter().zip(&all_hists) {
+                let dp = par.decide_sharded(hists.clone(), threads);
+                assert_eq!(ds.repartitioned(), dp.repartitioned(), "{threads} threads");
+                assert_eq!(ds.epoch, dp.epoch, "{threads} threads");
+                assert_eq!(
+                    ds.histogram.entries(),
+                    dp.histogram.entries(),
+                    "{threads} threads: bounded merge diverged"
+                );
+                assert_eq!(ds.planned_max_share.to_bits(), dp.planned_max_share.to_bits());
+                if let (Some(ss), Some(sp)) = (&ds.swap, &dp.swap) {
+                    assert_eq!(ss.plan(0..5_000u64), sp.plan(0..5_000u64), "{threads} threads");
+                }
+            }
+            assert_eq!(seq.epoch(), par.epoch(), "{threads} threads");
         }
     }
 

@@ -84,12 +84,35 @@ use std::thread;
 /// serially). Ranking of tied counts is stable by key — guaranteed by
 /// `merge_from` itself — so no fold shape can reorder heavy hitters.
 pub fn merge_histograms_tree(locals: Vec<Histogram>, k: usize, num_threads: usize) -> Histogram {
+    merge_histograms_tree_bounded(locals, k, 0, num_threads)
+}
+
+/// [`merge_histograms_tree`] with a mid-fold size boundary: after every
+/// pair-merge the merged node is re-bounded to its top `bound` entries
+/// (`bound = 0` keeps every intermediate node exact — the unbounded path
+/// above, bit-for-bit). This keeps the peak footprint of the fold at
+/// O(`bound`) per node instead of O(union of keys).
+///
+/// The bounded fold is still deterministic at any thread count: the tree
+/// shape is unchanged (a pure function of `locals.len()`), each bounded
+/// pair-merge is a pure function of its two inputs, and the truncation
+/// ranks exactly as `merge_from` sorted — on accumulated absolute counts
+/// with ties broken by ascending key — so which worker runs a pair still
+/// cannot affect its value. (The bounded result may differ from the
+/// unbounded one — truncation drops tail mass — but it differs
+/// *identically* across thread counts and fold orders.)
+pub fn merge_histograms_tree_bounded(
+    locals: Vec<Histogram>,
+    k: usize,
+    bound: usize,
+    num_threads: usize,
+) -> Histogram {
     let mut nodes = locals;
     if nodes.is_empty() {
         return Histogram::empty();
     }
     while nodes.len() > 1 {
-        merge_adjacent_pairs(&mut nodes, num_threads);
+        merge_adjacent_pairs(&mut nodes, bound, num_threads);
         // Every pair's merge landed in its left (even-index) node; an odd
         // trailing node is also at an even index and carries up a level.
         nodes = nodes.into_iter().step_by(2).collect();
@@ -101,20 +124,30 @@ pub fn merge_histograms_tree(locals: Vec<Histogram>, k: usize, num_threads: usiz
 
 /// One tree level: `nodes[2i] ← merge(nodes[2i], nodes[2i+1])` for every
 /// adjacent pair, the pair-merges spread over up to `num_threads` scoped
-/// workers on disjoint pair-aligned slices. Which worker computes a pair
-/// cannot affect its value, so every thread count produces identical
-/// level results.
-fn merge_adjacent_pairs(nodes: &mut [Histogram], num_threads: usize) {
+/// workers on disjoint pair-aligned slices. When `bound > 0` each merged
+/// node is truncated back to `bound` entries — `merge_from` leaves
+/// entries count-sorted with key tie-breaks, so the truncation is a
+/// deterministic suffix drop. Which worker computes a pair cannot affect
+/// its value, so every thread count produces identical level results.
+fn merge_adjacent_pairs(nodes: &mut [Histogram], bound: usize, num_threads: usize) {
     let pairs = nodes.len() / 2;
     if pairs == 0 {
         return;
     }
+    // `move` so the closure captures `bound` by value and stays `Copy` —
+    // each scoped worker below takes its own copy.
+    let merge_pair = move |pair: &mut [Histogram]| {
+        if let [left, right] = pair {
+            left.merge_from(right);
+            if bound > 0 {
+                left.truncate_top(bound);
+            }
+        }
+    };
     let workers = num_threads.max(1).min(pairs);
     if workers <= 1 {
         for pair in nodes.chunks_mut(2) {
-            if let [left, right] = pair {
-                left.merge_from(right);
-            }
+            merge_pair(pair);
         }
         return;
     }
@@ -125,9 +158,7 @@ fn merge_adjacent_pairs(nodes: &mut [Histogram], num_threads: usize) {
         for slice in nodes[..pairs * 2].chunks_mut(pair_chunk * 2) {
             s.spawn(move || {
                 for pair in slice.chunks_mut(2) {
-                    if let [left, right] = pair {
-                        left.merge_from(right);
-                    }
+                    merge_pair(pair);
                 }
             });
         }
@@ -271,6 +302,47 @@ mod tests {
         assert_eq!(m.entries()[0].key, 9);
         assert!((m.entries()[0].freq - 0.3).abs() < 1e-9);
         assert!((m.total_weight() - 4000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bounded_tree_merge_identical_at_any_thread_count() {
+        for n_locals in [1usize, 2, 3, 7, 8, 13] {
+            let locals = worker_locals(n_locals, 60_000, 1.2, n_locals as u64);
+            for bound in [4usize, 16, 64] {
+                let seq = merge_histograms_tree_bounded(locals.clone(), 16, bound, 1);
+                assert!(seq.len() <= 16);
+                for threads in [2usize, 3, 4, 8] {
+                    let par = merge_histograms_tree_bounded(locals.clone(), 16, bound, threads);
+                    assert_eq!(
+                        seq.entries(),
+                        par.entries(),
+                        "{n_locals} locals, bound {bound}, {threads} threads: diverged"
+                    );
+                    assert_eq!(seq.total_weight().to_bits(), par.total_weight().to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bounded_tree_merge_caps_every_intermediate_node() {
+        // With bound B, no node the fold produces can exceed B entries, so
+        // the final result (before the top-k cut) is ≤ B as well: ask for
+        // a huge k and check the boundary is what limits the output.
+        let locals = worker_locals(9, 60_000, 0.8, 3);
+        for bound in [2usize, 8, 32] {
+            let m = merge_histograms_tree_bounded(locals.clone(), usize::MAX, bound, 4);
+            assert!(m.len() <= bound, "bound {bound}: {} entries", m.len());
+        }
+    }
+
+    #[test]
+    fn bound_zero_is_bitwise_exact() {
+        let locals = worker_locals(7, 60_000, 1.1, 9);
+        let exact = merge_histograms_tree(locals.clone(), 16, 4);
+        let bounded = merge_histograms_tree_bounded(locals, 16, 0, 4);
+        assert_eq!(exact.entries(), bounded.entries());
+        assert_eq!(exact.total_weight().to_bits(), bounded.total_weight().to_bits());
     }
 
     #[test]

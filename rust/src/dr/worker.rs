@@ -27,7 +27,7 @@
 //! assert!((h.entries()[0].freq - 0.9).abs() < 1e-9);
 //! ```
 
-use crate::sketch::{FreqCounter, HeavyHitter, Histogram};
+use crate::sketch::{FreqCounter, HeavyHitter, Histogram, SketchConfig};
 use crate::util::Rng;
 use crate::workload::Key;
 
@@ -38,10 +38,27 @@ pub struct DrWorker {
     rng: Rng,
     observed: u64,
     sampled: u64,
+    sketch: SketchConfig,
+    /// Observations since the last compaction (the `histogram-compaction`
+    /// trigger counts *observations*, not sampled records, so the
+    /// schedule is independent of the sampling RNG).
+    since_compaction: usize,
 }
 
 impl DrWorker {
     pub fn new(capacity: usize, sample_rate: f64, seed: u64) -> Self {
+        Self::with_sketch(capacity, sample_rate, seed, SketchConfig::default())
+    }
+
+    /// [`DrWorker::new`] with sketch-bounding knobs: every
+    /// `sketch.compaction_interval` observations the counter is compacted
+    /// down to `sketch.size_boundary` entries (or to `capacity` when no
+    /// boundary is set). The default [`SketchConfig`] disables the
+    /// compaction branch entirely, reproducing the exact path bit-for-bit.
+    /// Compaction is keyed to this DRW's own observation count, and the
+    /// sharded tap replays each DRW's exact sequential observation
+    /// subsequence, so the schedule is thread-count independent.
+    pub fn with_sketch(capacity: usize, sample_rate: f64, seed: u64, sketch: SketchConfig) -> Self {
         assert!((0.0..=1.0).contains(&sample_rate) && sample_rate > 0.0);
         Self {
             counter: FreqCounter::with_capacity(capacity.max(1)),
@@ -49,6 +66,8 @@ impl DrWorker {
             rng: Rng::new(seed ^ 0xD2_57),
             observed: 0,
             sampled: 0,
+            sketch,
+            since_compaction: 0,
         }
     }
 
@@ -59,6 +78,18 @@ impl DrWorker {
         if self.sample_rate >= 1.0 || self.rng.next_f64() < self.sample_rate {
             self.sampled += 1;
             self.counter.observe(key, weight);
+        }
+        if self.sketch.compaction_interval > 0 {
+            self.since_compaction += 1;
+            if self.since_compaction >= self.sketch.compaction_interval {
+                self.since_compaction = 0;
+                let bound = if self.sketch.size_boundary > 0 {
+                    self.sketch.size_boundary
+                } else {
+                    self.counter.capacity()
+                };
+                self.counter.compact_to(bound);
+            }
         }
     }
 
@@ -136,6 +167,63 @@ mod tests {
             w.observe(i, 1.0);
         }
         assert!(w.footprint() <= 32);
+    }
+
+    #[test]
+    fn default_sketch_is_bitwise_exact() {
+        let mut plain = DrWorker::new(32, 0.5, 11);
+        let mut sketched = DrWorker::with_sketch(32, 0.5, 11, SketchConfig::default());
+        for i in 0..50_000u64 {
+            plain.observe(i % 400, 1.0);
+            sketched.observe(i % 400, 1.0);
+        }
+        assert_eq!(plain.observed(), sketched.observed());
+        assert_eq!(plain.sampled(), sketched.sampled());
+        let (hp, hs) = (plain.harvest(8), sketched.harvest(8));
+        assert_eq!(hp.entries(), hs.entries());
+        assert_eq!(hp.total_weight().to_bits(), hs.total_weight().to_bits());
+    }
+
+    #[test]
+    fn compaction_bounds_footprint_below_capacity() {
+        let sketch = SketchConfig {
+            compaction_interval: 100,
+            size_boundary: 8,
+            ..Default::default()
+        };
+        let mut w = DrWorker::with_sketch(1024, 1.0, 12, sketch);
+        for i in 0..10_000u64 {
+            w.observe(i, 1.0);
+        }
+        // between compactions at most interval new keys can accumulate
+        assert!(
+            w.footprint() <= 8 + 100,
+            "footprint {} exceeds boundary + interval",
+            w.footprint()
+        );
+        w.observe(10_000, 1.0); // unaligned tail, then force the boundary
+        for i in 0..99u64 {
+            w.observe(i, 1.0);
+        }
+        assert!(w.footprint() <= 8 + 100);
+    }
+
+    #[test]
+    fn compaction_keeps_heavy_keys() {
+        let sketch = SketchConfig {
+            compaction_interval: 500,
+            size_boundary: 16,
+            ..Default::default()
+        };
+        let mut w = DrWorker::with_sketch(4096, 1.0, 13, sketch);
+        for i in 0..100_000u64 {
+            // 30% of traffic on key 999, the rest unique
+            let k = if i % 10 < 3 { 999 } else { 1_000_000 + i };
+            w.observe(k, 1.0);
+        }
+        let h = w.harvest(4);
+        assert_eq!(h.entries()[0].key, 999);
+        assert!((h.entries()[0].freq - 0.3).abs() < 0.05);
     }
 
     #[test]

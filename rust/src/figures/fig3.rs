@@ -18,7 +18,6 @@ use crate::sketch::Histogram;
 use crate::state::SlidingStateWindow;
 use crate::util::{load_imbalance, Table};
 use crate::workload::{lfm::Lfm, Key};
-use std::collections::HashMap;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Method {
@@ -105,8 +104,8 @@ fn run_stream(method: Method, seed: u64, batch_size: usize) -> Series {
     for _batch_no in 0..setup::LFM_BATCHES {
         lfm.next_batch_into(batch_size, &mut batch);
 
-        // keygroup weights of this batch
-        let mut kg: HashMap<Key, f64> = HashMap::new();
+        // keygroup weights of this batch (fmix64-keyed hot-path map)
+        let mut kg: crate::util::keymap::KeyMap<f64> = crate::util::keymap::key_map();
         for r in &batch {
             *kg.entry(r.key).or_insert(0.0) += r.weight;
         }
@@ -201,6 +200,7 @@ pub fn summary(iters: usize, scale: f64) -> Table {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::HashMap;
 
     #[test]
     fn kip_beats_hash_scan_readj_on_imbalance() {

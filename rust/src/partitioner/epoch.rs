@@ -11,6 +11,7 @@
 //! the state-migration plan is *derived* (old routing vs new routing)
 //! instead of being re-implemented at each call site.
 
+use super::route::FlatRoutes;
 use super::{migration_fraction, migration_plan, Partitioner};
 use crate::workload::Key;
 use std::fmt;
@@ -20,15 +21,27 @@ use std::sync::Arc;
 /// function. Cheap to clone; engines route every record through one of
 /// these, and reports surface its `epoch()` so repartitionings are
 /// observable end-to-end.
+///
+/// Construction lowers the partitioner into a [`FlatRoutes`] fast path
+/// once ([`Partitioner::flat_routes`]); the per-record `partition` then
+/// runs over dense arrays with no virtual call. The lowering is exact, so
+/// routing is bitwise-unchanged — partitioners without a flat form
+/// (consistent-hash rings) fall through to the `dyn` call.
 #[derive(Clone)]
 pub struct PartitionerEpoch {
     epoch: u64,
     partitioner: Arc<dyn Partitioner>,
+    flat: Option<Arc<FlatRoutes>>,
 }
 
 impl PartitionerEpoch {
     pub fn new(epoch: u64, partitioner: Arc<dyn Partitioner>) -> Self {
-        Self { epoch, partitioner }
+        let flat = partitioner.flat_routes().map(Arc::new);
+        Self {
+            epoch,
+            partitioner,
+            flat,
+        }
     }
 
     /// The version number: 0 for the initial function, +1 per install.
@@ -38,7 +51,16 @@ impl PartitionerEpoch {
 
     #[inline]
     pub fn partition(&self, key: Key) -> usize {
-        self.partitioner.partition(key)
+        match &self.flat {
+            Some(f) => f.partition(key),
+            None => self.partitioner.partition(key),
+        }
+    }
+
+    /// The flat-array fast path this epoch routes through, if its
+    /// partitioner has one (benches and tests assert the identity).
+    pub fn flat(&self) -> Option<&FlatRoutes> {
+        self.flat.as_deref()
     }
 
     pub fn n_partitions(&self) -> usize {
@@ -219,6 +241,29 @@ mod tests {
             assert_eq!(old.partition(k), fresh.partition(k));
         }
         assert_eq!(old.epoch(), 0);
+    }
+
+    #[test]
+    fn epoch_routes_through_flat_fast_path() {
+        use crate::partitioner::{Kip, KipConfig, WeightedHash};
+        use crate::sketch::Histogram;
+        let n = 8;
+        let cfg = KipConfig::default();
+        let hist = Histogram::from_freqs(&[(3, 0.3), (11, 0.2), (40, 0.1)], 1.0);
+        let kip = Kip::update(
+            &Uhp::new(n),
+            &WeightedHash::with_default_hosts(n, 5),
+            &hist,
+            cfg,
+        );
+        let ep = PartitionerEpoch::new(0, Arc::new(kip.clone()));
+        let flat = ep.flat().expect("KIP epoch lowers to a flat table");
+        assert_eq!(flat.explicit().len(), kip.explicit_routes());
+        for k in 0..20_000u64 {
+            // epoch fast path == flat snapshot == dyn partitioner
+            assert_eq!(ep.partition(k), kip.partition(k));
+            assert_eq!(flat.partition(k), ep.as_dyn().partition(k));
+        }
     }
 
     #[test]

@@ -6,10 +6,10 @@
 //! roughly the same load", with updates that "make minimal modifications
 //! to the previous partitioner to reduce migration costs".
 
+use super::route::{FlatRoutes, RouteTable};
 use super::{Partitioner, WeightedHash};
 use crate::sketch::Histogram;
 use crate::workload::Key;
-use crate::util::keymap::{key_map_with_capacity, KeyMap};
 
 #[derive(Debug, Clone, Copy)]
 pub struct KipConfig {
@@ -41,9 +41,10 @@ impl KipConfig {
 
 #[derive(Debug, Clone)]
 pub struct Kip {
-    /// Explicit routing table for the isolated heavy keys — O(λN) entries,
-    /// fmix64-hashed (hot path: one lookup per record).
-    explicit: KeyMap<u32>,
+    /// Explicit routing table for the isolated heavy keys — O(λN) entries
+    /// in a sorted flat array (hot path: one binary search per record,
+    /// cache-resident at λN entries).
+    explicit: RouteTable,
     /// Weighted hash for everything else.
     hash: WeightedHash,
     cfg: KipConfig,
@@ -54,7 +55,7 @@ impl Kip {
     /// balanced host map — behaviourally a uniform hash partitioner.
     pub fn initial(n_partitions: usize, cfg: KipConfig, seed: u64) -> Self {
         Self {
-            explicit: KeyMap::default(),
+            explicit: RouteTable::default(),
             hash: WeightedHash::balanced(
                 n_partitions,
                 n_partitions * cfg.hosts_per_partition,
@@ -72,7 +73,7 @@ impl Kip {
         &self.hash
     }
 
-    pub fn explicit_table(&self) -> &KeyMap<u32> {
+    pub fn explicit_table(&self) -> &RouteTable {
         &self.explicit
     }
 
@@ -150,7 +151,10 @@ impl Kip {
         let hostload = (1.0 - hist.heavy_mass()).max(0.0) / h;
 
         let mut load = vec![0.0f64; n];
-        let mut explicit: KeyMap<u32> = key_map_with_capacity(hist.len());
+        // the greedy only ever *appends* routes (histogram keys are
+        // distinct, and no placement reads the table), so routes collect
+        // into a Vec and sort into the flat table once at the end
+        let mut routes: Vec<(Key, u32)> = Vec::with_capacity(hist.len());
 
         // lines 3–10: place heavy keys by decreasing frequency
         for (i, e) in hist.entries().iter().enumerate() {
@@ -159,7 +163,7 @@ impl Kip {
             let p = prev_locs[i] as usize;
             if load[p] < maxload - f {
                 load[p] += f;
-                explicit.insert(k, p as u32);
+                routes.push((k, p as u32));
                 continue;
             }
             // line 7: try the hash location (its future home if it cools
@@ -167,7 +171,7 @@ impl Kip {
             let p = hash_locs[i] as usize;
             if load[p] < maxload - f {
                 load[p] += f;
-                explicit.insert(k, p as u32);
+                routes.push((k, p as u32));
                 continue;
             }
             // line 10: put k explicitly into the lowest-load partition
@@ -177,8 +181,9 @@ impl Kip {
                 .min_by(|a, b| a.1.total_cmp(b.1))
                 .expect("n > 0");
             load[p] += f;
-            explicit.insert(k, p as u32);
+            routes.push((k, p as u32));
         }
+        let explicit = RouteTable::from_pairs(routes);
 
         // lines 11–13: add tail mass — HOSTLOAD × hosts mapped to p
         let mut new_hash = hash.clone();
@@ -253,7 +258,7 @@ impl Kip {
         let n = self.n_partitions();
         let mut load = vec![0.0; n];
         for e in hist.entries() {
-            if let Some(&p) = self.explicit.get(&e.key) {
+            if let Some(p) = self.explicit.get(&e.key) {
                 load[p as usize] += e.freq;
             } else {
                 load[self.hash.partition(e.key)] += e.freq;
@@ -271,7 +276,7 @@ impl Partitioner for Kip {
     #[inline]
     fn partition(&self, key: Key) -> usize {
         match self.explicit.get(&key) {
-            Some(&p) => p as usize,
+            Some(p) => p as usize,
             None => self.hash.partition(key),
         }
     }
@@ -286,6 +291,16 @@ impl Partitioner for Kip {
 
     fn tail_shares(&self) -> Vec<f64> {
         self.hash.tail_shares()
+    }
+
+    fn flat_routes(&self) -> Option<FlatRoutes> {
+        // explicit table is already flat; the tail is the weighted hash's
+        // host table verbatim — the lowering is exact by construction
+        Some(FlatRoutes::new(
+            self.explicit.clone(),
+            self.hash.host_map().to_vec(),
+            self.hash.seed(),
+        ))
     }
 }
 
@@ -432,6 +447,25 @@ mod tests {
             .map(|(_, l)| *l)
             .sum();
         assert!(others > 0.3, "tail not spread: {loads:?}");
+    }
+
+    #[test]
+    fn flat_routes_match_dyn_partition() {
+        let n = 12;
+        let cfg = KipConfig::default();
+        let recs = zipf_records(50_000, 1.1, 200_000, 21);
+        let hist = Histogram::exact(&recs, cfg.histogram_size(n));
+        let kip = Kip::update(
+            &Uhp::new(n),
+            &WeightedHash::with_default_hosts(n, 22),
+            &hist,
+            cfg,
+        );
+        let flat = kip.flat_routes().expect("KIP has a flat form");
+        assert_eq!(flat.explicit().len(), kip.explicit_routes());
+        for k in 0..50_000u64 {
+            assert_eq!(flat.partition(k), kip.partition(k), "key {k}");
+        }
     }
 
     #[test]

@@ -19,6 +19,7 @@ pub mod gedik;
 pub mod kip;
 pub mod migration;
 pub mod mixed;
+pub mod route;
 pub mod weighted;
 
 pub use epoch::{EpochSwap, EpochedPartitioner, PartitionerEpoch};
@@ -26,6 +27,7 @@ pub use gedik::{GedikConfig, GedikPartitioner, GedikStrategy};
 pub use kip::{Kip, KipConfig};
 pub use migration::{migration_fraction, migration_plan};
 pub use mixed::Mixed;
+pub use route::{FlatRoutes, RouteTable};
 pub use weighted::WeightedHash;
 
 use crate::hash::{bucket, hash_u64};
@@ -50,6 +52,16 @@ pub trait Partitioner: Send + Sync {
     /// estimate load shares from a histogram.
     fn tail_shares(&self) -> Vec<f64> {
         vec![1.0 / self.n_partitions() as f64; self.n_partitions()]
+    }
+
+    /// Lower this function into an immutable [`FlatRoutes`] snapshot for
+    /// the per-record fast path, or `None` when it has no exact flat form
+    /// (consistent-hash rings). Implementations must be *exact*: the
+    /// snapshot routes every key to the same partition as
+    /// [`Partitioner::partition`]. Epoch construction calls this once per
+    /// install ([`PartitionerEpoch::new`]).
+    fn flat_routes(&self) -> Option<FlatRoutes> {
+        None
     }
 }
 
@@ -80,6 +92,16 @@ impl Partitioner for Uhp {
 
     fn n_partitions(&self) -> usize {
         self.n
+    }
+
+    fn flat_routes(&self) -> Option<FlatRoutes> {
+        // one host per partition, identity-mapped: bucket(h, n) over the
+        // identity table is exactly `partition` above
+        Some(FlatRoutes::new(
+            RouteTable::default(),
+            (0..self.n as u32).collect(),
+            self.seed,
+        ))
     }
 }
 
@@ -124,6 +146,16 @@ mod tests {
         let loads = partition_loads(&p, &kw);
         let imb = crate::util::load_imbalance(&loads);
         assert!(imb < 1.05, "imb={imb}");
+    }
+
+    #[test]
+    fn uhp_flat_routes_match_dyn() {
+        let p = Uhp::with_seed(9, 3);
+        let f = p.flat_routes().expect("UHP has a flat form");
+        assert!(f.explicit().is_empty());
+        for k in 0..5000u64 {
+            assert_eq!(f.partition(k), p.partition(k));
+        }
     }
 
     #[test]

@@ -1,0 +1,172 @@
+//! Flat-array routing — the immutable per-epoch fast path.
+//!
+//! The hot loop of every engine calls `partition(key)` once per record.
+//! Behind a `dyn Partitioner` that is a virtual call into a hash-map
+//! probe (KIP's explicit table) plus a second hash for the tail. At
+//! millions of keys per second the indirections dominate, so each
+//! partitioner that *has* a flat form lowers itself into a [`FlatRoutes`]
+//! snapshot at epoch construction: one sorted explicit-route array (a
+//! binary search over two dense `Vec`s — no pointer chasing, no hasher
+//! state) plus the precomputed host→partition table the tail hash indexes
+//! directly. The snapshot is immutable and swapped atomically with the
+//! epoch, so the per-record path never takes a lock and never observes a
+//! half-updated table.
+//!
+//! Lowering is exact, not approximate: [`FlatRoutes::partition`] returns
+//! bit-for-bit the same partition as the `dyn Partitioner` it was built
+//! from (same fmix64 hash, same fixed-point bucket, same explicit
+//! routes), so routing, migration plans, and every pinned determinism
+//! test are unchanged — only the constant factor moves.
+
+use crate::hash::{bucket, hash_u64};
+use crate::workload::Key;
+
+/// A sorted flat routing table: explicit key→partition routes stored as
+/// two parallel dense arrays (structure-of-arrays), looked up by binary
+/// search. Immutable after construction — updates build a new table.
+///
+/// For KIP the table holds O(λN) heavy keys, so the search touches ≤
+/// ~log2(λN) cache lines of a contiguous key array; the per-record cost
+/// is independent of how many *live* keys the workload has.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RouteTable {
+    keys: Vec<Key>,
+    parts: Vec<u32>,
+}
+
+impl RouteTable {
+    /// Build from (key, partition) pairs; keys must be distinct.
+    pub fn from_pairs(mut pairs: Vec<(Key, u32)>) -> Self {
+        pairs.sort_unstable_by_key(|&(k, _)| k);
+        debug_assert!(
+            pairs.windows(2).all(|w| w[0].0 < w[1].0),
+            "duplicate keys in route table"
+        );
+        Self {
+            keys: pairs.iter().map(|&(k, _)| k).collect(),
+            parts: pairs.iter().map(|&(_, p)| p).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, key: &Key) -> Option<u32> {
+        self.keys.binary_search(key).ok().map(|i| self.parts[i])
+    }
+
+    pub fn contains_key(&self, key: &Key) -> bool {
+        self.keys.binary_search(key).is_ok()
+    }
+
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    /// Routes in ascending key order.
+    pub fn iter(&self) -> impl Iterator<Item = (Key, u32)> + '_ {
+        self.keys.iter().copied().zip(self.parts.iter().copied())
+    }
+}
+
+impl FromIterator<(Key, u32)> for RouteTable {
+    fn from_iter<I: IntoIterator<Item = (Key, u32)>>(iter: I) -> Self {
+        Self::from_pairs(iter.into_iter().collect())
+    }
+}
+
+/// The flat-array lowering of a whole partitioning function: explicit
+/// routes first, then one hash into a dense host→partition table. This is
+/// exactly the two-level shape of KIP (explicit heavies + weighted-hash
+/// tail); UHP lowers to an empty table over the identity host map.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlatRoutes {
+    explicit: RouteTable,
+    host_to_partition: Vec<u32>,
+    seed: u64,
+}
+
+impl FlatRoutes {
+    pub fn new(explicit: RouteTable, host_to_partition: Vec<u32>, seed: u64) -> Self {
+        assert!(!host_to_partition.is_empty(), "need at least one host");
+        Self {
+            explicit,
+            host_to_partition,
+            seed,
+        }
+    }
+
+    /// Route one key. Bitwise-identical to the partitioner this snapshot
+    /// was lowered from: same explicit routes, same fmix64+bucket tail.
+    #[inline]
+    pub fn partition(&self, key: Key) -> usize {
+        match self.explicit.get(&key) {
+            Some(p) => p as usize,
+            None => {
+                let h = bucket(hash_u64(key, self.seed), self.host_to_partition.len());
+                self.host_to_partition[h] as usize
+            }
+        }
+    }
+
+    pub fn explicit(&self) -> &RouteTable {
+        &self.explicit
+    }
+
+    pub fn n_hosts(&self) -> usize {
+        self.host_to_partition.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn route_table_sorts_and_finds() {
+        let t = RouteTable::from_pairs(vec![(9, 1), (2, 0), (40, 3), (17, 2)]);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.get(&9), Some(1));
+        assert_eq!(t.get(&2), Some(0));
+        assert_eq!(t.get(&40), Some(3));
+        assert_eq!(t.get(&17), Some(2));
+        assert_eq!(t.get(&3), None);
+        assert!(t.contains_key(&40));
+        assert!(!t.contains_key(&41));
+        let order: Vec<(Key, u32)> = t.iter().collect();
+        assert_eq!(order, vec![(2, 0), (9, 1), (17, 2), (40, 3)]);
+    }
+
+    #[test]
+    fn empty_table_misses_everything() {
+        let t = RouteTable::default();
+        assert!(t.is_empty());
+        assert_eq!(t.get(&0), None);
+        assert!(!t.contains_key(&7));
+    }
+
+    #[test]
+    fn flat_routes_explicit_overrides_hash() {
+        let t = RouteTable::from_pairs(vec![(5, 3)]);
+        let f = FlatRoutes::new(t, (0..4).collect(), 11);
+        assert_eq!(f.partition(5), 3);
+        // non-explicit keys land in the host table's range
+        for k in 0..1000u64 {
+            assert!(f.partition(k) < 4);
+        }
+    }
+
+    #[test]
+    fn identity_host_table_matches_uhp() {
+        use crate::partitioner::{Partitioner, Uhp};
+        let n = 7;
+        let seed = 42;
+        let uhp = Uhp::with_seed(n, seed);
+        let f = FlatRoutes::new(RouteTable::default(), (0..n as u32).collect(), seed);
+        for k in 0..10_000u64 {
+            assert_eq!(f.partition(k), uhp.partition(k));
+        }
+    }
+}

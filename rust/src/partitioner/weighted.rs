@@ -11,6 +11,7 @@
 //! lacks — this is why KIP's imbalance stays flat in Fig 2 while the
 //! baselines grow with N.
 
+use super::route::{FlatRoutes, RouteTable};
 use super::Partitioner;
 use crate::hash::{bucket, hash_u64};
 use crate::workload::Key;
@@ -114,6 +115,15 @@ impl Partitioner for WeightedHash {
             .into_iter()
             .map(|c| c as f64 / h)
             .collect()
+    }
+
+    fn flat_routes(&self) -> Option<FlatRoutes> {
+        // already a flat host table — the lowering is a copy
+        Some(FlatRoutes::new(
+            RouteTable::default(),
+            self.host_to_partition.clone(),
+            self.seed,
+        ))
     }
 }
 

@@ -49,6 +49,11 @@ impl FreqCounter {
         Self::new(capacity, 0.5)
     }
 
+    /// The counter bound this sketch was created with.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
     /// Apply exponential decay — call when a histogram is harvested so the
     /// next interval's observations dominate (concept-drift tracking).
     pub fn decay_now(&mut self) {
@@ -69,6 +74,25 @@ impl FreqCounter {
         {
             self.counts.remove(&k);
         }
+    }
+
+    /// Compact down to the `bound` largest counters — the
+    /// `histogram-compaction` step of the original system, triggered by
+    /// [`DrWorker`](crate::dr::DrWorker) every `compaction_interval`
+    /// observations. Ranks on counts with ties broken by ascending key
+    /// (the [`Histogram::from_counts`](super::Histogram::from_counts)
+    /// comparator), so the surviving set is independent of map iteration
+    /// order. Like `evict_min`, dropped counters carry no inheritance:
+    /// `total` keeps the full observed mass, so estimates never inflate.
+    pub fn compact_to(&mut self, bound: usize) {
+        if bound == 0 || self.counts.len() <= bound {
+            return;
+        }
+        let mut v: Vec<(Key, f64)> = self.counts.iter().map(|(&k, &c)| (k, c)).collect();
+        v.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        v.truncate(bound);
+        self.counts = key_map_with_capacity(self.capacity + 1);
+        self.counts.extend(v);
     }
 }
 
@@ -192,6 +216,51 @@ mod tests {
         fc.decay_now();
         let est: std::collections::HashMap<_, _> = fc.estimates().into_iter().collect();
         assert!(est[&1] > est[&2]);
+    }
+
+    #[test]
+    fn compact_keeps_top_counts_and_total() {
+        let mut fc = FreqCounter::with_capacity(64);
+        for k in 0..32u64 {
+            for _ in 0..=k {
+                fc.observe(k, 1.0);
+            }
+        }
+        let total_before = fc.total();
+        fc.compact_to(8);
+        assert_eq!(fc.footprint(), 8);
+        assert!((fc.total() - total_before).abs() < 1e-12, "total must survive compaction");
+        let kept: std::collections::HashSet<_> =
+            fc.estimates().into_iter().map(|(k, _)| k).collect();
+        for k in 24..32u64 {
+            assert!(kept.contains(&k), "heavy key {k} evicted");
+        }
+        // bound 0 and already-small footprints are no-ops
+        fc.compact_to(0);
+        assert_eq!(fc.footprint(), 8);
+        fc.compact_to(100);
+        assert_eq!(fc.footprint(), 8);
+    }
+
+    #[test]
+    fn compact_breaks_ties_by_key() {
+        let mut a = FreqCounter::with_capacity(64);
+        let mut b = FreqCounter::with_capacity(64);
+        // same multiset of tied counts, observed in different orders
+        for k in [5u64, 3, 9, 7] {
+            a.observe(k, 2.0);
+        }
+        for k in [7u64, 9, 3, 5] {
+            b.observe(k, 2.0);
+        }
+        a.compact_to(2);
+        b.compact_to(2);
+        let mut ea = a.estimates();
+        let mut eb = b.estimates();
+        ea.sort_unstable_by(|x, y| x.0.cmp(&y.0));
+        eb.sort_unstable_by(|x, y| x.0.cmp(&y.0));
+        assert_eq!(ea, eb);
+        assert_eq!(ea.iter().map(|e| e.0).collect::<Vec<_>>(), vec![3, 5]);
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! of keys not in the histogram make up the remainder to 1). Obtained by
 //! merging worker-local histograms computed during sampling.
 
+use crate::util::keymap::{key_map, KeyMap};
 use crate::workload::Key;
 
 #[derive(Debug, Clone, PartialEq)]
@@ -82,7 +83,10 @@ impl Histogram {
         if total <= 0.0 {
             return Self::empty();
         }
-        let mut acc: std::collections::HashMap<Key, f64> = std::collections::HashMap::new();
+        // fmix64-keyed accumulator (keys are not attacker-controlled);
+        // bit-safe because from_counts fully re-sorts with key tie-breaks,
+        // so map iteration order never reaches the result
+        let mut acc: KeyMap<f64> = key_map();
         for h in locals {
             for e in &h.entries {
                 *acc.entry(e.key).or_insert(0.0) += e.freq * h.total_weight;
@@ -139,7 +143,7 @@ impl Histogram {
         records: I,
         k: usize,
     ) -> Self {
-        let mut counts: std::collections::HashMap<Key, f64> = std::collections::HashMap::new();
+        let mut counts: KeyMap<f64> = key_map();
         let mut total = 0.0;
         for r in records {
             *counts.entry(r.key).or_insert(0.0) += r.weight;
@@ -176,7 +180,10 @@ impl super::MergeableSketch for Histogram {
         if total <= 0.0 {
             return;
         }
-        let mut acc: std::collections::HashMap<Key, f64> = std::collections::HashMap::new();
+        // fmix64-keyed accumulator; per-key accumulation order is entry
+        // order (self then other) and the sort below re-establishes the
+        // ranking, so the map never influences a bit of the result
+        let mut acc: KeyMap<f64> = key_map();
         for e in &self.entries {
             *acc.entry(e.key).or_insert(0.0) += e.freq * self.total_weight;
         }

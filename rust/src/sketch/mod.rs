@@ -17,6 +17,98 @@ pub use histogram::{Histogram, HistogramEntry};
 pub use lossy::LossyCounting;
 pub use spacesaving::SpaceSaving;
 
+/// Bounding knobs for the DRW sketches and the DRM merge — the
+/// reproduction of the original system's `repartitioning.conf` triple
+/// (`histogram-compaction = 1250`, `histogram-size-boundary = 5000`,
+/// `take = 1000`). All three default to `0` = disabled/unbounded, which
+/// reproduces the exact path bit-for-bit (the bitwise pins in
+/// `tests/prop_parallel.rs` run with this default).
+///
+/// With bounding enabled, every truncation ranks on accumulated absolute
+/// counts with ties broken by ascending key — the same comparator as
+/// [`Histogram::from_counts`] — and compaction triggers on per-DRW
+/// *observation* counts, so decisions stay deterministic across thread
+/// counts and fold shapes (see DESIGN.md "Bounded sketches").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SketchConfig {
+    /// Compact each DRW counter down to its bound every this many
+    /// observations (`histogram-compaction`). 0 = never compact.
+    pub compaction_interval: usize,
+    /// Hard cap on sketch/histogram entries: DRW counter capacity and the
+    /// per-step size of the DRM tree-merge (`histogram-size-boundary`).
+    /// 0 = unbounded (exact path).
+    pub size_boundary: usize,
+    /// Worker→master shipping cut: each harvest sends only the top this
+    /// many entries (`take`). 0 = ship the full λN histogram.
+    pub take_top_k: usize,
+}
+
+impl SketchConfig {
+    /// Unbounded: every path identical to the exact implementation.
+    pub fn unbounded() -> Self {
+        Self {
+            compaction_interval: 0,
+            size_boundary: 0,
+            take_top_k: 0,
+        }
+    }
+
+    /// True when no knob is set — the default, bit-identical exact path.
+    pub fn is_unbounded(&self) -> bool {
+        *self == Self::unbounded()
+    }
+
+    /// Read the `DYNREPART_SKETCH_COMPACTION` / `DYNREPART_SKETCH_BOUND` /
+    /// `DYNREPART_SKETCH_TAKE` overrides (unset, empty or invalid values
+    /// leave the knob disabled), mirroring `DYNREPART_THREADS`.
+    pub fn from_env() -> Self {
+        fn knob(name: &str) -> usize {
+            std::env::var(name)
+                .ok()
+                .and_then(|s| s.parse::<usize>().ok())
+                .filter(|&v| v >= 1)
+                .unwrap_or(0)
+        }
+        Self {
+            compaction_interval: knob("DYNREPART_SKETCH_COMPACTION"),
+            size_boundary: knob("DYNREPART_SKETCH_BOUND"),
+            take_top_k: knob("DYNREPART_SKETCH_TAKE"),
+        }
+    }
+}
+
+impl Default for SketchConfig {
+    fn default() -> Self {
+        Self::unbounded()
+    }
+}
+
+#[cfg(test)]
+mod config_tests {
+    use super::SketchConfig;
+
+    #[test]
+    fn default_is_unbounded() {
+        let cfg = SketchConfig::default();
+        assert!(cfg.is_unbounded());
+        assert_eq!(cfg, SketchConfig::unbounded());
+        assert_eq!(cfg.compaction_interval, 0);
+        assert_eq!(cfg.size_boundary, 0);
+        assert_eq!(cfg.take_top_k, 0);
+    }
+
+    #[test]
+    fn any_knob_marks_bounded() {
+        for cfg in [
+            SketchConfig { compaction_interval: 1250, ..Default::default() },
+            SketchConfig { size_boundary: 5000, ..Default::default() },
+            SketchConfig { take_top_k: 1000, ..Default::default() },
+        ] {
+            assert!(!cfg.is_unbounded(), "{cfg:?}");
+        }
+    }
+}
+
 #[cfg(test)]
 mod merge_tests {
     use super::*;

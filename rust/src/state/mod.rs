@@ -8,5 +8,5 @@ pub mod store;
 pub mod window;
 
 pub use checkpoint::{Checkpoint, CheckpointStore};
-pub use store::{KeyState, StateStore};
+pub use store::{KeyState, StateStore, ValueVec};
 pub use window::SlidingStateWindow;

@@ -4,17 +4,177 @@
 //! The paper assumes "states ... linear in the size of the corresponding
 //! keygroups" (Fig 3), so [`KeyState`] tracks both an application value and
 //! its weight (bytes proxy). Migration extracts whole keygroups.
+//!
+//! Layout (PR 6, the millions-of-keys hot path): an open-addressing index
+//! of `u32` slot numbers over a dense slab of [`KeyState`]s, probed by the
+//! fmix64 of the key — one cache line of index probes plus one slab access
+//! per `fold_count`, no per-key `Box`/`Vec` allocations for count-only
+//! workloads ([`ValueVec`] stores up to two values inline). Iteration
+//! (`keys` / `iter` / `state_weights` — the keygroup extract side of a
+//! migration) walks the contiguous slab in insertion order, which is a
+//! deterministic function of the operation sequence: the sharded executor
+//! replays each store's exact sequential operation subsequence, so
+//! sequential and sharded runs see identical orders and stay
+//! bitwise-identical.
 
+use crate::hash::fmix64;
 use crate::workload::Key;
-use crate::util::keymap::KeyMap;
-use std::collections::hash_map::Entry;
+
+/// Inline-first value storage for [`KeyState`]: up to two `f64`s live
+/// inside the state itself; only a third value promotes to a heap `Vec`.
+/// Count-only workloads (`fold_count`) therefore never allocate per key.
+/// Derefs to `[f64]`, so reads look exactly like the old `Vec<f64>`.
+#[derive(Clone)]
+pub struct ValueVec {
+    repr: Repr,
+}
+
+const INLINE_CAP: usize = 2;
+
+#[derive(Clone)]
+enum Repr {
+    Inline { len: u8, vals: [f64; INLINE_CAP] },
+    Heap(Vec<f64>),
+}
+
+impl ValueVec {
+    pub const fn new() -> Self {
+        Self {
+            repr: Repr::Inline {
+                len: 0,
+                vals: [0.0; INLINE_CAP],
+            },
+        }
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        match &self.repr {
+            Repr::Inline { len, vals } => &vals[..*len as usize],
+            Repr::Heap(v) => v,
+        }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        match &mut self.repr {
+            Repr::Inline { len, vals } => &mut vals[..*len as usize],
+            Repr::Heap(v) => v,
+        }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        match &mut self.repr {
+            Repr::Inline { len, vals } => {
+                if (*len as usize) < INLINE_CAP {
+                    vals[*len as usize] = v;
+                    *len += 1;
+                } else {
+                    let mut heap = vals.to_vec();
+                    heap.push(v);
+                    self.repr = Repr::Heap(heap);
+                }
+            }
+            Repr::Heap(h) => h.push(v),
+        }
+    }
+
+    /// `Vec::resize` semantics: grow fills with `fill`, shrink truncates.
+    pub fn resize(&mut self, n: usize, fill: f64) {
+        match &mut self.repr {
+            Repr::Inline { len, vals } => {
+                if n <= INLINE_CAP {
+                    for v in vals.iter_mut().take(n).skip(*len as usize) {
+                        *v = fill;
+                    }
+                    *len = n as u8;
+                } else {
+                    let mut heap = vals[..*len as usize].to_vec();
+                    heap.resize(n, fill);
+                    self.repr = Repr::Heap(heap);
+                }
+            }
+            Repr::Heap(h) => h.resize(n, fill),
+        }
+    }
+
+    /// Heap bytes held beyond the inline representation (0 unless a key
+    /// outgrew [`INLINE_CAP`] values) — the bench's bytes/key accounting.
+    pub fn heap_bytes(&self) -> usize {
+        match &self.repr {
+            Repr::Inline { .. } => 0,
+            Repr::Heap(h) => h.capacity() * std::mem::size_of::<f64>(),
+        }
+    }
+}
+
+impl Default for ValueVec {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::ops::Deref for ValueVec {
+    type Target = [f64];
+
+    fn deref(&self) -> &[f64] {
+        self.as_slice()
+    }
+}
+
+impl std::ops::DerefMut for ValueVec {
+    fn deref_mut(&mut self) -> &mut [f64] {
+        self.as_mut_slice()
+    }
+}
+
+impl std::fmt::Debug for ValueVec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.as_slice().fmt(f)
+    }
+}
+
+impl PartialEq for ValueVec {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<Vec<f64>> for ValueVec {
+    fn eq(&self, other: &Vec<f64>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl From<Vec<f64>> for ValueVec {
+    fn from(v: Vec<f64>) -> Self {
+        if v.len() <= INLINE_CAP {
+            let mut out = Self::new();
+            for x in v {
+                out.push(x);
+            }
+            out
+        } else {
+            Self { repr: Repr::Heap(v) }
+        }
+    }
+}
+
+impl FromIterator<f64> for ValueVec {
+    fn from_iter<I: IntoIterator<Item = f64>>(iter: I) -> Self {
+        let mut out = Self::new();
+        for x in iter {
+            out.push(x);
+        }
+        out
+    }
+}
 
 /// State attached to one key: an opaque accumulator plus bookkeeping that
 /// the engines and the migration planner need.
 #[derive(Debug, Clone, PartialEq)]
 pub struct KeyState {
     /// Running aggregate (count, sum, or app-defined scalar vector).
-    pub values: Vec<f64>,
+    /// Inline up to two values — see [`ValueVec`].
+    pub values: ValueVec,
     /// Number of records folded into this state.
     pub records: u64,
     /// State size proxy (e.g. bytes). Linear in keygroup size per Fig 3.
@@ -22,9 +182,10 @@ pub struct KeyState {
 }
 
 impl KeyState {
-    pub fn new() -> Self {
+    /// Allocation-free: the zero-value state lives entirely inline.
+    pub const fn new() -> Self {
         Self {
-            values: Vec::new(),
+            values: ValueVec::new(),
             records: 0,
             weight: 0.0,
         }
@@ -37,10 +198,31 @@ impl Default for KeyState {
     }
 }
 
+/// Index sentinel: free table cell.
+const EMPTY: u32 = u32::MAX;
+/// Index sentinel: deleted table cell (probe chains continue through it).
+const TOMB: u32 = u32::MAX - 1;
+
+/// One slab entry: the key plus its state, stored densely.
+#[derive(Debug, Clone)]
+struct Slot {
+    key: Key,
+    state: KeyState,
+}
+
 /// The state store of one partition (one parallel operator instance).
+///
+/// Open-addressing arena: `table` holds `u32` slot numbers (power-of-two
+/// sized, linear probing on `fmix64(key)`), `slots` is the dense slab of
+/// live states in insertion order. Removals tombstone the index cell and
+/// `swap_remove` the slab, so both sides stay compact at 10^7+ live keys:
+/// 4 index bytes per table cell plus one `Slot` per live key, no per-key
+/// heap allocation until a state holds more than two values.
 #[derive(Debug, Clone, Default)]
 pub struct StateStore {
-    states: KeyMap<KeyState>,
+    table: Vec<u32>,
+    slots: Vec<Slot>,
+    tombstones: usize,
     /// Incrementally maintained sum of all per-key weights: every fold
     /// ([`StateStore::update`]) and migration step ([`StateStore::extract`]
     /// / [`StateStore::install`]) adjusts it by the delta, so
@@ -56,10 +238,101 @@ impl StateStore {
         Self::default()
     }
 
+    /// Slot index of `key`, if present.
+    fn find(&self, key: Key) -> Option<usize> {
+        if self.table.is_empty() {
+            return None;
+        }
+        let mask = self.table.len() - 1;
+        let mut i = fmix64(key) as usize & mask;
+        loop {
+            match self.table[i] {
+                EMPTY => return None,
+                TOMB => {}
+                s => {
+                    if self.slots[s as usize].key == key {
+                        return Some(s as usize);
+                    }
+                }
+            }
+            i = (i + 1) & mask;
+        }
+    }
+
+    /// Slot index of `key`, inserting a fresh [`KeyState`] if absent.
+    fn find_or_insert(&mut self, key: Key) -> usize {
+        self.ensure_capacity();
+        let mask = self.table.len() - 1;
+        let mut i = fmix64(key) as usize & mask;
+        let mut first_tomb = None;
+        loop {
+            match self.table[i] {
+                EMPTY => {
+                    let cell = match first_tomb {
+                        Some(t) => {
+                            self.tombstones -= 1;
+                            t
+                        }
+                        None => i,
+                    };
+                    let s = self.slots.len();
+                    self.table[cell] = s as u32;
+                    self.slots.push(Slot {
+                        key,
+                        state: KeyState::new(),
+                    });
+                    return s;
+                }
+                TOMB => {
+                    if first_tomb.is_none() {
+                        first_tomb = Some(i);
+                    }
+                }
+                s => {
+                    if self.slots[s as usize].key == key {
+                        return s as usize;
+                    }
+                }
+            }
+            i = (i + 1) & mask;
+        }
+    }
+
+    /// Keep the index at ≤ 7/8 occupancy (live + tombstones) so probe
+    /// chains stay short and `find` always terminates on an `EMPTY` cell.
+    fn ensure_capacity(&mut self) {
+        if self.table.is_empty() {
+            self.table = vec![EMPTY; 16];
+            return;
+        }
+        if (self.slots.len() + self.tombstones + 1) * 8 <= self.table.len() * 7 {
+            return;
+        }
+        // Live load forces a doubling; otherwise tombstones alone pushed
+        // occupancy over the line and a same-size rehash purges them.
+        let new_len = if (self.slots.len() + 1) * 8 > self.table.len() * 7 {
+            self.table.len() * 2
+        } else {
+            self.table.len()
+        };
+        let mut table = vec![EMPTY; new_len];
+        let mask = new_len - 1;
+        for (s, slot) in self.slots.iter().enumerate() {
+            let mut i = fmix64(slot.key) as usize & mask;
+            while table[i] != EMPTY {
+                i = (i + 1) & mask;
+            }
+            table[i] = s as u32;
+        }
+        self.table = table;
+        self.tombstones = 0;
+    }
+
     /// Fold one record into a key's state. `update` mutates the state and
     /// returns the weight *delta* it caused.
     pub fn update<F: FnOnce(&mut KeyState) -> f64>(&mut self, key: Key, update: F) {
-        let st = self.states.entry(key).or_default();
+        let s = self.find_or_insert(key);
+        let st = &mut self.slots[s].state;
         st.records += 1;
         let dw = update(st);
         st.weight += dw;
@@ -67,16 +340,17 @@ impl StateStore {
     }
 
     /// Standard counting update: +1 record, +`w` weight.
+    #[inline]
     pub fn fold_count(&mut self, key: Key, w: f64) {
         self.update(key, |_| w);
     }
 
     pub fn get(&self, key: Key) -> Option<&KeyState> {
-        self.states.get(&key)
+        self.find(key).map(|s| &self.slots[s].state)
     }
 
     pub fn n_keys(&self) -> usize {
-        self.states.len()
+        self.slots.len()
     }
 
     /// Total state weight of this partition — the incrementally cached
@@ -88,34 +362,64 @@ impl StateStore {
     /// Recompute the total weight from scratch, O(keys). Test/debug
     /// oracle for the cached [`StateStore::total_weight`].
     pub fn recomputed_total_weight(&self) -> f64 {
-        self.states.values().map(|s| s.weight).sum()
+        self.slots.iter().map(|s| s.state.weight).sum()
     }
 
     pub fn keys(&self) -> impl Iterator<Item = Key> + '_ {
-        self.states.keys().cloned()
+        self.slots.iter().map(|s| s.key)
     }
 
     pub fn iter(&self) -> impl Iterator<Item = (Key, &KeyState)> {
-        self.states.iter().map(|(&k, v)| (k, v))
+        self.slots.iter().map(|s| (s.key, &s.state))
     }
 
     /// Remove and return a key's state (migration source side).
     pub fn extract(&mut self, key: Key) -> Option<KeyState> {
-        let st = self.states.remove(&key)?;
-        self.total_weight -= st.weight;
-        Some(st)
+        if self.table.is_empty() {
+            return None;
+        }
+        let mask = self.table.len() - 1;
+        let mut i = fmix64(key) as usize & mask;
+        let s = loop {
+            match self.table[i] {
+                EMPTY => return None,
+                TOMB => {}
+                s => {
+                    if self.slots[s as usize].key == key {
+                        break s as usize;
+                    }
+                }
+            }
+            i = (i + 1) & mask;
+        };
+        self.table[i] = TOMB;
+        self.tombstones += 1;
+        let slot = self.slots.swap_remove(s);
+        if s < self.slots.len() {
+            // The formerly-last slot moved into position `s`: re-point its
+            // index cell (it is live, so the probe always finds it).
+            let moved = self.slots.len() as u32;
+            let mut j = fmix64(self.slots[s].key) as usize & mask;
+            while self.table[j] != moved {
+                j = (j + 1) & mask;
+            }
+            self.table[j] = s as u32;
+        }
+        self.total_weight -= slot.state.weight;
+        Some(slot.state)
     }
 
     /// Install a migrated state (migration target side). Merges if the key
     /// already has local state (can happen after batch replay).
     pub fn install(&mut self, key: Key, incoming: KeyState) {
         self.total_weight += incoming.weight;
-        match self.states.entry(key) {
-            Entry::Vacant(e) => {
-                e.insert(incoming);
+        match self.find(key) {
+            None => {
+                let s = self.find_or_insert(key);
+                self.slots[s].state = incoming;
             }
-            Entry::Occupied(mut e) => {
-                let st = e.get_mut();
+            Some(s) => {
+                let st = &mut self.slots[s].state;
                 st.records += incoming.records;
                 st.weight += incoming.weight;
                 if st.values.len() < incoming.values.len() {
@@ -130,7 +434,16 @@ impl StateStore {
 
     /// Per-key state weights — the input to `migration_fraction`.
     pub fn state_weights(&self) -> Vec<(Key, f64)> {
-        self.states.iter().map(|(&k, s)| (k, s.weight)).collect()
+        self.slots.iter().map(|s| (s.key, s.state.weight)).collect()
+    }
+
+    /// Resident bytes of this store: index table + slab capacity + any
+    /// heap-promoted value vectors. The `micro_hotpath` bench divides
+    /// this by `n_keys` for its bytes/key column.
+    pub fn footprint_bytes(&self) -> usize {
+        self.table.capacity() * std::mem::size_of::<u32>()
+            + self.slots.capacity() * std::mem::size_of::<Slot>()
+            + self.slots.iter().map(|s| s.state.values.heap_bytes()).sum::<usize>()
     }
 }
 
@@ -167,7 +480,7 @@ mod tests {
     fn install_fresh_and_merge() {
         let mut a = StateStore::new();
         a.update(7, |st| {
-            st.values = vec![1.0, 2.0];
+            st.values = vec![1.0, 2.0].into();
             10.0
         });
         let moved = a.extract(7).unwrap();
@@ -253,5 +566,86 @@ mod tests {
         let after: f64 = stores.iter().map(|s| s.total_weight()).sum();
         assert!((before - after).abs() < 1e-9);
         assert_eq!(stores[0].n_keys(), 0);
+    }
+
+    #[test]
+    fn iteration_follows_insertion_order() {
+        // the slab iterates in insertion order — the property the sharded
+        // executor's bitwise guarantees lean on
+        let mut s = StateStore::new();
+        for k in [9u64, 2, 40, 17, 3] {
+            s.fold_count(k, 1.0);
+        }
+        assert_eq!(s.keys().collect::<Vec<_>>(), vec![9, 2, 40, 17, 3]);
+        // removing from the middle swaps the last slot into its place
+        s.extract(2);
+        assert_eq!(s.keys().collect::<Vec<_>>(), vec![9, 3, 40, 17]);
+    }
+
+    #[test]
+    fn survives_churn_through_growth_and_tombstones() {
+        // interleaved inserts and removals force growth, tombstone reuse
+        // and same-size purges; membership must stay exact throughout
+        let mut s = StateStore::new();
+        for round in 0u64..6 {
+            for k in 0..2_000u64 {
+                s.fold_count(k * 7 + round, 1.0);
+            }
+            for k in 0..1_000u64 {
+                assert!(s.extract(k * 7 + round).is_some(), "round {round} key {k}");
+            }
+            for k in 0..1_000u64 {
+                assert!(s.extract(k * 7 + round).is_none());
+            }
+        }
+        assert_eq!(s.n_keys(), 6 * 1_000);
+        assert!((s.total_weight() - 6_000.0).abs() < 1e-9);
+        for round in 0u64..6 {
+            for k in 1_000..2_000u64 {
+                let st = s.get(k * 7 + round).expect("live key");
+                assert_eq!(st.records, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn count_only_states_stay_inline() {
+        let mut s = StateStore::new();
+        for k in 0..10_000u64 {
+            s.fold_count(k, 1.0);
+        }
+        let heap: usize = s.iter().map(|(_, st)| st.values.heap_bytes()).sum();
+        assert_eq!(heap, 0, "fold_count must not heap-allocate per key");
+        // generous bound: index cell + slot + capacity slack
+        let per_key = s.footprint_bytes() / s.n_keys();
+        assert!(per_key <= 256, "bytes/key {per_key}");
+    }
+
+    #[test]
+    fn value_vec_inline_to_heap_promotion() {
+        let mut v = ValueVec::new();
+        assert_eq!(v.len(), 0);
+        assert_eq!(v.heap_bytes(), 0);
+        v.push(1.0);
+        v.push(2.0);
+        assert_eq!(v.heap_bytes(), 0, "two values stay inline");
+        assert_eq!(v, vec![1.0, 2.0]);
+        v.push(3.0);
+        assert!(v.heap_bytes() > 0, "third value promotes to heap");
+        assert_eq!(v, vec![1.0, 2.0, 3.0]);
+        v[0] = 9.0;
+        assert_eq!(v.as_slice(), &[9.0, 2.0, 3.0]);
+        // resize within inline, then across the boundary
+        let mut w = ValueVec::new();
+        w.resize(2, 5.0);
+        assert_eq!(w, vec![5.0, 5.0]);
+        assert_eq!(w.heap_bytes(), 0);
+        w.resize(1, 0.0);
+        assert_eq!(w, vec![5.0]);
+        w.resize(4, 7.0);
+        assert_eq!(w, vec![5.0, 7.0, 7.0, 7.0]);
+        assert!(w.heap_bytes() > 0);
+        let from: ValueVec = vec![1.0, 2.0].into();
+        assert_eq!(from.heap_bytes(), 0, "short From<Vec> re-inlines");
     }
 }

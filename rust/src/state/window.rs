@@ -2,14 +2,17 @@
 //! "in a sliding state window of size 5": the state that must migrate at a
 //! partitioner update is the total keygroup weight of the last W batches.
 
+use crate::util::keymap::{key_map, KeyMap};
 use crate::workload::Key;
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 
 #[derive(Debug, Clone)]
 pub struct SlidingStateWindow {
     window: usize,
-    /// Per-batch keygroup weights, most recent at the back.
-    batches: VecDeque<HashMap<Key, f64>>,
+    /// Per-batch keygroup weights, most recent at the back. Keyed by the
+    /// fmix64 [`KeyMap`] — these accumulators are on the per-batch path
+    /// and never see attacker-controlled keys.
+    batches: VecDeque<KeyMap<f64>>,
 }
 
 impl SlidingStateWindow {
@@ -26,7 +29,7 @@ impl SlidingStateWindow {
     }
 
     /// Push one batch's keygroup weights; evicts the oldest beyond W.
-    pub fn push_batch(&mut self, keygroup_weights: HashMap<Key, f64>) {
+    pub fn push_batch(&mut self, keygroup_weights: KeyMap<f64>) {
         self.batches.push_back(keygroup_weights);
         while self.batches.len() > self.window {
             self.batches.pop_front();
@@ -39,7 +42,7 @@ impl SlidingStateWindow {
 
     /// Current state weight per key: sum over the window.
     pub fn state_weights(&self) -> Vec<(Key, f64)> {
-        let mut acc: HashMap<Key, f64> = HashMap::new();
+        let mut acc: KeyMap<f64> = key_map();
         for b in &self.batches {
             for (&k, &w) in b {
                 *acc.entry(k).or_insert(0.0) += w;
@@ -57,7 +60,7 @@ impl SlidingStateWindow {
 mod tests {
     use super::*;
 
-    fn batch(pairs: &[(Key, f64)]) -> HashMap<Key, f64> {
+    fn batch(pairs: &[(Key, f64)]) -> KeyMap<f64> {
         pairs.iter().cloned().collect()
     }
 
@@ -78,7 +81,7 @@ mod tests {
         for i in 0..5 {
             w.push_batch(batch(&[(1, 1.0), (2, i as f64)]));
         }
-        let m: HashMap<Key, f64> = w.state_weights().into_iter().collect();
+        let m: KeyMap<f64> = w.state_weights().into_iter().collect();
         assert!((m[&1] - 5.0).abs() < 1e-12);
         assert!((m[&2] - 10.0).abs() < 1e-12);
         assert!((w.total_weight() - 15.0).abs() < 1e-12);
@@ -90,7 +93,7 @@ mod tests {
         w.push_batch(batch(&[(42, 1.0)]));
         w.push_batch(batch(&[(7, 1.0)]));
         w.push_batch(batch(&[(7, 1.0)]));
-        let m: HashMap<Key, f64> = w.state_weights().into_iter().collect();
+        let m: KeyMap<f64> = w.state_weights().into_iter().collect();
         assert!(!m.contains_key(&42));
     }
 

@@ -16,6 +16,7 @@ use dynrepart::ddps::{
 use dynrepart::dr::{DrConfig, DrMaster, DrWorker, PartitionerChoice};
 use dynrepart::partitioner::GedikStrategy;
 use dynrepart::prop::{forall, Gen};
+use dynrepart::sketch::SketchConfig;
 use dynrepart::workload::{zipf::Zipf, Generator, Record, ReplaySource};
 
 fn cfg(n_partitions: usize, n_slots: usize, num_threads: usize) -> EngineConfig {
@@ -330,6 +331,140 @@ fn pipelined_run_stream_identical_to_lockstep_for_all_engines() {
             assert_bits(a.imbalance, b.imbalance, &tag);
             assert_vec_bits(&a.loads, &b.loads, &tag);
         }
+    });
+}
+
+/// The bounded-sketch leg of the DRM invariant: with compaction,
+/// size-boundary and take knobs all active, decisions are *still*
+/// bitwise-identical across thread counts — compaction triggers on each
+/// DRW's own observation count (the sharded tap replays each DRW's exact
+/// sequential subsequence) and the bounded tree-merge truncates with the
+/// same count-desc/key-asc comparator at every fold shape.
+#[test]
+fn bounded_sketch_decisions_identical_across_thread_counts() {
+    forall(8, |g| {
+        let n_partitions = g.usize(2..12);
+        let n_workers = g.usize(1..9);
+        let threads = g.usize(2..6);
+        let (batches, seed) = gen_batches(g, 3);
+        let dr = gen_dr(g);
+        let sketch = SketchConfig {
+            compaction_interval: g.usize(100..1_000),
+            size_boundary: g.usize(16..128),
+            take_top_k: g.usize(8..64),
+        };
+        let mut drm_seq =
+            DrMaster::with_sketch(dr, PartitionerChoice::Kip, n_partitions, seed, sketch);
+        let mut drm_par =
+            DrMaster::with_sketch(dr, PartitionerChoice::Kip, n_partitions, seed, sketch);
+        let make_workers = |drm: &DrMaster| -> Vec<DrWorker> {
+            (0..n_workers)
+                .map(|w| {
+                    DrWorker::with_sketch(
+                        drm.worker_capacity(),
+                        dr.sample_rate,
+                        seed ^ (w as u64) << 8,
+                        sketch,
+                    )
+                })
+                .collect()
+        };
+        let mut w_seq = make_workers(&drm_seq);
+        let mut w_par = make_workers(&drm_par);
+        for (round, b) in batches.iter().enumerate() {
+            tap_records_sharded(&mut w_seq, b, TapAssignment::Chunked, 1);
+            tap_records_sharded(&mut w_par, b, TapAssignment::Chunked, threads);
+            for (w1, w2) in w_seq.iter().zip(&w_par) {
+                assert!(w1.footprint() <= sketch.size_boundary + sketch.compaction_interval);
+                assert!(w2.footprint() <= sketch.size_boundary + sketch.compaction_interval);
+            }
+            let ds = decision_point_sharded(&mut drm_seq, &mut w_seq, 1);
+            let dp = decision_point_sharded(&mut drm_par, &mut w_par, threads);
+            let tag = format!("bounded round {round}, {threads} threads");
+            assert_eq!(ds.repartitioned(), dp.repartitioned(), "{tag}");
+            assert_eq!(ds.epoch, dp.epoch, "{tag}: epoch diverged");
+            assert_eq!(
+                ds.histogram.entries(),
+                dp.histogram.entries(),
+                "{tag}: merged histograms diverged"
+            );
+            assert_bits(ds.current_max_share, dp.current_max_share, "current_max_share");
+            assert_bits(ds.planned_max_share, dp.planned_max_share, "planned_max_share");
+            if let (Some(ss), Some(sp)) = (&ds.swap, &dp.swap) {
+                let keys = 0..5_000u64;
+                assert_eq!(
+                    ss.plan(keys.clone()),
+                    sp.plan(keys),
+                    "{tag}: migration plans diverged"
+                );
+            }
+        }
+        assert_eq!(drm_seq.epoch(), drm_par.epoch());
+        assert_eq!(drm_seq.decisions_made(), drm_par.decisions_made());
+    });
+}
+
+/// `size_boundary = ∞` (the all-zero default) must reproduce the exact
+/// decision path bitwise: same harvests, same merged histograms, same
+/// epochs and routing as a DRM/DRW stack built without sketch knobs.
+#[test]
+fn default_sketch_reproduces_exact_decisions_bitwise() {
+    forall(8, |g| {
+        let n_partitions = g.usize(2..12);
+        let n_workers = g.usize(1..9);
+        let threads = g.usize(1..6);
+        let (batches, seed) = gen_batches(g, 3);
+        let dr = gen_dr(g);
+        assert!(SketchConfig::default().is_unbounded());
+        let mut drm_plain = DrMaster::new(dr, PartitionerChoice::Kip, n_partitions, seed);
+        let mut drm_dflt = DrMaster::with_sketch(
+            dr,
+            PartitionerChoice::Kip,
+            n_partitions,
+            seed,
+            SketchConfig::default(),
+        );
+        let mut w_plain: Vec<DrWorker> = (0..n_workers)
+            .map(|w| {
+                DrWorker::new(drm_plain.worker_capacity(), dr.sample_rate, seed ^ (w as u64) << 8)
+            })
+            .collect();
+        let mut w_dflt: Vec<DrWorker> = (0..n_workers)
+            .map(|w| {
+                DrWorker::with_sketch(
+                    drm_dflt.worker_capacity(),
+                    dr.sample_rate,
+                    seed ^ (w as u64) << 8,
+                    SketchConfig::default(),
+                )
+            })
+            .collect();
+        for (round, b) in batches.iter().enumerate() {
+            tap_records_sharded(&mut w_plain, b, TapAssignment::Chunked, threads);
+            tap_records_sharded(&mut w_dflt, b, TapAssignment::Chunked, threads);
+            let da = decision_point_sharded(&mut drm_plain, &mut w_plain, threads);
+            let db = decision_point_sharded(&mut drm_dflt, &mut w_dflt, threads);
+            let tag = format!("default-sketch round {round}");
+            assert_eq!(da.epoch, db.epoch, "{tag}: epoch diverged");
+            assert_eq!(
+                da.histogram.entries(),
+                db.histogram.entries(),
+                "{tag}: merged histograms diverged"
+            );
+            assert_bits(da.current_max_share, db.current_max_share, "current_max_share");
+            assert_bits(da.planned_max_share, db.planned_max_share, "planned_max_share");
+            if let (Some(sa), Some(sb)) = (&da.swap, &db.swap) {
+                for k in 0..2_000u64 {
+                    assert_eq!(
+                        sa.to.partition(k),
+                        sb.to.partition(k),
+                        "{tag}: routing diverged at key {k}"
+                    );
+                }
+            }
+        }
+        assert_eq!(drm_plain.epoch(), drm_dflt.epoch());
+        assert_eq!(drm_plain.updates_issued(), drm_dflt.updates_issued());
     });
 }
 
