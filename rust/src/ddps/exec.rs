@@ -168,11 +168,29 @@ pub struct StageReport {
 pub struct ShuffleStage<'a> {
     cfg: &'a EngineConfig,
     sched: Scheduling,
+    /// Per-partition service-time multipliers (scenario harness: a slowed
+    /// worker has rate > 1). `None` ≡ all-ones.
+    rates: Option<&'a [f64]>,
 }
 
 impl<'a> ShuffleStage<'a> {
     pub fn new(cfg: &'a EngineConfig, sched: Scheduling) -> Self {
-        Self { cfg, sched }
+        Self {
+            cfg,
+            sched,
+            rates: None,
+        }
+    }
+
+    /// Model partition `p`'s reducer as taking `rates[p]×` its nominal
+    /// service time — the scenario harness's worker-slowdown event. The
+    /// multipliers feed only the *virtual-time* accounting below (reduce
+    /// task costs, the pinned bottleneck and `bottleneck_ratio`); routing,
+    /// loads, record counts and keyed state are untouched, so a run with
+    /// all rates at `1.0` is bitwise-identical to one without rates.
+    pub fn with_service_rates(mut self, rates: &'a [f64]) -> Self {
+        self.rates = Some(rates);
+        self
     }
 
     /// Route `records` through `epoch`, optionally folding reducer state,
@@ -219,8 +237,19 @@ impl<'a> ShuffleStage<'a> {
         // O(n_partitions) bookkeeping, not sharded work.
         let wall_s = wall_start.elapsed().as_secs_f64();
 
+        if let Some(rates) = self.rates {
+            debug_assert_eq!(rates.len(), n, "service rates/partition mismatch");
+        }
+        let rate = |p: usize| self.rates.map_or(1.0, |r| r[p]);
         let total_load: f64 = loads.iter().sum();
-        let bottleneck = loads.iter().cloned().fold(0.0, f64::max);
+        // Effective (service-rate-weighted) bottleneck: what backpressure
+        // actually gates on when a worker is slowed. Identical to the raw
+        // bottleneck when no rates are set.
+        let bottleneck = loads
+            .iter()
+            .enumerate()
+            .map(|(p, l)| l * rate(p))
+            .fold(0.0, f64::max);
         let (map_time, reduce_time, stage_time) = match self.sched {
             Scheduling::Wave => {
                 let per_slot = records.len().div_ceil(self.cfg.n_slots);
@@ -228,7 +257,8 @@ impl<'a> ShuffleStage<'a> {
                     per_slot as f64 * (self.cfg.map_cost + self.cfg.shuffle_cost);
                 let task_costs: Vec<VTime> = loads
                     .iter()
-                    .map(|l| self.cfg.reduce_task_time(*l, total_load))
+                    .enumerate()
+                    .map(|(p, l)| self.cfg.reduce_task_time(*l, total_load) * rate(p))
                     .collect();
                 let reduce_time = wave_makespan(&task_costs, self.cfg.n_slots);
                 (map_time, reduce_time, map_time + reduce_time)
@@ -623,6 +653,56 @@ mod tests {
         // both paths install the same routing
         for k in 0..2_000u64 {
             assert_eq!(p_a.partition(k), p_b.partition(k), "routing diverged at {k}");
+        }
+    }
+
+    #[test]
+    fn unit_service_rates_are_bitwise_invisible() {
+        let cfg = cfg(6, 4);
+        let ones = vec![1.0f64; 6];
+        let mut z = Zipf::new(2_000, 1.2, 8);
+        let recs = z.batch(20_000);
+        for sched in [Scheduling::Wave, Scheduling::Pinned] {
+            let ep = epoch(6, 8);
+            let plain = ShuffleStage::new(&cfg, sched).run(&recs, &ep, None);
+            let rated = ShuffleStage::new(&cfg, sched)
+                .with_service_rates(&ones)
+                .run(&recs, &ep, None);
+            assert_eq!(plain.map_time.to_bits(), rated.map_time.to_bits(), "{sched:?}");
+            assert_eq!(plain.reduce_time.to_bits(), rated.reduce_time.to_bits(), "{sched:?}");
+            assert_eq!(plain.stage_time.to_bits(), rated.stage_time.to_bits(), "{sched:?}");
+            assert_eq!(
+                plain.bottleneck_ratio.to_bits(),
+                rated.bottleneck_ratio.to_bits(),
+                "{sched:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn slowed_partition_stretches_virtual_time_only() {
+        let cfg = cfg(4, 4);
+        let mut z = Zipf::new(2_000, 0.3, 9);
+        let recs = z.batch(20_000);
+        let ep = epoch(4, 9);
+        let mut rates = vec![1.0f64; 4];
+        rates[2] = 3.0;
+        for sched in [Scheduling::Wave, Scheduling::Pinned] {
+            let plain = ShuffleStage::new(&cfg, sched).run(&recs, &ep, None);
+            let slowed = ShuffleStage::new(&cfg, sched)
+                .with_service_rates(&rates)
+                .run(&recs, &ep, None);
+            assert!(
+                slowed.reduce_time > plain.reduce_time,
+                "{sched:?}: a slowed worker must stretch the reduce phase"
+            );
+            // routing is untouched: same loads, counts, imbalance
+            assert_eq!(plain.record_counts, slowed.record_counts, "{sched:?}");
+            for (a, b) in plain.loads.iter().zip(&slowed.loads) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{sched:?}");
+            }
+            assert_eq!(plain.imbalance.to_bits(), slowed.imbalance.to_bits(), "{sched:?}");
+            assert!(slowed.bottleneck_ratio > plain.bottleneck_ratio, "{sched:?}");
         }
     }
 

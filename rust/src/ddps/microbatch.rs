@@ -168,6 +168,25 @@ impl MicroBatchEngine {
     pub fn total_state_weight(&self) -> f64 {
         self.core.stores.iter().map(|s| s.total_weight()).sum()
     }
+
+    /// Elasticity event: scale to `n_partitions` reduce partitions over
+    /// `n_slots` executor slots (DRWs track the slot count, as at
+    /// construction). Keyed state migrates along the cross-count epoch
+    /// diff ([`EngineCore::rescale`]); the pause lands in the metrics'
+    /// migration accounting.
+    pub fn scale_to(
+        &mut self,
+        n_partitions: usize,
+        n_slots: usize,
+    ) -> super::exec::MigrationReport {
+        self.core.rescale(n_partitions, n_slots, n_slots)
+    }
+
+    /// Failure-model event: partition `p`'s reducers run `factor×` slower;
+    /// `1.0` restores full speed. Virtual-time only.
+    pub fn set_service_rate(&mut self, p: usize, factor: f64) {
+        self.core.set_service_rate(p, factor);
+    }
 }
 
 #[cfg(test)]
@@ -317,6 +336,31 @@ mod tests {
         );
         assert!(b.metrics().source_wall_s >= 0.0);
         assert!(b.metrics().pipeline_occupancy() > 0.0);
+    }
+
+    #[test]
+    fn scale_to_conserves_state_and_continues() {
+        let mut e =
+            MicroBatchEngine::new(cfg(6, 6), DrConfig::forced(), PartitionerChoice::Kip, 11);
+        let mut z = Zipf::new(5_000, 1.2, 11);
+        let mut expected = 0.0;
+        for _ in 0..2 {
+            let b = z.batch(20_000);
+            expected += b.iter().map(|r| r.weight).sum::<f64>();
+            e.run_batch(&b);
+        }
+        let epoch = e.epoch();
+        e.scale_to(9, 12);
+        assert_eq!(e.partitioner().n_partitions(), 9);
+        assert_eq!(e.epoch(), epoch + 1);
+        assert!((e.total_state_weight() - expected).abs() < 1e-6);
+        let b = z.batch(20_000);
+        expected += b.iter().map(|r| r.weight).sum::<f64>();
+        let r = e.run_batch(&b);
+        assert_eq!(r.loads.len(), 9);
+        e.scale_to(4, 4);
+        assert!((e.total_state_weight() - expected).abs() < 1e-6);
+        e.run_batch(&z.batch(20_000));
     }
 
     #[test]

@@ -47,7 +47,7 @@ pub use exec::{
 };
 pub use microbatch::{BatchReport, MicroBatchEngine};
 pub use pipeline::{Discipline, EngineCore, StepReport};
-pub use streaming::{IntervalReport, StreamingEngine};
+pub use streaming::{IntervalReport, RecoveryPoint, StreamingEngine};
 
 use crate::sketch::SketchConfig;
 use crate::util::VTime;
@@ -135,16 +135,14 @@ impl EngineConfig {
     }
 
     /// Executor thread count requested via the `DYNREPART_THREADS`
-    /// environment variable; 1 (the sequential path) when unset, zero or
-    /// unparsable. The e2e tests and the figure drivers build their
-    /// configs through [`EngineConfig::from_env`] so CI can run the whole
-    /// tier-1 suite against the sharded executor.
+    /// environment variable; 1 (the sequential path) when unset or empty.
+    /// A malformed value (unparsable, or zero) **aborts with a clear
+    /// error** instead of silently running sequentially — the strict
+    /// parser lives in [`crate::util::env`]. The e2e tests and the figure
+    /// drivers build their configs through [`EngineConfig::from_env`] so
+    /// CI can run the whole tier-1 suite against the sharded executor.
     pub fn threads_from_env() -> usize {
-        std::env::var("DYNREPART_THREADS")
-            .ok()
-            .and_then(|s| s.parse::<usize>().ok())
-            .filter(|&t| t >= 1)
-            .unwrap_or(1)
+        crate::util::env::knob_from_env("DYNREPART_THREADS", 1).unwrap_or(1)
     }
 
     /// [`Default`], with `num_threads` taken from `DYNREPART_THREADS` and
@@ -207,9 +205,24 @@ mod tests {
         assert_eq!(EngineConfig::default().num_threads, 1);
         // the default sketch config is the exact, unbounded path
         assert!(EngineConfig::default().sketch.is_unbounded());
-        // unset/garbage env must degrade to the sequential path
+        // unset/empty env means the sequential default; malformed values
+        // abort instead of silently degrading (the parse paths themselves
+        // are unit-tested purely in util::env and sketch — mutating the
+        // process env here would race the parallel test harness)
         assert!(EngineConfig::threads_from_env() >= 1);
         assert!(EngineConfig::from_env().num_threads >= 1);
+    }
+
+    #[test]
+    fn threads_env_parse_paths_are_strict() {
+        use crate::util::env::parse_knob;
+        // the exact rules threads_from_env applies, as pure functions
+        assert_eq!(parse_knob("DYNREPART_THREADS", None, 1), Ok(None));
+        assert_eq!(parse_knob("DYNREPART_THREADS", Some(""), 1), Ok(None));
+        assert_eq!(parse_knob("DYNREPART_THREADS", Some("4"), 1), Ok(Some(4)));
+        assert!(parse_knob("DYNREPART_THREADS", Some("0"), 1).is_err());
+        assert!(parse_knob("DYNREPART_THREADS", Some("four"), 1).is_err());
+        assert!(parse_knob("DYNREPART_THREADS", Some("-2"), 1).is_err());
     }
 
     #[test]

@@ -63,6 +63,10 @@ use std::time::Instant;
 /// their discipline-specific extras (checkpoint store, counters); the
 /// loop splits its fields across the pipeline lanes, which is why it is a
 /// struct of independently borrowable parts rather than trait methods.
+/// `Clone` snapshots the whole thing — recovery points
+/// ([`crate::ddps::streaming::RecoveryPoint`]) are clones taken at the
+/// epoch-swap barrier.
+#[derive(Clone)]
 pub struct EngineCore {
     pub(crate) cfg: EngineConfig,
     pub(crate) drm: DrMaster,
@@ -70,6 +74,12 @@ pub struct EngineCore {
     pub(crate) partitioner: PartitionerEpoch,
     pub(crate) stores: Vec<StateStore>,
     pub(crate) metrics: EngineMetrics,
+    /// The construction seed, retained so elasticity events can mint new
+    /// DRWs deterministically ([`EngineCore::rescale`]).
+    pub(crate) seed: u64,
+    /// Per-partition service-time multipliers fed to every stage (scenario
+    /// harness worker-slowdown events; all `1.0` ≡ no slowdown, bitwise).
+    pub(crate) service_rates: Vec<f64>,
 }
 
 impl EngineCore {
@@ -98,13 +108,78 @@ impl EngineCore {
         let partitioner = drm.handle();
         let stores = (0..cfg.n_partitions).map(|_| StateStore::new()).collect();
         Self {
+            service_rates: vec![1.0; cfg.n_partitions],
             cfg,
             drm,
             workers,
             partitioner,
             stores,
             metrics: EngineMetrics::default(),
+            seed,
         }
+    }
+
+    /// Scale the engine to a new partition count — the core half of an
+    /// elasticity event. The DRM rebuilds its family over `n_partitions`
+    /// and installs it as a cross-count epoch ([`DrMaster::rescale`]);
+    /// keyed state then migrates along the derived plan exactly like an
+    /// ordinary repartitioning (new partitions start empty on scale-out,
+    /// departing partitions drain fully on scale-in), the DRW set resizes
+    /// to `n_workers` (new workers minted from the stored seed), and
+    /// service rates reset to `1.0` for new partitions. Deterministic:
+    /// nothing here depends on the thread count.
+    pub fn rescale(
+        &mut self,
+        n_partitions: usize,
+        n_slots: usize,
+        n_workers: usize,
+    ) -> exec::MigrationReport {
+        assert!(n_partitions > 0, "rescale requires at least one partition");
+        let old_n = self.cfg.n_partitions;
+        let swap = self.drm.rescale(n_partitions);
+        // The stores slice must cover both routings while the plan runs.
+        let cover = n_partitions.max(old_n);
+        if self.stores.len() < cover {
+            self.stores.resize_with(cover, StateStore::new);
+        }
+        let mig = exec::apply_epoch_swap(&self.cfg, &mut self.stores, &swap);
+        // Scale-in: every key above the new count routes below it under
+        // the new function, so the dropped stores are already drained.
+        for s in &self.stores[n_partitions..] {
+            debug_assert_eq!(s.n_keys(), 0, "scale-in left state behind");
+        }
+        self.stores.truncate(n_partitions);
+        self.cfg.n_partitions = n_partitions;
+        self.cfg.n_slots = n_slots;
+        self.cfg.validate();
+        if n_workers < self.workers.len() {
+            self.workers.truncate(n_workers);
+        } else {
+            for w in self.workers.len()..n_workers {
+                self.workers.push(DrWorker::with_sketch(
+                    self.drm.worker_capacity(),
+                    self.drm.config().sample_rate,
+                    self.seed ^ (w as u64) << 8,
+                    self.cfg.sketch,
+                ));
+            }
+        }
+        self.service_rates.resize(n_partitions, 1.0);
+        self.partitioner = swap.to.clone();
+        self.metrics.state_weight_migrated += mig.moved_weight;
+        self.metrics.repartition_count += 1;
+        self.metrics.migration_vtime += mig.pause;
+        self.metrics.total_vtime += mig.pause;
+        mig
+    }
+
+    /// Model partition `p`'s worker as `factor×` slower (`1.0` restores
+    /// full speed). Feeds only virtual time; see
+    /// [`ShuffleStage::with_service_rates`].
+    pub fn set_service_rate(&mut self, p: usize, factor: f64) {
+        assert!(p < self.cfg.n_partitions, "partition out of range");
+        assert!(factor > 0.0, "service-rate factor must be positive");
+        self.service_rates[p] = factor;
     }
 }
 
@@ -236,11 +311,9 @@ pub fn lockstep_step(
                 &mut core.metrics,
             );
             exec::tap_records_sharded(&mut core.workers, records, TapAssignment::Chunked, threads);
-            let stage = ShuffleStage::new(&core.cfg, Scheduling::Wave).run(
-                records,
-                &core.partitioner,
-                Some(core.stores.as_mut_slice()),
-            );
+            let stage = ShuffleStage::new(&core.cfg, Scheduling::Wave)
+                .with_service_rates(&core.service_rates)
+                .run(records, &core.partitioner, Some(core.stores.as_mut_slice()));
             after_stage(records, &core.stores);
             assemble(core, disc, records.len(), stage, outcome, source_wall_s, span)
         }
@@ -251,11 +324,9 @@ pub fn lockstep_step(
                 TapAssignment::RoundRobin,
                 threads,
             );
-            let stage = ShuffleStage::new(&core.cfg, Scheduling::Pinned).run(
-                records,
-                &core.partitioner,
-                Some(core.stores.as_mut_slice()),
-            );
+            let stage = ShuffleStage::new(&core.cfg, Scheduling::Pinned)
+                .with_service_rates(&core.service_rates)
+                .run(records, &core.partitioner, Some(core.stores.as_mut_slice()));
             after_stage(records, &core.stores);
             let decision = exec::decision_point_sharded(&mut core.drm, &mut core.workers, threads);
             let outcome = exec::adopt_decision(
@@ -371,21 +442,21 @@ fn drive_microbatch(
                 workers,
                 partitioner,
                 stores,
+                service_rates,
                 ..
             } = &mut *core;
             let num_threads = cfg.num_threads;
             let stage_cfg: &EngineConfig = cfg;
             let epoch_snapshot: &PartitionerEpoch = partitioner;
+            let rates: &[f64] = service_rates;
             let records: &[Record] = &cur;
             thread::scope(|s| {
                 let stage_handle = {
                     let stores: &mut [StateStore] = stores;
                     s.spawn(move || {
-                        ShuffleStage::new(stage_cfg, Scheduling::Wave).run(
-                            records,
-                            epoch_snapshot,
-                            Some(stores),
-                        )
+                        ShuffleStage::new(stage_cfg, Scheduling::Wave)
+                            .with_service_rates(rates)
+                            .run(records, epoch_snapshot, Some(stores))
                     })
                 };
                 // Prefetch lane (this thread): materialize batch k+1.
@@ -469,21 +540,21 @@ fn drive_streaming(
                 workers,
                 partitioner,
                 stores,
+                service_rates,
                 ..
             } = &mut *core;
             let num_threads = cfg.num_threads;
             let stage_cfg: &EngineConfig = cfg;
             let epoch_snapshot: &PartitionerEpoch = partitioner;
+            let rates: &[f64] = service_rates;
             let records: &[Record] = &cur;
             thread::scope(|s| {
                 let stage_handle = {
                     let stores: &mut [StateStore] = stores;
                     s.spawn(move || {
-                        ShuffleStage::new(stage_cfg, Scheduling::Pinned).run(
-                            records,
-                            epoch_snapshot,
-                            Some(stores),
-                        )
+                        ShuffleStage::new(stage_cfg, Scheduling::Pinned)
+                            .with_service_rates(rates)
+                            .run(records, epoch_snapshot, Some(stores))
                     })
                 };
                 let dec_handle =
@@ -788,6 +859,97 @@ mod tests {
         assert_eq!(seq.drm.decisions_made(), par.drm.decisions_made());
         assert_eq!(seq.drm.epoch(), par.drm.epoch());
         assert_eq!(seq.partitioner.epoch(), par.partitioner.epoch());
+    }
+
+    #[test]
+    fn rescale_migrates_state_across_counts_and_continues() {
+        let bs = batches(2, 8_000, 15);
+        let mut c = core(4, 4, 1, 15);
+        for b in &bs {
+            lockstep_step(
+                &mut c,
+                b,
+                Discipline::MicroBatch,
+                0.0,
+                Instant::now(),
+                &mut |_, _| {},
+            );
+        }
+        let weight_before: f64 = c.stores.iter().map(|s| s.total_weight()).sum();
+        let epoch_before = c.partitioner.epoch();
+        let mig = c.rescale(7, 7, 7);
+        assert_eq!(c.cfg.n_partitions, 7);
+        assert_eq!(c.stores.len(), 7);
+        assert_eq!(c.workers.len(), 7);
+        assert_eq!(c.service_rates, vec![1.0; 7]);
+        assert_eq!(c.partitioner.epoch(), epoch_before + 1);
+        assert_eq!(c.partitioner.n_partitions(), 7);
+        assert!(mig.moved_weight > 0.0, "scale-out must move state");
+        let weight_after: f64 = c.stores.iter().map(|s| s.total_weight()).sum();
+        assert!((weight_before - weight_after).abs() < 1e-9, "state weight not conserved");
+        for (p, s) in c.stores.iter().enumerate() {
+            for k in s.keys() {
+                assert_eq!(c.partitioner.partition(k), p, "key parked off-route");
+            }
+        }
+        // the engine keeps running at the new count
+        let step = lockstep_step(
+            &mut c,
+            &bs[0],
+            Discipline::MicroBatch,
+            0.0,
+            Instant::now(),
+            &mut |_, _| {},
+        );
+        assert_eq!(step.stage.loads.len(), 7);
+
+        // ...and scales back in, draining the departing stores
+        c.rescale(3, 3, 3);
+        assert_eq!(c.stores.len(), 3);
+        let weight_in: f64 = c.stores.iter().map(|s| s.total_weight()).sum();
+        assert!((weight_before - weight_in).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cloned_core_replays_identically() {
+        let bs = batches(3, 6_000, 17);
+        let mut a = core(6, 6, 1, 17);
+        lockstep_step(
+            &mut a,
+            &bs[0],
+            Discipline::Streaming,
+            0.0,
+            Instant::now(),
+            &mut |_, _| {},
+        );
+        let mut b = a.clone();
+        for batch in &bs[1..] {
+            let sa = lockstep_step(
+                &mut a,
+                batch,
+                Discipline::Streaming,
+                0.0,
+                Instant::now(),
+                &mut |_, _| {},
+            );
+            let sb = lockstep_step(
+                &mut b,
+                batch,
+                Discipline::Streaming,
+                0.0,
+                Instant::now(),
+                &mut |_, _| {},
+            );
+            assert_eq!(sa.epoch, sb.epoch);
+            assert_eq!(sa.makespan.to_bits(), sb.makespan.to_bits());
+            assert_eq!(sa.migrated_fraction.to_bits(), sb.migrated_fraction.to_bits());
+            assert_eq!(sa.stage.record_counts, sb.stage.record_counts);
+        }
+        let (wa, wb) = (
+            a.stores.iter().map(|s| s.total_weight()).sum::<f64>(),
+            b.stores.iter().map(|s| s.total_weight()).sum::<f64>(),
+        );
+        assert_eq!(wa.to_bits(), wb.to_bits());
     }
 
     #[test]

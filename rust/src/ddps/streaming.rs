@@ -71,6 +71,41 @@ pub struct StreamingEngine {
     vtime: VTime,
 }
 
+/// A full post-barrier snapshot of a [`StreamingEngine`] — everything the
+/// engine will read on any later interval (core engine state, checkpoint
+/// history, counters). Taken between intervals, where no stage, decision
+/// or migration is in flight, so an engine restored from one and fed the
+/// same intervals produces bitwise-identical reports, epochs and state as
+/// the engine that never failed: every computation downstream of this
+/// state is deterministic (see DESIGN.md "Scenario harness"). The
+/// per-barrier [`Checkpoint`]s remain the *pre-migration* task snapshots
+/// the paper's snapshot mechanism takes; a recovery point is the
+/// orthogonal whole-engine image used by crash-restore.
+#[derive(Clone)]
+pub struct RecoveryPoint {
+    core: EngineCore,
+    checkpoints: CheckpointStore,
+    interval_no: u64,
+    vtime: VTime,
+}
+
+impl RecoveryPoint {
+    /// Interval count at the barrier this point was taken.
+    pub fn interval_no(&self) -> u64 {
+        self.interval_no
+    }
+
+    /// Virtual time accumulated up to the barrier.
+    pub fn vtime(&self) -> VTime {
+        self.vtime
+    }
+
+    /// Total state weight captured in the snapshot.
+    pub fn total_state_weight(&self) -> f64 {
+        self.core.stores.iter().map(|s| s.total_weight()).sum()
+    }
+}
+
 impl StreamingEngine {
     /// In the streaming engine every partition is a pinned long-running
     /// task, so `cfg.n_slots` must be ≥ `cfg.n_partitions` (the paper runs
@@ -95,6 +130,11 @@ impl StreamingEngine {
 
     pub fn vtime(&self) -> VTime {
         self.vtime
+    }
+
+    /// Checkpoint intervals processed so far.
+    pub fn interval_no(&self) -> u64 {
+        self.interval_no
     }
 
     pub fn stores(&self) -> &[StateStore] {
@@ -210,6 +250,61 @@ impl StreamingEngine {
             })
             .collect()
     }
+
+    /// Snapshot the whole engine at the current barrier (between
+    /// intervals). Restoring from it ([`StreamingEngine::restore`]) and
+    /// replaying the same intervals reproduces an uninterrupted run
+    /// bitwise — the crash-recovery contract the scenario harness
+    /// verifies.
+    pub fn recovery_point(&self) -> RecoveryPoint {
+        RecoveryPoint {
+            core: self.core.clone(),
+            checkpoints: self.checkpoints.clone(),
+            interval_no: self.interval_no,
+            vtime: self.vtime,
+        }
+    }
+
+    /// Rebuild an engine from a [`RecoveryPoint`] — the crash-restore
+    /// path. The restored engine continues from the snapshot's barrier:
+    /// interval numbering, checkpoint ids, epochs and virtual time all
+    /// resume exactly where the snapshot left them; the lost gap is
+    /// replayed from a retained source (e.g.
+    /// [`ReplaySource`](crate::workload::ReplaySource)).
+    pub fn restore(point: &RecoveryPoint) -> Self {
+        Self {
+            core: point.core.clone(),
+            checkpoints: point.checkpoints.clone(),
+            interval_no: point.interval_no,
+            vtime: point.vtime,
+        }
+    }
+
+    /// Elasticity event: scale to `n_partitions` pinned tasks (slots and
+    /// DRWs track the partition count, preserving the slots ≥ partitions
+    /// invariant). Keyed state migrates along the cross-count epoch diff
+    /// at a barrier, and the migration pause is charged against the
+    /// engine's virtual timeline like any repartitioning pause. Returns
+    /// the interval-report-shaped migration numbers so scenario tables can
+    /// surface the event.
+    pub fn scale_to(&mut self, n_partitions: usize) -> super::exec::MigrationReport {
+        let mig = self.core.rescale(n_partitions, n_partitions, n_partitions);
+        self.vtime += mig.pause;
+        mig
+    }
+
+    /// Failure-model event: partition `p`'s long-running task runs
+    /// `factor×` slower (backpressure tightens around it); `1.0` restores
+    /// full speed. Virtual-time only — see
+    /// [`ShuffleStage`](super::ShuffleStage)`::with_service_rates`.
+    pub fn set_service_rate(&mut self, p: usize, factor: f64) {
+        self.core.set_service_rate(p, factor);
+    }
+
+    /// The service-rate multipliers currently in force, one per partition.
+    pub fn service_rates(&self) -> &[f64] {
+        &self.core.service_rates
+    }
 }
 
 #[cfg(test)]
@@ -314,6 +409,95 @@ mod tests {
             last = r.epoch;
         }
         assert_eq!(e.epoch(), last);
+    }
+
+    #[test]
+    fn restored_engine_reproduces_uninterrupted_run() {
+        let mk = || StreamingEngine::new(cfg(6), DrConfig::forced(), PartitionerChoice::Kip, 9);
+        let mut z = Zipf::new(5_000, 1.2, 9);
+        let batches: Vec<Vec<Record>> = (0..6).map(|_| z.batch(12_000)).collect();
+
+        // uninterrupted reference run
+        let mut gold = mk();
+        let gold_reports: Vec<IntervalReport> =
+            batches.iter().map(|b| gold.run_interval(b)).collect();
+
+        // crashed run: snapshot after interval 3, "lose" intervals 4..,
+        // restore and replay them
+        let mut live = mk();
+        for b in &batches[..3] {
+            live.run_interval(b);
+        }
+        let point = live.recovery_point();
+        assert_eq!(point.interval_no(), 3);
+        live.run_interval(&batches[3]); // work lost in the crash
+        drop(live);
+        let mut resumed = StreamingEngine::restore(&point);
+        let resumed_reports: Vec<IntervalReport> =
+            batches[3..].iter().map(|b| resumed.run_interval(b)).collect();
+
+        for (g, r) in gold_reports[3..].iter().zip(&resumed_reports) {
+            assert_eq!(g.interval_no, r.interval_no);
+            assert_eq!(g.epoch, r.epoch);
+            assert_eq!(g.repartitioned, r.repartitioned);
+            assert_eq!(g.elapsed.to_bits(), r.elapsed.to_bits());
+            assert_eq!(g.throughput.to_bits(), r.throughput.to_bits());
+            assert_eq!(g.imbalance.to_bits(), r.imbalance.to_bits());
+            assert_eq!(g.migrated_fraction.to_bits(), r.migrated_fraction.to_bits());
+        }
+        assert_eq!(gold.vtime().to_bits(), resumed.vtime().to_bits());
+        assert_eq!(gold.epoch(), resumed.epoch());
+        assert_eq!(
+            gold.total_state_weight().to_bits(),
+            resumed.total_state_weight().to_bits()
+        );
+        assert_eq!(
+            gold.checkpoints().latest().unwrap().id,
+            resumed.checkpoints().latest().unwrap().id
+        );
+    }
+
+    #[test]
+    fn scale_to_migrates_and_keeps_running() {
+        let mut e = StreamingEngine::new(cfg(4), DrConfig::forced(), PartitionerChoice::Kip, 10);
+        let mut z = Zipf::new(8_000, 1.2, 10);
+        e.run_interval(&z.batch(20_000));
+        let w = e.total_state_weight();
+        let epoch = e.epoch();
+        let vt = e.vtime();
+        let mig = e.scale_to(7);
+        assert!(mig.moved_weight > 0.0);
+        assert_eq!(e.partitioner().n_partitions(), 7);
+        assert_eq!(e.stores().len(), 7);
+        assert_eq!(e.epoch(), epoch + 1, "scale event is an epoch bump");
+        assert!((e.total_state_weight() - w).abs() < 1e-9);
+        assert!(e.vtime() > vt, "migration pause charged to the timeline");
+        let r = e.run_interval(&z.batch(20_000));
+        assert_eq!(r.interval_no, 2);
+        // scale back in below the original count
+        e.scale_to(2);
+        assert_eq!(e.stores().len(), 2);
+        let recomputed: f64 = e.stores().iter().map(|s| s.total_weight()).sum();
+        assert!((e.total_state_weight() - recomputed).abs() < 1e-12);
+        e.run_interval(&z.batch(20_000));
+    }
+
+    #[test]
+    fn slowdown_stretches_interval_and_restore_speed_recovers() {
+        let mk = || StreamingEngine::new(cfg(4), DrConfig::disabled(), PartitionerChoice::Uhp, 11);
+        let mut z = Zipf::new(10_000, 0.2, 11);
+        let batch = z.batch(30_000);
+        let mut plain = mk();
+        let rp = plain.run_interval(&batch);
+        let mut slowed = mk();
+        slowed.set_service_rate(1, 4.0);
+        assert_eq!(slowed.service_rates()[1], 4.0);
+        let rs = slowed.run_interval(&batch);
+        assert!(rs.elapsed > rp.elapsed, "slowdown must stretch the interval");
+        assert!(rs.bottleneck_ratio > rp.bottleneck_ratio);
+        slowed.set_service_rate(1, 1.0);
+        let rr = slowed.run_interval(&batch);
+        assert_eq!(rr.elapsed.to_bits(), rp.elapsed.to_bits(), "restored speed must match");
     }
 
     #[test]

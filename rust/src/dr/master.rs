@@ -161,11 +161,15 @@ impl DrDecision {
     }
 }
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct DrMaster {
     cfg: DrConfig,
     choice: PartitionerChoice,
     n_partitions: usize,
+    /// The construction seed, retained so elasticity events
+    /// ([`DrMaster::rescale`]) can rebuild the family at a new partition
+    /// count from the same deterministic base.
+    seed: u64,
     /// The concrete family state candidates are derived from. Always the
     /// same allocation the current epoch routes through (`epoched` holds a
     /// clone of this `Arc`), so the two views cannot diverge.
@@ -222,6 +226,7 @@ impl DrMaster {
             cfg,
             choice,
             n_partitions,
+            seed,
             current,
             epoched,
             past: VecDeque::new(),
@@ -229,6 +234,57 @@ impl DrMaster {
             updates_issued: 0,
             decisions_made: 0,
         }
+    }
+
+    /// Rebuild the partitioner family over `new_n` partitions and install
+    /// it as a new epoch — the DRM half of a scale-out/in event. The family
+    /// is reconstructed from the stored seed (same deterministic base as
+    /// construction) and, for decision continuity, immediately re-fitted to
+    /// the blend of the recorded past histograms, so heavy keys isolated
+    /// before the rescale stay isolated after it. The returned
+    /// [`EpochSwap`] crosses partition counts; the engine derives the
+    /// migration plan from it exactly as for an ordinary repartitioning.
+    pub fn rescale(&mut self, new_n: usize) -> EpochSwap {
+        assert!(new_n > 0, "rescale requires at least one partition");
+        self.n_partitions = new_n;
+        let kip_cfg = KipConfig {
+            lambda: self.cfg.lambda,
+            epsilon: self.cfg.epsilon,
+            ..Default::default()
+        };
+        let hist = if self.past.is_empty() {
+            None
+        } else {
+            let locals: Vec<Histogram> = self.past.iter().cloned().collect();
+            Some(Histogram::merge(&locals, self.histogram_size()))
+        };
+        let candidate = match self.choice {
+            PartitionerChoice::Kip => {
+                let base = Kip::initial(new_n, kip_cfg, self.seed);
+                DynPartitioner::Kip(match &hist {
+                    Some(h) => base.updated(h),
+                    None => base,
+                })
+            }
+            PartitionerChoice::Gedik(s) => {
+                let base = GedikPartitioner::initial(s, new_n, GedikConfig::default(), self.seed);
+                DynPartitioner::Gedik(match &hist {
+                    Some(h) => base.update(h),
+                    None => base,
+                })
+            }
+            PartitionerChoice::Mixed => {
+                let base = Mixed::initial(new_n, self.seed);
+                DynPartitioner::Mixed(match &hist {
+                    Some(h) => base.update(h),
+                    None => base,
+                })
+            }
+            PartitionerChoice::Uhp => DynPartitioner::Uhp(Uhp::with_seed(new_n, self.seed)),
+        };
+        self.current = Arc::new(candidate);
+        self.updates_issued += 1;
+        self.epoched.install_resized(self.current.clone())
     }
 
     pub fn config(&self) -> &DrConfig {
@@ -241,6 +297,12 @@ impl DrMaster {
 
     pub fn choice(&self) -> PartitionerChoice {
         self.choice
+    }
+
+    /// Partition count the master currently routes over (changes only
+    /// through [`DrMaster::rescale`]).
+    pub fn n_partitions(&self) -> usize {
+        self.n_partitions
     }
 
     pub fn histogram_size(&self) -> usize {
@@ -668,6 +730,89 @@ mod tests {
                 }
             }
             assert_eq!(seq.epoch(), par.epoch(), "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn rescale_changes_partition_count_and_bumps_epoch() {
+        for choice in [
+            PartitionerChoice::Kip,
+            PartitionerChoice::Gedik(GedikStrategy::Scan),
+            PartitionerChoice::Mixed,
+            PartitionerChoice::Uhp,
+        ] {
+            let mut drm = DrMaster::new(DrConfig::forced(), choice, 4, 31);
+            let mut z = Zipf::new(20_000, 1.2, 31);
+            let recs = z.batch(60_000);
+            drm.decide(worker_hists(&recs, 4, drm.histogram_size()));
+            let epoch_before = drm.epoch();
+            let swap = drm.rescale(6);
+            assert_eq!(swap.from.n_partitions(), 4, "{}", choice.name());
+            assert_eq!(swap.to.n_partitions(), 6, "{}", choice.name());
+            assert_eq!(swap.to_epoch(), epoch_before + 1);
+            assert_eq!(drm.epoch(), epoch_before + 1);
+            assert_eq!(drm.handle().n_partitions(), 6);
+            assert_eq!(drm.histogram_size(), drm.config().lambda * 6);
+            for k in 0..2000u64 {
+                assert!(drm.handle().partition(k) < 6, "{}", choice.name());
+            }
+            for &(_, from, to) in &swap.plan(0..2000u64) {
+                assert!(from < 4);
+                assert!(to < 6);
+            }
+            // scale back in
+            let swap2 = drm.rescale(2);
+            assert_eq!(swap2.to.n_partitions(), 2);
+            assert!(drm.handle().n_partitions() == 2);
+        }
+    }
+
+    #[test]
+    fn rescale_keeps_heavy_keys_isolated() {
+        // decision continuity: after observing a heavy hitter, rescaling
+        // must re-fit the candidate so the KIP routing table still tracks it
+        let mut drm = DrMaster::new(DrConfig::forced(), PartitionerChoice::Kip, 4, 32);
+        let h = Histogram::from_counts(&[(7, 900.0), (9, 60.0)], 1000.0, 8);
+        drm.decide(vec![h]);
+        drm.rescale(8);
+        assert!(
+            drm.handle().explicit_routes() > 0,
+            "re-fitted KIP must carry explicit routes for observed heavy keys"
+        );
+    }
+
+    #[test]
+    fn rescale_is_deterministic() {
+        let run = || {
+            let mut drm = DrMaster::new(DrConfig::forced(), PartitionerChoice::Kip, 4, 33);
+            let mut z = Zipf::new(10_000, 1.3, 33);
+            let recs = z.batch(40_000);
+            drm.decide(worker_hists(&recs, 2, drm.histogram_size()));
+            drm.rescale(7);
+            let recs2 = z.batch(40_000);
+            let d = drm.decide(worker_hists(&recs2, 2, drm.histogram_size()));
+            let routes: Vec<usize> = (0..3000u64).map(|k| drm.handle().partition(k)).collect();
+            (d.epoch, d.planned_max_share.to_bits(), routes)
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn cloned_master_evolves_identically() {
+        let mut a = DrMaster::new(DrConfig::forced(), PartitionerChoice::Kip, 8, 34);
+        let mut z = Zipf::new(10_000, 1.2, 34);
+        let recs = z.batch(40_000);
+        a.decide(worker_hists(&recs, 2, a.histogram_size()));
+        let mut b = a.clone();
+        let recs2 = z.batch(40_000);
+        let hists = worker_hists(&recs2, 2, a.histogram_size());
+        let da = a.decide(hists.clone());
+        let db = b.decide(hists);
+        assert_eq!(da.epoch, db.epoch);
+        assert_eq!(da.histogram.entries(), db.histogram.entries());
+        assert_eq!(da.planned_max_share.to_bits(), db.planned_max_share.to_bits());
+        for k in 0..2000u64 {
+            assert_eq!(a.handle().partition(k), b.handle().partition(k));
         }
     }
 

@@ -31,7 +31,7 @@ use crate::sketch::{FreqCounter, HeavyHitter, Histogram, SketchConfig};
 use crate::util::Rng;
 use crate::workload::Key;
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct DrWorker {
     counter: FreqCounter,
     sample_rate: f64,

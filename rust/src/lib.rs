@@ -10,8 +10,11 @@
 //!   ([`ddps`]) with batch, micro-batch (spark-like) and continuous
 //!   (flink-like) engines driven by one pipelined loop
 //!   ([`ddps::pipeline`]: source prefetch ∥ DRM decision ∥ stage), keyed
-//!   state with migration ([`state`]), and the pull-based sources /
-//!   workload generators of the paper's evaluation ([`workload`]).
+//!   state with migration ([`state`]), the pull-based sources /
+//!   workload generators of the paper's evaluation ([`workload`]), and
+//!   the config-driven operational scenario harness ([`scenario`]:
+//!   drift/elasticity/failure scripts with checkpoint-restore
+//!   verification).
 //! - **L2/L1 (python, build-time only)** — the §6 NER reducer compute,
 //!   AOT-lowered to HLO text and executed from rust through [`runtime`]
 //!   (PJRT CPU via the `xla` crate).
@@ -29,6 +32,7 @@ pub mod ner;
 pub mod partitioner;
 pub mod prop;
 pub mod runtime;
+pub mod scenario;
 pub mod sketch;
 pub mod state;
 pub mod util;

@@ -3,6 +3,7 @@
 //!   dynrepart fig <2|3|4|5|6|7|8>   regenerate a paper figure (quick scale)
 //!   dynrepart bench-partitioners    micro-bench partitioner updates
 //!   dynrepart quickstart            the README demo
+//!   dynrepart scenario <conf>       run an operational scenario end to end
 //!   dynrepart artifacts             check AOT artifacts + PJRT runtime
 
 use dynrepart::figures::*;
@@ -102,9 +103,46 @@ fn main() {
                 );
             }
         }
+        Some("scenario") => {
+            let Some(path) = args.get(1) else {
+                eprintln!("usage: dynrepart scenario <conf-path>");
+                eprintln!("  e.g.: dynrepart scenario scenarios/hotspot_flip.conf");
+                std::process::exit(2);
+            };
+            let conf = std::path::Path::new(path);
+            let scenario = match dynrepart::scenario::Scenario::from_file(conf) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("invalid scenario {path}: {e}");
+                    std::process::exit(2);
+                }
+            };
+            match scenario.run() {
+                Ok(report) => {
+                    let slug = format!("scenario_{}", report.name.replace('-', "_"));
+                    report.table().emit(&slug);
+                    if report.recoveries_verified > 0 {
+                        println!(
+                            "recovery verified: {} replayed interval(s) bitwise-identical",
+                            report.recoveries_verified
+                        );
+                    }
+                    println!(
+                        "final epoch {}  total vtime {:.3}s  state weight {:.1}",
+                        report.final_epoch, report.total_vtime, report.total_state_weight
+                    );
+                }
+                Err(e) => {
+                    eprintln!("scenario failed: {e}");
+                    std::process::exit(1);
+                }
+            }
+        }
         _ => {
             eprintln!("dynrepart — System-aware dynamic partitioning (Zvara et al. 2021)");
-            eprintln!("usage: dynrepart <fig 2..8 [scale] | artifacts | quickstart>");
+            eprintln!(
+                "usage: dynrepart <fig 2..8 [scale] | artifacts | quickstart | scenario <conf>>"
+            );
             std::process::exit(2);
         }
     }

@@ -128,7 +128,7 @@ impl EpochSwap {
 /// The `Arc`-swappable, version-numbered partitioner handle owned by the
 /// DRM. `install` atomically (from the engines' perspective: between
 /// records) replaces the function and bumps the epoch.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct EpochedPartitioner {
     current: PartitionerEpoch,
 }
@@ -168,6 +168,19 @@ impl EpochedPartitioner {
             self.current.n_partitions(),
             "epoch swap must preserve the partition count"
         );
+        let from = self.current.clone();
+        let to = PartitionerEpoch::new(from.epoch() + 1, next);
+        self.current = to.clone();
+        EpochSwap { from, to }
+    }
+
+    /// [`EpochedPartitioner::install`] for elasticity events: the new
+    /// function may route over a *different* partition count. Kept as a
+    /// separate entry point so ordinary repartitionings still catch
+    /// accidental count changes via `install`'s assertion; the resulting
+    /// [`EpochSwap`] derives cross-count migration plans exactly like the
+    /// same-count case (see [`super::migration`]).
+    pub fn install_resized(&mut self, next: Arc<dyn Partitioner>) -> EpochSwap {
         let from = self.current.clone();
         let to = PartitionerEpoch::new(from.epoch() + 1, next);
         self.current = to.clone();
@@ -271,5 +284,54 @@ mod tests {
     fn partition_count_change_rejected() {
         let mut ep = EpochedPartitioner::new(Arc::new(Uhp::with_seed(4, 1)));
         ep.install(Arc::new(Uhp::with_seed(8, 1)));
+    }
+
+    #[test]
+    fn install_resized_bumps_epoch_and_reroutes() {
+        let mut ep = EpochedPartitioner::new(Arc::new(Uhp::with_seed(4, 1)));
+        let swap = ep.install_resized(Arc::new(Uhp::with_seed(8, 1)));
+        assert_eq!(swap.from_epoch(), 0);
+        assert_eq!(swap.to_epoch(), 1);
+        assert_eq!(swap.from.n_partitions(), 4);
+        assert_eq!(swap.to.n_partitions(), 8);
+        assert_eq!(ep.n_partitions(), 8);
+        let plan = swap.plan(0..2000u64);
+        assert!(!plan.is_empty(), "scale-out must move keys");
+        for &(k, from, to) in &plan {
+            assert!(from < 4);
+            assert!(to < 8);
+            assert_eq!(from, swap.from.partition(k));
+            assert_eq!(to, swap.to.partition(k));
+        }
+        // scale back in works the same way
+        let swap2 = ep.install_resized(Arc::new(Uhp::with_seed(3, 1)));
+        assert_eq!(swap2.to_epoch(), 2);
+        assert_eq!(ep.n_partitions(), 3);
+        for &(_, from, to) in &swap2.plan(0..2000u64) {
+            assert!(from < 8);
+            assert!(to < 3);
+        }
+    }
+
+    #[test]
+    fn install_resized_fraction_in_unit_interval() {
+        let mut ep = EpochedPartitioner::new(Arc::new(Uhp::with_seed(6, 2)));
+        let swap = ep.install_resized(Arc::new(Uhp::with_seed(9, 2)));
+        let sw: Vec<(Key, f64)> = (0..1000u64).map(|k| (k, 1.0 + (k % 5) as f64)).collect();
+        let f = swap.migration_fraction(&sw);
+        assert!((0.0..=1.0).contains(&f), "f={f}");
+    }
+
+    #[test]
+    fn epoched_clone_is_independent() {
+        let mut ep = EpochedPartitioner::new(Arc::new(Uhp::with_seed(4, 1)));
+        let snap = ep.clone();
+        ep.install(Arc::new(Uhp::with_seed(4, 2)));
+        assert_eq!(snap.epoch(), 0, "clone must not observe later installs");
+        assert_eq!(ep.epoch(), 1);
+        let fresh = Uhp::with_seed(4, 1);
+        for k in 0..500u64 {
+            assert_eq!(snap.partition(k), fresh.partition(k));
+        }
     }
 }

@@ -12,12 +12,16 @@ use crate::workload::Key;
 
 /// Fraction of state (by weight) that must move when switching from `old`
 /// to `new`, over the given per-key state weights.
+///
+/// `old` and `new` need not share a partition count: a scale-out/in event
+/// swaps to a function over a *different* count, and a key moves exactly
+/// when its route changes (source in `0..old.n_partitions()`, destination
+/// in `0..new.n_partitions()`). Same-count swaps are the special case.
 pub fn migration_fraction<A: Partitioner + ?Sized, B: Partitioner + ?Sized>(
     old: &A,
     new: &B,
     state_weights: &[(Key, f64)],
 ) -> f64 {
-    assert_eq!(old.n_partitions(), new.n_partitions());
     let mut total = 0.0;
     let mut moved = 0.0;
     for &(k, w) in state_weights {
@@ -34,7 +38,9 @@ pub fn migration_fraction<A: Partitioner + ?Sized, B: Partitioner + ?Sized>(
 }
 
 /// Detailed migration plan: which keys move where (used by the streaming
-/// engine to actually transfer state at a checkpoint barrier).
+/// engine to actually transfer state at a checkpoint barrier). Like
+/// [`migration_fraction`], this is defined across differing partition
+/// counts: every `from` is in-range of `old`, every `to` in-range of `new`.
 pub fn migration_plan<A: Partitioner + ?Sized, B: Partitioner + ?Sized>(
     old: &A,
     new: &B,
@@ -104,5 +110,39 @@ mod tests {
     fn empty_state_is_zero() {
         let p = Uhp::new(4);
         assert_eq!(migration_fraction(&p, &p, &[]), 0.0);
+    }
+
+    #[test]
+    fn cross_count_plan_routes_in_range_of_each_side() {
+        let old = Uhp::with_seed(4, 1);
+        let new = Uhp::with_seed(6, 1);
+        let keys: Vec<Key> = (0..3000).collect();
+        let plan = migration_plan(&old, &new, keys.iter().cloned());
+        assert!(!plan.is_empty(), "scale-out must move some keys");
+        let planned: std::collections::HashSet<Key> = plan.iter().map(|e| e.0).collect();
+        for &(k, from, to) in &plan {
+            assert!(from < 4, "source out of range of the old count");
+            assert!(to < 6, "destination out of range of the new count");
+            assert_eq!(from, old.partition(k));
+            assert_eq!(to, new.partition(k));
+            assert_ne!(from, to);
+        }
+        for &k in &keys {
+            assert_eq!(planned.contains(&k), old.partition(k) != new.partition(k));
+        }
+    }
+
+    #[test]
+    fn cross_count_fraction_bounded_and_matches_plan() {
+        for (o, n) in [(4usize, 8usize), (8, 4), (5, 7), (16, 3)] {
+            let old = Uhp::with_seed(o, 11);
+            let new = Uhp::with_seed(n, 11);
+            let keys: Vec<Key> = (0..2000).collect();
+            let sw: Vec<(Key, f64)> = keys.iter().map(|&k| (k, 1.0)).collect();
+            let f = migration_fraction(&old, &new, &sw);
+            assert!((0.0..=1.0).contains(&f), "{o}->{n}: f={f}");
+            let plan = migration_plan(&old, &new, keys.iter().cloned());
+            assert!((plan.len() as f64 / 2000.0 - f).abs() < 1e-12, "{o}->{n}");
+        }
     }
 }

@@ -1,0 +1,538 @@
+//! `key = value` scenario configuration — shaped like the original
+//! system's `repartitioning.conf`.
+//!
+//! A scenario file is a flat list of `key = value` lines (full-line `#`
+//! comments, blank lines ignored) describing one end-to-end run: the
+//! engine under test, the DR settings, a *workload script* (how the key
+//! distribution evolves over the run) and a sparse schedule of *runtime
+//! events* (elasticity, slowdown, failure) keyed by the checkpoint
+//! interval they fire before. Unknown keys, malformed values and
+//! inconsistent event schedules are **errors**, never silent defaults —
+//! the same strictness contract as the `DYNREPART_*` env knobs
+//! ([`crate::util::env`]).
+//!
+//! ```text
+//! scenario.name     = hotspot-flip
+//! scenario.seed     = 42
+//! scenario.intervals = 12
+//! workload.script   = hotspot-flip
+//! workload.flip-every = 4
+//! event.7 = scale 12
+//! ```
+
+use crate::dr::DrConfig;
+use crate::dr::PartitionerChoice;
+use crate::partitioner::GedikStrategy;
+
+/// Which engine drives the scenario.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Continuous streaming ([`crate::ddps::StreamingEngine`]) — the only
+    /// kind that supports `fail-restore` events (checkpoint-restore is a
+    /// barrier mechanism).
+    Streaming,
+    /// Micro-batch ([`crate::ddps::MicroBatchEngine`]).
+    MicroBatch,
+}
+
+/// How the key distribution evolves across intervals — the drift models
+/// of the paper's evaluation, made reproducible as scripts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WorkloadScript {
+    /// Fixed Zipf — the control.
+    Stationary,
+    /// Every `flip_every` intervals the heaviest `flip_head` ranks move
+    /// to brand-new key ids (sudden hotspot change).
+    HotspotFlip { flip_every: usize, flip_head: usize },
+    /// The Zipf exponent interpolates linearly from `workload.exponent`
+    /// to `exponent_to` over the first `drift_over` intervals (gradual
+    /// concept drift).
+    ZipfDrift { exponent_to: f64, drift_over: usize },
+    /// Batch volume follows a triangle wave with period `period`
+    /// intervals between the full batch size and `trough` × it (diurnal
+    /// load curve); the distribution itself stays fixed.
+    Diurnal { period: usize, trough: f64 },
+    /// The key universe grows by `growth`× per interval (new keys keep
+    /// arriving, as in the crawl frontier).
+    KeyGrowth { growth: f64 },
+}
+
+/// One runtime event, fired at the barrier *before* its interval runs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    /// Repartition to `n` partitions: new epoch, cross-count migration
+    /// plan, state moves along the epoch diff.
+    Scale(usize),
+    /// Partition `p` starts servicing `factor`× slower (virtual time
+    /// only — routing and state are untouched).
+    Slowdown(usize, f64),
+    /// Partition `p` returns to full speed.
+    RestoreSpeed(usize),
+    /// The worker crashes before this interval, losing the last `gap`
+    /// intervals of progress; the runner restores the engine from the
+    /// recovery point `gap` intervals back, replays the gap from
+    /// retained batches, and **verifies the replayed reports bitwise**
+    /// against the pre-crash run before continuing. Streaming only.
+    FailRestore(usize),
+}
+
+impl EventKind {
+    /// Short label for the scenario table's `event` column.
+    pub fn label(&self) -> String {
+        match self {
+            EventKind::Scale(n) => format!("scale={n}"),
+            EventKind::Slowdown(p, f) => format!("slow p{p} x{f}"),
+            EventKind::RestoreSpeed(p) => format!("restore p{p}"),
+            EventKind::FailRestore(g) => format!("fail-restore gap={g}"),
+        }
+    }
+}
+
+/// A fully validated scenario: engine, DR, workload script and event
+/// schedule. Build programmatically or parse from a conf file.
+#[derive(Debug, Clone)]
+pub struct ScenarioConfig {
+    pub name: String,
+    pub seed: u64,
+    /// Checkpoint intervals (streaming) / micro-batches to run.
+    pub intervals: usize,
+    /// Records per interval (the diurnal script modulates this).
+    pub batch_size: usize,
+    pub engine: EngineKind,
+    pub n_partitions: usize,
+    pub n_slots: usize,
+    pub choice: PartitionerChoice,
+    /// Executor threads; `None` defers to `DYNREPART_THREADS`.
+    pub threads: Option<usize>,
+    pub dr: DrConfig,
+    pub script: WorkloadScript,
+    pub n_keys: usize,
+    pub exponent: f64,
+    /// `(interval, event)` pairs, sorted by interval; each fires at the
+    /// barrier before its interval.
+    pub events: Vec<(u64, EventKind)>,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        Self {
+            name: "scenario".to_string(),
+            seed: 1,
+            intervals: 8,
+            batch_size: 20_000,
+            engine: EngineKind::Streaming,
+            n_partitions: 8,
+            n_slots: 8,
+            choice: PartitionerChoice::Kip,
+            threads: None,
+            dr: DrConfig::default(),
+            script: WorkloadScript::Stationary,
+            n_keys: 50_000,
+            exponent: 1.1,
+            events: Vec::new(),
+        }
+    }
+}
+
+fn parse_usize(key: &str, v: &str) -> Result<usize, String> {
+    v.parse::<usize>()
+        .map_err(|_| format!("{key} = {v:?} is not a valid non-negative integer"))
+}
+
+fn parse_u64(key: &str, v: &str) -> Result<u64, String> {
+    v.parse::<u64>()
+        .map_err(|_| format!("{key} = {v:?} is not a valid non-negative integer"))
+}
+
+fn parse_f64(key: &str, v: &str) -> Result<f64, String> {
+    v.parse::<f64>()
+        .ok()
+        .filter(|x| x.is_finite())
+        .ok_or_else(|| format!("{key} = {v:?} is not a valid finite number"))
+}
+
+fn parse_bool(key: &str, v: &str) -> Result<bool, String> {
+    match v {
+        "true" | "on" | "yes" => Ok(true),
+        "false" | "off" | "no" => Ok(false),
+        _ => Err(format!("{key} = {v:?} is not a boolean (true/false)")),
+    }
+}
+
+/// Raw per-script parameters collected during the line pass, resolved
+/// against `workload.script` afterwards so a parameter on the wrong
+/// script is an error, not silently ignored.
+#[derive(Default)]
+struct ScriptParams {
+    flip_every: Option<usize>,
+    flip_head: Option<usize>,
+    exponent_to: Option<f64>,
+    drift_over: Option<usize>,
+    period: Option<usize>,
+    trough: Option<f64>,
+    growth: Option<f64>,
+}
+
+impl ScenarioConfig {
+    /// Parse a scenario from conf text. Every problem is an `Err` naming
+    /// the offending key; nothing falls back silently.
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut cfg = Self::default();
+        let mut slots_explicit = false;
+        let mut script_name: Option<String> = None;
+        let mut p = ScriptParams::default();
+
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                return Err(format!("line {}: expected `key = value`, got {raw:?}", lineno + 1));
+            };
+            let (key, value) = (key.trim(), value.trim());
+            if value.is_empty() {
+                return Err(format!("line {}: {key} has an empty value", lineno + 1));
+            }
+            match key {
+                "scenario.name" => cfg.name = value.to_string(),
+                "scenario.seed" => cfg.seed = parse_u64(key, value)?,
+                "scenario.intervals" => cfg.intervals = parse_usize(key, value)?,
+                "scenario.batch-size" => cfg.batch_size = parse_usize(key, value)?,
+                "engine.discipline" => {
+                    cfg.engine = match value {
+                        "streaming" => EngineKind::Streaming,
+                        "microbatch" => EngineKind::MicroBatch,
+                        _ => {
+                            return Err(format!(
+                                "{key} = {value:?}: expected streaming or microbatch"
+                            ))
+                        }
+                    }
+                }
+                "engine.partitions" => cfg.n_partitions = parse_usize(key, value)?,
+                "engine.slots" => {
+                    cfg.n_slots = parse_usize(key, value)?;
+                    slots_explicit = true;
+                }
+                "engine.partitioner" => {
+                    cfg.choice = match value {
+                        "kip" => PartitionerChoice::Kip,
+                        "gedik-readj" => PartitionerChoice::Gedik(GedikStrategy::Readj),
+                        "gedik-redist" => PartitionerChoice::Gedik(GedikStrategy::Redist),
+                        "gedik-scan" => PartitionerChoice::Gedik(GedikStrategy::Scan),
+                        "mixed" => PartitionerChoice::Mixed,
+                        "hash" => PartitionerChoice::Uhp,
+                        _ => {
+                            return Err(format!(
+                                "{key} = {value:?}: expected kip, gedik-readj, gedik-redist, \
+                                 gedik-scan, mixed or hash"
+                            ))
+                        }
+                    }
+                }
+                "engine.threads" => cfg.threads = Some(parse_usize(key, value)?),
+                "dr.enabled" => cfg.dr.enabled = parse_bool(key, value)?,
+                "dr.force-updates" => cfg.dr.force_updates = parse_bool(key, value)?,
+                "dr.min-gain" => cfg.dr.min_gain = parse_f64(key, value)?,
+                "dr.lambda" => cfg.dr.lambda = parse_usize(key, value)?,
+                "dr.epsilon" => cfg.dr.epsilon = parse_f64(key, value)?,
+                "dr.histogram-memory" => cfg.dr.histogram_memory = parse_usize(key, value)?,
+                "dr.sample-rate" => cfg.dr.sample_rate = parse_f64(key, value)?,
+                "workload.script" => script_name = Some(value.to_string()),
+                "workload.keys" => cfg.n_keys = parse_usize(key, value)?,
+                "workload.exponent" => cfg.exponent = parse_f64(key, value)?,
+                "workload.flip-every" => p.flip_every = Some(parse_usize(key, value)?),
+                "workload.flip-head" => p.flip_head = Some(parse_usize(key, value)?),
+                "workload.exponent-to" => p.exponent_to = Some(parse_f64(key, value)?),
+                "workload.drift-over" => p.drift_over = Some(parse_usize(key, value)?),
+                "workload.period" => p.period = Some(parse_usize(key, value)?),
+                "workload.trough" => p.trough = Some(parse_f64(key, value)?),
+                "workload.growth" => p.growth = Some(parse_f64(key, value)?),
+                _ if key.starts_with("event.") => {
+                    let at = parse_u64(key, &key["event.".len()..])
+                        .map_err(|_| format!("{key}: event interval must be an integer"))?;
+                    cfg.events.push((at, Self::parse_event(key, value)?));
+                }
+                _ => return Err(format!("unknown configuration key {key:?}")),
+            }
+        }
+        if !slots_explicit {
+            cfg.n_slots = cfg.n_partitions;
+        }
+        cfg.script = Self::resolve_script(script_name.as_deref(), &p)?;
+        cfg.events.sort_by_key(|&(at, _)| at);
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Parse a scenario conf file from disk.
+    pub fn from_file(path: &std::path::Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    fn parse_event(key: &str, value: &str) -> Result<EventKind, String> {
+        let parts: Vec<&str> = value.split_whitespace().collect();
+        match parts.as_slice() {
+            ["scale", n] => Ok(EventKind::Scale(parse_usize(key, n)?)),
+            ["slowdown", p, f] => {
+                Ok(EventKind::Slowdown(parse_usize(key, p)?, parse_f64(key, f)?))
+            }
+            ["restore-speed", p] => Ok(EventKind::RestoreSpeed(parse_usize(key, p)?)),
+            ["fail-restore", g] => Ok(EventKind::FailRestore(parse_usize(key, g)?)),
+            _ => Err(format!(
+                "{key} = {value:?}: expected `scale <n>`, `slowdown <p> <factor>`, \
+                 `restore-speed <p>` or `fail-restore <gap>`"
+            )),
+        }
+    }
+
+    fn resolve_script(name: Option<&str>, p: &ScriptParams) -> Result<WorkloadScript, String> {
+        // a parameter belonging to a different script is a config error
+        let forbid = |cond: bool, what: &str, script: &str| {
+            if cond {
+                Err(format!("workload.{what} only applies to workload.script = {script}"))
+            } else {
+                Ok(())
+            }
+        };
+        let script = name.unwrap_or("stationary");
+        if script != "hotspot-flip" {
+            forbid(p.flip_every.is_some(), "flip-every", "hotspot-flip")?;
+            forbid(p.flip_head.is_some(), "flip-head", "hotspot-flip")?;
+        }
+        if script != "zipf-drift" {
+            forbid(p.exponent_to.is_some(), "exponent-to", "zipf-drift")?;
+            forbid(p.drift_over.is_some(), "drift-over", "zipf-drift")?;
+        }
+        if script != "diurnal" {
+            forbid(p.period.is_some(), "period", "diurnal")?;
+            forbid(p.trough.is_some(), "trough", "diurnal")?;
+        }
+        if script != "key-growth" {
+            forbid(p.growth.is_some(), "growth", "key-growth")?;
+        }
+        match script {
+            "stationary" => Ok(WorkloadScript::Stationary),
+            "hotspot-flip" => Ok(WorkloadScript::HotspotFlip {
+                flip_every: p.flip_every.unwrap_or(4),
+                flip_head: p.flip_head.unwrap_or(8),
+            }),
+            "zipf-drift" => Ok(WorkloadScript::ZipfDrift {
+                exponent_to: p
+                    .exponent_to
+                    .ok_or("workload.script = zipf-drift requires workload.exponent-to")?,
+                drift_over: p.drift_over.unwrap_or(8),
+            }),
+            "diurnal" => Ok(WorkloadScript::Diurnal {
+                period: p.period.unwrap_or(8),
+                trough: p.trough.unwrap_or(0.25),
+            }),
+            "key-growth" => Ok(WorkloadScript::KeyGrowth {
+                growth: p.growth.unwrap_or(1.2),
+            }),
+            _ => Err(format!(
+                "workload.script = {script:?}: expected stationary, hotspot-flip, zipf-drift, \
+                 diurnal or key-growth"
+            )),
+        }
+    }
+
+    /// Structural validation shared by [`ScenarioConfig::parse`] and
+    /// programmatic construction.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.intervals == 0 || self.batch_size == 0 {
+            return Err("scenario.intervals and scenario.batch-size must be >= 1".into());
+        }
+        if self.n_partitions == 0 {
+            return Err("engine.partitions must be >= 1".into());
+        }
+        if self.engine == EngineKind::Streaming && self.n_slots < self.n_partitions {
+            return Err(
+                "streaming tasks are pinned: engine.slots must be >= engine.partitions".into(),
+            );
+        }
+        if let Some(0) = self.threads {
+            return Err("engine.threads must be >= 1".into());
+        }
+        match self.script {
+            WorkloadScript::HotspotFlip { flip_every, flip_head } => {
+                if flip_every == 0 || flip_head == 0 {
+                    return Err("workload.flip-every and workload.flip-head must be >= 1".into());
+                }
+            }
+            WorkloadScript::ZipfDrift { drift_over, .. } if drift_over == 0 => {
+                return Err("workload.drift-over must be >= 1".into());
+            }
+            WorkloadScript::Diurnal { period, trough } => {
+                if period < 2 || !(0.0..=1.0).contains(&trough) {
+                    return Err(
+                        "diurnal needs workload.period >= 2 and workload.trough in [0, 1]".into()
+                    );
+                }
+            }
+            WorkloadScript::KeyGrowth { growth } if growth < 1.0 => {
+                return Err("workload.growth must be >= 1.0".into());
+            }
+            _ => {}
+        }
+        for &(at, ev) in &self.events {
+            if at < 1 || at > self.intervals as u64 {
+                return Err(format!(
+                    "event.{at}: events fire before their interval; need 1 <= interval <= {}",
+                    self.intervals
+                ));
+            }
+            match ev {
+                EventKind::Scale(0) => return Err(format!("event.{at}: scale target must be >= 1")),
+                EventKind::Slowdown(_, f) if f <= 0.0 => {
+                    return Err(format!("event.{at}: slowdown factor must be > 0"))
+                }
+                EventKind::FailRestore(g) => {
+                    if self.engine != EngineKind::Streaming {
+                        return Err(format!(
+                            "event.{at}: fail-restore rides the checkpoint barrier and \
+                             requires engine.discipline = streaming"
+                        ));
+                    }
+                    if g == 0 || (g as u64) >= at {
+                        return Err(format!(
+                            "event.{at}: fail-restore gap must be in 1..{at} (the snapshot \
+                             must predate the crash)"
+                        ));
+                    }
+                    // the replay window must be event-free: the recovery
+                    // point captures engine state, not the event schedule
+                    let window = (at - g as u64)..at;
+                    for &(other, oev) in &self.events {
+                        if window.contains(&other) && (other, oev) != (at, ev) {
+                            return Err(format!(
+                                "event.{other} falls inside the fail-restore replay window \
+                                 [{}, {}] of event.{at}",
+                                at - g as u64,
+                                at - 1
+                            ));
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        // at most one event per interval keeps apply order unambiguous
+        for w in self.events.windows(2) {
+            if w[0].0 == w[1].0 {
+                return Err(format!("event.{}: at most one event per interval", w[0].0));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_full_conf() {
+        let cfg = ScenarioConfig::parse(
+            "# comment\n\
+             scenario.name = flip\n\
+             scenario.seed = 42\n\
+             scenario.intervals = 12\n\
+             scenario.batch-size = 9000\n\
+             engine.discipline = streaming\n\
+             engine.partitions = 10\n\
+             engine.partitioner = kip\n\
+             dr.force-updates = true\n\
+             workload.script = hotspot-flip\n\
+             workload.keys = 4000\n\
+             workload.exponent = 1.3\n\
+             workload.flip-every = 4\n\
+             workload.flip-head = 6\n\
+             event.5 = scale 14\n\
+             event.9 = fail-restore 2\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "flip");
+        assert_eq!(cfg.seed, 42);
+        assert_eq!(cfg.intervals, 12);
+        assert_eq!(cfg.n_partitions, 10);
+        assert_eq!(cfg.n_slots, 10, "slots default to partitions");
+        assert!(cfg.dr.force_updates);
+        assert_eq!(
+            cfg.script,
+            WorkloadScript::HotspotFlip { flip_every: 4, flip_head: 6 }
+        );
+        assert_eq!(
+            cfg.events,
+            vec![(5, EventKind::Scale(14)), (9, EventKind::FailRestore(2))]
+        );
+    }
+
+    #[test]
+    fn unknown_keys_and_garbage_are_errors() {
+        assert!(ScenarioConfig::parse("scenario.nmae = x").is_err());
+        assert!(ScenarioConfig::parse("scenario.seed = twelve").is_err());
+        assert!(ScenarioConfig::parse("no equals sign here").is_err());
+        assert!(ScenarioConfig::parse("scenario.seed =").is_err());
+        assert!(ScenarioConfig::parse("workload.script = weekly").is_err());
+        assert!(ScenarioConfig::parse("event.3 = reboot").is_err());
+        assert!(ScenarioConfig::parse("event.x = scale 4").is_err());
+        let err = ScenarioConfig::parse("engine.partitioner = quantum").unwrap_err();
+        assert!(err.contains("engine.partitioner"), "{err}");
+    }
+
+    #[test]
+    fn wrong_script_parameter_is_an_error() {
+        let err = ScenarioConfig::parse(
+            "workload.script = zipf-drift\n\
+             workload.exponent-to = 1.8\n\
+             workload.flip-every = 3\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("flip-every"), "{err}");
+        // and required parameters are required
+        assert!(ScenarioConfig::parse("workload.script = zipf-drift").is_err());
+    }
+
+    #[test]
+    fn fail_restore_needs_streaming_and_a_sane_gap() {
+        let base = "scenario.intervals = 10\n";
+        let mb = format!("{base}engine.discipline = microbatch\nevent.5 = fail-restore 2\n");
+        assert!(ScenarioConfig::parse(&mb).unwrap_err().contains("streaming"));
+        let wide = format!("{base}event.3 = fail-restore 5\n");
+        assert!(ScenarioConfig::parse(&wide).is_err(), "gap reaches before interval 1");
+        let overlapped = format!("{base}event.4 = scale 6\nevent.6 = fail-restore 3\n");
+        assert!(
+            ScenarioConfig::parse(&overlapped).unwrap_err().contains("replay window"),
+            "events inside the replay window must be rejected"
+        );
+        let ok = format!("{base}event.3 = scale 6\nevent.6 = fail-restore 2\n");
+        assert!(ScenarioConfig::parse(&ok).is_ok(), "disjoint windows are fine");
+    }
+
+    #[test]
+    fn event_schedule_is_bounded_and_unique() {
+        assert!(ScenarioConfig::parse("scenario.intervals = 4\nevent.9 = scale 4\n").is_err());
+        assert!(ScenarioConfig::parse("event.0 = scale 4\n").is_err());
+        assert!(ScenarioConfig::parse(
+            "scenario.intervals = 6\nevent.2 = scale 4\nevent.2 = slowdown 1 2.0\n"
+        )
+        .is_err());
+        let zero = "scenario.intervals = 6\nevent.2 = slowdown 1 0.0\n";
+        assert!(ScenarioConfig::parse(zero).is_err());
+    }
+
+    #[test]
+    fn streaming_slots_must_cover_partitions() {
+        let err = ScenarioConfig::parse("engine.partitions = 8\nengine.slots = 4\n").unwrap_err();
+        assert!(err.contains("slots"), "{err}");
+        // microbatch over-partitions freely
+        assert!(ScenarioConfig::parse(
+            "engine.discipline = microbatch\nengine.partitions = 8\nengine.slots = 4\n"
+        )
+        .is_ok());
+    }
+}

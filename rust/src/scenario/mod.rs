@@ -1,0 +1,25 @@
+//! Production scenario harness — drift, elasticity and failure scripts
+//! with checkpoint-restore verification.
+//!
+//! A scenario is one operational story told end to end: a *workload
+//! script* (how the key distribution evolves — [`script`]) composed with
+//! *runtime events* (scale-out/in, worker slowdown, worker failure with
+//! checkpoint restore — [`config::EventKind`]) over a live engine, driven
+//! by the [`runner`]. Scenarios load from `key = value` conf files shaped
+//! like the original system's `repartitioning.conf` (see `scenarios/` at
+//! the repo root) or are built programmatically, and every run emits one
+//! standard report table whose rows are bitwise-deterministic given the
+//! seed — at any thread count. That makes each scenario simultaneously a
+//! demo (`dynrepart scenario scenarios/hotspot_flip.conf`) and a seeded
+//! e2e test fixture (`tests/prop_scenarios.rs`, `tests/e2e_recovery.rs`).
+//!
+//! See DESIGN.md "Scenario harness" for where the event hooks sit in the
+//! engine loop and why restore preserves determinism.
+
+pub mod config;
+pub mod runner;
+pub mod script;
+
+pub use config::{EngineKind, EventKind, ScenarioConfig, WorkloadScript};
+pub use runner::{Scenario, ScenarioReport, ScenarioRow};
+pub use script::ScriptedSource;

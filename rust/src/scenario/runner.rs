@@ -1,0 +1,477 @@
+//! The scenario runner — composes a scripted workload with runtime
+//! events over a live engine and emits one standard report table.
+//!
+//! The runner drives the engine through [`run_stream`] in *segments*
+//! delimited by the event schedule, so the pipelined drive loop (source
+//! prefetch ∥ decision ∥ stage) is exercised exactly as in production;
+//! events are applied at the barrier between segments, where no stage is
+//! in flight:
+//!
+//! - `scale n` goes through the cross-count epoch machinery
+//!   ([`EngineCore::rescale`](crate::ddps::EngineCore::rescale)): new
+//!   epoch, migration plan over the changed partition count, state moves;
+//! - `slowdown` / `restore-speed` set per-partition service-rate
+//!   multipliers that feed only virtual time;
+//! - `fail-restore gap` *verifies* crash recovery: the engine is dropped,
+//!   rebuilt from the recovery point taken `gap` intervals earlier, the
+//!   gap is replayed from retained batches through a
+//!   [`ReplaySource`], and the replayed reports must match the pre-crash
+//!   rows **bitwise** — any divergence fails the scenario.
+//!
+//! Every row carries only deterministic virtual-time columns, so the
+//! rendered table is bitwise-stable across thread counts and doubles as
+//! a seeded e2e fixture (`tests/prop_scenarios.rs`).
+//!
+//! [`run_stream`]: crate::ddps::StreamingEngine::run_stream
+
+use super::config::{EngineKind, EventKind, ScenarioConfig};
+use super::script::ScriptedSource;
+use crate::ddps::{
+    EngineConfig, IntervalReport, MicroBatchEngine, RecoveryPoint, StreamingEngine,
+};
+use crate::util::Table;
+use crate::workload::{Record, ReplaySource, Source};
+use std::collections::BTreeMap;
+
+/// One interval/batch of a scenario run — the deterministic subset of the
+/// engine reports (virtual-time model only; no measured wall-clock
+/// columns), plus the label of the event that fired before it.
+#[derive(Debug, Clone)]
+pub struct ScenarioRow {
+    pub interval: u64,
+    /// Label of the event applied at the barrier before this interval
+    /// (empty for most rows).
+    pub event: String,
+    pub epoch: u64,
+    pub repartitioned: bool,
+    pub migrated_fraction: f64,
+    pub imbalance: f64,
+    /// Interval makespan in virtual seconds.
+    pub elapsed: f64,
+    /// Records per virtual second.
+    pub throughput: f64,
+}
+
+/// The outcome of one scenario run.
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    pub name: String,
+    pub rows: Vec<ScenarioRow>,
+    /// Intervals whose post-restore replay was verified bitwise against
+    /// the pre-crash run (0 when the scenario has no fail-restore event).
+    pub recoveries_verified: usize,
+    pub final_epoch: u64,
+    pub total_vtime: f64,
+    pub total_state_weight: f64,
+}
+
+impl ScenarioReport {
+    /// Render as a standard report table (emit with
+    /// [`Table::emit`] to honor `DYNREPART_OUT`).
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            &format!("scenario: {}", self.name),
+            &[
+                "interval", "event", "epoch", "repart", "migrated", "imbalance", "elapsed_vt",
+                "throughput",
+            ],
+        );
+        for r in &self.rows {
+            t.row(&[
+                r.interval.to_string(),
+                r.event.clone(),
+                r.epoch.to_string(),
+                if r.repartitioned { "yes" } else { "-" }.to_string(),
+                format!("{:.4}", r.migrated_fraction),
+                format!("{:.4}", r.imbalance),
+                format!("{:.4}", r.elapsed),
+                format!("{:.1}", r.throughput),
+            ]);
+        }
+        t
+    }
+}
+
+/// Wraps the scripted source, retaining a copy of every produced batch
+/// when a fail-restore event will need them for gap replay.
+struct RecordingSource {
+    inner: ScriptedSource,
+    retain: bool,
+    batches: Vec<Vec<Record>>,
+}
+
+impl Source for RecordingSource {
+    fn next_batch_into(&mut self, n: usize, buf: &mut Vec<Record>) -> bool {
+        let ok = self.inner.next_batch_into(n, buf);
+        if ok && self.retain {
+            self.batches.push(buf.clone());
+        }
+        ok
+    }
+}
+
+/// A configured scenario, ready to run.
+pub struct Scenario {
+    cfg: ScenarioConfig,
+}
+
+impl Scenario {
+    pub fn new(cfg: ScenarioConfig) -> Result<Self, String> {
+        cfg.validate()?;
+        Ok(Self { cfg })
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<Self, String> {
+        Ok(Self { cfg: ScenarioConfig::from_file(path)? })
+    }
+
+    pub fn config(&self) -> &ScenarioConfig {
+        &self.cfg
+    }
+
+    fn engine_config(&self) -> EngineConfig {
+        // base costs and the sketch bounding knobs come from the
+        // environment (so CI legs exercise scenarios under every
+        // executor/sketch combination); the scenario pins the topology
+        let mut ecfg = EngineConfig::from_env();
+        ecfg.n_partitions = self.cfg.n_partitions;
+        ecfg.n_slots = self.cfg.n_slots;
+        if let Some(t) = self.cfg.threads {
+            ecfg.num_threads = t;
+        }
+        ecfg
+    }
+
+    /// Events keyed by the interval they fire before.
+    fn schedule(&self) -> BTreeMap<u64, EventKind> {
+        self.cfg.events.iter().copied().collect()
+    }
+
+    /// Run the scenario end to end. `Err` means the scenario itself
+    /// failed — including a fail-restore replay that did not reproduce
+    /// the pre-crash run bitwise.
+    pub fn run(&self) -> Result<ScenarioReport, String> {
+        match self.cfg.engine {
+            EngineKind::Streaming => self.run_streaming(),
+            EngineKind::MicroBatch => self.run_microbatch(),
+        }
+    }
+
+    fn run_streaming(&self) -> Result<ScenarioReport, String> {
+        let cfg = &self.cfg;
+        let events = self.schedule();
+        // barriers (= completed-interval counts) where a later
+        // fail-restore will want a recovery point
+        let snap_at: std::collections::BTreeSet<u64> = events
+            .iter()
+            .filter_map(|(&at, &ev)| match ev {
+                EventKind::FailRestore(g) => Some(at - 1 - g as u64),
+                _ => None,
+            })
+            .collect();
+        let need_batches = !snap_at.is_empty();
+
+        let mut engine = StreamingEngine::new(self.engine_config(), cfg.dr, cfg.choice, cfg.seed);
+        let mut src = RecordingSource {
+            inner: ScriptedSource::new(cfg),
+            retain: need_batches,
+            batches: Vec::new(),
+        };
+        let mut snaps: BTreeMap<u64, RecoveryPoint> = BTreeMap::new();
+        if snap_at.contains(&0) {
+            snaps.insert(0, engine.recovery_point());
+        }
+
+        let total = cfg.intervals as u64;
+        let mut rows: Vec<ScenarioRow> = Vec::with_capacity(cfg.intervals);
+        let mut recoveries = 0usize;
+        let mut done = 0u64;
+        while done < total {
+            let mut label = String::new();
+            if let Some(&ev) = events.get(&(done + 1)) {
+                label = ev.label();
+                match ev {
+                    EventKind::Scale(n) => {
+                        engine.scale_to(n);
+                    }
+                    EventKind::Slowdown(p, f) => {
+                        self.check_partition(p, engine.partitioner().n_partitions())?;
+                        engine.set_service_rate(p, f);
+                    }
+                    EventKind::RestoreSpeed(p) => {
+                        self.check_partition(p, engine.partitioner().n_partitions())?;
+                        engine.set_service_rate(p, 1.0);
+                    }
+                    EventKind::FailRestore(g) => {
+                        let snap_no = done - g as u64;
+                        let point = snaps
+                            .get(&snap_no)
+                            .ok_or_else(|| format!("internal: no recovery point at {snap_no}"))?;
+                        recoveries += self.fail_and_restore(
+                            &mut engine,
+                            point,
+                            &src.batches[snap_no as usize..done as usize],
+                            &rows[snap_no as usize..done as usize],
+                        )?;
+                    }
+                }
+            }
+            // run up to the next event boundary or snapshot point
+            let next_event = events.range(done + 2..).next().map(|(&at, _)| at - 1);
+            let next_snap = snap_at.range(done + 1..).next().copied();
+            let stop = [next_event, next_snap, Some(total)]
+                .into_iter()
+                .flatten()
+                .min()
+                .unwrap();
+            let reports = engine.run_stream(&mut src, cfg.batch_size, (stop - done) as usize);
+            if reports.len() != (stop - done) as usize {
+                return Err("scripted source exhausted early".into());
+            }
+            for r in reports {
+                rows.push(streaming_row(&r, std::mem::take(&mut label)));
+            }
+            done = stop;
+            if snap_at.contains(&done) {
+                snaps.insert(done, engine.recovery_point());
+            }
+        }
+        Ok(ScenarioReport {
+            name: cfg.name.clone(),
+            rows,
+            recoveries_verified: recoveries,
+            final_epoch: engine.epoch(),
+            total_vtime: engine.vtime(),
+            total_state_weight: engine.total_state_weight(),
+        })
+    }
+
+    /// The crash: drop the live engine, restore from `point`, replay the
+    /// gap batches and verify the replayed reports reproduce the
+    /// pre-crash rows bitwise. Returns the number of verified intervals;
+    /// on success `engine` *is* the restored engine.
+    fn fail_and_restore(
+        &self,
+        engine: &mut StreamingEngine,
+        point: &RecoveryPoint,
+        gap_batches: &[Vec<Record>],
+        gap_rows: &[ScenarioRow],
+    ) -> Result<usize, String> {
+        let mut resumed = StreamingEngine::restore(point);
+        let mut replay = ReplaySource::new(gap_batches.to_vec());
+        let replayed = resumed.run_stream(&mut replay, self.cfg.batch_size, gap_batches.len());
+        if replayed.len() != gap_rows.len() {
+            return Err(format!(
+                "recovery replay produced {} intervals, expected {}",
+                replayed.len(),
+                gap_rows.len()
+            ));
+        }
+        for (orig, rep) in gap_rows.iter().zip(&replayed) {
+            let rep = streaming_row(rep, String::new());
+            let diverged = |what: &str| {
+                Err(format!(
+                    "recovery replay diverged at interval {}: {what} (restored run is not \
+                     bitwise-identical to the uninterrupted run)",
+                    orig.interval
+                ))
+            };
+            if rep.interval != orig.interval {
+                return diverged("interval numbering");
+            }
+            if rep.epoch != orig.epoch || rep.repartitioned != orig.repartitioned {
+                return diverged("epoch/decision");
+            }
+            if rep.elapsed.to_bits() != orig.elapsed.to_bits()
+                || rep.throughput.to_bits() != orig.throughput.to_bits()
+                || rep.imbalance.to_bits() != orig.imbalance.to_bits()
+                || rep.migrated_fraction.to_bits() != orig.migrated_fraction.to_bits()
+            {
+                return diverged("virtual-time columns");
+            }
+        }
+        // the failed engine is discarded; the verified restore takes over
+        *engine = resumed;
+        Ok(gap_rows.len())
+    }
+
+    fn run_microbatch(&self) -> Result<ScenarioReport, String> {
+        let cfg = &self.cfg;
+        let events = self.schedule();
+        let mut engine = MicroBatchEngine::new(self.engine_config(), cfg.dr, cfg.choice, cfg.seed);
+        let mut src = RecordingSource {
+            inner: ScriptedSource::new(cfg),
+            retain: false,
+            batches: Vec::new(),
+        };
+        let total = cfg.intervals as u64;
+        let mut rows: Vec<ScenarioRow> = Vec::with_capacity(cfg.intervals);
+        let mut done = 0u64;
+        while done < total {
+            let mut label = String::new();
+            if let Some(&ev) = events.get(&(done + 1)) {
+                label = ev.label();
+                match ev {
+                    EventKind::Scale(n) => {
+                        // executor slots are the cluster size — fixed;
+                        // only the partition count changes
+                        engine.scale_to(n, cfg.n_slots);
+                    }
+                    EventKind::Slowdown(p, f) => {
+                        self.check_partition(p, engine.partitioner().n_partitions())?;
+                        engine.set_service_rate(p, f);
+                    }
+                    EventKind::RestoreSpeed(p) => {
+                        self.check_partition(p, engine.partitioner().n_partitions())?;
+                        engine.set_service_rate(p, 1.0);
+                    }
+                    EventKind::FailRestore(_) => unreachable!("rejected by validate()"),
+                }
+            }
+            let next_event = events.range(done + 2..).next().map(|(&at, _)| at - 1);
+            let stop = next_event.unwrap_or(total).min(total);
+            let reports = engine.run_stream(&mut src, cfg.batch_size, (stop - done) as usize);
+            if reports.len() != (stop - done) as usize {
+                return Err("scripted source exhausted early".into());
+            }
+            for r in reports {
+                let records: f64 = r.loads.iter().sum();
+                rows.push(ScenarioRow {
+                    interval: r.batch_no,
+                    event: std::mem::take(&mut label),
+                    epoch: r.epoch,
+                    repartitioned: r.repartitioned,
+                    migrated_fraction: r.migrated_fraction,
+                    imbalance: r.imbalance,
+                    elapsed: r.makespan,
+                    throughput: if r.makespan > 0.0 { records / r.makespan } else { 0.0 },
+                });
+            }
+            done = stop;
+        }
+        Ok(ScenarioReport {
+            name: cfg.name.clone(),
+            rows,
+            recoveries_verified: 0,
+            final_epoch: engine.epoch(),
+            total_vtime: engine.metrics().total_vtime,
+            total_state_weight: engine.total_state_weight(),
+        })
+    }
+
+    fn check_partition(&self, p: usize, n: usize) -> Result<(), String> {
+        if p < n {
+            Ok(())
+        } else {
+            Err(format!("event targets partition {p} but only {n} exist"))
+        }
+    }
+}
+
+fn streaming_row(r: &IntervalReport, event: String) -> ScenarioRow {
+    ScenarioRow {
+        interval: r.interval_no,
+        event,
+        epoch: r.epoch,
+        repartitioned: r.repartitioned,
+        migrated_fraction: r.migrated_fraction,
+        imbalance: r.imbalance,
+        elapsed: r.elapsed,
+        throughput: r.throughput,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::config::WorkloadScript;
+
+    fn base() -> ScenarioConfig {
+        ScenarioConfig {
+            name: "test".into(),
+            seed: 5,
+            intervals: 6,
+            batch_size: 8_000,
+            n_partitions: 6,
+            n_slots: 6,
+            n_keys: 4_000,
+            exponent: 1.2,
+            dr: crate::dr::DrConfig::forced(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn stationary_scenario_runs_and_tables() {
+        let rep = Scenario::new(base()).unwrap().run().unwrap();
+        assert_eq!(rep.rows.len(), 6);
+        assert_eq!(rep.rows.last().unwrap().interval, 6);
+        assert!(rep.final_epoch >= 1, "forced DR must repartition");
+        assert!(rep.total_state_weight > 0.0);
+        let t = rep.table();
+        assert_eq!(t.n_rows(), 6);
+        assert!(t.render().contains("scenario: test"));
+    }
+
+    #[test]
+    fn scale_event_changes_partition_count_mid_run() {
+        let mut cfg = base();
+        cfg.events = vec![(3, EventKind::Scale(10))];
+        let rep = Scenario::new(cfg).unwrap().run().unwrap();
+        assert_eq!(rep.rows[2].event, "scale=10");
+        assert!(rep.rows[1].epoch < rep.rows[2].epoch, "scale is an epoch bump");
+        assert!(rep.rows[2].migrated_fraction >= 0.0);
+    }
+
+    #[test]
+    fn fail_restore_event_verifies_recovery_bitwise() {
+        let mut cfg = base();
+        cfg.events = vec![(5, EventKind::FailRestore(2))];
+        let rep = Scenario::new(cfg.clone()).unwrap().run().unwrap();
+        assert_eq!(rep.recoveries_verified, 2);
+        assert_eq!(rep.rows.len(), 6);
+        assert_eq!(rep.rows[4].event, "fail-restore gap=2");
+        // the run with a verified recovery matches the run without one
+        cfg.events.clear();
+        let plain = Scenario::new(cfg).unwrap().run().unwrap();
+        for (a, b) in rep.rows.iter().zip(&plain.rows) {
+            assert_eq!(a.elapsed.to_bits(), b.elapsed.to_bits());
+            assert_eq!(a.epoch, b.epoch);
+        }
+        assert_eq!(rep.total_vtime.to_bits(), plain.total_vtime.to_bits());
+    }
+
+    #[test]
+    fn slowdown_and_restore_events_shape_virtual_time() {
+        let mut cfg = base();
+        cfg.dr = crate::dr::DrConfig::disabled();
+        cfg.choice = crate::dr::PartitionerChoice::Uhp;
+        cfg.script = WorkloadScript::Stationary;
+        cfg.events = vec![(3, EventKind::Slowdown(1, 4.0)), (5, EventKind::RestoreSpeed(1))];
+        let rep = Scenario::new(cfg).unwrap().run().unwrap();
+        // stationary + hash routing: elapsed is flat except the slowdown
+        assert!(rep.rows[2].elapsed > rep.rows[1].elapsed * 1.2, "{:?}", rep.rows);
+        assert!(rep.rows[4].elapsed < rep.rows[2].elapsed);
+    }
+
+    #[test]
+    fn microbatch_scenarios_run_with_events() {
+        let mut cfg = base();
+        cfg.engine = EngineKind::MicroBatch;
+        cfg.n_partitions = 8;
+        cfg.n_slots = 4;
+        cfg.events = vec![(3, EventKind::Scale(12))];
+        let rep = Scenario::new(cfg).unwrap().run().unwrap();
+        assert_eq!(rep.rows.len(), 6);
+        assert_eq!(rep.rows[2].event, "scale=12");
+        assert!(rep.rows[2].epoch > rep.rows[1].epoch);
+    }
+
+    #[test]
+    fn bad_event_target_is_an_error_not_a_panic() {
+        let mut cfg = base();
+        cfg.events = vec![(2, EventKind::Slowdown(99, 2.0))];
+        let err = Scenario::new(cfg).unwrap().run().unwrap_err();
+        assert!(err.contains("partition 99"), "{err}");
+    }
+}

@@ -1,0 +1,252 @@
+//! Scripted workload sources — key distributions that *evolve* over a
+//! run, per the scenario's [`WorkloadScript`].
+//!
+//! A [`ScriptedSource`] is an ordinary pull-based [`Source`]: the engine's
+//! prefetch lane asks for the next interval and the script decides what
+//! that interval looks like — a sudden hotspot flip, a gradually drifting
+//! Zipf exponent, a diurnal volume wave, or a growing key universe. All
+//! state lives in the struct and every draw comes from seeded generators,
+//! so the same `(script, seed)` pair produces the identical batch
+//! sequence on every run and at every thread count — which is what lets
+//! the scenario tests pin report tables bitwise.
+
+use super::config::{ScenarioConfig, WorkloadScript};
+use crate::hash::fmix64;
+use crate::workload::{Record, Source};
+use crate::workload::zipf::Zipf;
+
+/// A [`Source`] that replays one [`WorkloadScript`] deterministically.
+#[derive(Debug, Clone)]
+pub struct ScriptedSource {
+    script: WorkloadScript,
+    base_keys: usize,
+    base_exponent: f64,
+    seed: u64,
+    /// The sampler for the current interval. Stationary scripts keep one
+    /// sampler for the whole run (its RNG stream persists across
+    /// intervals); rebuilding scripts replace it per interval with a
+    /// seed derived from `(seed, interval)`.
+    zipf: Zipf,
+    /// Intervals produced so far (0-based index of the *next* one).
+    interval: usize,
+    ts: u64,
+}
+
+impl ScriptedSource {
+    pub fn new(cfg: &ScenarioConfig) -> Self {
+        Self::with_params(cfg.script, cfg.n_keys, cfg.exponent, cfg.seed)
+    }
+
+    pub fn with_params(script: WorkloadScript, n_keys: usize, exponent: f64, seed: u64) -> Self {
+        Self {
+            script,
+            base_keys: n_keys,
+            base_exponent: exponent,
+            seed,
+            zipf: Zipf::new(n_keys, exponent, seed),
+            interval: 0,
+            ts: 0,
+        }
+    }
+
+    /// Per-interval sampler seed — decorrelated from the base seed so a
+    /// rebuilt sampler never replays the stationary stream.
+    fn interval_seed(&self, i: usize) -> u64 {
+        self.seed ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+    }
+
+    /// How many records interval `i` carries, given the engine asked for
+    /// `n`: only the diurnal script modulates volume, as a triangle wave
+    /// between `trough × n` and `n` (integer arithmetic — deterministic).
+    fn volume(&self, i: usize, n: usize) -> usize {
+        match self.script {
+            WorkloadScript::Diurnal { period, trough } => {
+                let half = period / 2;
+                let pos = i % period;
+                // distance from the peak, folded: 0 at peak, half at trough
+                let dist = if pos <= half { pos } else { period - pos };
+                let lo = (n as f64 * trough) as usize;
+                let span = n - lo;
+                (n - span * dist / half.max(1)).max(lo.max(1))
+            }
+            _ => n,
+        }
+    }
+
+    /// Prepare the sampler for interval `i` (called once per pull).
+    fn retune(&mut self, i: usize) {
+        match self.script {
+            WorkloadScript::Stationary
+            | WorkloadScript::HotspotFlip { .. }
+            | WorkloadScript::Diurnal { .. } => {
+                // one persistent sampler; nothing to rebuild
+            }
+            WorkloadScript::ZipfDrift { exponent_to, drift_over } => {
+                let t = (i as f64 / drift_over as f64).min(1.0);
+                let exp = self.base_exponent + (exponent_to - self.base_exponent) * t;
+                self.zipf = Zipf::new(self.base_keys, exp, self.interval_seed(i));
+            }
+            WorkloadScript::KeyGrowth { growth } => {
+                let keys = ((self.base_keys as f64) * growth.powi(i as i32)).round() as usize;
+                self.zipf = Zipf::new(keys.max(1), self.base_exponent, self.interval_seed(i));
+            }
+        }
+    }
+
+    /// Map a sampled popularity rank to a key id for interval `i`. The
+    /// hotspot-flip script re-identifies the heaviest `flip_head` ranks
+    /// every `flip_every` intervals by salting the rank→key mix with the
+    /// phase number: the hot *load* persists but lands on brand-new keys,
+    /// which is exactly the event KIP's explicit routes must chase.
+    fn key_for(&self, i: usize, rank: usize) -> u64 {
+        if let WorkloadScript::HotspotFlip { flip_every, flip_head } = self.script {
+            if rank < flip_head {
+                let phase = (i / flip_every) as u64;
+                let salt = fmix64(self.seed ^ (phase << 32)).rotate_left(17);
+                return fmix64((rank as u64 + 1) ^ salt);
+            }
+        }
+        self.zipf.key_of_rank(rank)
+    }
+}
+
+impl Source for ScriptedSource {
+    fn next_batch_into(&mut self, n: usize, buf: &mut Vec<Record>) -> bool {
+        let i = self.interval;
+        self.interval += 1;
+        self.retune(i);
+        let count = self.volume(i, n.max(1));
+        buf.clear();
+        buf.reserve(count);
+        for _ in 0..count {
+            let rank = self.zipf.sample_rank();
+            self.ts += 1;
+            buf.push(Record::unit(self.key_for(i, rank), self.ts));
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Key;
+    use std::collections::HashSet;
+
+    fn keys_of(batch: &[Record]) -> HashSet<Key> {
+        batch.iter().map(|r| r.key).collect()
+    }
+
+    fn pull(src: &mut ScriptedSource, n: usize) -> Vec<Record> {
+        let mut buf = Vec::new();
+        assert!(src.next_batch_into(n, &mut buf));
+        buf
+    }
+
+    #[test]
+    fn scripted_sources_are_deterministic() {
+        for script in [
+            WorkloadScript::Stationary,
+            WorkloadScript::HotspotFlip { flip_every: 2, flip_head: 4 },
+            WorkloadScript::ZipfDrift { exponent_to: 1.9, drift_over: 4 },
+            WorkloadScript::Diurnal { period: 4, trough: 0.5 },
+            WorkloadScript::KeyGrowth { growth: 1.5 },
+        ] {
+            let mut a = ScriptedSource::with_params(script, 1000, 1.0, 7);
+            let mut b = a.clone();
+            for _ in 0..6 {
+                assert_eq!(pull(&mut a, 2000), pull(&mut b, 2000), "{script:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn hotspot_flip_moves_the_head_keys() {
+        let mut src = ScriptedSource::with_params(
+            WorkloadScript::HotspotFlip { flip_every: 2, flip_head: 4 },
+            500,
+            1.4,
+            3,
+        );
+        let phase0 = keys_of(&pull(&mut src, 5000));
+        let phase0b = keys_of(&pull(&mut src, 5000));
+        let phase1 = keys_of(&pull(&mut src, 5000));
+        // within a phase the hot keys repeat; across the flip the head
+        // re-identifies (old hot keys mostly vanish, new ones appear)
+        let hot0: Vec<Key> = (0..4).map(|r| src.key_for(0, r)).collect();
+        let hot1: Vec<Key> = (0..4).map(|r| src.key_for(2, r)).collect();
+        assert_ne!(hot0, hot1, "flip must re-identify the head");
+        for k in &hot0 {
+            assert!(phase0.contains(k) && phase0b.contains(k));
+            assert!(!phase1.contains(k), "old hotspot key {k} survived the flip");
+        }
+        for k in &hot1 {
+            assert!(phase1.contains(k));
+        }
+        // the tail is stable across the flip
+        let tail = src.key_for(0, 100);
+        assert_eq!(tail, src.key_for(2, 100));
+    }
+
+    #[test]
+    fn zipf_drift_sharpens_the_head() {
+        let mut src = ScriptedSource::with_params(
+            WorkloadScript::ZipfDrift { exponent_to: 2.5, drift_over: 4 },
+            2000,
+            0.2,
+            5,
+        );
+        let head_share = |batch: &[Record]| {
+            let mut counts = std::collections::HashMap::new();
+            for r in batch {
+                *counts.entry(r.key).or_insert(0usize) += 1;
+            }
+            let max = counts.values().copied().max().unwrap_or(0);
+            max as f64 / batch.len() as f64
+        };
+        let early = head_share(&pull(&mut src, 20_000));
+        for _ in 0..4 {
+            pull(&mut src, 20_000);
+        }
+        let late = head_share(&pull(&mut src, 20_000));
+        assert!(late > early + 0.1, "drift must concentrate mass: {early} → {late}");
+    }
+
+    #[test]
+    fn diurnal_volume_waves_and_others_hold_n() {
+        let mut src = ScriptedSource::with_params(
+            WorkloadScript::Diurnal { period: 4, trough: 0.5 },
+            100,
+            1.0,
+            9,
+        );
+        let sizes: Vec<usize> = (0..8).map(|_| pull(&mut src, 1000).len()).collect();
+        assert_eq!(sizes[0], 1000, "peak at the period start");
+        assert!(sizes[2] <= 600, "trough mid-period: {sizes:?}");
+        assert_eq!(sizes[..4], sizes[4..], "wave repeats each period");
+        let mut flat = ScriptedSource::with_params(WorkloadScript::Stationary, 100, 1.0, 9);
+        assert_eq!(pull(&mut flat, 1234).len(), 1234);
+    }
+
+    #[test]
+    fn key_growth_expands_the_universe() {
+        let mut src = ScriptedSource::with_params(
+            WorkloadScript::KeyGrowth { growth: 2.0 },
+            50,
+            0.0,
+            11,
+        );
+        let early = keys_of(&pull(&mut src, 10_000));
+        for _ in 0..3 {
+            pull(&mut src, 10_000);
+        }
+        let late = keys_of(&pull(&mut src, 10_000));
+        assert!(early.len() <= 50);
+        assert!(
+            late.len() > early.len() * 4,
+            "universe must grow: {} → {}",
+            early.len(),
+            late.len()
+        );
+    }
+}

@@ -59,15 +59,15 @@ impl SketchConfig {
     }
 
     /// Read the `DYNREPART_SKETCH_COMPACTION` / `DYNREPART_SKETCH_BOUND` /
-    /// `DYNREPART_SKETCH_TAKE` overrides (unset, empty or invalid values
-    /// leave the knob disabled), mirroring `DYNREPART_THREADS`.
+    /// `DYNREPART_SKETCH_TAKE` overrides. Unset or empty leaves the knob
+    /// disabled (CI legs pass empty strings to switch bounding off); a
+    /// malformed value aborts with an error naming the variable instead
+    /// of silently disabling the knob — same strict parser as
+    /// `DYNREPART_THREADS` ([`crate::util::env`]). An explicit `0` is a
+    /// valid way to spell "disabled".
     pub fn from_env() -> Self {
         fn knob(name: &str) -> usize {
-            std::env::var(name)
-                .ok()
-                .and_then(|s| s.parse::<usize>().ok())
-                .filter(|&v| v >= 1)
-                .unwrap_or(0)
+            crate::util::env::knob_from_env(name, 0).unwrap_or(0)
         }
         Self {
             compaction_interval: knob("DYNREPART_SKETCH_COMPACTION"),
@@ -95,6 +95,19 @@ mod config_tests {
         assert_eq!(cfg.compaction_interval, 0);
         assert_eq!(cfg.size_boundary, 0);
         assert_eq!(cfg.take_top_k, 0);
+    }
+
+    #[test]
+    fn sketch_env_parse_paths_are_strict() {
+        use crate::util::env::parse_knob;
+        // the exact rules from_env applies, as pure functions (no env
+        // mutation — that would race the parallel test harness)
+        assert_eq!(parse_knob("DYNREPART_SKETCH_BOUND", None, 0), Ok(None));
+        assert_eq!(parse_knob("DYNREPART_SKETCH_BOUND", Some(""), 0), Ok(None));
+        assert_eq!(parse_knob("DYNREPART_SKETCH_BOUND", Some("0"), 0), Ok(Some(0)));
+        assert_eq!(parse_knob("DYNREPART_SKETCH_BOUND", Some("5000"), 0), Ok(Some(5000)));
+        assert!(parse_knob("DYNREPART_SKETCH_BOUND", Some("5k"), 0).is_err());
+        assert!(parse_knob("DYNREPART_SKETCH_TAKE", Some("-1"), 0).is_err());
     }
 
     #[test]

@@ -25,10 +25,21 @@ impl Checkpoint {
     pub fn total_keys(&self) -> usize {
         self.stores.iter().map(|s| s.n_keys()).sum()
     }
+
+    /// The restore path: rebuild the per-partition stores exactly as they
+    /// were at this barrier. A plain clone of the snapshot — `StateStore`
+    /// iterates in insertion order, so a restored store replays every
+    /// later operation (folds, migrations, plans) bitwise-identically to
+    /// the store it was snapshotted from.
+    pub fn restore_stores(&self) -> Vec<StateStore> {
+        self.stores.clone()
+    }
 }
 
 /// Retains the last `retain` checkpoints (Flink keeps a small number).
-#[derive(Debug, Default)]
+/// `Clone` snapshots the whole retention window — recovery points carry
+/// one so a restored engine presents the same checkpoint history.
+#[derive(Debug, Clone, Default)]
 pub struct CheckpointStore {
     retain: usize,
     checkpoints: Vec<Checkpoint>,
@@ -97,6 +108,38 @@ mod tests {
         let c = cp(1, 5.0);
         assert!((c.total_state_weight() - 5.0).abs() < 1e-12);
         assert_eq!(c.total_keys(), 1);
+    }
+
+    #[test]
+    fn restore_stores_reproduces_snapshot_and_detaches() {
+        let mut store = StateStore::new();
+        store.fold_count(7, 2.0);
+        store.fold_count(9, 3.0);
+        let c = Checkpoint {
+            id: 4,
+            records_at: vec![2],
+            stores: vec![store],
+        };
+        let mut restored = c.restore_stores();
+        assert_eq!(restored.len(), 1);
+        assert!((restored[0].total_weight() - 5.0).abs() < 1e-12);
+        let keys: Vec<_> = restored[0].keys().collect();
+        assert_eq!(keys, vec![7, 9], "insertion order must survive restore");
+        // mutating the restored copy leaves the snapshot untouched
+        restored[0].fold_count(7, 100.0);
+        assert!((c.total_state_weight() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cloned_store_keeps_history() {
+        let mut cs = CheckpointStore::new(3);
+        cs.save(cp(1, 1.0));
+        cs.save(cp(2, 2.0));
+        let snap = cs.clone();
+        cs.save(cp(3, 3.0));
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap.latest().unwrap().id, 2);
+        assert_eq!(cs.latest().unwrap().id, 3);
     }
 
     #[test]

@@ -1,0 +1,86 @@
+//! Strict parsing for `DYNREPART_*` environment knobs.
+//!
+//! The env readers used to swallow malformed values and silently fall
+//! back to their defaults, so a typo like `DYNREPART_THREADS=fuor`
+//! quietly ran the sequential path. Every knob now goes through
+//! [`parse_knob`]: *unset or empty* still means "use the default" (CI
+//! legs intentionally pass empty strings to disable knobs), but anything
+//! else must parse, or the process aborts with an error naming the
+//! variable and the offending value.
+//!
+//! The parsers are pure functions over `Option<&str>` so they can be
+//! unit-tested without touching the process environment (env mutation is
+//! racy under the parallel test harness).
+
+/// Parse one unsigned-integer env knob strictly. `None`, `""` or
+/// whitespace ⇒ `Ok(None)` (unset — caller applies its default); a value
+/// that parses and is `>= min` ⇒ `Ok(Some(v))`; anything else ⇒ `Err`
+/// with a message naming the variable.
+pub fn parse_knob(name: &str, value: Option<&str>, min: usize) -> Result<Option<usize>, String> {
+    let Some(raw) = value else {
+        return Ok(None);
+    };
+    let trimmed = raw.trim();
+    if trimmed.is_empty() {
+        return Ok(None);
+    }
+    match trimmed.parse::<usize>() {
+        Ok(v) if v >= min => Ok(Some(v)),
+        Ok(v) => Err(format!(
+            "{name}={v} is out of range: must be an integer >= {min}"
+        )),
+        Err(_) => Err(format!(
+            "{name}={trimmed:?} is not a valid non-negative integer"
+        )),
+    }
+}
+
+/// [`parse_knob`] against the live environment, panicking with the parse
+/// error on a malformed value — the shared entry point of
+/// `EngineConfig::threads_from_env` and `SketchConfig::from_env`.
+pub fn knob_from_env(name: &str, min: usize) -> Option<usize> {
+    let value = std::env::var(name).ok();
+    match parse_knob(name, value.as_deref(), min) {
+        Ok(v) => v,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unset_and_empty_mean_default() {
+        assert_eq!(parse_knob("X", None, 1), Ok(None));
+        assert_eq!(parse_knob("X", Some(""), 1), Ok(None));
+        assert_eq!(parse_knob("X", Some("   "), 1), Ok(None));
+    }
+
+    #[test]
+    fn valid_values_parse() {
+        assert_eq!(parse_knob("X", Some("1"), 1), Ok(Some(1)));
+        assert_eq!(parse_knob("X", Some("8"), 1), Ok(Some(8)));
+        assert_eq!(parse_knob("X", Some(" 4 "), 1), Ok(Some(4)), "whitespace is trimmed");
+        assert_eq!(parse_knob("X", Some("0"), 0), Ok(Some(0)), "min 0 admits 0");
+    }
+
+    #[test]
+    fn garbage_is_rejected_with_the_variable_name() {
+        for bad in ["fuor", "4x", "1.5", "-1", "0x10"] {
+            let err = parse_knob("DYNREPART_THREADS", Some(bad), 1).unwrap_err();
+            assert!(
+                err.contains("DYNREPART_THREADS"),
+                "error must name the variable: {err}"
+            );
+            assert!(err.contains(bad.trim()), "error must show the value: {err}");
+        }
+    }
+
+    #[test]
+    fn below_minimum_is_rejected_not_defaulted() {
+        let err = parse_knob("DYNREPART_THREADS", Some("0"), 1).unwrap_err();
+        assert!(err.contains("DYNREPART_THREADS=0"), "{err}");
+        assert!(err.contains(">= 1"), "{err}");
+    }
+}

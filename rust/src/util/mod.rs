@@ -1,5 +1,6 @@
 //! Shared utilities: PRNGs, statistics, virtual time, table output.
 
+pub mod env;
 pub mod keymap;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,175 @@
+//! Crash / restore / replay end-to-end: a streaming run that fails
+//! mid-stream and resumes from a recovery point must reproduce the
+//! uninterrupted run **bitwise** — reports, epochs, virtual time,
+//! checkpoint ids and the full StateStore contents (key order included) —
+//! at every thread count. This is the contract the scenario harness's
+//! `fail-restore` event verifies on every run; here it is pinned
+//! directly, sequential and sharded, and across the two.
+
+use dynrepart::ddps::{EngineConfig, IntervalReport, StreamingEngine};
+use dynrepart::dr::{DrConfig, PartitionerChoice};
+use dynrepart::state::StateStore;
+use dynrepart::workload::{zipf::Zipf, Generator, Record, ReplaySource};
+
+fn cfg(num_threads: usize) -> EngineConfig {
+    EngineConfig {
+        n_partitions: 6,
+        n_slots: 6,
+        num_threads,
+        ..Default::default()
+    }
+}
+
+fn engine(num_threads: usize) -> StreamingEngine {
+    StreamingEngine::new(cfg(num_threads), DrConfig::forced(), PartitionerChoice::Kip, 0xE2E)
+}
+
+fn batches(n: usize, per_batch: usize) -> Vec<Vec<Record>> {
+    let mut z = Zipf::new(6_000, 1.25, 0xE2E);
+    (0..n).map(|_| z.batch(per_batch)).collect()
+}
+
+#[track_caller]
+fn assert_reports_bitwise(a: &IntervalReport, b: &IntervalReport) {
+    assert_eq!(a.interval_no, b.interval_no);
+    assert_eq!(a.epoch, b.epoch, "interval {}", a.interval_no);
+    assert_eq!(a.repartitioned, b.repartitioned, "interval {}", a.interval_no);
+    for (what, x, y) in [
+        ("elapsed", a.elapsed, b.elapsed),
+        ("throughput", a.throughput, b.throughput),
+        ("imbalance", a.imbalance, b.imbalance),
+        ("migrated_fraction", a.migrated_fraction, b.migrated_fraction),
+        ("migration_pause", a.migration_pause, b.migration_pause),
+        ("bottleneck_ratio", a.bottleneck_ratio, b.bottleneck_ratio),
+    ] {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "interval {}: {what} diverged ({x} vs {y})",
+            a.interval_no
+        );
+    }
+}
+
+/// Full bitwise state comparison: per partition, the same keys in the
+/// same insertion order with identical records/weight/values.
+#[track_caller]
+fn assert_stores_bitwise(a: &[StateStore], b: &[StateStore]) {
+    assert_eq!(a.len(), b.len(), "partition count");
+    for (p, (sa, sb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(sa.n_keys(), sb.n_keys(), "partition {p} key count");
+        assert_eq!(
+            sa.total_weight().to_bits(),
+            sb.total_weight().to_bits(),
+            "partition {p} total weight"
+        );
+        for ((ka, va), (kb, vb)) in sa.iter().zip(sb.iter()) {
+            assert_eq!(ka, kb, "partition {p}: key iteration order diverged");
+            assert_eq!(va.records, vb.records, "partition {p} key {ka}");
+            assert_eq!(
+                va.weight.to_bits(),
+                vb.weight.to_bits(),
+                "partition {p} key {ka} weight"
+            );
+            let (xs, ys) = (va.values.as_slice(), vb.values.as_slice());
+            assert_eq!(xs.len(), ys.len(), "partition {p} key {ka} value arity");
+            for (x, y) in xs.iter().zip(ys) {
+                assert_eq!(x.to_bits(), y.to_bits(), "partition {p} key {ka} value");
+            }
+        }
+    }
+}
+
+/// The roundtrip: run 4 intervals, snapshot, lose an interval to the
+/// crash, restore, replay the remaining 6 — and end bitwise-identical to
+/// the run that never failed.
+fn crash_restore_roundtrip(num_threads: usize) -> (StreamingEngine, Vec<IntervalReport>) {
+    let all = batches(10, 12_000);
+
+    let mut gold = engine(num_threads);
+    let gold_reports =
+        gold.run_stream(&mut ReplaySource::new(all.clone()), 12_000, all.len());
+    assert_eq!(gold_reports.len(), 10);
+    assert!(gold.epoch() >= 9, "forced DR must bump the epoch per barrier");
+
+    let mut live = engine(num_threads);
+    live.run_stream(&mut ReplaySource::new(all[..4].to_vec()), 12_000, 4);
+    let point = live.recovery_point();
+    assert_eq!(point.interval_no(), 4);
+    // progress lost in the crash: one more interval runs, then the node dies
+    live.run_stream(&mut ReplaySource::new(all[4..5].to_vec()), 12_000, 1);
+    drop(live);
+
+    let mut resumed = StreamingEngine::restore(&point);
+    assert_eq!(resumed.vtime().to_bits(), point.vtime().to_bits());
+    let resumed_reports =
+        resumed.run_stream(&mut ReplaySource::new(all[4..].to_vec()), 12_000, 6);
+    assert_eq!(resumed_reports.len(), 6);
+
+    for (g, r) in gold_reports[4..].iter().zip(&resumed_reports) {
+        assert_reports_bitwise(g, r);
+    }
+    assert_eq!(gold.epoch(), resumed.epoch());
+    assert_eq!(gold.vtime().to_bits(), resumed.vtime().to_bits());
+    assert_stores_bitwise(gold.stores(), resumed.stores());
+    let (cg, cr) = (
+        gold.checkpoints().latest().unwrap(),
+        resumed.checkpoints().latest().unwrap(),
+    );
+    assert_eq!(cg.id, cr.id, "checkpoint numbering must resume seamlessly");
+    assert_eq!(
+        cg.total_state_weight().to_bits(),
+        cr.total_state_weight().to_bits()
+    );
+    (gold, gold_reports)
+}
+
+#[test]
+fn crash_restore_replay_reproduces_sequential() {
+    crash_restore_roundtrip(1);
+}
+
+#[test]
+fn crash_restore_replay_reproduces_sharded() {
+    crash_restore_roundtrip(4);
+}
+
+#[test]
+fn recovery_is_thread_count_invariant() {
+    // the whole crash/restore/replay story lands on identical bits
+    // whether the executor is sequential or sharded
+    let (e1, r1) = crash_restore_roundtrip(1);
+    let (e4, r4) = crash_restore_roundtrip(4);
+    for (a, b) in r1.iter().zip(&r4) {
+        assert_reports_bitwise(a, b);
+    }
+    assert_eq!(e1.epoch(), e4.epoch());
+    assert_eq!(e1.vtime().to_bits(), e4.vtime().to_bits());
+    assert_stores_bitwise(e1.stores(), e4.stores());
+}
+
+#[test]
+fn restore_discards_post_snapshot_progress() {
+    // restoring must rewind: the restored engine re-runs interval 5 and
+    // gets the same answer the gold run got, even though the crashed
+    // engine had already processed a *different* continuation
+    let all = batches(6, 8_000);
+    let mut live = engine(1);
+    live.run_stream(&mut ReplaySource::new(all[..3].to_vec()), 8_000, 3);
+    let point = live.recovery_point();
+    let w_at_snapshot = point.total_state_weight();
+    // the doomed continuation processes different data (simulates
+    // in-flight work that must not leak into the restored run)
+    let mut doomed = Zipf::new(500, 0.5, 99);
+    live.run_stream(&mut doomed, 8_000, 2);
+    assert!(live.total_state_weight() > w_at_snapshot);
+    drop(live);
+
+    let resumed = StreamingEngine::restore(&point);
+    assert_eq!(resumed.interval_no(), 3);
+    assert_eq!(
+        resumed.total_state_weight().to_bits(),
+        w_at_snapshot.to_bits(),
+        "no post-snapshot state may survive the restore"
+    );
+}

@@ -167,6 +167,92 @@ fn epoch_swap_invariants() {
 }
 
 #[test]
+fn resized_epoch_swap_invariants() {
+    // the scale-out/in path: installing a partitioner with a *different*
+    // count must keep all the epoch-swap guarantees, with routes
+    // in-range on each side of the swap
+    use std::sync::Arc;
+    forall(60, |g| {
+        let old_n = g.usize(2..24);
+        let mut ep = EpochedPartitioner::new(Arc::new(Uhp::with_seed(old_n, g.u64(0..1000))));
+        let keys: Vec<u64> = (0..g.usize(1..300)).map(|_| g.u64(0..1 << 40)).collect();
+        let mut last_epoch = 0;
+        let mut from_n = old_n;
+        for _ in 0..g.usize(1..4) {
+            // grow or shrink, never degenerate
+            let to_n = g.usize(1..32);
+            let swap = ep.install_resized(Arc::new(Uhp::with_seed(to_n, g.u64(0..1000))));
+            assert_eq!(swap.from_epoch(), last_epoch);
+            assert_eq!(swap.to_epoch(), last_epoch + 1);
+            assert_eq!(ep.epoch(), swap.to_epoch());
+            assert_eq!(ep.n_partitions(), to_n);
+            last_epoch = ep.epoch();
+
+            // the plan covers exactly the moved keys, each side in-range
+            let plan = swap.plan(keys.iter().cloned());
+            let planned: std::collections::HashSet<u64> = plan.iter().map(|e| e.0).collect();
+            for &(k, from, to) in &plan {
+                assert!(from < from_n, "source route {from} out of 0..{from_n}");
+                assert!(to < to_n, "destination route {to} out of 0..{to_n}");
+                assert_eq!(from, swap.from.partition(k));
+                assert_eq!(to, swap.to.partition(k));
+                assert_ne!(from, to, "plan contains a non-moving key");
+            }
+            for &k in &keys {
+                assert_eq!(
+                    planned.contains(&k),
+                    swap.from.partition(k) != swap.to.partition(k),
+                    "plan keys must be exactly the keys whose partition changed"
+                );
+            }
+
+            // migration fraction stays a fraction across counts too
+            let sw: Vec<(u64, f64)> = keys.iter().map(|&k| (k, g.f64(0.1..5.0))).collect();
+            let f = swap.migration_fraction(&sw);
+            assert!((0.0..=1.0).contains(&f), "fraction {f} out of bounds");
+            assert_eq!(f == 0.0, planned.is_empty());
+            from_n = to_n;
+        }
+    });
+}
+
+#[test]
+fn drm_rescale_preserves_decision_continuity() {
+    // scale events mid-run: the DRM rebuilds its candidate at the new
+    // width from the blended history, epochs stay monotone, and routing
+    // is total and in-range at every width
+    use dynrepart::dr::{DrConfig, DrMaster, PartitionerChoice};
+    forall(20, |g| {
+        let n0 = g.usize(2..16);
+        let choice = *g.pick(&[
+            PartitionerChoice::Kip,
+            PartitionerChoice::Mixed,
+            PartitionerChoice::Uhp,
+            PartitionerChoice::Gedik(GedikStrategy::Scan),
+        ]);
+        let mut drm = DrMaster::new(DrConfig::forced(), choice, n0, g.u64(0..100));
+        let hist = random_histogram(g, 4 * n0);
+        drm.decide(vec![hist.clone()]);
+        let epoch_before = drm.epoch();
+        let new_n = g.usize(1..24);
+        let swap = drm.rescale(new_n);
+        assert_eq!(swap.to_epoch(), epoch_before + 1);
+        assert_eq!(drm.epoch(), epoch_before + 1);
+        assert_eq!(drm.n_partitions(), new_n);
+        let h = drm.handle();
+        assert_eq!(h.n_partitions(), new_n);
+        for _ in 0..50 {
+            let k = g.u64(0..u64::MAX);
+            assert!(h.partition(k) < new_n);
+            assert_eq!(h.partition(k), swap.to.partition(k));
+        }
+        // decisions keep flowing after the rescale
+        let d = drm.decide(vec![random_histogram(g, 4 * new_n.max(2))]);
+        assert_eq!(d.epoch, drm.epoch());
+    });
+}
+
+#[test]
 fn drm_epochs_monotone_and_plans_match_under_forced_updates() {
     use dynrepart::dr::{DrConfig, DrMaster, PartitionerChoice};
     forall(20, |g| {

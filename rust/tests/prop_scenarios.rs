@@ -1,0 +1,150 @@
+//! Scenario determinism properties: the same scenario config + seed must
+//! produce **bitwise-identical report tables** whether the executor runs
+//! sequential or sharded — for the drift scripts, across scale events,
+//! and through a mid-stream crash/restore. The scenarios load from the
+//! same conf files the CLI runs (`scenarios/*.conf`), so the shipped
+//! configs are themselves under test.
+
+use dynrepart::prop::forall;
+use dynrepart::scenario::{EventKind, Scenario, ScenarioConfig, ScenarioReport};
+use std::path::Path;
+
+fn conf_dir() -> &'static Path {
+    Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/../scenarios"))
+}
+
+fn load(name: &str) -> ScenarioConfig {
+    ScenarioConfig::from_file(&conf_dir().join(name))
+        .unwrap_or_else(|e| panic!("shipped conf {name} must parse: {e}"))
+}
+
+/// Shrink a shipped conf for test speed without changing its shape.
+fn trimmed(name: &str, seed: u64) -> ScenarioConfig {
+    let mut cfg = load(name);
+    cfg.seed = seed;
+    cfg.batch_size = cfg.batch_size.min(8_000);
+    cfg.n_keys = cfg.n_keys.min(5_000);
+    cfg
+}
+
+fn run_with_threads(mut cfg: ScenarioConfig, threads: usize) -> ScenarioReport {
+    cfg.threads = Some(threads);
+    Scenario::new(cfg).unwrap().run().unwrap()
+}
+
+#[track_caller]
+fn assert_reports_bitwise(a: &ScenarioReport, b: &ScenarioReport) {
+    assert_eq!(a.rows.len(), b.rows.len());
+    for (x, y) in a.rows.iter().zip(&b.rows) {
+        assert_eq!(x.interval, y.interval);
+        assert_eq!(x.event, y.event, "interval {}", x.interval);
+        assert_eq!(x.epoch, y.epoch, "interval {}", x.interval);
+        assert_eq!(x.repartitioned, y.repartitioned, "interval {}", x.interval);
+        for (what, u, v) in [
+            ("migrated", x.migrated_fraction, y.migrated_fraction),
+            ("imbalance", x.imbalance, y.imbalance),
+            ("elapsed", x.elapsed, y.elapsed),
+            ("throughput", x.throughput, y.throughput),
+        ] {
+            assert_eq!(
+                u.to_bits(),
+                v.to_bits(),
+                "interval {}: {what} diverged ({u} vs {v})",
+                x.interval
+            );
+        }
+    }
+    assert_eq!(a.recoveries_verified, b.recoveries_verified);
+    assert_eq!(a.final_epoch, b.final_epoch);
+    assert_eq!(a.total_vtime.to_bits(), b.total_vtime.to_bits());
+    assert_eq!(a.total_state_weight.to_bits(), b.total_state_weight.to_bits());
+    // the rendered table (what the CLI emits) must also match verbatim
+    assert_eq!(a.table().to_tsv(), b.table().to_tsv());
+}
+
+#[test]
+fn hotspot_flip_is_thread_invariant() {
+    forall(3, |g| {
+        let cfg = trimmed("hotspot_flip.conf", g.u64(1..1 << 20));
+        let r1 = run_with_threads(cfg.clone(), 1);
+        let r4 = run_with_threads(cfg, 4);
+        assert!(r1.final_epoch >= 1, "forced DR must repartition");
+        assert_reports_bitwise(&r1, &r4);
+    });
+}
+
+#[test]
+fn scale_out_in_is_thread_invariant() {
+    forall(3, |g| {
+        let cfg = trimmed("scale_out_in.conf", g.u64(1..1 << 20));
+        let r1 = run_with_threads(cfg.clone(), 1);
+        let r4 = run_with_threads(cfg, 4);
+        // both scale events must be visible as epoch bumps on their rows
+        let scale_rows: Vec<_> = r1.rows.iter().filter(|r| !r.event.is_empty()).collect();
+        assert_eq!(scale_rows.len(), 2, "{:?}", r1.rows);
+        assert_reports_bitwise(&r1, &r4);
+    });
+}
+
+#[test]
+fn zipf_drift_is_thread_invariant() {
+    forall(2, |g| {
+        let cfg = trimmed("zipf_drift.conf", g.u64(1..1 << 20));
+        let r1 = run_with_threads(cfg.clone(), 1);
+        let r4 = run_with_threads(cfg, 4);
+        assert_reports_bitwise(&r1, &r4);
+    });
+}
+
+#[test]
+fn worker_failure_recovery_is_invisible_and_thread_invariant() {
+    forall(2, |g| {
+        let cfg = trimmed("worker_failure.conf", g.u64(1..1 << 20));
+        let r1 = run_with_threads(cfg.clone(), 1);
+        let r4 = run_with_threads(cfg.clone(), 4);
+        assert!(r1.recoveries_verified >= 1, "the conf must exercise fail-restore");
+        assert_reports_bitwise(&r1, &r4);
+        // a verified recovery leaves no trace: dropping the fail-restore
+        // event (keeping slowdown/restore) reproduces the same rows,
+        // modulo the event label on the crash interval
+        let mut clean = cfg;
+        clean.events.retain(|(_, ev)| !matches!(ev, EventKind::FailRestore(_)));
+        let rc = run_with_threads(clean, 1);
+        assert_eq!(rc.recoveries_verified, 0);
+        for (a, b) in r1.rows.iter().zip(&rc.rows) {
+            assert_eq!(a.epoch, b.epoch);
+            assert_eq!(a.elapsed.to_bits(), b.elapsed.to_bits());
+            assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
+            assert_eq!(a.imbalance.to_bits(), b.imbalance.to_bits());
+        }
+        assert_eq!(r1.total_vtime.to_bits(), rc.total_vtime.to_bits());
+        assert_eq!(r1.total_state_weight.to_bits(), rc.total_state_weight.to_bits());
+    });
+}
+
+#[test]
+fn diurnal_microbatch_is_thread_invariant() {
+    let cfg = trimmed("diurnal_microbatch.conf", 1717);
+    let r1 = run_with_threads(cfg.clone(), 1);
+    let r4 = run_with_threads(cfg, 4);
+    assert_reports_bitwise(&r1, &r4);
+}
+
+#[test]
+fn every_shipped_conf_parses_and_runs() {
+    // each shipped scenario must stay loadable and complete end to end
+    let mut seen = 0;
+    for entry in std::fs::read_dir(conf_dir()).expect("scenarios/ must exist") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("conf") {
+            continue;
+        }
+        seen += 1;
+        let name = path.file_name().unwrap().to_str().unwrap().to_string();
+        let cfg = trimmed(&name, 3);
+        let report = run_with_threads(cfg, 1);
+        assert!(!report.rows.is_empty(), "{name} produced no rows");
+        assert!(report.table().n_rows() > 0);
+    }
+    assert!(seen >= 4, "expected at least 4 shipped scenario configs, found {seen}");
+}
