@@ -43,7 +43,7 @@ pub mod parallel;
 pub use parallel::{harvest_sharded, tap_records_sharded};
 
 use super::{EngineConfig, EngineMetrics};
-use crate::dr::{DrDecision, DrMaster, DrWorker};
+use crate::dr::{DecisionProposal, DrDecision, DrMaster, DrWorker};
 use crate::partitioner::{EpochSwap, PartitionerEpoch};
 use crate::sketch::Histogram;
 use crate::state::StateStore;
@@ -116,6 +116,26 @@ pub fn decision_point_sharded(
     decision
 }
 
+/// The proposal half of [`decision_point_sharded`]: harvest the DRWs and
+/// let the master construct a candidate *without installing it* — the
+/// epoch does not move. The engines run this on the pipelined decision
+/// lane (or inline, sequentially) and hand the proposal to the decider
+/// at the epoch-swap barrier, which commits or declines it there. The
+/// returned [`DecisionProposal::decision_wall_s`] is re-measured to span
+/// harvests, merge, blend and candidate construction.
+pub fn proposal_point_sharded(
+    drm: &mut DrMaster,
+    workers: &mut [DrWorker],
+    num_threads: usize,
+) -> DecisionProposal {
+    let wall_start = Instant::now();
+    let k = drm.ship_size();
+    let hists: Vec<Histogram> = parallel::harvest_sharded(workers, k, num_threads);
+    let mut proposal = drm.propose_sharded(hists, num_threads);
+    proposal.decision_wall_s = wall_start.elapsed().as_secs_f64();
+    proposal
+}
+
 /// How reduce work turns into virtual time.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Scheduling {
@@ -153,9 +173,10 @@ pub struct StageReport {
     /// Measured wall-clock seconds of the DRM decision point attributed to
     /// this stage. Every report type carries the `wall_s` /
     /// `decision_wall_s` pair of measured columns; a bare stage contains
-    /// no decision point, so [`ShuffleStage::run`] always reports `0.0`
-    /// here — the engines fill their own reports' column from the
-    /// [`decision_point_sharded`] they ran around the stage.
+    /// no decision point, so [`ShuffleStage::run`] reports `0.0` here and
+    /// the engines' report assembly overwrites it with the decision
+    /// point they actually ran around the stage — the stage-level column
+    /// and the engine reports' column always agree.
     pub decision_wall_s: f64,
     pub imbalance: f64,
     /// Load of the most loaded partition relative to the mean — how hard

@@ -22,7 +22,7 @@
 
 use super::pipeline::{self, Discipline, EngineCore, StepReport};
 use super::{EngineConfig, EngineMetrics};
-use crate::dr::{DrConfig, DrMaster, PartitionerChoice};
+use crate::dr::{DeciderState, DrConfig, DrMaster, PartitionerChoice};
 use crate::partitioner::PartitionerEpoch;
 use crate::state::StateStore;
 use crate::util::VTime;
@@ -62,6 +62,11 @@ pub struct BatchReport {
     pub repartitioned: bool,
     /// Partitioner epoch this batch was routed under.
     pub epoch: u64,
+    /// Cumulative swaps the decider adopted, after this boundary.
+    pub decisions_adopted: u64,
+    /// Cumulative worthwhile proposals the decider restrained, after
+    /// this boundary.
+    pub decisions_deferred: u64,
 }
 
 pub struct MicroBatchEngine {
@@ -90,6 +95,11 @@ impl MicroBatchEngine {
         &self.core.drm
     }
 
+    /// The engine-resident decider (policy + adopt/defer tallies).
+    pub fn decider(&self) -> &DeciderState {
+        &self.core.decider
+    }
+
     /// The routing epoch currently in force.
     pub fn partitioner(&self) -> &PartitionerEpoch {
         &self.core.partitioner
@@ -116,6 +126,8 @@ impl MicroBatchEngine {
             migrated_fraction: step.migrated_fraction,
             repartitioned: step.repartitioned,
             epoch: step.epoch,
+            decisions_adopted: step.decisions_adopted,
+            decisions_deferred: step.decisions_deferred,
         }
     }
 

@@ -42,8 +42,8 @@ pub mod streaming;
 pub use batch::{BatchJob, JobReport};
 pub use exec::{
     adopt_decision, adopt_swap, apply_epoch_swap, decide_and_adopt, decision_point,
-    decision_point_sharded, tap_records, tap_records_sharded, DecisionOutcome, MigrationReport,
-    Scheduling, ShuffleStage, StageReport, TapAssignment,
+    decision_point_sharded, proposal_point_sharded, tap_records, tap_records_sharded,
+    DecisionOutcome, MigrationReport, Scheduling, ShuffleStage, StageReport, TapAssignment,
 };
 pub use microbatch::{BatchReport, MicroBatchEngine};
 pub use pipeline::{Discipline, EngineCore, StepReport};

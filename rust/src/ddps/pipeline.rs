@@ -17,12 +17,16 @@
 //!
 //! The lanes touch disjoint engine state, so they commute with the
 //! lockstep order; the only synchronization is the **epoch-swap barrier**
-//! between intervals, where the adopted decision migrates keyed state and
-//! switches the routing snapshot ([`exec::adopt_decision`]) — stores and
-//! partitioner are only ever mutated there. Decisions, epochs, migration
-//! plans and every virtual-time report column are therefore
-//! bitwise-identical to the lockstep path at any thread count (pinned by
-//! `tests/prop_parallel.rs`); the overlap shows up only in the measured
+//! between intervals. The decision lane computes a *proposal* only
+//! ([`exec::proposal_point_sharded`] — candidate constructed, epoch
+//! untouched); at the barrier the engine's decider rules on it
+//! ([`resolve_and_adopt`]: commit or decline on the DRM, then
+//! [`exec::adopt_decision`] migrates keyed state and switches the routing
+//! snapshot) — stores, partitioner and epoch are only ever mutated there.
+//! Decisions, verdicts, epochs, migration plans and every virtual-time
+//! report column are therefore bitwise-identical to the lockstep path at
+//! any thread count (pinned by `tests/prop_parallel.rs` and
+//! `tests/prop_decider.rs`); the overlap shows up only in the measured
 //! `wall_s` / `decision_wall_s` / `source_wall_s` columns and the
 //! per-step pipeline-occupancy ratio.
 //!
@@ -49,8 +53,11 @@
 
 use super::exec::{self, Scheduling, ShuffleStage, StageReport, TapAssignment};
 use super::{EngineConfig, EngineMetrics};
-use crate::dr::{DrConfig, DrMaster, DrWorker, PartitionerChoice};
-use crate::partitioner::PartitionerEpoch;
+use crate::dr::{
+    Decider, DeciderState, DecisionProposal, DrConfig, DrMaster, DrWorker, PartitionerChoice,
+    ProposalStats, Verdict,
+};
+use crate::partitioner::{Partitioner, PartitionerEpoch};
 use crate::state::StateStore;
 use crate::util::VTime;
 use crate::workload::{Record, Source};
@@ -80,6 +87,16 @@ pub struct EngineCore {
     /// Per-partition service-time multipliers fed to every stage (scenario
     /// harness worker-slowdown events; all `1.0` ≡ no slowdown, bitwise).
     pub(crate) service_rates: Vec<f64>,
+    /// The repartitioning gate ruling at every epoch-swap barrier
+    /// ([`DrConfig::decider`]). Engine-resident because its state (EWMA
+    /// drift history, backoff cooldown, adopt/defer tallies) must ride
+    /// recovery points with the rest of the core.
+    pub(crate) decider: DeciderState,
+    /// Reduce-side weight of the most recent completed stage — the
+    /// CostModel decider's load estimate. Always one *completed* stage
+    /// behind the barrier in both lockstep and pipelined drives, so
+    /// verdicts are thread-count-invariant.
+    pub(crate) recent_load: f64,
 }
 
 impl EngineCore {
@@ -109,6 +126,8 @@ impl EngineCore {
         let stores = (0..cfg.n_partitions).map(|_| StateStore::new()).collect();
         Self {
             service_rates: vec![1.0; cfg.n_partitions],
+            decider: DeciderState::new(dr.decider),
+            recent_load: 0.0,
             cfg,
             drm,
             workers,
@@ -236,6 +255,78 @@ pub struct StepReport {
     pub pipeline_occupancy: f64,
     /// Partitioner epoch in force after this step's barrier.
     pub epoch: u64,
+    /// Cumulative swaps the engine's decider has adopted, after this
+    /// step's barrier. (Batch jobs have no persistent decider: 0.)
+    pub decisions_adopted: u64,
+    /// Cumulative worthwhile proposals the decider restrained, after
+    /// this step's barrier. Always 0 under the default `Naive` policy.
+    pub decisions_deferred: u64,
+}
+
+/// Exactly predict what adopting `candidate` would migrate, mirroring
+/// [`exec::apply_epoch_swap`]'s accumulation — stores in partition order,
+/// keys in insertion order, weights summed where the candidate routes a
+/// key off its current partition — so an adopted plan's measured
+/// `migrated_fraction` equals this prediction bitwise (pinned in
+/// `tests/prop_decider.rs`). Runs only for policies that price migration.
+fn predicted_migration(stores: &[StateStore], candidate: &dyn Partitioner) -> (f64, f64) {
+    let total_weight: f64 = stores.iter().map(|s| s.total_weight()).sum();
+    let mut moved = 0.0;
+    for (p, store) in stores.iter().enumerate() {
+        for (key, st) in store.iter() {
+            if candidate.partition(key) != p {
+                moved += st.weight;
+            }
+        }
+    }
+    let fraction = if total_weight > 0.0 { moved / total_weight } else { 0.0 };
+    (moved, fraction)
+}
+
+/// The decider gate at the epoch-swap barrier: assemble the proposal's
+/// virtual statistics, let the engine's [`DeciderState`] rule, then
+/// commit or decline on the DRM and adopt the resulting decision (state
+/// migration + routing switch). Deferred and rejected proposals never
+/// touch the epoch — the engine keeps routing through the installed
+/// snapshot, which is why restraint cannot perturb determinism. Runs
+/// barrier-side on every path (lockstep and both pipelined drives), with
+/// the stage joined and the stores quiescent.
+fn resolve_and_adopt(core: &mut EngineCore, proposal: DecisionProposal) -> exec::DecisionOutcome {
+    let wall_start = Instant::now();
+    // The store walk is priced work too — only the policies that weigh
+    // migration pay for it.
+    let (moved, fraction) = if proposal.worth_it && core.decider.policy().prices_migration() {
+        let candidate = proposal
+            .candidate()
+            .expect("worthwhile proposals carry a candidate");
+        predicted_migration(&core.stores, candidate)
+    } else {
+        (0.0, 0.0)
+    };
+    let stats = ProposalStats {
+        worth_it: proposal.worth_it,
+        current_max_share: proposal.current_max_share,
+        planned_max_share: proposal.planned_max_share,
+        heavy_mass: proposal.histogram.heavy_mass(),
+        predicted_moved_weight: moved,
+        predicted_migration_fraction: fraction,
+        recent_load: core.recent_load,
+        reduce_cost: core.cfg.reduce_cost,
+        migration_cost: core.cfg.migration_cost,
+    };
+    let verdict = core.decider.judge(&stats);
+    let mut decision = match verdict {
+        Verdict::Adopt => core.drm.commit(proposal),
+        Verdict::Defer | Verdict::Reject => core.drm.decline(proposal),
+    };
+    decision.decision_wall_s += wall_start.elapsed().as_secs_f64();
+    exec::adopt_decision(
+        &core.cfg,
+        decision,
+        &mut core.partitioner,
+        Some(core.stores.as_mut_slice()),
+        &mut core.metrics,
+    )
 }
 
 /// Metrics accounting + report assembly shared by every path through the
@@ -244,11 +335,17 @@ fn assemble(
     core: &mut EngineCore,
     disc: Discipline,
     n_records: usize,
-    stage: StageReport,
+    mut stage: StageReport,
     outcome: exec::DecisionOutcome,
     source_wall_s: f64,
     span: Instant,
 ) -> StepReport {
+    // A bare stage reports decision_wall_s = 0.0; attribute the decision
+    // point the engine actually ran around it, so the stage-level column
+    // and the step's agree.
+    stage.decision_wall_s = outcome.decision_wall_s;
+    // The next barrier's cost model sees this completed stage's load.
+    core.recent_load = stage.loads.iter().sum();
     let pipeline_wall_s = span.elapsed().as_secs_f64();
     let busy = stage.wall_s + outcome.decision_wall_s + source_wall_s;
     let makespan = outcome.migration.pause + stage.stage_time;
@@ -283,6 +380,8 @@ fn assemble(
             1.0
         },
         epoch: core.partitioner.epoch(),
+        decisions_adopted: core.decider.adopted(),
+        decisions_deferred: core.decider.deferred(),
         stage,
     }
 }
@@ -302,14 +401,9 @@ pub fn lockstep_step(
     let threads = core.cfg.num_threads;
     match disc {
         Discipline::MicroBatch => {
-            let decision = exec::decision_point_sharded(&mut core.drm, &mut core.workers, threads);
-            let outcome = exec::adopt_decision(
-                &core.cfg,
-                decision,
-                &mut core.partitioner,
-                Some(core.stores.as_mut_slice()),
-                &mut core.metrics,
-            );
+            let proposal =
+                exec::proposal_point_sharded(&mut core.drm, &mut core.workers, threads);
+            let outcome = resolve_and_adopt(core, proposal);
             exec::tap_records_sharded(&mut core.workers, records, TapAssignment::Chunked, threads);
             let stage = ShuffleStage::new(&core.cfg, Scheduling::Wave)
                 .with_service_rates(&core.service_rates)
@@ -328,14 +422,9 @@ pub fn lockstep_step(
                 .with_service_rates(&core.service_rates)
                 .run(records, &core.partitioner, Some(core.stores.as_mut_slice()));
             after_stage(records, &core.stores);
-            let decision = exec::decision_point_sharded(&mut core.drm, &mut core.workers, threads);
-            let outcome = exec::adopt_decision(
-                &core.cfg,
-                decision,
-                &mut core.partitioner,
-                Some(core.stores.as_mut_slice()),
-                &mut core.metrics,
-            );
+            let proposal =
+                exec::proposal_point_sharded(&mut core.drm, &mut core.workers, threads);
+            let outcome = resolve_and_adopt(core, proposal);
             assemble(core, disc, records.len(), stage, outcome, source_wall_s, span)
         }
     }
@@ -383,10 +472,10 @@ pub fn drive(
     }
 }
 
-/// Pipelined micro-batch drive: per iteration *k*, adopt the decision
-/// precomputed for batch *k*, tap, then overlap stage *k* with the
-/// prefetch of batch *k+1* and — once the prefetch confirms it exists —
-/// batch *k+1*'s decision point.
+/// Pipelined micro-batch drive: per iteration *k*, resolve the proposal
+/// precomputed for batch *k* (decider verdict + adoption), tap, then
+/// overlap stage *k* with the prefetch of batch *k+1* and — once the
+/// prefetch confirms it exists — batch *k+1*'s proposal point.
 fn drive_microbatch(
     core: &mut EngineCore,
     source: &mut dyn Source,
@@ -398,31 +487,27 @@ fn drive_microbatch(
     let mut cur: Vec<Record> = Vec::new();
     let mut next: Vec<Record> = Vec::new();
 
-    // Prime the pipeline: materialize batch 1 and run its decision point
+    // Prime the pipeline: materialize batch 1 and run its proposal point
     // (there is no previous stage to hide either behind).
     let mut span = Instant::now();
     if !source.next_batch_into(batch_size, &mut cur) {
         return reports;
     }
     let mut source_wall_s = span.elapsed().as_secs_f64();
-    let mut pending = Some(exec::decision_point_sharded(
+    let mut pending = Some(exec::proposal_point_sharded(
         &mut core.drm,
         &mut core.workers,
         core.cfg.num_threads,
     ));
 
     for k in 1..=max_batches {
-        // Epoch-swap barrier: adopt batch k's decision (state migration +
-        // routing switch), then tap batch k — both before the stage, as
-        // in lockstep.
-        let decision = pending.take().expect("pipeline invariant: decision precomputed");
-        let outcome = exec::adopt_decision(
-            &core.cfg,
-            decision,
-            &mut core.partitioner,
-            Some(core.stores.as_mut_slice()),
-            &mut core.metrics,
-        );
+        // Epoch-swap barrier: let the decider rule on batch k's proposal
+        // and adopt the verdict (state migration + routing switch), then
+        // tap batch k — both before the stage, as in lockstep. The lane
+        // only *proposed*; commit/decline happens here, serially, so
+        // verdicts see exactly the lockstep engine state.
+        let proposal = pending.take().expect("pipeline invariant: proposal precomputed");
+        let outcome = resolve_and_adopt(core, proposal);
         exec::tap_records_sharded(
             &mut core.workers,
             &cur,
@@ -466,9 +551,11 @@ fn drive_microbatch(
                     next_wall = t0.elapsed().as_secs_f64();
                 }
                 // Decision lane — only once batch k+1 is known to exist,
-                // so the DRM/DRW state never runs ahead of lockstep.
+                // so the DRM/DRW state never runs ahead of lockstep. The
+                // lane computes the *proposal* only: no epoch moves off
+                // the barrier.
                 let dec_handle = if want_next && have_next {
-                    Some(s.spawn(move || exec::decision_point_sharded(drm, workers, num_threads)))
+                    Some(s.spawn(move || exec::proposal_point_sharded(drm, workers, num_threads)))
                 } else {
                     None
                 };
@@ -499,9 +586,9 @@ fn drive_microbatch(
 }
 
 /// Pipelined streaming drive: per interval *k*, tap, then overlap stage
-/// *k* with its *own* barrier decision point (which needs only interval
-/// *k*'s taps) and the prefetch of interval *k+1*; checkpoint and adopt
-/// at the barrier.
+/// *k* with its *own* barrier proposal point (which needs only interval
+/// *k*'s taps) and the prefetch of interval *k+1*; checkpoint, decider
+/// verdict and adoption all happen at the barrier.
 fn drive_streaming(
     core: &mut EngineCore,
     source: &mut dyn Source,
@@ -558,7 +645,7 @@ fn drive_streaming(
                     })
                 };
                 let dec_handle =
-                    s.spawn(move || exec::decision_point_sharded(drm, workers, num_threads));
+                    s.spawn(move || exec::proposal_point_sharded(drm, workers, num_threads));
                 if want_next {
                     let t0 = Instant::now();
                     have_next = source.next_batch_into(batch_size, &mut next);
@@ -571,16 +658,12 @@ fn drive_streaming(
         }
         let stage = stage_res.expect("stage lane always runs");
         // Checkpoint sees post-stage, pre-migration state, as in lockstep
-        // (the barrier decision point touches no stores, so computing it
-        // concurrently cannot change what the snapshot contains).
+        // (the lane only proposed — it touches no stores and no epoch, so
+        // computing it concurrently cannot change what the snapshot
+        // contains).
         after_stage(&cur, &core.stores);
-        let outcome = exec::adopt_decision(
-            &core.cfg,
-            dec_res.expect("decision lane always runs"),
-            &mut core.partitioner,
-            Some(core.stores.as_mut_slice()),
-            &mut core.metrics,
-        );
+        let outcome =
+            resolve_and_adopt(core, dec_res.expect("decision lane always runs"));
         reports.push(assemble(
             core,
             Discipline::Streaming,
@@ -653,7 +736,7 @@ pub fn job_step(
 
     // Map phase part 2 + shuffle + wave reduce with the (possibly new)
     // epoch; the caller's overlap lane runs alongside.
-    let stage = if cfg.num_threads > 1 {
+    let mut stage = if cfg.num_threads > 1 {
         let mut stage_res: Option<StageReport> = None;
         let epoch_snapshot = &partitioner;
         thread::scope(|s| {
@@ -669,6 +752,7 @@ pub fn job_step(
         overlap();
         stage
     };
+    stage.decision_wall_s = outcome.decision_wall_s;
 
     let pipeline_wall_s = span.elapsed().as_secs_f64();
     let busy = stage.wall_s + outcome.decision_wall_s + source_wall_s;
@@ -689,6 +773,11 @@ pub fn job_step(
             1.0
         },
         epoch: partitioner.epoch(),
+        // One-shot jobs mint a fresh DRM per job and keep the legacy
+        // eager path ([`exec::decide_and_adopt`] ≡ Naive): there is no
+        // persistent decider to tally.
+        decisions_adopted: 0,
+        decisions_deferred: 0,
         stage,
     }
 }

@@ -22,7 +22,7 @@
 
 use super::pipeline::{self, Discipline, EngineCore, StepReport};
 use super::{EngineConfig, EngineMetrics};
-use crate::dr::{DrConfig, DrMaster, PartitionerChoice};
+use crate::dr::{DeciderState, DrConfig, DrMaster, PartitionerChoice};
 use crate::partitioner::PartitionerEpoch;
 use crate::state::{Checkpoint, CheckpointStore, StateStore};
 use crate::util::VTime;
@@ -62,6 +62,15 @@ pub struct IntervalReport {
     pub bottleneck_ratio: f64,
     /// Partitioner epoch in force after this interval's barrier.
     pub epoch: u64,
+    /// Reduce-side weight per partition in this interval — what the
+    /// scenario harness's backlog model consumes (per-partition arrivals
+    /// vs the service capacity of each pinned reducer).
+    pub loads: Vec<f64>,
+    /// Cumulative swaps the decider adopted, after this barrier.
+    pub decisions_adopted: u64,
+    /// Cumulative worthwhile proposals the decider restrained, after
+    /// this barrier.
+    pub decisions_deferred: u64,
 }
 
 pub struct StreamingEngine {
@@ -149,6 +158,13 @@ impl StreamingEngine {
         &self.core.drm
     }
 
+    /// The engine-resident decider (policy, EWMA drift history, backoff
+    /// counter, adopt/defer tallies) — observable so recovery tests can
+    /// pin that restores bring it back bitwise.
+    pub fn decider(&self) -> &DeciderState {
+        &self.core.decider
+    }
+
     /// The routing epoch currently in force.
     pub fn partitioner(&self) -> &PartitionerEpoch {
         &self.core.partitioner
@@ -182,6 +198,9 @@ impl StreamingEngine {
             repartitioned: step.repartitioned,
             bottleneck_ratio: step.stage.bottleneck_ratio,
             epoch: step.epoch,
+            loads: step.stage.loads,
+            decisions_adopted: step.decisions_adopted,
+            decisions_deferred: step.decisions_deferred,
         }
     }
 

@@ -1,0 +1,560 @@
+//! Decider policies — *when* to repartition, not just how.
+//!
+//! The DRM's decision point always constructs the best candidate routing
+//! it can ([`DrMaster::propose_sharded`]); a [`Decider`] then judges
+//! whether adopting that candidate pays for itself. The original system
+//! exposes this as a whole gating surface in `repartitioning.conf`
+//! (`histogram-threshold`, `drift-boundary`/`drift-history-weight`,
+//! `backoff-factor`, retentive weights, `significant-change`); until now
+//! the reproduction ignored all of it and adopted eagerly, which is the
+//! part of the paper's "negligible overhead" claim that restraint is
+//! supposed to carry.
+//!
+//! Every policy judges from *virtual* inputs only — modeled load shares,
+//! histogram mass, exact predicted migration weight, and the engine's
+//! virtual cost constants. Measured wall clocks never enter a verdict,
+//! so every policy is bitwise thread-count-invariant, exactly like the
+//! sharded executor it gates (pinned in `tests/prop_decider.rs`).
+//!
+//! [`DrMaster::propose_sharded`]: super::DrMaster::propose_sharded
+
+/// Which gating strategy an engine runs at its decision barrier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeciderPolicy {
+    /// Always adopt a worthwhile candidate — bitwise-identical to the
+    /// pre-decider behavior, and the oracle the other policies are
+    /// measured against. The default.
+    Naive,
+    /// Adopt only when the histogram tracks enough heavy mass *and* the
+    /// relative imbalance gain is significant.
+    Threshold,
+    /// Stickiness: adopt only when the relative gain outweighs the
+    /// (exactly predicted) migration fraction, which is also capped.
+    Retentive,
+    /// EWMA drift detection plus a stage-time-vs-migration cost model,
+    /// with a post-swap backoff cooldown.
+    CostModel,
+}
+
+impl DeciderPolicy {
+    /// Conf/env spelling of each policy (`decider.policy`,
+    /// `DYNREPART_DECIDER`).
+    pub const NAMES: [&'static str; 4] = ["naive", "threshold", "retentive", "cost-model"];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DeciderPolicy::Naive => "naive",
+            DeciderPolicy::Threshold => "threshold",
+            DeciderPolicy::Retentive => "retentive",
+            DeciderPolicy::CostModel => "cost-model",
+        }
+    }
+
+    /// Strict parse of the conf/env spelling.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "naive" => Ok(DeciderPolicy::Naive),
+            "threshold" => Ok(DeciderPolicy::Threshold),
+            "retentive" => Ok(DeciderPolicy::Retentive),
+            "cost-model" => Ok(DeciderPolicy::CostModel),
+            other => Err(format!(
+                "unknown decider policy '{other}' (expected one of: {})",
+                Self::NAMES.join(", ")
+            )),
+        }
+    }
+
+    /// Does this policy price state movement? Only then does the engine
+    /// walk the live stores to predict the migration exactly; Naive and
+    /// Threshold skip that work.
+    pub fn prices_migration(self) -> bool {
+        matches!(self, DeciderPolicy::Retentive | DeciderPolicy::CostModel)
+    }
+}
+
+/// Gating knobs, embedded in [`DrConfig`](super::DrConfig) (and therefore
+/// `Copy` like it). Each field is read by the policy named in its doc;
+/// the others ignore it, so one config struct serves all four.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeciderConfig {
+    pub policy: DeciderPolicy,
+    /// Threshold: minimum fraction of total mass the blended histogram
+    /// must track (heavy mass) before a swap is considered — below it the
+    /// histogram is too thin to trust.
+    pub histogram_threshold: f64,
+    /// Threshold: minimum relative gain
+    /// `(current_max - planned_max) / current_max` for a swap to count as
+    /// a significant change.
+    pub significant_change: f64,
+    /// Retentive: hard cap on the predicted migration fraction of any
+    /// adopted plan.
+    pub max_migration: f64,
+    /// Retentive: stickiness weight — the predicted migration fraction is
+    /// scaled by this and subtracted from the relative gain; the swap is
+    /// adopted only if the balance stays positive.
+    pub retentive_weight: f64,
+    /// CostModel: how far the current max share must rise above its EWMA
+    /// before the workload counts as drifted.
+    pub drift_boundary: f64,
+    /// CostModel: EWMA history weight in `[0, 1)` — the fraction of the
+    /// old average kept per observation (higher = slower to forget).
+    pub drift_history_weight: f64,
+    /// CostModel: cooldown after an adopted swap, counted in decision
+    /// barriers; while it runs, every worthwhile proposal is deferred.
+    pub backoff_factor: u64,
+    /// CostModel: number of future intervals a stage-time gain is assumed
+    /// to persist for when amortizing the migration cost.
+    pub horizon: f64,
+}
+
+impl Default for DeciderConfig {
+    fn default() -> Self {
+        Self {
+            policy: DeciderPolicy::Naive,
+            histogram_threshold: 0.3,
+            significant_change: 0.1,
+            max_migration: 0.2,
+            retentive_weight: 1.0,
+            drift_boundary: 0.05,
+            drift_history_weight: 0.5,
+            backoff_factor: 2,
+            horizon: 8.0,
+        }
+    }
+}
+
+impl DeciderConfig {
+    /// Apply the `DYNREPART_DECIDER` (policy name) and
+    /// `DYNREPART_DECIDER_BACKOFF` (cooldown barriers) environment knobs
+    /// on top of this config. Unset/empty variables keep the current
+    /// values; malformed ones abort with a message naming the variable,
+    /// like every other `DYNREPART_*` knob.
+    pub fn with_env(mut self) -> Self {
+        if let Some(name) =
+            crate::util::env::choice_from_env("DYNREPART_DECIDER", &DeciderPolicy::NAMES)
+        {
+            self.policy = DeciderPolicy::parse(name).expect("choice_from_env vetted the name");
+        }
+        if let Some(b) = crate::util::env::knob_from_env("DYNREPART_DECIDER_BACKOFF", 0) {
+            self.backoff_factor = b as u64;
+        }
+        self
+    }
+}
+
+/// What a policy rules on a proposal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Commit the candidate: install it and bump the epoch.
+    Adopt,
+    /// The candidate was worthwhile but the policy restrained it (gates
+    /// unmet, cooldown running). The epoch stays; the candidate may be
+    /// re-proposed — and re-judged — at the next barrier.
+    Defer,
+    /// Nothing to adopt: the candidate was not worthwhile to begin with
+    /// (or DR is disabled).
+    Reject,
+}
+
+/// Everything a policy may judge from, assembled by the engine at the
+/// decision barrier. All fields are virtual/modeled quantities — shares
+/// from [`DrMaster::propose_sharded`], exact predicted state movement,
+/// and the engine's virtual cost constants — never measured wall time.
+///
+/// [`DrMaster::propose_sharded`]: super::DrMaster::propose_sharded
+#[derive(Debug, Clone, Copy)]
+pub struct ProposalStats {
+    /// The DRM's own gate (`force_updates || planned < current × (1 -
+    /// min_gain)`). Every policy rejects when this is false — restraint
+    /// only ever *removes* swaps the pre-decider path would have made.
+    pub worth_it: bool,
+    /// Estimated max load share under the installed routing.
+    pub current_max_share: f64,
+    /// Estimated max load share under the candidate.
+    pub planned_max_share: f64,
+    /// Fraction of total mass the blended histogram tracks explicitly.
+    pub heavy_mass: f64,
+    /// State weight the candidate would move, summed over the live
+    /// stores in exactly the order `apply_epoch_swap` walks them — so an
+    /// adopted plan's measured `migrated_fraction` equals the prediction
+    /// bitwise. Zero when the policy doesn't price migration.
+    pub predicted_moved_weight: f64,
+    /// `predicted_moved_weight` over the total live state weight.
+    pub predicted_migration_fraction: f64,
+    /// Reduce-side weight of the most recent completed stage — the
+    /// CostModel's estimate of how much load a share improvement acts on.
+    pub recent_load: f64,
+    /// Virtual seconds of reduce work per unit weight (engine config).
+    pub reduce_cost: f64,
+    /// Virtual seconds to move one unit of state weight (engine config).
+    pub migration_cost: f64,
+}
+
+impl ProposalStats {
+    /// Relative imbalance gain of the candidate over the installed
+    /// routing, in `[0, 1]` for any worthwhile proposal.
+    pub fn relative_gain(&self) -> f64 {
+        if self.current_max_share > 0.0 {
+            (self.current_max_share - self.planned_max_share) / self.current_max_share
+        } else {
+            0.0
+        }
+    }
+}
+
+/// A repartitioning gate: rules on each [`ProposalStats`] in barrier
+/// order. Implementations may keep state (EWMA history, cooldowns) —
+/// which is why `judge` takes `&mut self` and why engine-resident
+/// deciders are cloned into every `RecoveryPoint`.
+pub trait Decider {
+    fn name(&self) -> &'static str;
+    fn judge(&mut self, stats: &ProposalStats) -> Verdict;
+}
+
+/// Always adopt a worthwhile candidate — the pre-decider behavior.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Naive;
+
+impl Decider for Naive {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    fn judge(&mut self, s: &ProposalStats) -> Verdict {
+        if s.worth_it {
+            Verdict::Adopt
+        } else {
+            Verdict::Reject
+        }
+    }
+}
+
+/// Histogram-threshold + significant-change gating.
+#[derive(Debug, Clone, Copy)]
+pub struct Threshold {
+    pub cfg: DeciderConfig,
+}
+
+impl Decider for Threshold {
+    fn name(&self) -> &'static str {
+        "threshold"
+    }
+
+    fn judge(&mut self, s: &ProposalStats) -> Verdict {
+        if !s.worth_it {
+            return Verdict::Reject;
+        }
+        if s.heavy_mass >= self.cfg.histogram_threshold
+            && s.relative_gain() >= self.cfg.significant_change
+        {
+            Verdict::Adopt
+        } else {
+            Verdict::Defer
+        }
+    }
+}
+
+/// Stickiness toward the installed routing: migration is priced against
+/// the gain and hard-capped.
+#[derive(Debug, Clone, Copy)]
+pub struct Retentive {
+    pub cfg: DeciderConfig,
+}
+
+impl Decider for Retentive {
+    fn name(&self) -> &'static str {
+        "retentive"
+    }
+
+    fn judge(&mut self, s: &ProposalStats) -> Verdict {
+        if !s.worth_it {
+            return Verdict::Reject;
+        }
+        let frac = s.predicted_migration_fraction;
+        if frac > self.cfg.max_migration {
+            return Verdict::Defer;
+        }
+        if s.relative_gain() - self.cfg.retentive_weight * frac > 0.0 {
+            Verdict::Adopt
+        } else {
+            Verdict::Defer
+        }
+    }
+}
+
+/// EWMA drift detection + amortized cost model + post-swap backoff.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    pub cfg: DeciderConfig,
+    /// EWMA of the observed `current_max_share`, `None` before the first
+    /// observation. Updated on *every* judged barrier (cooldown included)
+    /// so the history stays warm.
+    ewma: Option<f64>,
+    /// Barriers left in the post-swap cooldown.
+    cooldown: u64,
+}
+
+impl CostModel {
+    pub fn new(cfg: DeciderConfig) -> Self {
+        Self { cfg, ewma: None, cooldown: 0 }
+    }
+}
+
+impl Decider for CostModel {
+    fn name(&self) -> &'static str {
+        "cost-model"
+    }
+
+    fn judge(&mut self, s: &ProposalStats) -> Verdict {
+        // Drift is judged against the history *before* this observation.
+        let prev = self.ewma;
+        let x = s.current_max_share;
+        let w = self.cfg.drift_history_weight;
+        self.ewma = Some(match prev {
+            Some(e) => w * e + (1.0 - w) * x,
+            None => x,
+        });
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            return if s.worth_it { Verdict::Defer } else { Verdict::Reject };
+        }
+        if !s.worth_it {
+            return Verdict::Reject;
+        }
+        // No history yet means no ground to argue restraint from.
+        let drifted = match prev {
+            Some(e) => x - e > self.cfg.drift_boundary,
+            None => true,
+        };
+        if !drifted {
+            return Verdict::Defer;
+        }
+        // Predicted stage-time gain over the horizon vs modeled pause.
+        let gain = self.cfg.horizon
+            * (s.current_max_share - s.planned_max_share)
+            * s.recent_load
+            * s.reduce_cost;
+        let cost = s.predicted_moved_weight * s.migration_cost;
+        if gain > cost {
+            self.cooldown = self.cfg.backoff_factor;
+            Verdict::Adopt
+        } else {
+            Verdict::Defer
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Strategy {
+    Naive(Naive),
+    Threshold(Threshold),
+    Retentive(Retentive),
+    CostModel(CostModel),
+}
+
+/// The engine-resident decider: the configured strategy plus the
+/// adopted/deferred tallies every report surfaces. Lives in `EngineCore`
+/// and is captured wholesale (EWMA history, backoff counter, tallies) by
+/// every `RecoveryPoint`, so a fail-restore mid-cooldown resumes the
+/// gate bitwise — pinned in `tests/e2e_recovery.rs`.
+#[derive(Debug, Clone, Copy)]
+pub struct DeciderState {
+    strategy: Strategy,
+    adopted: u64,
+    deferred: u64,
+}
+
+impl DeciderState {
+    pub fn new(cfg: DeciderConfig) -> Self {
+        let strategy = match cfg.policy {
+            DeciderPolicy::Naive => Strategy::Naive(Naive),
+            DeciderPolicy::Threshold => Strategy::Threshold(Threshold { cfg }),
+            DeciderPolicy::Retentive => Strategy::Retentive(Retentive { cfg }),
+            DeciderPolicy::CostModel => Strategy::CostModel(CostModel::new(cfg)),
+        };
+        Self { strategy, adopted: 0, deferred: 0 }
+    }
+
+    pub fn policy(&self) -> DeciderPolicy {
+        match self.strategy {
+            Strategy::Naive(_) => DeciderPolicy::Naive,
+            Strategy::Threshold(_) => DeciderPolicy::Threshold,
+            Strategy::Retentive(_) => DeciderPolicy::Retentive,
+            Strategy::CostModel(_) => DeciderPolicy::CostModel,
+        }
+    }
+
+    /// Swaps this decider adopted so far.
+    pub fn adopted(&self) -> u64 {
+        self.adopted
+    }
+
+    /// Worthwhile proposals this decider restrained so far.
+    pub fn deferred(&self) -> u64 {
+        self.deferred
+    }
+
+    /// Barriers left in the CostModel cooldown (0 for other policies).
+    pub fn cooldown(&self) -> u64 {
+        match self.strategy {
+            Strategy::CostModel(cm) => cm.cooldown,
+            _ => 0,
+        }
+    }
+
+    /// The CostModel's EWMA of the current max share (`None` for other
+    /// policies or before the first observation).
+    pub fn ewma(&self) -> Option<f64> {
+        match self.strategy {
+            Strategy::CostModel(cm) => cm.ewma,
+            _ => None,
+        }
+    }
+}
+
+impl Decider for DeciderState {
+    fn name(&self) -> &'static str {
+        self.policy().name()
+    }
+
+    fn judge(&mut self, stats: &ProposalStats) -> Verdict {
+        let verdict = match &mut self.strategy {
+            Strategy::Naive(d) => d.judge(stats),
+            Strategy::Threshold(d) => d.judge(stats),
+            Strategy::Retentive(d) => d.judge(stats),
+            Strategy::CostModel(d) => d.judge(stats),
+        };
+        match verdict {
+            Verdict::Adopt => self.adopted += 1,
+            Verdict::Defer => self.deferred += 1,
+            Verdict::Reject => {}
+        }
+        verdict
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(worth_it: bool) -> ProposalStats {
+        ProposalStats {
+            worth_it,
+            current_max_share: 0.4,
+            planned_max_share: 0.2,
+            heavy_mass: 0.6,
+            predicted_moved_weight: 100.0,
+            predicted_migration_fraction: 0.1,
+            recent_load: 10_000.0,
+            reduce_cost: 10e-6,
+            migration_cost: 2e-6,
+        }
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for name in DeciderPolicy::NAMES {
+            assert_eq!(DeciderPolicy::parse(name).unwrap().name(), name);
+        }
+        assert!(DeciderPolicy::parse("eager").is_err());
+    }
+
+    #[test]
+    fn naive_mirrors_worth_it() {
+        let mut d = DeciderState::new(DeciderConfig::default());
+        assert_eq!(d.judge(&stats(true)), Verdict::Adopt);
+        assert_eq!(d.judge(&stats(false)), Verdict::Reject);
+        assert_eq!(d.adopted(), 1);
+        assert_eq!(d.deferred(), 0);
+    }
+
+    #[test]
+    fn threshold_gates_on_mass_and_gain() {
+        let cfg = DeciderConfig {
+            policy: DeciderPolicy::Threshold,
+            histogram_threshold: 0.5,
+            significant_change: 0.1,
+            ..Default::default()
+        };
+        let mut d = DeciderState::new(cfg);
+        assert_eq!(d.judge(&stats(true)), Verdict::Adopt);
+        let thin = ProposalStats { heavy_mass: 0.2, ..stats(true) };
+        assert_eq!(d.judge(&thin), Verdict::Defer);
+        let marginal = ProposalStats { planned_max_share: 0.39, ..stats(true) };
+        assert_eq!(d.judge(&marginal), Verdict::Defer);
+        assert_eq!(d.judge(&stats(false)), Verdict::Reject);
+        assert_eq!((d.adopted(), d.deferred()), (1, 2));
+    }
+
+    #[test]
+    fn retentive_caps_and_prices_migration() {
+        let cfg = DeciderConfig {
+            policy: DeciderPolicy::Retentive,
+            max_migration: 0.2,
+            retentive_weight: 1.0,
+            ..Default::default()
+        };
+        let mut d = DeciderState::new(cfg);
+        assert_eq!(d.judge(&stats(true)), Verdict::Adopt);
+        let heavy = ProposalStats { predicted_migration_fraction: 0.3, ..stats(true) };
+        assert_eq!(d.judge(&heavy), Verdict::Defer, "over the cap");
+        // gain 0.5, weighted migration 0.15 → adopt; weight 10 → defer
+        let sticky = DeciderConfig { retentive_weight: 10.0, ..cfg };
+        let mut d2 = DeciderState::new(sticky);
+        let frac = ProposalStats { predicted_migration_fraction: 0.15, ..stats(true) };
+        assert_eq!(d2.judge(&frac), Verdict::Defer);
+    }
+
+    #[test]
+    fn cost_model_backs_off_after_adoption() {
+        let cfg = DeciderConfig {
+            policy: DeciderPolicy::CostModel,
+            backoff_factor: 2,
+            drift_boundary: -1.0, // always "drifted" — isolate the backoff
+            ..Default::default()
+        };
+        let mut d = DeciderState::new(cfg);
+        assert_eq!(d.judge(&stats(true)), Verdict::Adopt);
+        assert_eq!(d.cooldown(), 2);
+        assert_eq!(d.judge(&stats(true)), Verdict::Defer);
+        assert_eq!(d.judge(&stats(true)), Verdict::Defer);
+        assert_eq!(d.cooldown(), 0);
+        assert_eq!(d.judge(&stats(true)), Verdict::Adopt);
+        assert_eq!((d.adopted(), d.deferred()), (2, 2));
+    }
+
+    #[test]
+    fn cost_model_defers_without_drift_and_updates_history() {
+        let cfg = DeciderConfig {
+            policy: DeciderPolicy::CostModel,
+            drift_boundary: 0.05,
+            drift_history_weight: 0.5,
+            backoff_factor: 0,
+            ..Default::default()
+        };
+        let mut d = DeciderState::new(cfg);
+        // First observation bootstraps the EWMA and may adopt.
+        assert_eq!(d.judge(&stats(true)), Verdict::Adopt);
+        assert_eq!(d.ewma(), Some(0.4));
+        // Stationary shares: no drift, defer.
+        assert_eq!(d.judge(&stats(true)), Verdict::Defer);
+        // A spike beyond the boundary re-arms adoption.
+        let spiked = ProposalStats { current_max_share: 0.8, ..stats(true) };
+        assert_eq!(d.judge(&spiked), Verdict::Adopt);
+    }
+
+    #[test]
+    fn cost_model_rejects_unaffordable_swaps() {
+        let cfg = DeciderConfig {
+            policy: DeciderPolicy::CostModel,
+            drift_boundary: -1.0,
+            horizon: 1.0,
+            ..Default::default()
+        };
+        let mut d = DeciderState::new(cfg);
+        // gain = 1.0 × 0.2 × 10000 × 10e-6 = 0.02 < cost = 1e7 × 2e-6 = 20
+        let pricey = ProposalStats { predicted_moved_weight: 1e7, ..stats(true) };
+        assert_eq!(d.judge(&pricey), Verdict::Defer);
+        assert_eq!(d.cooldown(), 0, "deferred swaps must not arm the backoff");
+    }
+}

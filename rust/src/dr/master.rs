@@ -161,6 +161,54 @@ impl DrDecision {
     }
 }
 
+/// An un-adopted decision: everything [`DrMaster::decide_sharded`] used
+/// to compute *except* the install. The histogram work, candidate
+/// construction and share estimates have already happened (and the DRM's
+/// blending memory has advanced), but the epoch is untouched — a decider
+/// rules on the proposal and the engine then calls [`DrMaster::commit`]
+/// or [`DrMaster::decline`]. Declining never bumps the epoch.
+#[derive(Debug, Clone)]
+pub struct DecisionProposal {
+    /// The constructed candidate, `None` when DR is disabled or the
+    /// family is UHP (nothing to adopt).
+    candidate: Option<DynPartitioner>,
+    /// The DRM's own gate: `force_updates || planned < current × (1 -
+    /// min_gain)`. [`DrMaster::decide_sharded`] commits exactly when this
+    /// holds; deciders may only restrain further.
+    pub worth_it: bool,
+    /// Estimated max load share under the installed routing.
+    pub current_max_share: f64,
+    /// Estimated max load share under the candidate.
+    pub planned_max_share: f64,
+    /// The blended histogram the proposal was derived from.
+    pub histogram: Histogram,
+    /// Measured wall-clock seconds the proposal took (the only
+    /// thread-count-dependent field, like [`DrDecision::decision_wall_s`]).
+    pub decision_wall_s: f64,
+}
+
+impl DecisionProposal {
+    /// Is there a candidate routing at all?
+    pub fn has_candidate(&self) -> bool {
+        self.candidate.is_some()
+    }
+
+    /// The candidate routing, for predicting what adopting it would move.
+    pub fn candidate(&self) -> Option<&dyn Partitioner> {
+        self.candidate.as_ref().map(|c| c.as_dyn())
+    }
+
+    /// Relative imbalance gain of the candidate over the installed
+    /// routing.
+    pub fn relative_gain(&self) -> f64 {
+        if self.current_max_share > 0.0 {
+            (self.current_max_share - self.planned_max_share) / self.current_max_share
+        } else {
+            0.0
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct DrMaster {
     cfg: DrConfig,
@@ -394,6 +442,27 @@ impl DrMaster {
         worker_histograms: Vec<Histogram>,
         num_threads: usize,
     ) -> DrDecision {
+        let proposal = self.propose_sharded(worker_histograms, num_threads);
+        if proposal.worth_it {
+            self.commit(proposal)
+        } else {
+            self.decline(proposal)
+        }
+    }
+
+    /// The proposal half of [`DrMaster::decide_sharded`]: merge the
+    /// worker histograms, advance the blending memory and construct the
+    /// best candidate — everything the decision point computes *except*
+    /// the install, so the epoch is untouched. A decider then rules on
+    /// the returned [`DecisionProposal`] and the caller either
+    /// [`DrMaster::commit`]s or [`DrMaster::decline`]s it. Because no
+    /// shared state swaps here, a pipelined engine can run this on its
+    /// decision lane and leave the verdict to the epoch-swap barrier.
+    pub fn propose_sharded(
+        &mut self,
+        worker_histograms: Vec<Histogram>,
+        num_threads: usize,
+    ) -> DecisionProposal {
         let wall_start = Instant::now();
         self.decisions_made += 1;
         let merged = parallel::merge_histograms_tree_bounded(
@@ -407,9 +476,9 @@ impl DrMaster {
         let current_max = Self::max_share(self.current.as_dyn(), &hist);
 
         if !self.cfg.enabled || matches!(self.choice, PartitionerChoice::Uhp) {
-            return DrDecision {
-                swap: None,
-                epoch: self.epoched.epoch(),
+            return DecisionProposal {
+                candidate: None,
+                worth_it: false,
                 current_max_share: current_max,
                 planned_max_share: current_max,
                 histogram: hist,
@@ -436,27 +505,50 @@ impl DrMaster {
         let worth_it = self.cfg.force_updates
             || planned_max < current_max * (1.0 - self.cfg.min_gain);
 
-        if worth_it {
-            self.current = Arc::new(candidate);
-            let swap = self.epoched.install(self.current.clone());
-            self.updates_issued += 1;
-            DrDecision {
-                epoch: swap.to_epoch(),
-                swap: Some(swap),
-                current_max_share: current_max,
-                planned_max_share: planned_max,
-                histogram: hist,
-                decision_wall_s: wall_start.elapsed().as_secs_f64(),
-            }
-        } else {
-            DrDecision {
-                swap: None,
-                epoch: self.epoched.epoch(),
-                current_max_share: current_max,
-                planned_max_share: planned_max,
-                histogram: hist,
-                decision_wall_s: wall_start.elapsed().as_secs_f64(),
-            }
+        DecisionProposal {
+            candidate: Some(candidate),
+            worth_it,
+            current_max_share: current_max,
+            planned_max_share: planned_max,
+            histogram: hist,
+            decision_wall_s: wall_start.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Adopt a proposal: install the candidate as the new epoch. This is
+    /// the install half of [`DrMaster::decide_sharded`] — callers gate it
+    /// behind a decider verdict. Panics if the proposal carries no
+    /// candidate (deciders never adopt those: `worth_it` is false).
+    pub fn commit(&mut self, proposal: DecisionProposal) -> DrDecision {
+        let wall_start = Instant::now();
+        let candidate = proposal.candidate.expect("commit requires a candidate");
+        self.current = Arc::new(candidate);
+        let swap = self.epoched.install(self.current.clone());
+        self.updates_issued += 1;
+        DrDecision {
+            epoch: swap.to_epoch(),
+            swap: Some(swap),
+            current_max_share: proposal.current_max_share,
+            planned_max_share: proposal.planned_max_share,
+            histogram: proposal.histogram,
+            decision_wall_s: proposal.decision_wall_s + wall_start.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Turn down a proposal: the epoch (and the routing engines see) is
+    /// unchanged, and the candidate is dropped — the next barrier
+    /// re-proposes from fresher histograms. The DRM's decision bookkeeping
+    /// (blending memory, `decisions_made`) already advanced in
+    /// [`DrMaster::propose_sharded`], so a declined barrier is
+    /// indistinguishable from a not-worth-it one.
+    pub fn decline(&self, proposal: DecisionProposal) -> DrDecision {
+        DrDecision {
+            swap: None,
+            epoch: self.epoched.epoch(),
+            current_max_share: proposal.current_max_share,
+            planned_max_share: proposal.planned_max_share,
+            histogram: proposal.histogram,
+            decision_wall_s: proposal.decision_wall_s,
         }
     }
 }

@@ -18,11 +18,15 @@
 //!   thread count (DESIGN.md "Sharded DRM decision point"). The measured
 //!   cost of the step lands in the `decision_wall_s` report columns.
 
+pub mod decider;
 pub mod master;
 pub mod parallel;
 pub mod worker;
 
-pub use master::{DrDecision, DrMaster, PartitionerChoice};
+pub use decider::{
+    Decider, DeciderConfig, DeciderPolicy, DeciderState, ProposalStats, Verdict,
+};
+pub use master::{DecisionProposal, DrDecision, DrMaster, PartitionerChoice};
 pub use worker::DrWorker;
 
 /// Configuration of the DR module (both DRM and DRW sides).
@@ -48,6 +52,10 @@ pub struct DrConfig {
     /// Force an update at every opportunity (Fig 3's methodology:
     /// "We forced a partitioner update on each batch").
     pub force_updates: bool,
+    /// Gating policy ruling on each worthwhile proposal at the engines'
+    /// decision barrier ([`decider`]). The default `Naive` policy adopts
+    /// every worthwhile candidate — the pre-decider behavior, bitwise.
+    pub decider: DeciderConfig,
 }
 
 impl Default for DrConfig {
@@ -61,6 +69,7 @@ impl Default for DrConfig {
             histogram_memory: 3,
             min_gain: 0.05,
             force_updates: false,
+            decider: DeciderConfig::default(),
         }
     }
 }

@@ -20,6 +20,7 @@
 //! event.7 = scale 12
 //! ```
 
+use crate::dr::DeciderPolicy;
 use crate::dr::DrConfig;
 use crate::dr::PartitionerChoice;
 use crate::partitioner::GedikStrategy;
@@ -74,6 +75,11 @@ pub enum EventKind {
     /// retained batches, and **verifies the replayed reports bitwise**
     /// against the pre-crash run before continuing. Streaming only.
     FailRestore(usize),
+    /// Partition `p` receives `factor`× its arrivals for this one
+    /// interval (a one-shot input burst — the backpressure probe). The
+    /// runner's backlog model charges the extra arrivals against the
+    /// partition's service capacity. Streaming only.
+    Burst(usize, f64),
 }
 
 impl EventKind {
@@ -84,6 +90,7 @@ impl EventKind {
             EventKind::Slowdown(p, f) => format!("slow p{p} x{f}"),
             EventKind::RestoreSpeed(p) => format!("restore p{p}"),
             EventKind::FailRestore(g) => format!("fail-restore gap={g}"),
+            EventKind::Burst(p, f) => format!("burst p{p} x{f}"),
         }
     }
 }
@@ -105,6 +112,11 @@ pub struct ScenarioConfig {
     /// Executor threads; `None` defers to `DYNREPART_THREADS`.
     pub threads: Option<usize>,
     pub dr: DrConfig,
+    /// `true` when the conf set any `decider.*` key. The runner applies
+    /// the `DYNREPART_DECIDER*` env knobs only when the conf left the
+    /// decider untouched — an explicit conf always wins over the
+    /// environment.
+    pub decider_explicit: bool,
     pub script: WorkloadScript,
     pub n_keys: usize,
     pub exponent: f64,
@@ -126,6 +138,7 @@ impl Default for ScenarioConfig {
             choice: PartitionerChoice::Kip,
             threads: None,
             dr: DrConfig::default(),
+            decider_explicit: false,
             script: WorkloadScript::Stationary,
             n_keys: 50_000,
             exponent: 1.1,
@@ -239,6 +252,47 @@ impl ScenarioConfig {
                 "dr.epsilon" => cfg.dr.epsilon = parse_f64(key, value)?,
                 "dr.histogram-memory" => cfg.dr.histogram_memory = parse_usize(key, value)?,
                 "dr.sample-rate" => cfg.dr.sample_rate = parse_f64(key, value)?,
+                "decider.policy" => {
+                    cfg.dr.decider.policy = DeciderPolicy::parse(value).map_err(|_| {
+                        format!(
+                            "{key} = {value:?}: expected one of {}",
+                            DeciderPolicy::NAMES.join(", ")
+                        )
+                    })?;
+                    cfg.decider_explicit = true;
+                }
+                "decider.histogram-threshold" => {
+                    cfg.dr.decider.histogram_threshold = parse_f64(key, value)?;
+                    cfg.decider_explicit = true;
+                }
+                "decider.significant-change" => {
+                    cfg.dr.decider.significant_change = parse_f64(key, value)?;
+                    cfg.decider_explicit = true;
+                }
+                "decider.max-migration" => {
+                    cfg.dr.decider.max_migration = parse_f64(key, value)?;
+                    cfg.decider_explicit = true;
+                }
+                "decider.retentive-weight" => {
+                    cfg.dr.decider.retentive_weight = parse_f64(key, value)?;
+                    cfg.decider_explicit = true;
+                }
+                "decider.drift-boundary" => {
+                    cfg.dr.decider.drift_boundary = parse_f64(key, value)?;
+                    cfg.decider_explicit = true;
+                }
+                "decider.drift-history-weight" => {
+                    cfg.dr.decider.drift_history_weight = parse_f64(key, value)?;
+                    cfg.decider_explicit = true;
+                }
+                "decider.backoff-factor" => {
+                    cfg.dr.decider.backoff_factor = parse_u64(key, value)?;
+                    cfg.decider_explicit = true;
+                }
+                "decider.horizon" => {
+                    cfg.dr.decider.horizon = parse_f64(key, value)?;
+                    cfg.decider_explicit = true;
+                }
                 "workload.script" => script_name = Some(value.to_string()),
                 "workload.keys" => cfg.n_keys = parse_usize(key, value)?,
                 "workload.exponent" => cfg.exponent = parse_f64(key, value)?,
@@ -282,9 +336,10 @@ impl ScenarioConfig {
             }
             ["restore-speed", p] => Ok(EventKind::RestoreSpeed(parse_usize(key, p)?)),
             ["fail-restore", g] => Ok(EventKind::FailRestore(parse_usize(key, g)?)),
+            ["burst", p, f] => Ok(EventKind::Burst(parse_usize(key, p)?, parse_f64(key, f)?)),
             _ => Err(format!(
                 "{key} = {value:?}: expected `scale <n>`, `slowdown <p> <factor>`, \
-                 `restore-speed <p>` or `fail-restore <gap>`"
+                 `restore-speed <p>`, `fail-restore <gap>` or `burst <p> <factor>`"
             )),
         }
     }
@@ -357,6 +412,28 @@ impl ScenarioConfig {
         if let Some(0) = self.threads {
             return Err("engine.threads must be >= 1".into());
         }
+        let d = &self.dr.decider;
+        if !(0.0..=1.0).contains(&d.histogram_threshold) {
+            return Err("decider.histogram-threshold must be in [0, 1]".into());
+        }
+        if d.significant_change < 0.0 {
+            return Err("decider.significant-change must be >= 0".into());
+        }
+        if !(d.max_migration > 0.0 && d.max_migration <= 1.0) {
+            return Err("decider.max-migration must be in (0, 1]".into());
+        }
+        if d.retentive_weight < 0.0 {
+            return Err("decider.retentive-weight must be >= 0".into());
+        }
+        if d.drift_boundary < 0.0 {
+            return Err("decider.drift-boundary must be >= 0".into());
+        }
+        if !(0.0..1.0).contains(&d.drift_history_weight) {
+            return Err("decider.drift-history-weight must be in [0, 1)".into());
+        }
+        if d.horizon <= 0.0 {
+            return Err("decider.horizon must be > 0".into());
+        }
         match self.script {
             WorkloadScript::HotspotFlip { flip_every, flip_head } => {
                 if flip_every == 0 || flip_head == 0 {
@@ -389,6 +466,17 @@ impl ScenarioConfig {
                 EventKind::Scale(0) => return Err(format!("event.{at}: scale target must be >= 1")),
                 EventKind::Slowdown(_, f) if f <= 0.0 => {
                     return Err(format!("event.{at}: slowdown factor must be > 0"))
+                }
+                EventKind::Burst(_, f) => {
+                    if self.engine != EngineKind::Streaming {
+                        return Err(format!(
+                            "event.{at}: burst drives the backlog model and requires \
+                             engine.discipline = streaming"
+                        ));
+                    }
+                    if f <= 0.0 {
+                        return Err(format!("event.{at}: burst factor must be > 0"));
+                    }
                 }
                 EventKind::FailRestore(g) => {
                     if self.engine != EngineKind::Streaming {
@@ -523,6 +611,56 @@ mod tests {
         .is_err());
         let zero = "scenario.intervals = 6\nevent.2 = slowdown 1 0.0\n";
         assert!(ScenarioConfig::parse(zero).is_err());
+    }
+
+    #[test]
+    fn decider_keys_parse_and_mark_explicit() {
+        let cfg = ScenarioConfig::parse(
+            "decider.policy = cost-model\n\
+             decider.histogram-threshold = 0.4\n\
+             decider.significant-change = 0.05\n\
+             decider.max-migration = 0.15\n\
+             decider.retentive-weight = 2.0\n\
+             decider.drift-boundary = 0.02\n\
+             decider.drift-history-weight = 0.6\n\
+             decider.backoff-factor = 3\n\
+             decider.horizon = 16\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.dr.decider.policy, DeciderPolicy::CostModel);
+        assert_eq!(cfg.dr.decider.histogram_threshold, 0.4);
+        assert_eq!(cfg.dr.decider.max_migration, 0.15);
+        assert_eq!(cfg.dr.decider.backoff_factor, 3);
+        assert!(cfg.decider_explicit, "any decider.* key marks the conf explicit");
+        // untouched confs stay implicit (env fallback applies) and default Naive
+        let plain = ScenarioConfig::parse("scenario.seed = 7\n").unwrap();
+        assert!(!plain.decider_explicit);
+        assert_eq!(plain.dr.decider.policy, DeciderPolicy::Naive);
+    }
+
+    #[test]
+    fn decider_keys_are_range_checked() {
+        assert!(ScenarioConfig::parse("decider.policy = eager").is_err());
+        assert!(ScenarioConfig::parse("decider.histogram-threshold = 1.5").is_err());
+        assert!(ScenarioConfig::parse("decider.significant-change = -0.1").is_err());
+        assert!(ScenarioConfig::parse("decider.max-migration = 0.0").is_err());
+        assert!(ScenarioConfig::parse("decider.max-migration = 1.5").is_err());
+        assert!(ScenarioConfig::parse("decider.drift-boundary = -1").is_err());
+        assert!(ScenarioConfig::parse("decider.drift-history-weight = 1.0").is_err());
+        assert!(ScenarioConfig::parse("decider.horizon = 0").is_err());
+        assert!(ScenarioConfig::parse("decider.backoff-factor = two").is_err());
+        assert!(ScenarioConfig::parse("decider.cooldown = 2").is_err(), "unknown decider key");
+    }
+
+    #[test]
+    fn burst_needs_streaming_and_a_positive_factor() {
+        let ok = ScenarioConfig::parse("scenario.intervals = 6\nevent.3 = burst 2 4.0\n").unwrap();
+        assert_eq!(ok.events, vec![(3, EventKind::Burst(2, 4.0))]);
+        assert_eq!(ok.events[0].1.label(), "burst p2 x4");
+        let mb = "engine.discipline = microbatch\nevent.3 = burst 2 4.0\n";
+        assert!(ScenarioConfig::parse(mb).unwrap_err().contains("streaming"));
+        assert!(ScenarioConfig::parse("event.3 = burst 2 0.0\n").is_err());
+        assert!(ScenarioConfig::parse("event.3 = burst 2\n").is_err(), "factor is required");
     }
 
     #[test]

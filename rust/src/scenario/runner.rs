@@ -29,6 +29,7 @@ use super::script::ScriptedSource;
 use crate::ddps::{
     EngineConfig, IntervalReport, MicroBatchEngine, RecoveryPoint, StreamingEngine,
 };
+use crate::dr::DrConfig;
 use crate::util::Table;
 use crate::workload::{Record, ReplaySource, Source};
 use std::collections::BTreeMap;
@@ -50,6 +51,24 @@ pub struct ScenarioRow {
     pub elapsed: f64,
     /// Records per virtual second.
     pub throughput: f64,
+    /// Cumulative proposals adopted by the decider up to this interval.
+    pub adopted: u64,
+    /// Cumulative worthwhile proposals the decider held back.
+    pub deferred: u64,
+    /// Cumulative state fraction migrated across all adopted swaps — the
+    /// restraint column the decider matrix compares policies on.
+    pub cum_migrated: f64,
+    /// Per-partition backlog (work units of arrivals beyond service
+    /// capacity, streaming only — empty for micro-batch rows). See
+    /// [`backlog_step`].
+    pub backlog: Vec<f64>,
+}
+
+impl ScenarioRow {
+    /// The worst per-partition backlog — the table's `backlog` column.
+    pub fn max_backlog(&self) -> f64 {
+        self.backlog.iter().copied().fold(0.0, f64::max)
+    }
 }
 
 /// The outcome of one scenario run.
@@ -73,7 +92,7 @@ impl ScenarioReport {
             &format!("scenario: {}", self.name),
             &[
                 "interval", "event", "epoch", "repart", "migrated", "imbalance", "elapsed_vt",
-                "throughput",
+                "throughput", "adopted", "deferred", "cum_migr", "backlog",
             ],
         );
         for r in &self.rows {
@@ -86,6 +105,10 @@ impl ScenarioReport {
                 format!("{:.4}", r.imbalance),
                 format!("{:.4}", r.elapsed),
                 format!("{:.1}", r.throughput),
+                r.adopted.to_string(),
+                r.deferred.to_string(),
+                format!("{:.4}", r.cum_migrated),
+                format!("{:.1}", r.max_backlog()),
             ]);
         }
         t
@@ -142,6 +165,18 @@ impl Scenario {
         ecfg
     }
 
+    /// The DR config handed to the engine. The `DYNREPART_DECIDER*` env
+    /// knobs apply only when the conf left every `decider.*` key at its
+    /// default — an explicit conf always wins over the environment (same
+    /// precedence as `engine.threads` over `DYNREPART_THREADS`).
+    fn dr_config(&self) -> DrConfig {
+        let mut dr = self.cfg.dr;
+        if !self.cfg.decider_explicit {
+            dr.decider = dr.decider.with_env();
+        }
+        dr
+    }
+
     /// Events keyed by the interval they fire before.
     fn schedule(&self) -> BTreeMap<u64, EventKind> {
         self.cfg.events.iter().copied().collect()
@@ -171,7 +206,8 @@ impl Scenario {
             .collect();
         let need_batches = !snap_at.is_empty();
 
-        let mut engine = StreamingEngine::new(self.engine_config(), cfg.dr, cfg.choice, cfg.seed);
+        let mut engine =
+            StreamingEngine::new(self.engine_config(), self.dr_config(), cfg.choice, cfg.seed);
         let mut src = RecordingSource {
             inner: ScriptedSource::new(cfg),
             retain: need_batches,
@@ -186,6 +222,12 @@ impl Scenario {
         let mut rows: Vec<ScenarioRow> = Vec::with_capacity(cfg.intervals);
         let mut recoveries = 0usize;
         let mut done = 0u64;
+        // backlog model state — runner-side bookkeeping over the reports,
+        // never fed back into the engine (rows stay bitwise-deterministic)
+        let mut backlog: Vec<f64> = vec![0.0; cfg.n_partitions];
+        let mut rates: Vec<f64> = vec![1.0; cfg.n_partitions];
+        let mut burst_pending: Option<(usize, f64)> = None;
+        let mut cum_migrated = 0.0f64;
         while done < total {
             let mut label = String::new();
             if let Some(&ev) = events.get(&(done + 1)) {
@@ -193,14 +235,22 @@ impl Scenario {
                 match ev {
                     EventKind::Scale(n) => {
                         engine.scale_to(n);
+                        rates.resize(n, 1.0);
+                        backlog.resize(n, 0.0);
                     }
                     EventKind::Slowdown(p, f) => {
                         self.check_partition(p, engine.partitioner().n_partitions())?;
                         engine.set_service_rate(p, f);
+                        rates[p] = f;
                     }
                     EventKind::RestoreSpeed(p) => {
                         self.check_partition(p, engine.partitioner().n_partitions())?;
                         engine.set_service_rate(p, 1.0);
+                        rates[p] = 1.0;
+                    }
+                    EventKind::Burst(p, f) => {
+                        self.check_partition(p, engine.partitioner().n_partitions())?;
+                        burst_pending = Some((p, f));
                     }
                     EventKind::FailRestore(g) => {
                         let snap_no = done - g as u64;
@@ -229,7 +279,13 @@ impl Scenario {
                 return Err("scripted source exhausted early".into());
             }
             for r in reports {
-                rows.push(streaming_row(&r, std::mem::take(&mut label)));
+                // a burst event applies to the first interval of its segment
+                backlog_step(&mut backlog, &r.loads, &rates, burst_pending.take());
+                cum_migrated += r.migrated_fraction;
+                let mut row = streaming_row(&r, std::mem::take(&mut label));
+                row.cum_migrated = cum_migrated;
+                row.backlog = backlog.clone();
+                rows.push(row);
             }
             done = stop;
             if snap_at.contains(&done) {
@@ -282,6 +338,9 @@ impl Scenario {
             if rep.epoch != orig.epoch || rep.repartitioned != orig.repartitioned {
                 return diverged("epoch/decision");
             }
+            if rep.adopted != orig.adopted || rep.deferred != orig.deferred {
+                return diverged("decider tallies");
+            }
             if rep.elapsed.to_bits() != orig.elapsed.to_bits()
                 || rep.throughput.to_bits() != orig.throughput.to_bits()
                 || rep.imbalance.to_bits() != orig.imbalance.to_bits()
@@ -298,7 +357,8 @@ impl Scenario {
     fn run_microbatch(&self) -> Result<ScenarioReport, String> {
         let cfg = &self.cfg;
         let events = self.schedule();
-        let mut engine = MicroBatchEngine::new(self.engine_config(), cfg.dr, cfg.choice, cfg.seed);
+        let mut engine =
+            MicroBatchEngine::new(self.engine_config(), self.dr_config(), cfg.choice, cfg.seed);
         let mut src = RecordingSource {
             inner: ScriptedSource::new(cfg),
             retain: false,
@@ -306,6 +366,7 @@ impl Scenario {
         };
         let total = cfg.intervals as u64;
         let mut rows: Vec<ScenarioRow> = Vec::with_capacity(cfg.intervals);
+        let mut cum_migrated = 0.0f64;
         let mut done = 0u64;
         while done < total {
             let mut label = String::new();
@@ -325,7 +386,9 @@ impl Scenario {
                         self.check_partition(p, engine.partitioner().n_partitions())?;
                         engine.set_service_rate(p, 1.0);
                     }
-                    EventKind::FailRestore(_) => unreachable!("rejected by validate()"),
+                    EventKind::FailRestore(_) | EventKind::Burst(..) => {
+                        unreachable!("rejected by validate()")
+                    }
                 }
             }
             let next_event = events.range(done + 2..).next().map(|(&at, _)| at - 1);
@@ -336,6 +399,7 @@ impl Scenario {
             }
             for r in reports {
                 let records: f64 = r.loads.iter().sum();
+                cum_migrated += r.migrated_fraction;
                 rows.push(ScenarioRow {
                     interval: r.batch_no,
                     event: std::mem::take(&mut label),
@@ -345,6 +409,12 @@ impl Scenario {
                     imbalance: r.imbalance,
                     elapsed: r.makespan,
                     throughput: if r.makespan > 0.0 { records / r.makespan } else { 0.0 },
+                    adopted: r.decisions_adopted,
+                    deferred: r.decisions_deferred,
+                    cum_migrated,
+                    // micro-batches drain fully by construction: no
+                    // standing backlog model
+                    backlog: Vec::new(),
                 });
             }
             done = stop;
@@ -378,6 +448,37 @@ fn streaming_row(r: &IntervalReport, event: String) -> ScenarioRow {
         imbalance: r.imbalance,
         elapsed: r.elapsed,
         throughput: r.throughput,
+        adopted: r.decisions_adopted,
+        deferred: r.decisions_deferred,
+        // run_streaming's segment loop fills these in; the fail-restore
+        // replay comparison deliberately ignores them (runner-side
+        // bookkeeping, not engine state)
+        cum_migrated: 0.0,
+        backlog: Vec::new(),
+    }
+}
+
+/// One step of the runner-side backlog recurrence: partition `p` receives
+/// `loads[p]` work units (×`factor` under a burst), services them at
+/// `1/rates[p]` speed, against a fixed provisioned capacity of 1.5× the
+/// mean nominal load (the engine's spill budget, [`EngineConfig`]
+/// `spill_threshold_factor`). Whatever exceeds capacity carries over:
+/// `backlog_p ← max(0, backlog_p + work_p − capacity)`. Skewed routing
+/// keeps a hot partition persistently above capacity (backlog grows
+/// without bound — the Pinned-path backpressure failure mode); balanced
+/// routing leaves headroom everywhere and drains it.
+fn backlog_step(backlog: &mut Vec<f64>, loads: &[f64], rates: &[f64], burst: Option<(usize, f64)>) {
+    backlog.resize(loads.len(), 0.0);
+    let n = loads.len().max(1);
+    let capacity = 1.5 * loads.iter().sum::<f64>() / n as f64;
+    for (p, b) in backlog.iter_mut().enumerate() {
+        let mut work = loads[p] * rates.get(p).copied().unwrap_or(1.0);
+        if let Some((bp, f)) = burst {
+            if bp == p {
+                work *= f;
+            }
+        }
+        *b = (*b + work - capacity).max(0.0);
     }
 }
 
@@ -465,6 +566,54 @@ mod tests {
         assert_eq!(rep.rows.len(), 6);
         assert_eq!(rep.rows[2].event, "scale=12");
         assert!(rep.rows[2].epoch > rep.rows[1].epoch);
+    }
+
+    #[test]
+    fn backlog_recurrence_grows_and_drains() {
+        let mut b = vec![0.0; 2];
+        // balanced arrivals fit inside the 1.5× capacity
+        backlog_step(&mut b, &[100.0, 100.0], &[1.0, 1.0], None);
+        assert_eq!(b, vec![0.0, 0.0]);
+        // a 4× burst on p0 exceeds capacity (150): 400 − 150 carries over
+        backlog_step(&mut b, &[100.0, 100.0], &[1.0, 1.0], Some((0, 4.0)));
+        assert_eq!(b, vec![250.0, 0.0]);
+        // ...and drains by the 50-unit headroom each interval after
+        backlog_step(&mut b, &[100.0, 100.0], &[1.0, 1.0], None);
+        assert_eq!(b, vec![200.0, 0.0]);
+        // a slowdown charges rate-inflated work against the same capacity
+        backlog_step(&mut b, &[100.0, 100.0], &[2.0, 1.0], None);
+        assert_eq!(b, vec![250.0, 0.0]);
+        // rescale resizes in place, keeping accumulated backlog
+        backlog_step(&mut b, &[0.0, 0.0, 0.0], &[1.0; 3], None);
+        assert_eq!(b, vec![250.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn decider_columns_track_adoptions_and_cumulative_migration() {
+        let rep = Scenario::new(base()).unwrap().run().unwrap();
+        let last = rep.rows.last().unwrap();
+        assert!(last.adopted >= 1, "forced DR under Naive adopts");
+        assert_eq!(last.deferred, 0, "naive never defers");
+        let sum: f64 = rep.rows.iter().map(|r| r.migrated_fraction).sum();
+        assert_eq!(last.cum_migrated.to_bits(), sum.to_bits());
+        assert!(rep.rows.iter().all(|r| r.backlog.len() == 6), "streaming rows carry backlog");
+        let t = rep.table();
+        assert!(t.render().contains("cum_migr"));
+    }
+
+    #[test]
+    fn burst_event_charges_the_target_partition() {
+        let mut cfg = base();
+        cfg.dr = crate::dr::DrConfig::disabled();
+        cfg.choice = crate::dr::PartitionerChoice::Uhp;
+        cfg.events = vec![(3, EventKind::Burst(1, 6.0))];
+        let rep = Scenario::new(cfg).unwrap().run().unwrap();
+        assert_eq!(rep.rows[2].event, "burst p1 x6");
+        assert!(
+            rep.rows[2].backlog[1] > rep.rows[1].backlog[1],
+            "a 6x burst must push partition 1 past capacity: {:?}",
+            rep.rows[2].backlog
+        );
     }
 
     #[test]

@@ -46,6 +46,42 @@ pub fn knob_from_env(name: &str, min: usize) -> Option<usize> {
     }
 }
 
+/// Parse one *choice* env knob strictly, same discipline as
+/// [`parse_knob`]: `None`/empty/whitespace ⇒ `Ok(None)`; a (trimmed)
+/// value appearing in `allowed` ⇒ `Ok(Some(choice))`; anything else ⇒
+/// `Err` naming the variable and listing the valid spellings.
+pub fn parse_choice_knob<'a>(
+    name: &str,
+    value: Option<&str>,
+    allowed: &[&'a str],
+) -> Result<Option<&'a str>, String> {
+    let Some(raw) = value else {
+        return Ok(None);
+    };
+    let trimmed = raw.trim();
+    if trimmed.is_empty() {
+        return Ok(None);
+    }
+    match allowed.iter().find(|a| **a == trimmed) {
+        Some(choice) => Ok(Some(choice)),
+        None => Err(format!(
+            "{name}={trimmed:?} is not a valid choice (expected one of: {})",
+            allowed.join(", ")
+        )),
+    }
+}
+
+/// [`parse_choice_knob`] against the live environment, panicking with
+/// the parse error on a malformed value — the entry point of
+/// `DeciderConfig::with_env` (`DYNREPART_DECIDER`).
+pub fn choice_from_env<'a>(name: &str, allowed: &[&'a str]) -> Option<&'a str> {
+    let value = std::env::var(name).ok();
+    match parse_choice_knob(name, value.as_deref(), allowed) {
+        Ok(v) => v,
+        Err(e) => panic!("{e}"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -82,5 +118,21 @@ mod tests {
         let err = parse_knob("DYNREPART_THREADS", Some("0"), 1).unwrap_err();
         assert!(err.contains("DYNREPART_THREADS=0"), "{err}");
         assert!(err.contains(">= 1"), "{err}");
+    }
+
+    #[test]
+    fn choice_knobs_follow_the_same_discipline() {
+        let allowed = ["naive", "threshold", "retentive", "cost-model"];
+        assert_eq!(parse_choice_knob("X", None, &allowed), Ok(None));
+        assert_eq!(parse_choice_knob("X", Some("  "), &allowed), Ok(None));
+        assert_eq!(
+            parse_choice_knob("X", Some(" cost-model "), &allowed),
+            Ok(Some("cost-model")),
+            "whitespace is trimmed"
+        );
+        let err = parse_choice_knob("DYNREPART_DECIDER", Some("eager"), &allowed).unwrap_err();
+        assert!(err.contains("DYNREPART_DECIDER"), "{err}");
+        assert!(err.contains("eager"), "{err}");
+        assert!(err.contains("naive"), "error must list the choices: {err}");
     }
 }

@@ -7,7 +7,7 @@
 //! directly, sequential and sharded, and across the two.
 
 use dynrepart::ddps::{EngineConfig, IntervalReport, StreamingEngine};
-use dynrepart::dr::{DrConfig, PartitionerChoice};
+use dynrepart::dr::{DeciderConfig, DeciderPolicy, DrConfig, PartitionerChoice};
 use dynrepart::state::StateStore;
 use dynrepart::workload::{zipf::Zipf, Generator, Record, ReplaySource};
 
@@ -34,6 +34,16 @@ fn assert_reports_bitwise(a: &IntervalReport, b: &IntervalReport) {
     assert_eq!(a.interval_no, b.interval_no);
     assert_eq!(a.epoch, b.epoch, "interval {}", a.interval_no);
     assert_eq!(a.repartitioned, b.repartitioned, "interval {}", a.interval_no);
+    assert_eq!(
+        a.decisions_adopted, b.decisions_adopted,
+        "interval {}: adopt tally diverged",
+        a.interval_no
+    );
+    assert_eq!(
+        a.decisions_deferred, b.decisions_deferred,
+        "interval {}: defer tally diverged",
+        a.interval_no
+    );
     for (what, x, y) in [
         ("elapsed", a.elapsed, b.elapsed),
         ("throughput", a.throughput, b.throughput),
@@ -146,6 +156,86 @@ fn recovery_is_thread_count_invariant() {
     assert_eq!(e1.epoch(), e4.epoch());
     assert_eq!(e1.vtime().to_bits(), e4.vtime().to_bits());
     assert_stores_bitwise(e1.stores(), e4.stores());
+}
+
+/// A recovery point taken *inside* a CostModel cooldown must carry the
+/// whole decider — EWMA drift history, remaining backoff barriers and
+/// the adopt/defer tallies — so the restored run resumes the gate
+/// bitwise and reproduces the uninterrupted run's verdict sequence.
+#[test]
+fn restore_mid_cooldown_resumes_the_decider_bitwise() {
+    let all = batches(10, 12_000);
+    let dr = DrConfig {
+        decider: DeciderConfig {
+            policy: DeciderPolicy::CostModel,
+            // Always "drifted" and an enormous horizon: only the backoff
+            // cooldown restrains the forced DRM, so cooldowns recur.
+            drift_boundary: -1.0,
+            backoff_factor: 3,
+            horizon: 1e9,
+            ..Default::default()
+        },
+        ..DrConfig::forced()
+    };
+    let mk = || StreamingEngine::new(cfg(1), dr, PartitionerChoice::Kip, 0xE2E);
+
+    let mut gold = mk();
+    let gold_reports: Vec<IntervalReport> =
+        all.iter().map(|b| gold.run_interval(b)).collect();
+    assert!(
+        gold.decider().adopted() >= 2,
+        "the gold run must adopt more than once (got {})",
+        gold.decider().adopted()
+    );
+
+    // Drive interval by interval until the snapshot lands mid-cooldown —
+    // robust to exactly which barrier the first adoption happens at.
+    let mut live = mk();
+    let mut cut = 0usize;
+    for (i, b) in all.iter().enumerate() {
+        live.run_interval(b);
+        if live.decider().cooldown() > 0 && i + 1 < all.len() {
+            cut = i + 1;
+            break;
+        }
+    }
+    assert!(cut > 0, "never entered a cooldown mid-stream");
+    let point = live.recovery_point();
+    let at_snapshot = *live.decider();
+    assert!(at_snapshot.cooldown() > 0, "snapshot must be mid-cooldown");
+    // progress lost in the crash: one more interval runs, then the node dies
+    live.run_interval(&all[cut]);
+    assert_ne!(live.decider().cooldown(), at_snapshot.cooldown());
+    drop(live);
+
+    let mut resumed = StreamingEngine::restore(&point);
+    let d = resumed.decider();
+    assert_eq!(d.policy(), DeciderPolicy::CostModel);
+    assert_eq!(d.adopted(), at_snapshot.adopted(), "adopt tally lost in restore");
+    assert_eq!(d.deferred(), at_snapshot.deferred(), "defer tally lost in restore");
+    assert_eq!(d.cooldown(), at_snapshot.cooldown(), "backoff counter lost in restore");
+    assert_eq!(
+        d.ewma().map(f64::to_bits),
+        at_snapshot.ewma().map(f64::to_bits),
+        "EWMA drift history lost in restore"
+    );
+
+    // The replayed continuation reproduces the uninterrupted run bitwise,
+    // verdicts included.
+    let resumed_reports: Vec<IntervalReport> =
+        all[cut..].iter().map(|b| resumed.run_interval(b)).collect();
+    for (g, r) in gold_reports[cut..].iter().zip(&resumed_reports) {
+        assert_reports_bitwise(g, r);
+    }
+    assert_eq!(gold.epoch(), resumed.epoch());
+    assert_eq!(gold.decider().adopted(), resumed.decider().adopted());
+    assert_eq!(gold.decider().deferred(), resumed.decider().deferred());
+    assert_eq!(gold.decider().cooldown(), resumed.decider().cooldown());
+    assert_eq!(
+        gold.decider().ewma().map(f64::to_bits),
+        resumed.decider().ewma().map(f64::to_bits)
+    );
+    assert_stores_bitwise(gold.stores(), resumed.stores());
 }
 
 #[test]

@@ -1,0 +1,550 @@
+//! Property tests for the decider policy layer (DESIGN.md "Decider
+//! policy layer"):
+//!
+//! 1. the default `Naive` policy reproduces the pre-decider eager path
+//!    **bitwise** — reports, epochs, migration plans and the full keyed
+//!    state — against a harness that still drives the raw
+//!    `decision_point_sharded` → `adopt_decision` sequence;
+//! 2. every policy is thread-count- and pipeline-invariant: lockstep
+//!    sequential and pipelined sharded drives land on identical bits,
+//!    adopt/defer tallies included, because verdicts only ever read
+//!    virtual/modeled inputs;
+//! 3. the CostModel backoff is a hard gate: after an adopted swap no
+//!    epoch bump can occur within `backoff_factor` barriers;
+//! 4. the Retentive cap binds exactly: every adopted swap's measured
+//!    `migrated_fraction` is ≤ the configured cap, which only holds
+//!    because the barrier's migration prediction equals the applied
+//!    swap's measurement bitwise.
+//!
+//! Replay failures with `PROP_SEED=<seed> PROP_CASES=1`.
+
+use dynrepart::ddps::{
+    adopt_decision, decision_point_sharded, tap_records_sharded, DecisionOutcome, EngineConfig,
+    EngineMetrics, MicroBatchEngine, Scheduling, ShuffleStage, StageReport, StreamingEngine,
+    TapAssignment,
+};
+use dynrepart::dr::{DeciderConfig, DeciderPolicy, DrConfig, DrMaster, DrWorker, PartitionerChoice};
+use dynrepart::partitioner::PartitionerEpoch;
+use dynrepart::prop::{forall, Gen};
+use dynrepart::state::StateStore;
+use dynrepart::workload::{zipf::Zipf, Generator, Record, ReplaySource};
+
+fn cfg(n_partitions: usize, n_slots: usize, num_threads: usize) -> EngineConfig {
+    EngineConfig {
+        n_partitions,
+        n_slots,
+        num_threads,
+        ..Default::default()
+    }
+}
+
+fn gen_batches(g: &mut Gen, n_batches: usize) -> (Vec<Vec<Record>>, u64) {
+    let seed = g.u64(1..1 << 20);
+    let keys = g.usize(500..5_000);
+    let exponent = g.f64(0.0..1.6);
+    let per_batch = g.usize(1_000..8_000);
+    let mut z = Zipf::new(keys, exponent, seed);
+    ((0..n_batches).map(|_| z.batch(per_batch)).collect(), seed)
+}
+
+/// Batches with per-interval key churn and rising skew: every interval
+/// re-draws its key universe, so forced DR keeps finding genuinely
+/// different candidates — the backoff test needs repeated adoptions.
+fn gen_churn_batches(g: &mut Gen, n_batches: usize) -> (Vec<Vec<Record>>, u64) {
+    let seed = g.u64(1..1 << 20);
+    let keys = g.usize(1_000..4_000);
+    let per_batch = g.usize(3_000..8_000);
+    let batches = (0..n_batches)
+        .map(|i| {
+            let exponent = 0.5 + 0.12 * i as f64;
+            Zipf::new(keys, exponent, seed + i as u64).batch(per_batch)
+        })
+        .collect();
+    (batches, seed)
+}
+
+fn gen_dr(g: &mut Gen) -> DrConfig {
+    if g.bool(0.5) {
+        DrConfig::forced()
+    } else {
+        DrConfig::default()
+    }
+}
+
+#[track_caller]
+fn assert_bits(a: f64, b: f64, what: &str) {
+    assert!(
+        a.to_bits() == b.to_bits(),
+        "{what} not bitwise-identical: {a} vs {b}"
+    );
+}
+
+#[track_caller]
+fn assert_vec_bits(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what} length");
+    for (x, y) in a.iter().zip(b) {
+        assert_bits(*x, *y, what);
+    }
+}
+
+/// Full bitwise state comparison, key iteration order included.
+#[track_caller]
+fn assert_stores_bitwise(a: &[StateStore], b: &[StateStore], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: partition count");
+    for (p, (sa, sb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(sa.n_keys(), sb.n_keys(), "{what}: partition {p} key count");
+        for ((ka, va), (kb, vb)) in sa.iter().zip(sb.iter()) {
+            assert_eq!(ka, kb, "{what}: partition {p} key order diverged");
+            assert_eq!(va.records, vb.records, "{what}: partition {p} key {ka}");
+            assert_bits(va.weight, vb.weight, what);
+        }
+    }
+}
+
+/// The pre-decider drive: the exact harvest → eager decide → adopt → tap
+/// → stage sequence the engines ran before the policy layer existed,
+/// built from the same public pieces (`decision_point_sharded` commits
+/// any worthwhile candidate itself). Constructed exactly like
+/// `EngineCore::new` so DRM/DRW seeding matches the engines bitwise.
+struct Legacy {
+    cfg: EngineConfig,
+    drm: DrMaster,
+    workers: Vec<DrWorker>,
+    partitioner: PartitionerEpoch,
+    stores: Vec<StateStore>,
+    metrics: EngineMetrics,
+}
+
+impl Legacy {
+    fn new(
+        cfg: EngineConfig,
+        dr: DrConfig,
+        choice: PartitionerChoice,
+        n_workers: usize,
+        seed: u64,
+    ) -> Self {
+        let drm = DrMaster::with_sketch(dr, choice, cfg.n_partitions, seed, cfg.sketch);
+        let workers = (0..n_workers)
+            .map(|w| {
+                DrWorker::with_sketch(
+                    drm.worker_capacity(),
+                    dr.sample_rate,
+                    seed ^ (w as u64) << 8,
+                    cfg.sketch,
+                )
+            })
+            .collect();
+        let partitioner = drm.handle();
+        let stores = (0..cfg.n_partitions).map(|_| StateStore::new()).collect();
+        Self {
+            cfg,
+            drm,
+            workers,
+            partitioner,
+            stores,
+            metrics: EngineMetrics::default(),
+        }
+    }
+
+    /// Micro-batch order: decision point *before* the batch, chunked
+    /// taps, wave-scheduled stage.
+    fn step_microbatch(&mut self, records: &[Record]) -> (StageReport, DecisionOutcome) {
+        let threads = self.cfg.num_threads;
+        let decision = decision_point_sharded(&mut self.drm, &mut self.workers, threads);
+        let outcome = adopt_decision(
+            &self.cfg,
+            decision,
+            &mut self.partitioner,
+            Some(self.stores.as_mut_slice()),
+            &mut self.metrics,
+        );
+        tap_records_sharded(&mut self.workers, records, TapAssignment::Chunked, threads);
+        let stage = ShuffleStage::new(&self.cfg, Scheduling::Wave).run(
+            records,
+            &self.partitioner,
+            Some(self.stores.as_mut_slice()),
+        );
+        (stage, outcome)
+    }
+
+    /// Streaming order: round-robin taps, pinned stage, decision point at
+    /// the barrier *after* the interval.
+    fn step_streaming(&mut self, records: &[Record]) -> (StageReport, DecisionOutcome) {
+        let threads = self.cfg.num_threads;
+        tap_records_sharded(&mut self.workers, records, TapAssignment::RoundRobin, threads);
+        let stage = ShuffleStage::new(&self.cfg, Scheduling::Pinned).run(
+            records,
+            &self.partitioner,
+            Some(self.stores.as_mut_slice()),
+        );
+        let decision = decision_point_sharded(&mut self.drm, &mut self.workers, threads);
+        let outcome = adopt_decision(
+            &self.cfg,
+            decision,
+            &mut self.partitioner,
+            Some(self.stores.as_mut_slice()),
+            &mut self.metrics,
+        );
+        (stage, outcome)
+    }
+}
+
+/// The biting-gates matrix for the invariance sweep: every policy, with
+/// knobs set so its gates actually fire on these workloads.
+fn decider_variants() -> [DeciderConfig; 4] {
+    let base = DeciderConfig::default();
+    [
+        DeciderConfig {
+            policy: DeciderPolicy::Naive,
+            ..base
+        },
+        DeciderConfig {
+            policy: DeciderPolicy::Threshold,
+            histogram_threshold: 0.2,
+            significant_change: 0.05,
+            ..base
+        },
+        DeciderConfig {
+            policy: DeciderPolicy::Retentive,
+            max_migration: 0.3,
+            retentive_weight: 1.0,
+            ..base
+        },
+        DeciderConfig {
+            policy: DeciderPolicy::CostModel,
+            drift_boundary: 0.02,
+            backoff_factor: 2,
+            horizon: 16.0,
+            ..base
+        },
+    ]
+}
+
+/// Naive == the pre-decider eager path, bitwise: same reports, same
+/// epoch sequence, same migrations, same keyed state — for random
+/// workloads, DR configs and thread counts, on both engine disciplines.
+#[test]
+fn naive_decider_reproduces_the_eager_path_bitwise() {
+    forall(8, |g| {
+        let n = g.usize(2..8);
+        let threads = g.usize(1..5);
+        let (batches, seed) = gen_batches(g, 4);
+        let dr = gen_dr(g);
+        assert_eq!(
+            dr.decider.policy,
+            DeciderPolicy::Naive,
+            "Naive must be the default policy"
+        );
+
+        // micro-batch: n_slots = n_partitions so the legacy harness's
+        // worker count (slots for chunked taps) matches the engine's
+        let mut eng = MicroBatchEngine::new(cfg(n, n, threads), dr, PartitionerChoice::Kip, seed);
+        let mut old = Legacy::new(cfg(n, n, threads), dr, PartitionerChoice::Kip, n, seed);
+        let mut adopted = 0u64;
+        for b in &batches {
+            let r = eng.run_batch(b);
+            let (stage, outcome) = old.step_microbatch(b);
+            let tag = format!("microbatch batch {} ({threads} threads)", r.batch_no);
+            assert_eq!(r.repartitioned, outcome.repartitioned, "{tag}");
+            assert_eq!(r.epoch, outcome.epoch, "{tag}: epoch diverged");
+            assert_bits(r.migration_time, outcome.migration.pause, &tag);
+            assert_bits(r.migrated_fraction, outcome.migration.migrated_fraction, &tag);
+            assert_bits(r.makespan, outcome.migration.pause + stage.stage_time, &tag);
+            assert_bits(r.map_time, stage.map_time, &tag);
+            assert_bits(r.reduce_time, stage.reduce_time, &tag);
+            assert_vec_bits(&r.loads, &stage.loads, &tag);
+            if r.repartitioned {
+                adopted += 1;
+            }
+            assert_eq!(r.decisions_adopted, adopted, "{tag}: adopt tally");
+            assert_eq!(r.decisions_deferred, 0, "{tag}: Naive never defers");
+        }
+        assert_eq!(eng.epoch(), old.partitioner.epoch());
+        assert_eq!(eng.drm().decisions_made(), old.drm.decisions_made());
+        assert_eq!(eng.drm().updates_issued(), old.drm.updates_issued());
+        assert_stores_bitwise(eng.stores(), &old.stores, "microbatch state");
+
+        // streaming: n_workers = n_partitions on both sides
+        let mut eng = StreamingEngine::new(cfg(n, n, threads), dr, PartitionerChoice::Kip, seed);
+        let mut old = Legacy::new(cfg(n, n, threads), dr, PartitionerChoice::Kip, n, seed);
+        let mut adopted = 0u64;
+        for b in &batches {
+            let r = eng.run_interval(b);
+            let (stage, outcome) = old.step_streaming(b);
+            let tag = format!("streaming interval {} ({threads} threads)", r.interval_no);
+            assert_eq!(r.repartitioned, outcome.repartitioned, "{tag}");
+            assert_eq!(r.epoch, outcome.epoch, "{tag}: epoch diverged");
+            assert_bits(r.migration_pause, outcome.migration.pause, &tag);
+            assert_bits(r.migrated_fraction, outcome.migration.migrated_fraction, &tag);
+            assert_bits(r.elapsed, outcome.migration.pause + stage.stage_time, &tag);
+            assert_vec_bits(&r.loads, &stage.loads, &tag);
+            if r.repartitioned {
+                adopted += 1;
+            }
+            assert_eq!(r.decisions_adopted, adopted, "{tag}: adopt tally");
+            assert_eq!(r.decisions_deferred, 0, "{tag}: Naive never defers");
+        }
+        assert_eq!(eng.epoch(), old.partitioner.epoch());
+        assert_eq!(eng.drm().decisions_made(), old.drm.decisions_made());
+        assert_eq!(eng.drm().updates_issued(), old.drm.updates_issued());
+        assert_stores_bitwise(eng.stores(), &old.stores, "streaming state");
+    });
+}
+
+/// Every policy's verdicts ride only virtual inputs, so the lockstep
+/// sequential drive and the pipelined sharded drive must land on
+/// identical bits — epochs, migrations, loads and the adopt/defer
+/// tallies themselves.
+#[test]
+fn every_policy_is_thread_count_and_pipeline_invariant() {
+    forall(4, |g| {
+        let n = g.usize(2..8);
+        let threads = g.usize(2..6);
+        let (batches, seed) = gen_batches(g, 4);
+        let dr_base = gen_dr(g);
+        for dc in decider_variants() {
+            let dr = DrConfig {
+                decider: dc,
+                ..dr_base
+            };
+
+            let mut seq =
+                StreamingEngine::new(cfg(n, n, 1), dr, PartitionerChoice::Kip, seed);
+            let mut par =
+                StreamingEngine::new(cfg(n, n, threads), dr, PartitionerChoice::Kip, seed);
+            let manual: Vec<_> = batches.iter().map(|b| seq.run_interval(b)).collect();
+            let mut src = ReplaySource::new(batches.clone());
+            let streamed = par.run_stream(&mut src, 0, batches.len());
+            assert_eq!(manual.len(), streamed.len());
+            for (a, b) in manual.iter().zip(&streamed) {
+                let tag = format!(
+                    "{} streaming interval {} ({threads} threads)",
+                    dc.policy.name(),
+                    a.interval_no
+                );
+                assert_eq!(a.interval_no, b.interval_no, "{tag}");
+                assert_eq!(a.repartitioned, b.repartitioned, "{tag}");
+                assert_eq!(a.epoch, b.epoch, "{tag}");
+                assert_eq!(a.decisions_adopted, b.decisions_adopted, "{tag}: adopted");
+                assert_eq!(a.decisions_deferred, b.decisions_deferred, "{tag}: deferred");
+                assert_bits(a.elapsed, b.elapsed, &tag);
+                assert_bits(a.throughput, b.throughput, &tag);
+                assert_bits(a.imbalance, b.imbalance, &tag);
+                assert_bits(a.migrated_fraction, b.migrated_fraction, &tag);
+                assert_bits(a.migration_pause, b.migration_pause, &tag);
+                assert_bits(a.bottleneck_ratio, b.bottleneck_ratio, &tag);
+                assert_vec_bits(&a.loads, &b.loads, &tag);
+            }
+            assert_eq!(seq.epoch(), par.epoch());
+            assert_bits(seq.vtime(), par.vtime(), "streaming vtime");
+            assert_stores_bitwise(seq.stores(), par.stores(), dc.policy.name());
+
+            let mut seq =
+                MicroBatchEngine::new(cfg(n, n, 1), dr, PartitionerChoice::Kip, seed);
+            let mut par =
+                MicroBatchEngine::new(cfg(n, n, threads), dr, PartitionerChoice::Kip, seed);
+            let manual: Vec<_> = batches.iter().map(|b| seq.run_batch(b)).collect();
+            let mut src = ReplaySource::new(batches.clone());
+            let streamed = par.run_stream(&mut src, 0, batches.len());
+            assert_eq!(manual.len(), streamed.len());
+            for (a, b) in manual.iter().zip(&streamed) {
+                let tag = format!(
+                    "{} microbatch batch {} ({threads} threads)",
+                    dc.policy.name(),
+                    a.batch_no
+                );
+                assert_eq!(a.batch_no, b.batch_no, "{tag}");
+                assert_eq!(a.repartitioned, b.repartitioned, "{tag}");
+                assert_eq!(a.epoch, b.epoch, "{tag}");
+                assert_eq!(a.decisions_adopted, b.decisions_adopted, "{tag}: adopted");
+                assert_eq!(a.decisions_deferred, b.decisions_deferred, "{tag}: deferred");
+                assert_bits(a.makespan, b.makespan, &tag);
+                assert_bits(a.map_time, b.map_time, &tag);
+                assert_bits(a.reduce_time, b.reduce_time, &tag);
+                assert_bits(a.migration_time, b.migration_time, &tag);
+                assert_bits(a.imbalance, b.imbalance, &tag);
+                assert_bits(a.migrated_fraction, b.migrated_fraction, &tag);
+                assert_vec_bits(&a.loads, &b.loads, &tag);
+            }
+            assert_eq!(seq.epoch(), par.epoch());
+            assert_bits(
+                seq.total_state_weight(),
+                par.total_state_weight(),
+                "microbatch state weight",
+            );
+            assert_stores_bitwise(seq.stores(), par.stores(), dc.policy.name());
+        }
+    });
+}
+
+/// The backoff invariant: once the CostModel adopts, no epoch bump can
+/// occur within `backoff_factor` barriers of the swap — and epoch bumps
+/// happen on adoptions only. Drift detection is disabled downward
+/// (`drift_boundary = -1`) and the horizon is enormous, so *only* the
+/// cooldown restrains the forced DRM.
+#[test]
+fn cost_model_backoff_gates_epoch_bumps() {
+    forall(6, |g| {
+        let backoff = g.u64(1..4);
+        let (batches, seed) = gen_churn_batches(g, 12);
+        let dr = DrConfig {
+            decider: DeciderConfig {
+                policy: DeciderPolicy::CostModel,
+                drift_boundary: -1.0,
+                backoff_factor: backoff,
+                horizon: 1e9,
+                ..Default::default()
+            },
+            ..DrConfig::forced()
+        };
+
+        let mut eng = StreamingEngine::new(cfg(6, 6, 1), dr, PartitionerChoice::Kip, seed);
+        let mut last_adopt: Option<u64> = None;
+        let mut prev_adopted = 0u64;
+        let mut prev_epoch = eng.epoch();
+        for (i, b) in batches.iter().enumerate() {
+            let r = eng.run_interval(b);
+            let barrier = i as u64 + 1;
+            if r.decisions_adopted > prev_adopted {
+                assert!(r.repartitioned, "adoption without a swap at barrier {barrier}");
+                assert!(r.epoch > prev_epoch, "adoption without an epoch bump");
+                if let Some(last) = last_adopt {
+                    assert!(
+                        barrier - last > backoff,
+                        "swap at barrier {barrier} inside the backoff window of {last} \
+                         (backoff_factor {backoff})"
+                    );
+                }
+                last_adopt = Some(barrier);
+            } else {
+                assert_eq!(
+                    r.epoch, prev_epoch,
+                    "epoch bump without an adoption at barrier {barrier}"
+                );
+                assert!(!r.repartitioned, "swap without an adoption at barrier {barrier}");
+            }
+            prev_adopted = r.decisions_adopted;
+            prev_epoch = r.epoch;
+        }
+        assert!(
+            prev_adopted >= 2,
+            "churning forced workload must adopt repeatedly (got {prev_adopted})"
+        );
+        // Forced DR makes every proposal worthwhile: no barrier is
+        // rejected, so the two tallies partition the barrier count.
+        assert_eq!(
+            prev_adopted + eng.decider().deferred(),
+            batches.len() as u64,
+            "adopted + deferred must cover every barrier"
+        );
+
+        // Same invariant on the micro-batch discipline (barrier before
+        // the batch instead of after it).
+        let mut eng = MicroBatchEngine::new(cfg(6, 6, 1), dr, PartitionerChoice::Kip, seed);
+        let mut last_adopt: Option<u64> = None;
+        let mut prev_adopted = 0u64;
+        let mut prev_epoch = eng.epoch();
+        for (i, b) in batches.iter().enumerate() {
+            let r = eng.run_batch(b);
+            let barrier = i as u64 + 1;
+            if r.decisions_adopted > prev_adopted {
+                if let Some(last) = last_adopt {
+                    assert!(
+                        barrier - last > backoff,
+                        "microbatch swap at barrier {barrier} inside the backoff window"
+                    );
+                }
+                last_adopt = Some(barrier);
+            } else {
+                assert_eq!(r.epoch, prev_epoch, "microbatch epoch bump without adoption");
+            }
+            prev_adopted = r.decisions_adopted;
+            prev_epoch = r.epoch;
+        }
+    });
+}
+
+/// The Retentive cap binds exactly: every adopted swap's *measured*
+/// migrated fraction stays ≤ the configured cap — which can only hold
+/// because the barrier's store-walk prediction equals
+/// `apply_epoch_swap`'s measurement bitwise (same stores, same order,
+/// same accumulation).
+#[test]
+fn retentive_cap_binds_bitwise_on_every_adopted_swap() {
+    forall(6, |g| {
+        let cap = g.f64(0.15..0.5);
+        let weight = g.f64(0.0..1.0);
+        let seed = g.u64(1..1 << 20);
+        let keys = g.usize(1_000..5_000);
+        let exponent = g.f64(0.9..1.5);
+        let per_batch = g.usize(3_000..8_000);
+        let mut z = Zipf::new(keys, exponent, seed);
+        let batches: Vec<Vec<Record>> = (0..8).map(|_| z.batch(per_batch)).collect();
+        let dr = DrConfig {
+            decider: DeciderConfig {
+                policy: DeciderPolicy::Retentive,
+                max_migration: cap,
+                retentive_weight: weight,
+                ..Default::default()
+            },
+            ..DrConfig::forced()
+        };
+
+        let mut eng = StreamingEngine::new(cfg(6, 6, 1), dr, PartitionerChoice::Kip, seed);
+        let mut adopted = 0u64;
+        for (i, b) in batches.iter().enumerate() {
+            let r = eng.run_interval(b);
+            if r.repartitioned {
+                adopted += 1;
+                assert!(
+                    r.migrated_fraction <= cap,
+                    "adopted swap at interval {} migrated {} > cap {cap}",
+                    i + 1,
+                    r.migrated_fraction
+                );
+            }
+            assert_eq!(r.decisions_adopted, adopted, "adopt tally != swap count");
+            // Forced DR: every barrier is worthwhile, so whatever is not
+            // adopted is deferred — never silently dropped.
+            assert_eq!(
+                r.decisions_adopted + r.decisions_deferred,
+                i as u64 + 1,
+                "tallies must partition the barriers"
+            );
+        }
+
+        let mut eng = MicroBatchEngine::new(cfg(6, 6, 1), dr, PartitionerChoice::Kip, seed);
+        for b in &batches {
+            let r = eng.run_batch(b);
+            if r.repartitioned {
+                assert!(
+                    r.migrated_fraction <= cap,
+                    "microbatch adopted swap migrated {} > cap {cap}",
+                    r.migrated_fraction
+                );
+            }
+        }
+    });
+
+    // Non-vacuity: with the cap and stickiness slack, the retentive
+    // decider does adopt on a skewed stream — the forall above is not
+    // quietly testing an engine that never swaps.
+    let dr = DrConfig {
+        decider: DeciderConfig {
+            policy: DeciderPolicy::Retentive,
+            max_migration: 1.0,
+            retentive_weight: 0.0,
+            ..Default::default()
+        },
+        ..DrConfig::forced()
+    };
+    let mut z = Zipf::new(4_000, 1.3, 7);
+    let mut eng = StreamingEngine::new(cfg(6, 6, 1), dr, PartitionerChoice::Kip, 7);
+    for _ in 0..8 {
+        eng.run_interval(&z.batch(10_000));
+    }
+    assert!(
+        eng.decider().adopted() >= 1,
+        "a slack retentive gate must adopt on a skewed stream"
+    );
+}

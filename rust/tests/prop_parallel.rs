@@ -10,9 +10,10 @@
 //! Replay failures with `PROP_SEED=<seed> PROP_CASES=1`.
 
 use dynrepart::ddps::{
-    decision_point_sharded, tap_records_sharded, BatchJob, EngineConfig, MicroBatchEngine,
-    StreamingEngine, TapAssignment,
+    decision_point_sharded, pipeline, tap_records_sharded, BatchJob, Discipline, EngineConfig,
+    EngineCore, MicroBatchEngine, StreamingEngine, TapAssignment,
 };
+use std::time::Instant;
 use dynrepart::dr::{DrConfig, DrMaster, DrWorker, PartitionerChoice};
 use dynrepart::partitioner::GedikStrategy;
 use dynrepart::prop::{forall, Gen};
@@ -505,5 +506,50 @@ fn batch_job_reports_identical_across_thread_counts() {
         assert_bits(rs.replay_time, rp.replay_time, "replay_time");
         assert_bits(rs.imbalance, rp.imbalance, "imbalance");
         assert_vec_bits(&rs.loads, &rp.loads, "loads");
+    });
+}
+
+/// The measured decision-latency column is real, not the stage's
+/// hardwired placeholder: every step reports a non-negative
+/// `decision_wall_s`, the stage-level column agrees with the step's
+/// bitwise, and the per-report values accumulate exactly into
+/// [`EngineMetrics::decision_wall_s`].
+///
+/// [`EngineMetrics::decision_wall_s`]: dynrepart::ddps::EngineMetrics
+#[test]
+fn decision_wall_s_is_measured_and_threaded_through() {
+    forall(6, |g| {
+        let n = g.usize(2..8);
+        let threads = g.usize(1..5);
+        let (batches, seed) = gen_batches(g, 3);
+        let dr = gen_dr(g);
+        for disc in [Discipline::MicroBatch, Discipline::Streaming] {
+            let mut core =
+                EngineCore::new(cfg(n, n, threads), dr, PartitionerChoice::Kip, n, seed);
+            for b in &batches {
+                let step =
+                    pipeline::lockstep_step(&mut core, b, disc, 0.0, Instant::now(), &mut |_, _| {});
+                assert!(
+                    step.decision_wall_s >= 0.0,
+                    "decision_wall_s must be a non-negative measurement"
+                );
+                assert_bits(
+                    step.stage.decision_wall_s,
+                    step.decision_wall_s,
+                    "the stage column must mirror the decision point the step ran",
+                );
+            }
+        }
+        let mut eng = MicroBatchEngine::new(cfg(n, n, threads), dr, PartitionerChoice::Kip, seed);
+        let mut sum = 0.0f64;
+        for b in &batches {
+            sum += eng.run_batch(b).decision_wall_s;
+        }
+        assert_bits(
+            sum,
+            eng.metrics().decision_wall_s,
+            "per-report decision walls must accumulate into the metrics",
+        );
+        assert!(sum > 0.0, "three decision points take measurable wall time");
     });
 }

@@ -5,6 +5,7 @@
 //! same conf files the CLI runs (`scenarios/*.conf`), so the shipped
 //! configs are themselves under test.
 
+use dynrepart::dr::DrConfig;
 use dynrepart::prop::forall;
 use dynrepart::scenario::{EventKind, Scenario, ScenarioConfig, ScenarioReport};
 use std::path::Path;
@@ -130,6 +131,89 @@ fn diurnal_microbatch_is_thread_invariant() {
     assert_reports_bitwise(&r1, &r4);
 }
 
+/// The backpressure story the burst event exists for: under a skewed
+/// stream with a one-shot arrival burst, a pinned hash path (DR
+/// disabled) holds a partition above its service capacity and the
+/// backlog only grows — while the shipped Threshold-decider conf
+/// flattens the skew, keeps headroom on every partition, and drains the
+/// burst over the remaining intervals.
+#[test]
+fn threshold_decider_recovers_the_burst_backlog_a_pinned_path_cannot() {
+    let cfg = trimmed("backpressure_burst.conf", 31);
+    let gated = run_with_threads(cfg.clone(), 1);
+    let mut pinned_cfg = cfg;
+    pinned_cfg.dr = DrConfig::disabled();
+    let pinned = run_with_threads(pinned_cfg, 1);
+
+    let burst_at = gated
+        .rows
+        .iter()
+        .position(|r| !r.event.is_empty())
+        .expect("the conf ships a burst event");
+    assert!(gated.rows[burst_at].event.starts_with("burst"), "{:?}", gated.rows[burst_at].event);
+
+    // Pinned: the hot partition sits above capacity, so the standing
+    // backlog keeps climbing after the burst instead of draining.
+    let pinned_last = pinned.rows.last().unwrap().max_backlog();
+    assert!(
+        pinned_last > pinned.rows[burst_at].max_backlog(),
+        "the pinned path's backlog must keep growing after the burst"
+    );
+    assert!(pinned_last > 0.0);
+
+    // Gated: the burst shows up as a backlog spike, then drains.
+    let gated_peak = gated.rows.iter().map(|r| r.max_backlog()).fold(0.0, f64::max);
+    let gated_last = gated.rows.last().unwrap().max_backlog();
+    assert!(gated_peak > 0.0, "the burst must charge a visible backlog");
+    assert!(
+        gated_last < gated_peak,
+        "the gated path must drain the burst backlog (peak {gated_peak}, final {gated_last})"
+    );
+    assert!(
+        gated_last < pinned_last,
+        "restrained-but-adaptive routing must beat the pinned path \
+         (gated {gated_last} vs pinned {pinned_last})"
+    );
+    assert!(
+        gated.rows.last().unwrap().adopted >= 1,
+        "the threshold decider must have adopted at least one swap"
+    );
+}
+
+/// The decider matrix's headline contrast (EXPERIMENTS.md "Eager vs
+/// restrained repartitioning"): on the identical hotspot-flip workload,
+/// the CostModel conf adopts far fewer swaps and accumulates less
+/// migration than the Naive conf, at comparable end-state imbalance.
+#[test]
+fn cost_model_beats_naive_on_cumulative_migration_for_the_flip_matrix() {
+    let naive = run_with_threads(trimmed("decider_flip_naive.conf", 42), 1);
+    let restrained = run_with_threads(trimmed("decider_flip_costmodel.conf", 42), 1);
+    let ln = naive.rows.last().unwrap();
+    let lr = restrained.rows.last().unwrap();
+    // Forced DR + Naive adopts at every one of the 12 barriers.
+    assert_eq!(ln.adopted, naive.rows.len() as u64, "naive must adopt every barrier");
+    assert_eq!(ln.deferred, 0);
+    assert!(
+        lr.adopted < ln.adopted,
+        "cost-model must adopt fewer swaps ({} vs {})",
+        lr.adopted,
+        ln.adopted
+    );
+    assert!(lr.deferred > 0, "restraint must be visible in the deferred tally");
+    assert!(
+        lr.cum_migrated < ln.cum_migrated,
+        "cost-model must migrate less cumulative state ({} vs {})",
+        lr.cum_migrated,
+        ln.cum_migrated
+    );
+    assert!(
+        lr.imbalance <= ln.imbalance * 1.5 + 0.1,
+        "restraint must not wreck the end-state balance ({} vs {})",
+        lr.imbalance,
+        ln.imbalance
+    );
+}
+
 #[test]
 fn every_shipped_conf_parses_and_runs() {
     // each shipped scenario must stay loadable and complete end to end
@@ -146,5 +230,5 @@ fn every_shipped_conf_parses_and_runs() {
         assert!(!report.rows.is_empty(), "{name} produced no rows");
         assert!(report.table().n_rows() > 0);
     }
-    assert!(seen >= 4, "expected at least 4 shipped scenario configs, found {seen}");
+    assert!(seen >= 9, "expected at least 9 shipped scenario configs, found {seen}");
 }
