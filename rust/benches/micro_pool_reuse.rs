@@ -1,0 +1,196 @@
+//! Pool reuse: per-interval overhead of the persistent worker pool
+//! (parked threads + recycled [`RoutedBatch`] scratch) vs the
+//! per-call-spawn executor it replaced. The baseline below reimplements
+//! the old `thread::scope` route + shuffle verbatim — fresh OS threads
+//! and fresh `Vec<Vec<u32>>` buckets every interval — so the speedup
+//! column isolates exactly what the pool removes: thread creation,
+//! bucket allocation and the shard-accumulator copy-merge. Results are
+//! bitwise-identical across all three paths (asserted at the end).
+//! See EXPERIMENTS.md "Pool reuse".
+use dynrepart::bench::{bench_with, black_box, header, BenchOpts};
+use dynrepart::ddps::exec::parallel::{route_into, shard_ranges, shuffle_sharded};
+use dynrepart::ddps::exec::pool::WorkerPool;
+use dynrepart::partitioner::{EpochedPartitioner, PartitionerEpoch, Uhp};
+use dynrepart::state::StateStore;
+use dynrepart::workload::{zipf::Zipf, Generator, Record};
+use std::sync::Arc;
+
+/// The shard width `shard_ranges` derives from (private in the library;
+/// replicated here so the baseline buckets by the same decomposition).
+fn shard_chunk(n: usize, shards: usize) -> usize {
+    n.div_ceil(shards.max(1)).max(1)
+}
+
+/// The pre-pool executor, preserved as the baseline: one `thread::scope`
+/// spawn set per routing pass (per-chunk `Vec<Vec<u32>>` buckets,
+/// concatenated in chunk order) and another per reduce pass (per-shard
+/// accumulators copy-merged into the output in shard order). Every call
+/// pays thread creation and every allocation afresh — exactly what each
+/// interval paid before the pool.
+fn scoped_route_shuffle(
+    records: &[Record],
+    epoch: &PartitionerEpoch,
+    n_partitions: usize,
+    num_threads: usize,
+) -> (Vec<f64>, Vec<u64>) {
+    let rec_ranges = shard_ranges(records.len(), num_threads);
+    let part_ranges = shard_ranges(n_partitions, num_threads);
+    let n_shards = part_ranges.len();
+    let pc = shard_chunk(n_partitions, num_threads);
+
+    let mut routes: Vec<u32> = Vec::with_capacity(records.len());
+    let mut shard_indices: Vec<Vec<u32>> = vec![Vec::new(); n_shards];
+    std::thread::scope(|s| {
+        let handles: Vec<_> = rec_ranges
+            .iter()
+            .cloned()
+            .map(|range| {
+                s.spawn(move || {
+                    let mut routes = Vec::with_capacity(range.len());
+                    let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); n_shards];
+                    for i in range {
+                        let p = epoch.partition(records[i].key);
+                        routes.push(p as u32);
+                        buckets[p / pc].push(i as u32);
+                    }
+                    (routes, buckets)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (r, buckets) = h.join().expect("scoped route worker panicked");
+            routes.extend_from_slice(&r);
+            for (group, bucket) in shard_indices.iter_mut().zip(buckets) {
+                group.extend_from_slice(&bucket);
+            }
+        }
+    });
+
+    let mut loads = vec![0.0f64; n_partitions];
+    let mut record_counts = vec![0u64; n_partitions];
+    std::thread::scope(|s| {
+        let routes = &routes;
+        let handles: Vec<_> = part_ranges
+            .iter()
+            .cloned()
+            .enumerate()
+            .map(|(s_idx, range)| {
+                let indices = &shard_indices[s_idx];
+                s.spawn(move || {
+                    let mut l = vec![0.0f64; range.len()];
+                    let mut c = vec![0u64; range.len()];
+                    for &i in indices {
+                        let r = &records[i as usize];
+                        let p = routes[i as usize] as usize - range.start;
+                        l[p] += r.weight;
+                        c[p] += 1;
+                    }
+                    (range, l, c)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (range, l, c) = h.join().expect("scoped shuffle worker panicked");
+            loads[range.clone()].copy_from_slice(&l);
+            record_counts[range].copy_from_slice(&c);
+        }
+    });
+    (loads, record_counts)
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let n_partitions = 32;
+    let keys = 50_000;
+    let sizes: &[usize] = if quick {
+        &[1_000, 10_000]
+    } else {
+        &[1_000, 10_000, 100_000]
+    };
+    let opts = BenchOpts {
+        budget_s: if quick { 0.4 } else { 1.0 },
+        ..Default::default()
+    };
+
+    let ep = EpochedPartitioner::new(Arc::new(Uhp::with_seed(n_partitions, 7))).current();
+    for &n_records in sizes {
+        let mut z = Zipf::new(keys, 1.1, 7);
+        let recs = z.batch(n_records);
+        header(&format!("route + shuffle, {n_records} records x {n_partitions} partitions"));
+        for threads in [4usize, 8] {
+            let base = bench_with(
+                &format!("per-call spawn (old), {threads} thread(s)"),
+                opts,
+                &mut || {
+                    black_box(scoped_route_shuffle(&recs, &ep, n_partitions, threads));
+                },
+            );
+            println!(
+                "{}  ({:.2} Mrec/s)",
+                base.report(),
+                base.throughput(n_records as f64) / 1e6
+            );
+            let pool = WorkerPool::for_threads(threads);
+            let pooled = bench_with(
+                &format!("persistent pool,      {threads} thread(s)"),
+                opts,
+                &mut || {
+                    let mut routed = pool.take_routed();
+                    route_into(&mut routed, &recs, &ep, threads);
+                    black_box(shuffle_sharded(&recs, &routed, n_partitions, None, threads));
+                    pool.put_routed(routed);
+                },
+            );
+            println!(
+                "{}  ({:.2} Mrec/s)  spawn overhead removed: {:.2}x",
+                pooled.report(),
+                pooled.throughput(n_records as f64) / 1e6,
+                base.mean_ns / pooled.mean_ns
+            );
+        }
+    }
+
+    // Identity assertion: pooled, per-call-spawn and sequential must agree
+    // bitwise on loads, counts and keyed state.
+    let mut z = Zipf::new(keys, 1.2, 13);
+    let recs = z.batch(40_007);
+    let mut loads_seq = vec![0.0f64; n_partitions];
+    let mut counts_seq = vec![0u64; n_partitions];
+    let mut stores_seq: Vec<StateStore> = (0..n_partitions).map(|_| StateStore::new()).collect();
+    for r in &recs {
+        let p = ep.partition(r.key);
+        loads_seq[p] += r.weight;
+        counts_seq[p] += 1;
+        stores_seq[p].fold_count(r.key, r.weight);
+    }
+    for threads in [4usize, 8] {
+        let (loads_old, counts_old) = scoped_route_shuffle(&recs, &ep, n_partitions, threads);
+        let pool = WorkerPool::for_threads(threads);
+        let mut routed = pool.take_routed();
+        route_into(&mut routed, &recs, &ep, threads);
+        let mut stores: Vec<StateStore> = (0..n_partitions).map(|_| StateStore::new()).collect();
+        let (loads, counts) =
+            shuffle_sharded(&recs, &routed, n_partitions, Some(stores.as_mut_slice()), threads);
+        pool.put_routed(routed);
+        assert_eq!(counts, counts_seq, "{threads} threads: counts");
+        assert_eq!(counts, counts_old, "{threads} threads: counts vs old executor");
+        for (p, (a, b)) in loads.iter().zip(&loads_seq).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{threads} threads: load bits, partition {p}");
+        }
+        for (a, b) in loads.iter().zip(&loads_old) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{threads} threads: load bits vs old executor");
+        }
+        for (s, r) in stores.iter().zip(&stores_seq) {
+            assert_eq!(s.n_keys(), r.n_keys(), "{threads} threads: state keys");
+            assert_eq!(
+                s.total_weight().to_bits(),
+                r.total_weight().to_bits(),
+                "{threads} threads: state weight bits"
+            );
+            for k in r.keys() {
+                assert_eq!(s.get(k), r.get(k), "{threads} threads: key {k} state");
+            }
+        }
+    }
+    println!("\npooled executor bitwise-identical to per-call spawn and sequential: ok");
+}

@@ -25,7 +25,7 @@
 //! | mode       | `num_threads` | execution                                             |
 //! |------------|---------------|-------------------------------------------------------|
 //! | sequential | `= 1`         | the single-threaded reference loop (default)          |
-//! | parallel   | `> 1`         | [`parallel`]: scoped workers, one contiguous partition shard each, lock-free per-shard state stores, merged in partition order |
+//! | parallel   | `> 1`         | [`parallel`]: persistent pool workers ([`pool`]), one contiguous partition shard each, lock-free per-shard state stores, disjoint writes in partition order |
 //!
 //! Both modes produce bitwise-identical reports; virtual time is the
 //! scheduling *model* and never depends on the thread count, while the
@@ -34,13 +34,19 @@
 //! shows up. The same knob shards the DRM side: DRW taps and harvests
 //! ride the executor's sharding ([`tap_records_sharded`],
 //! [`decision_point_sharded`]), and the decision point itself — histogram
-//! tree-merge and candidate construction — runs on scoped workers through
-//! [`dr::parallel`](crate::dr::parallel) (DESIGN.md "Sharded DRM decision
-//! point"), so no serial region is left between the parallel shards.
+//! tree-merge and candidate construction — runs on the same persistent
+//! worker pool through [`dr::parallel`](crate::dr::parallel) (DESIGN.md
+//! "Sharded DRM decision point"), so no serial region is left between the
+//! parallel shards. All of it dispatches onto one long-lived
+//! [`pool::WorkerPool`] per thread width (parked threads, recycled
+//! scratch buffers — no per-interval spawns or reallocations; DESIGN.md
+//! "Persistent worker pool and scratch arenas").
 
 pub mod parallel;
+pub mod pool;
 
 pub use parallel::{harvest_sharded, tap_records_sharded};
+pub use pool::WorkerPool;
 
 use super::{EngineConfig, EngineMetrics};
 use crate::dr::{DecisionProposal, DrDecision, DrMaster, DrWorker};
@@ -90,7 +96,7 @@ pub fn decision_point(drm: &mut DrMaster, workers: &mut [DrWorker]) -> DrDecisio
 }
 
 /// [`decision_point`] with the whole decision point sharded over
-/// `num_threads` scoped workers: the DRW harvests ride
+/// `num_threads` persistent pool workers ([`pool`]): the DRW harvests ride
 /// [`parallel::harvest_sharded`] (contiguous shards joined in worker
 /// order, so the DRM receives exactly the sequential histogram sequence),
 /// and the DRM itself merges and constructs sharded
@@ -218,8 +224,10 @@ impl<'a> ShuffleStage<'a> {
     /// and account virtual time. The spill model (`reduce_task_time`)
     /// applies under [`Scheduling::Wave`]; the pinned model is gated by
     /// the bottleneck reducer. With `cfg.num_threads > 1` the routing and
-    /// the keyed reduce run sharded on scoped workers ([`parallel`]); both
-    /// paths produce bitwise-identical loads, counts and state.
+    /// the keyed reduce run sharded on the persistent worker pool
+    /// ([`parallel`], [`pool`]), with the routing buffers recycled
+    /// through the pool's scratch arena; both paths produce
+    /// bitwise-identical loads, counts and state.
     pub fn run(
         &self,
         records: &[Record],
@@ -233,14 +241,18 @@ impl<'a> ShuffleStage<'a> {
         // Shuffle: route by the epoch's function; gather loads and fold
         // keyed state exactly as the reducers would.
         let (loads, record_counts) = if self.cfg.num_threads > 1 {
-            let routed = parallel::route(records, epoch, self.cfg.num_threads);
-            parallel::shuffle_sharded(
+            let pool = pool::WorkerPool::for_threads(self.cfg.num_threads);
+            let mut routed = pool.take_routed();
+            parallel::route_into(&mut routed, records, epoch, self.cfg.num_threads);
+            let out = parallel::shuffle_sharded(
                 records,
                 &routed,
                 n,
                 state.as_deref_mut(),
                 self.cfg.num_threads,
-            )
+            );
+            pool.put_routed(routed);
+            out
         } else {
             let mut loads = vec![0.0f64; n];
             let mut record_counts = vec![0u64; n];

@@ -4,24 +4,32 @@
 //! The paper's 1.5–6× speedups come from DR flattening partition load so
 //! that *parallel* reducers finish together. The sequential path only
 //! models that with virtual time; this module runs one stage's reduce
-//! partitions on real `std::thread::scope` workers so the spill/imbalance
-//! model can be validated against actual parallel execution:
+//! partitions on the persistent [`WorkerPool`](super::pool::WorkerPool)
+//! gang (parked threads, one pool per thread width — no per-call spawns)
+//! so the spill/imbalance model can be validated against actual parallel
+//! execution:
 //!
-//! - **Routing** ([`route`]): records are split into contiguous chunks,
-//!   one per thread, and each thread routes its chunk through the shared
-//!   [`PartitionerEpoch`] snapshot (epoch snapshots are `Arc`-cloneable
-//!   and every `Partitioner` is `Send + Sync`, so the snapshot is shared
-//!   by reference) while bucketing record indices by owning shard.
+//! - **Routing** ([`route`] / [`route_into`]): records are split into
+//!   contiguous chunks, one per pool task, and each task routes its
+//!   chunk through the shared [`PartitionerEpoch`] snapshot (epoch
+//!   snapshots are `Arc`-cloneable and every `Partitioner` is
+//!   `Send + Sync`, so the snapshot is shared by reference) while
+//!   counting records per owning shard. A serial prefix sum over the
+//!   per-(chunk, shard) counts then sizes one flat index table, and a
+//!   second pass scatters each chunk's record indices to its
+//!   pre-computed cursors — the flat [`RoutedBatch`] reuses its buffers
+//!   across intervals via the pool's scratch arena, allocating nothing
+//!   once warm.
 //! - **Keyed reduce** ([`shuffle_sharded`]): partitions are split into
-//!   contiguous *shards*, one per thread ([`shard_ranges`]). Each shard
-//!   worker owns its partitions' loads, record counts and
+//!   contiguous *shards*, one per pool task ([`shard_ranges`]). Each
+//!   shard task owns its partitions' loads, record counts and
 //!   [`StateStore`]s outright — keyed reduce needs no locks — and visits
-//!   only its own records ([`RoutedBatch`]'s index buckets) in input
-//!   order, so every per-partition f64 accumulation happens in exactly
-//!   the sequential order and total work stays O(records). Per-shard
-//!   results are merged in partition order. Reports are therefore
-//!   **bitwise-identical** to the sequential path, independent of the
-//!   thread count.
+//!   only its own records ([`RoutedBatch`]'s per-shard index runs) in
+//!   input order, so every per-partition f64 accumulation happens in
+//!   exactly the sequential order and total work stays O(records).
+//!   Shard tasks write disjoint partition ranges of the final output
+//!   buffers directly. Reports are therefore **bitwise-identical** to
+//!   the sequential path, independent of the thread count.
 //! - **DRW taps and harvests** ([`tap_records_sharded`],
 //!   [`harvest_sharded`]): the same sharding applied to the
 //!   [`DrWorker`]s, preserving each DRW's observation/harvest sequence so
@@ -56,6 +64,7 @@
 //! assert_eq!(p.stage_time, s.stage_time); // identical virtual time
 //! ```
 
+use super::pool::{SharedSlice, WorkerPool};
 use super::TapAssignment;
 use crate::dr::DrWorker;
 use crate::partitioner::PartitionerEpoch;
@@ -63,7 +72,6 @@ use crate::sketch::Histogram;
 use crate::state::StateStore;
 use crate::workload::Record;
 use std::ops::Range;
-use std::thread;
 
 /// The shard width [`shard_ranges`] cuts `0..n` into: every sharded step
 /// of one stage derives its `chunks_mut` decomposition from this same
@@ -73,9 +81,10 @@ fn shard_chunk(n: usize, shards: usize) -> usize {
 }
 
 /// Split `0..n` into at most `shards` contiguous, equal-as-possible,
-/// non-empty ranges (fewer when `n < shards`). The ranges line up exactly
-/// with `slice.chunks_mut(shard_chunk(n, shards))` over a slice of
-/// length `n`.
+/// non-empty ranges (fewer when `n < shards`; **none** when `n == 0` —
+/// callers treat the empty decomposition as a no-op). The ranges line up
+/// exactly with `slice.chunks_mut(shard_chunk(n, shards))` over a slice
+/// of length `n`.
 pub fn shard_ranges(n: usize, shards: usize) -> Vec<Range<usize>> {
     let chunk = shard_chunk(n, shards);
     (0..n)
@@ -86,96 +95,153 @@ pub fn shard_ranges(n: usize, shards: usize) -> Vec<Range<usize>> {
 
 /// One routed batch: the partition index per record (input order) plus,
 /// for each partition shard, the indices of the records it owns — also in
-/// input order, so shard workers can replay exactly the sequential
+/// input order, so shard tasks can replay exactly the sequential
 /// accumulation order while touching only their own records.
+///
+/// The per-shard index lists live in one flat `Vec<u32>` addressed
+/// through a per-shard offset table ([`RoutedBatch::shard_indices`]),
+/// built by a counting pass + prefix sum in [`route_into`]; all four
+/// buffers retain capacity across intervals when the batch is recycled
+/// through the pool's scratch arena
+/// ([`WorkerPool::take_routed`](super::pool::WorkerPool::take_routed)).
+#[derive(Debug, Default)]
 pub struct RoutedBatch {
     /// Partition index per record, in input order.
     pub routes: Vec<u32>,
-    /// Record indices owned by each shard (shards as per [`shard_ranges`]
-    /// over `(epoch.n_partitions(), num_threads)`), each in input order.
-    pub shard_indices: Vec<Vec<u32>>,
+    /// Record indices grouped by owning shard, each group in input order.
+    flat: Vec<u32>,
+    /// `flat[offsets[s]..offsets[s + 1]]` is shard `s`'s group.
+    offsets: Vec<usize>,
+    /// Per-(chunk, shard) counting matrix, then scatter cursors; kept
+    /// only so its allocation is reused across intervals.
+    counts: Vec<u32>,
 }
 
-/// Route every record through `epoch` on `num_threads` scoped workers.
-/// One contiguous record chunk per thread; each thread also buckets its
-/// chunk's record indices by owning shard, and the per-chunk buckets are
-/// concatenated in chunk order — so every shard's index list is in input
-/// order and the result is identical to the sequential map (routing is
-/// pure).
-pub fn route(records: &[Record], epoch: &PartitionerEpoch, num_threads: usize) -> RoutedBatch {
+impl RoutedBatch {
+    /// Number of partition shards this batch was routed for (the length
+    /// of `shard_ranges(n_partitions, num_threads)` at build time).
+    pub fn n_shards(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    /// The record indices owned by partition shard `shard`, in input
+    /// order.
+    pub fn shard_indices(&self, shard: usize) -> &[u32] {
+        &self.flat[self.offsets[shard]..self.offsets[shard + 1]]
+    }
+}
+
+/// [`route`] into a recycled [`RoutedBatch`], reusing its buffers.
+///
+/// Records are routed in contiguous chunks, one per pool task. Pass A
+/// routes each chunk through `epoch` while counting its records per
+/// owning shard; a serial shard-major prefix sum turns the
+/// per-(chunk, shard) counts into scatter cursors (and the per-shard
+/// offset table); pass B scatters each chunk's record indices to its
+/// cursors. Within a shard the groups land chunk-ascending with input
+/// order inside each chunk — i.e. global input order, identical to the
+/// sequential map (routing is pure).
+///
+/// Empty input (`records` empty, or an epoch with zero partitions) is a
+/// no-op: the batch comes back with no routes and no shard groups.
+pub fn route_into(
+    out: &mut RoutedBatch,
+    records: &[Record],
+    epoch: &PartitionerEpoch,
+    num_threads: usize,
+) {
     debug_assert!(records.len() <= u32::MAX as usize);
     let n_partitions = epoch.n_partitions();
-    let n_shards = shard_ranges(n_partitions, num_threads).len();
+    let shard_count = shard_ranges(n_partitions, num_threads).len();
     let part_chunk = shard_chunk(n_partitions, num_threads);
-    let mut routes = vec![0u32; records.len()];
+    out.routes.clear();
+    out.flat.clear();
+    out.offsets.clear();
+    out.offsets.resize(shard_count + 1, 0);
+    if records.is_empty() || shard_count == 0 {
+        return;
+    }
+    out.routes.resize(records.len(), 0);
+    out.flat.resize(records.len(), 0);
+    let rec_ranges = shard_ranges(records.len(), num_threads);
+    let n_chunks = rec_ranges.len();
+    out.counts.clear();
+    out.counts.resize(n_chunks * shard_count, 0);
+    let pool = WorkerPool::for_threads(num_threads);
 
-    if num_threads <= 1 || records.len() <= 1 {
-        let mut shard_indices: Vec<Vec<u32>> = vec![Vec::new(); n_shards];
-        for (i, r) in records.iter().enumerate() {
-            let p = epoch.partition(r.key);
-            routes[i] = p as u32;
-            shard_indices[p / part_chunk].push(i as u32);
-        }
-        return RoutedBatch {
-            routes,
-            shard_indices,
-        };
+    // Pass A: route each chunk, counting records per (chunk, shard).
+    {
+        let routes = SharedSlice::new(&mut out.routes);
+        let counts = SharedSlice::new(&mut out.counts);
+        let ranges = &rec_ranges;
+        pool.run(n_chunks, &|c| {
+            let range = ranges[c].clone();
+            // Safety: chunk ranges are disjoint, and each task owns
+            // exactly its own row of the counting matrix.
+            let routes = unsafe { routes.slice(range.clone()) };
+            let row = unsafe { counts.slice(c * shard_count..(c + 1) * shard_count) };
+            for (o, r) in routes.iter_mut().zip(&records[range]) {
+                let p = epoch.partition(r.key);
+                *o = p as u32;
+                row[p / part_chunk] += 1;
+            }
+        });
     }
 
-    let chunk = shard_chunk(records.len(), num_threads);
-    let mut chunk_buckets: Vec<Vec<Vec<u32>>> = Vec::new();
-    thread::scope(|s| {
-        let handles: Vec<_> = records
-            .chunks(chunk)
-            .zip(routes.chunks_mut(chunk))
-            .enumerate()
-            .map(|(ci, (rec, out))| {
-                s.spawn(move || {
-                    let base = ci * chunk;
-                    let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); n_shards];
-                    for (j, (r, o)) in rec.iter().zip(out.iter_mut()).enumerate() {
-                        let p = epoch.partition(r.key);
-                        *o = p as u32;
-                        buckets[p / part_chunk].push((base + j) as u32);
-                    }
-                    buckets
-                })
-            })
-            .collect();
-        chunk_buckets = handles
-            .into_iter()
-            .map(|h| h.join().expect("route worker panicked"))
-            .collect();
-    });
-
-    // Concatenate per-chunk buckets in chunk order: input order per shard.
-    let mut shard_indices: Vec<Vec<u32>> = vec![Vec::new(); n_shards];
-    for buckets in chunk_buckets {
-        for (shard, mut bucket) in buckets.into_iter().enumerate() {
-            shard_indices[shard].append(&mut bucket);
+    // Serial shard-major prefix sum: per-(chunk, shard) counts become
+    // scatter cursors, and the running total becomes the offset table.
+    let mut acc = 0usize;
+    for s in 0..shard_count {
+        out.offsets[s] = acc;
+        for c in 0..n_chunks {
+            let cell = &mut out.counts[c * shard_count + s];
+            let v = *cell as usize;
+            *cell = acc as u32;
+            acc += v;
         }
     }
-    RoutedBatch {
-        routes,
-        shard_indices,
+    out.offsets[shard_count] = acc;
+    debug_assert_eq!(acc, records.len());
+
+    // Pass B: scatter record indices at each chunk's private cursors.
+    {
+        let flat = SharedSlice::new(&mut out.flat);
+        let counts = SharedSlice::new(&mut out.counts);
+        let routes: &[u32] = &out.routes;
+        let ranges = &rec_ranges;
+        pool.run(n_chunks, &|c| {
+            // Safety: the cursor row is task-private, and the prefix sum
+            // hands every (chunk, shard) cell a disjoint run of `flat`.
+            let row = unsafe { counts.slice(c * shard_count..(c + 1) * shard_count) };
+            for i in ranges[c].clone() {
+                let shard = routes[i] as usize / part_chunk;
+                unsafe { flat.write(row[shard] as usize, i as u32) };
+                row[shard] += 1;
+            }
+        });
     }
 }
 
-/// What one shard worker hands back: its partitions' loads and record
-/// counts, indexed relative to the shard's range start.
-struct ShardAccum {
-    loads: Vec<f64>,
-    record_counts: Vec<u64>,
+/// Route every record through `epoch` on the `num_threads`-wide worker
+/// pool into a fresh [`RoutedBatch`]. Hot paths should prefer
+/// [`route_into`] with a batch recycled from the pool's scratch arena.
+pub fn route(records: &[Record], epoch: &PartitionerEpoch, num_threads: usize) -> RoutedBatch {
+    let mut out = RoutedBatch::default();
+    route_into(&mut out, records, epoch, num_threads);
+    out
 }
 
 /// The sharded keyed reduce: accumulate a routed batch into per-partition
-/// loads, record counts and (optionally) keyed state, with one scoped
-/// worker per partition shard. Each worker owns a disjoint `&mut` slice
-/// of the stores (no locks) and visits *only its own records* (the
-/// [`RoutedBatch`] index buckets) in input order, so per-partition
-/// accumulation order — and hence every f64 sum and every `StateStore`'s
-/// insertion sequence — matches the sequential loop exactly, while total
-/// work stays O(records). Shard results are merged in partition order.
+/// loads, record counts and (optionally) keyed state, with one pool task
+/// per partition shard. Each task owns a disjoint partition range of the
+/// output buffers and the stores (no locks, no per-shard staging copies)
+/// and visits *only its own records* (the [`RoutedBatch`] index groups)
+/// in input order, so per-partition accumulation order — and hence every
+/// f64 sum and every `StateStore`'s insertion sequence — matches the
+/// sequential loop exactly, while total work stays O(records).
+///
+/// Empty input (`records` empty or `n_partitions == 0`) is a no-op
+/// returning the (possibly empty) zeroed buffers.
 ///
 /// `num_threads` must equal the value `routed` was built with (the shard
 /// decomposition is a pure function of `(n_partitions, num_threads)`).
@@ -183,63 +249,49 @@ pub fn shuffle_sharded(
     records: &[Record],
     routed: &RoutedBatch,
     n_partitions: usize,
-    state: Option<&mut [StateStore]>,
+    mut state: Option<&mut [StateStore]>,
     num_threads: usize,
 ) -> (Vec<f64>, Vec<u64>) {
     debug_assert_eq!(records.len(), routed.routes.len());
-    let ranges = shard_ranges(n_partitions, num_threads);
-    debug_assert_eq!(ranges.len(), routed.shard_indices.len());
-    let chunk = shard_chunk(n_partitions, num_threads);
-    let store_shards: Vec<Option<&mut [StateStore]>> = match state {
-        Some(stores) => {
-            debug_assert_eq!(stores.len(), n_partitions);
-            stores.chunks_mut(chunk).map(Some).collect()
-        }
-        None => ranges.iter().map(|_| None).collect(),
-    };
-
     let mut loads = vec![0.0f64; n_partitions];
     let mut record_counts = vec![0u64; n_partitions];
-    thread::scope(|s| {
-        let handles: Vec<_> = ranges
-            .iter()
-            .cloned()
-            .zip(&routed.shard_indices)
-            .zip(store_shards)
-            .map(|((range, indices), stores)| {
-                s.spawn(move || {
-                    let mut stores = stores;
-                    let base = range.start;
-                    let mut acc = ShardAccum {
-                        loads: vec![0.0; range.len()],
-                        record_counts: vec![0; range.len()],
-                    };
-                    for &i in indices {
-                        let r = &records[i as usize];
-                        let p = routed.routes[i as usize] as usize;
-                        acc.loads[p - base] += r.weight;
-                        acc.record_counts[p - base] += 1;
-                        if let Some(st) = stores.as_deref_mut() {
-                            st[p - base].fold_count(r.key, r.weight);
-                        }
-                    }
-                    acc
-                })
-            })
-            .collect();
-        // Deterministic merge: join shards in partition order.
-        for (range, h) in ranges.iter().zip(handles) {
-            let acc = h.join().expect("shard worker panicked");
-            loads[range.clone()].copy_from_slice(&acc.loads);
-            record_counts[range.clone()].copy_from_slice(&acc.record_counts);
+    if records.is_empty() || n_partitions == 0 {
+        return (loads, record_counts);
+    }
+    let ranges = shard_ranges(n_partitions, num_threads);
+    debug_assert_eq!(ranges.len(), routed.n_shards());
+    let pool = WorkerPool::for_threads(num_threads);
+    let loads_sh = SharedSlice::new(&mut loads);
+    let counts_sh = SharedSlice::new(&mut record_counts);
+    let stores_sh = state.as_deref_mut().map(|stores| {
+        debug_assert_eq!(stores.len(), n_partitions);
+        SharedSlice::new(stores)
+    });
+    let ranges_ref = &ranges;
+    pool.run(ranges_ref.len(), &|s_idx| {
+        let range = ranges_ref[s_idx].clone();
+        let base = range.start;
+        // Safety: partition shards are disjoint ranges of all three
+        // output buffers, and each task touches only its own range.
+        let loads = unsafe { loads_sh.slice(range.clone()) };
+        let counts = unsafe { counts_sh.slice(range.clone()) };
+        let mut stores = stores_sh.as_ref().map(|sh| unsafe { sh.slice(range.clone()) });
+        for &i in routed.shard_indices(s_idx) {
+            let r = &records[i as usize];
+            let p = routed.routes[i as usize] as usize;
+            loads[p - base] += r.weight;
+            counts[p - base] += 1;
+            if let Some(st) = &mut stores {
+                st[p - base].fold_count(r.key, r.weight);
+            }
         }
     });
     (loads, record_counts)
 }
 
-/// [`tap_records`](super::tap_records) with the DRWs sharded over
-/// `num_threads` scoped workers (`<= 1` falls back to the sequential tap).
-/// Each worker owns a contiguous `&mut` slice of DRWs and replays exactly
+/// [`tap_records`](super::tap_records) with the DRWs sharded over the
+/// worker pool (`num_threads <= 1` falls back to the sequential tap).
+/// Each task owns a contiguous `&mut` slice of DRWs and replays exactly
 /// the observation subsequence the sequential tap would feed them, so
 /// sampling RNGs and counters advance identically.
 pub fn tap_records_sharded(
@@ -255,41 +307,44 @@ pub fn tap_records_sharded(
     let n_workers = workers.len();
     let per = records.len().div_ceil(n_workers).max(1);
     let ranges = shard_ranges(n_workers, num_threads);
-    let chunk = shard_chunk(n_workers, num_threads);
-    thread::scope(|s| {
-        for (range, shard) in ranges.iter().cloned().zip(workers.chunks_mut(chunk)) {
-            s.spawn(move || match assign {
-                TapAssignment::Chunked => {
-                    for (local, w) in range.clone().enumerate() {
-                        let start = (w * per).min(records.len());
-                        let end = ((w + 1) * per).min(records.len());
-                        for r in &records[start..end] {
-                            shard[local].observe(r.key, r.weight);
-                        }
+    let pool = WorkerPool::for_threads(num_threads);
+    let shared = SharedSlice::new(workers);
+    let ranges_ref = &ranges;
+    pool.run(ranges_ref.len(), &|s_idx| {
+        let range = ranges_ref[s_idx].clone();
+        // Safety: DRW shards are disjoint contiguous ranges.
+        let shard = unsafe { shared.slice(range.clone()) };
+        match assign {
+            TapAssignment::Chunked => {
+                for (local, w) in range.clone().enumerate() {
+                    let start = (w * per).min(records.len());
+                    let end = ((w + 1) * per).min(records.len());
+                    for r in &records[start..end] {
+                        shard[local].observe(r.key, r.weight);
                     }
                 }
-                TapAssignment::RoundRobin => {
-                    // Worker w owns records w, w + n, w + 2n, … — walk each
-                    // owned DRW's stride directly (no full-batch scan). The
-                    // sequential tap interleaves workers per record, but
-                    // per-DRW the observation order is this same ascending
-                    // stride, and DRWs share no state across workers.
-                    for (local, w) in range.clone().enumerate() {
-                        for i in (w..records.len()).step_by(n_workers) {
-                            let r = &records[i];
-                            shard[local].observe(r.key, r.weight);
-                        }
+            }
+            TapAssignment::RoundRobin => {
+                // Worker w owns records w, w + n, w + 2n, … — walk each
+                // owned DRW's stride directly (no full-batch scan). The
+                // sequential tap interleaves workers per record, but
+                // per-DRW the observation order is this same ascending
+                // stride, and DRWs share no state across workers.
+                for (local, w) in range.clone().enumerate() {
+                    for i in (w..records.len()).step_by(n_workers) {
+                        let r = &records[i];
+                        shard[local].observe(r.key, r.weight);
                     }
                 }
-            });
+            }
         }
     });
 }
 
-/// Harvest every DRW's local histogram with the DRWs sharded over
-/// `num_threads` scoped workers. Shards are contiguous and joined in
-/// order, so the DRM receives histograms in exactly the worker order the
-/// sequential harvest produces.
+/// Harvest every DRW's local histogram with the DRWs sharded over the
+/// worker pool. Shards are contiguous and write disjoint ranges of the
+/// output in place, so the DRM receives histograms in exactly the worker
+/// order the sequential harvest produces.
 pub fn harvest_sharded(
     workers: &mut [DrWorker],
     top_k: usize,
@@ -298,19 +353,22 @@ pub fn harvest_sharded(
     if num_threads <= 1 || workers.len() <= 1 {
         return workers.iter_mut().map(|w| w.harvest(top_k)).collect();
     }
-    let chunk = shard_chunk(workers.len(), num_threads);
-    thread::scope(|s| {
-        let handles: Vec<_> = workers
-            .chunks_mut(chunk)
-            .map(|shard| {
-                s.spawn(move || shard.iter_mut().map(|w| w.harvest(top_k)).collect::<Vec<_>>())
-            })
-            .collect();
-        handles
-            .into_iter()
-            .flat_map(|h| h.join().expect("harvest worker panicked"))
-            .collect()
-    })
+    let ranges = shard_ranges(workers.len(), num_threads);
+    let mut out = vec![Histogram::empty(); workers.len()];
+    let pool = WorkerPool::for_threads(num_threads);
+    let w_sh = SharedSlice::new(workers);
+    let o_sh = SharedSlice::new(&mut out);
+    let ranges_ref = &ranges;
+    pool.run(ranges_ref.len(), &|s_idx| {
+        let range = ranges_ref[s_idx].clone();
+        // Safety: worker and output shards are the same disjoint ranges.
+        let shard = unsafe { w_sh.slice(range.clone()) };
+        let outs = unsafe { o_sh.slice(range) };
+        for (w, o) in shard.iter_mut().zip(outs) {
+            *o = w.harvest(top_k);
+        }
+    });
+    out
 }
 
 #[cfg(test)]
@@ -345,6 +403,10 @@ mod tests {
                 assert_eq!(*p, r.len(), "n={n} shards={shards}");
             }
         }
+        // the n == 0 edge is a documented empty decomposition
+        for shards in [1, 4, 16] {
+            assert!(shard_ranges(0, shards).is_empty(), "shards={shards}");
+        }
     }
 
     #[test]
@@ -359,9 +421,17 @@ mod tests {
             assert_eq!(par.routes, seq.routes, "{threads} threads");
             // buckets: every record exactly once, in its shard, in order
             let ranges = shard_ranges(13, threads);
-            assert_eq!(par.shard_indices.len(), ranges.len());
+            assert_eq!(par.n_shards(), ranges.len());
+            let pc = shard_chunk(13, threads);
+            // expected groups straight from the sequential routes
+            let mut expect: Vec<Vec<u32>> = vec![Vec::new(); ranges.len()];
+            for (i, &p) in seq.routes.iter().enumerate() {
+                expect[p as usize / pc].push(i as u32);
+            }
             let mut seen = 0usize;
-            for (range, indices) in ranges.iter().zip(&par.shard_indices) {
+            for (s, range) in ranges.iter().enumerate() {
+                let indices = par.shard_indices(s);
+                assert_eq!(indices, &expect[s][..], "{threads} threads: shard {s} group");
                 for w in indices.windows(2) {
                     assert!(w[0] < w[1], "{threads} threads: bucket not in input order");
                 }
@@ -372,6 +442,32 @@ mod tests {
                 seen += indices.len();
             }
             assert_eq!(seen, recs.len(), "{threads} threads: buckets must cover the batch");
+        }
+    }
+
+    #[test]
+    fn route_into_reuses_buffers_across_shapes() {
+        let mut z = Zipf::new(3_000, 1.2, 11);
+        let big = z.batch(10_007);
+        let small = z.batch(257);
+        let mut reused = RoutedBatch::default();
+        // alternate shapes through one recycled batch; every fill must
+        // equal a fresh route of the same input
+        for (recs, n, threads) in
+            [(&big, 13, 4), (&small, 7, 4), (&big, 7, 2), (&small, 13, 8)]
+        {
+            let ep = epoch(n, 5);
+            route_into(&mut reused, recs, &ep, threads);
+            let fresh = route(recs, &ep, threads);
+            assert_eq!(reused.routes, fresh.routes, "n={n} threads={threads}");
+            assert_eq!(reused.n_shards(), fresh.n_shards(), "n={n} threads={threads}");
+            for s in 0..fresh.n_shards() {
+                assert_eq!(
+                    reused.shard_indices(s),
+                    fresh.shard_indices(s),
+                    "n={n} threads={threads} shard {s}"
+                );
+            }
         }
     }
 
@@ -447,14 +543,30 @@ mod tests {
     #[test]
     fn empty_and_tiny_inputs_are_safe() {
         let ep = epoch(4, 1);
+        // empty records: documented no-op end to end
         let empty = route(&[], &ep, 4);
         assert!(empty.routes.is_empty());
-        assert!(empty.shard_indices.iter().all(|b| b.is_empty()));
+        assert_eq!(empty.n_shards(), 4);
+        assert!((0..4).all(|s| empty.shard_indices(s).is_empty()));
         let (loads, counts) = shuffle_sharded(&[], &empty, 4, None, 4);
         assert_eq!(loads, vec![0.0; 4]);
         assert_eq!(counts, vec![0; 4]);
-        // more threads than partitions/records
+        // zero partitions: shard_ranges(0, t) is empty, so routing and
+        // the reduce both degrade to no-ops instead of tripping the
+        // shard-count assertion
+        let ep0 = epoch(0, 1);
+        let routed0 = route(&[], &ep0, 4);
+        assert_eq!(routed0.n_shards(), 0);
+        let (loads0, counts0) = shuffle_sharded(&[], &routed0, 0, None, 4);
+        assert!(loads0.is_empty());
+        assert!(counts0.is_empty());
         let recs = vec![Record::unit(1, 0), Record::unit(2, 1)];
+        let routed0 = route(&recs, &ep0, 4);
+        assert_eq!(routed0.n_shards(), 0);
+        assert!(routed0.routes.is_empty());
+        let (loads0, counts0) = shuffle_sharded(&[], &routed0, 0, None, 4);
+        assert!(loads0.is_empty() && counts0.is_empty());
+        // more threads than partitions/records
         let routed = route(&recs, &ep, 16);
         let (loads, counts) = shuffle_sharded(&recs, &routed, 4, None, 16);
         assert_eq!(counts.iter().sum::<u64>(), 2);

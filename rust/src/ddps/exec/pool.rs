@@ -1,0 +1,756 @@
+//! The persistent worker pool and scratch arenas behind every sharded
+//! step (see DESIGN.md "Persistent worker pool and scratch arenas").
+//!
+//! Before this module every sharded step — routing, keyed reduce, DRW
+//! taps and harvests, the DRM tree-merge and candidate preparation, and
+//! the pipeline's three drive lanes — paid a fresh `std::thread::scope`
+//! spawn per call: O(threads) thread creations and joins per interval,
+//! repeated for every interval of every engine. The paper's DDPS hosts
+//! (Spark/Flink) amortize executor startup away; this pool does the
+//! same for the in-process executor so per-interval overhead is
+//! O(records), not O(threads + partitions) in syscalls and allocations.
+//!
+//! One [`WorkerPool`] per thread width lives for the process lifetime in
+//! a global registry ([`WorkerPool::for_threads`]), so every sharded
+//! free function keeps its `num_threads: usize` signature and fetches
+//! the pool internally; [`EngineCore`](crate::ddps::EngineCore) holds an
+//! `Arc` handle to the same pool, which is how the pool trivially
+//! survives `rescale` partition-count changes and checkpoint restores —
+//! the threads belong to the width, not to any engine's state. A width-1
+//! pool owns no threads at all: every dispatch runs inline on the
+//! caller, which keeps the sequential reference path exactly what it
+//! always was.
+//!
+//! Two kinds of parked threads, strictly layered so dispatch can never
+//! deadlock:
+//!
+//! - **The gang** (`width - 1` workers): data-parallel shard rounds for
+//!   [`WorkerPool::run`]. A round is broadcast under a seq/condvar
+//!   handoff — the submitter bumps a round sequence number and parks
+//!   until an `active` count drains to zero; worker `j` runs task
+//!   `j + 1` while the submitter runs task 0 itself, so a round of
+//!   `n_tasks` occupies exactly `n_tasks` threads, the same budget the
+//!   scoped executor honoured. Rounds are serialized by a submit lock
+//!   (concurrent lanes interleave whole rounds), and gang tasks are
+//!   strict leaves: nothing inside a shard task ever submits.
+//! - **The lanes** (2 threads): the pipeline's long overlap closures
+//!   ([`WorkerPool::join2`] / [`WorkerPool::join3`] — stage ∥ decision ∥
+//!   prefetch). Lanes submit gang rounds (the stage and the decision
+//!   point are themselves sharded), which is why they are a separate
+//!   thread set: re-entering the gang from a gang worker would hand a
+//!   round's job pointer to a worker that might still be draining an
+//!   older round. Lane acquisition is all-or-nothing, so two concurrent
+//!   `join3` regions can never each hold one lane while waiting for the
+//!   other's.
+//!
+//! Determinism is untouched by construction: the pool only changes
+//! *which OS thread* runs a shard task, never the shard decomposition
+//! (`shard_ranges`), the per-shard visit order, or any accumulation
+//! order — the bitwise-identity property tests (`tests/prop_parallel.rs`)
+//! pin pooled ≡ scoped-reference ≡ sequential across engines × thread
+//! counts.
+//!
+//! The pool also owns the [`StageScratch`] arena: recycled
+//! [`RoutedBatch`] routing buffers and double-buffered batch `Vec`s, so
+//! the per-interval hot path re-uses its allocations instead of
+//! rebuilding them (`cargo bench --bench micro_pool_reuse` measures the
+//! spawn + realloc overhead against the preserved per-call baseline).
+
+use super::parallel::RoutedBatch;
+use crate::workload::Record;
+use std::ops::Range;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
+use std::thread::{self, JoinHandle};
+
+/// Lock a pool mutex, shrugging off poisoning: pool invariants are
+/// restored *before* any panic propagates (rounds drain, jobs clear), so
+/// a poisoned flag carries no information here and must not brick the
+/// process-lifetime registry pools.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`lock`]'s counterpart for condvar waits.
+fn wait_cv<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// A type-erased pointer to one gang round's task closure. The submitter
+/// owns the closure on its stack and parks until every counted worker
+/// has finished with it, which is what makes the `'static` erasure sound.
+#[derive(Clone, Copy)]
+struct GangJob(*const (dyn Fn(usize) + Sync + 'static));
+
+unsafe impl Send for GangJob {}
+
+/// Erase the borrow lifetime of a round closure. A plain `as` cast
+/// cannot widen a trait object's lifetime bound, hence the transmute.
+///
+/// Safety: the caller must keep `f` alive (and its borrows valid) until
+/// the round's `active` count has drained to zero.
+unsafe fn erase<'a>(f: &'a (dyn Fn(usize) + Sync + 'a)) -> GangJob {
+    GangJob(std::mem::transmute::<
+        *const (dyn Fn(usize) + Sync + 'a),
+        *const (dyn Fn(usize) + Sync + 'static),
+    >(f as *const (dyn Fn(usize) + Sync + 'a)))
+}
+
+/// A type-erased pointer to one lane's overlap closure; same ownership
+/// contract as [`GangJob`], scoped to the lane's `done` handshake.
+struct LaneJob(*mut (dyn FnMut() + Send + 'static));
+
+unsafe impl Send for LaneJob {}
+
+/// [`erase`] for lane closures (`FnMut`, run exactly once per start).
+unsafe fn erase_mut<'a>(f: &'a mut (dyn FnMut() + Send + 'a)) -> LaneJob {
+    LaneJob(std::mem::transmute::<
+        *mut (dyn FnMut() + Send + 'a),
+        *mut (dyn FnMut() + Send + 'static),
+    >(f as *mut (dyn FnMut() + Send + 'a)))
+}
+
+/// Broadcast state for gang rounds, guarded by one mutex.
+#[derive(Default)]
+struct GangState {
+    /// Round sequence number; a worker runs a round when it observes a
+    /// value it has not seen yet.
+    seq: u64,
+    /// The current round's task closure (set while a round is in flight).
+    job: Option<GangJob>,
+    /// Tasks in the current round; worker `j` participates iff
+    /// `j + 1 < n_tasks` (the submitter runs task 0).
+    n_tasks: usize,
+    /// Counted workers still running the current round. The submitter
+    /// parks on [`GangShared::done`] until this reaches zero, which is
+    /// also what keeps the erased job pointer alive long enough.
+    active: usize,
+    /// A counted worker's task panicked this round.
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct GangShared {
+    state: Mutex<GangState>,
+    /// Workers park here between rounds.
+    work: Condvar,
+    /// The submitter parks here while `active > 0`.
+    done: Condvar,
+}
+
+struct Gang {
+    shared: Arc<GangShared>,
+    /// Serializes rounds: concurrent submitters (the pipeline lanes both
+    /// shard their work) interleave whole rounds instead of racing the
+    /// broadcast state.
+    submit: Mutex<()>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+/// The parked gang worker `j`: wait for an unseen round, run task
+/// `j + 1` if this round needs it, decrement `active`, park again. A
+/// worker the round does not need (its task index ≥ `n_tasks`) was never
+/// counted in `active`, so it just records the sequence number and goes
+/// back to sleep — it cannot stall the round and cannot miss a later
+/// round it *is* needed for, because `seq` only advances once `active`
+/// drains.
+fn gang_worker(shared: Arc<GangShared>, j: usize) {
+    let mut seen = 0u64;
+    loop {
+        let (job, n_tasks) = {
+            let mut st = lock(&shared.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.seq != seen {
+                    seen = st.seq;
+                    break (st.job, st.n_tasks);
+                }
+                st = wait_cv(&shared.work, st);
+            }
+        };
+        if j + 1 >= n_tasks {
+            continue;
+        }
+        let job = job.expect("gang round in flight without a job");
+        // Safety: the submitter keeps the closure (and everything it
+        // borrows) alive until this round's `active` count drains.
+        let f = unsafe { &*job.0 };
+        let ok = catch_unwind(AssertUnwindSafe(|| f(j + 1))).is_ok();
+        let mut st = lock(&shared.state);
+        if !ok {
+            st.panicked = true;
+        }
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// Per-lane handoff state, guarded by the lane's mutex.
+#[derive(Default)]
+struct LaneState {
+    job: Option<LaneJob>,
+    done: bool,
+    panicked: bool,
+    shutdown: bool,
+}
+
+#[derive(Default)]
+struct Lane {
+    state: Mutex<LaneState>,
+    cv: Condvar,
+}
+
+/// The parked lane thread: wait for a job, run it once, flag `done`.
+fn lane_worker(lane: Arc<Lane>) {
+    loop {
+        let job = {
+            let mut st = lock(&lane.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(job) = st.job.take() {
+                    break job;
+                }
+                st = wait_cv(&lane.cv, st);
+            }
+        };
+        // Safety: the join region keeps the closure alive until it has
+        // observed `done` under the lane mutex.
+        let f = unsafe { &mut *job.0 };
+        let ok = catch_unwind(AssertUnwindSafe(|| f())).is_ok();
+        let mut st = lock(&lane.state);
+        st.panicked = !ok;
+        st.done = true;
+        lane.cv.notify_all();
+    }
+}
+
+struct LanePool {
+    lanes: Vec<Arc<Lane>>,
+    /// Indices of idle lanes. Acquisition is all-or-nothing
+    /// ([`LanePool::acquire`]), which rules out the hold-and-wait
+    /// deadlock between concurrent join regions.
+    free: Mutex<Vec<usize>>,
+    freed: Condvar,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl LanePool {
+    /// Take `n` lanes atomically: wait until `n` are free, then claim
+    /// them all in one step.
+    fn acquire(&self, n: usize) -> Vec<usize> {
+        let mut free = lock(&self.free);
+        loop {
+            if free.len() >= n {
+                let at = free.len() - n;
+                return free.split_off(at);
+            }
+            free = wait_cv(&self.freed, free);
+        }
+    }
+
+    fn release(&self, ids: Vec<usize>) {
+        let mut free = lock(&self.free);
+        free.extend(ids);
+        self.freed.notify_all();
+    }
+
+    fn start(&self, id: usize, job: LaneJob) {
+        let lane = &self.lanes[id];
+        let mut st = lock(&lane.state);
+        st.done = false;
+        st.panicked = false;
+        st.job = Some(job);
+        lane.cv.notify_all();
+    }
+
+    /// Park until lane `id` finished its job; returns whether it
+    /// panicked. Must be called before releasing the lane — it is what
+    /// ends the erased closure's lifetime obligation.
+    fn wait(&self, id: usize) -> bool {
+        let lane = &self.lanes[id];
+        let mut st = lock(&lane.state);
+        while !st.done {
+            st = wait_cv(&lane.cv, st);
+        }
+        st.panicked
+    }
+}
+
+/// Recycled per-interval buffers, owned by the pool so every engine and
+/// stage sharing a thread width also shares the warm allocations:
+/// [`RoutedBatch`] routing buffers (flat index table + offsets + counting
+/// matrix) and the drive loops' double-buffered batch `Vec`s.
+#[derive(Default)]
+pub struct StageScratch {
+    routed: Vec<RoutedBatch>,
+    batch_bufs: Vec<Vec<Record>>,
+}
+
+/// Free-list cap per buffer kind: enough for the handful of concurrent
+/// stages a pool realistically serves, small enough that a burst of
+/// engines cannot pin unbounded memory.
+const SCRATCH_CAP: usize = 4;
+
+/// A long-lived sharded worker pool plus its [`StageScratch`] arena —
+/// one per thread width, process-lifetime, shared by every sharded step
+/// (see the module docs for the handoff protocol and the determinism
+/// argument).
+pub struct WorkerPool {
+    width: usize,
+    gang: Option<Gang>,
+    lanes: Option<LanePool>,
+    scratch: Mutex<StageScratch>,
+}
+
+/// The process-wide width-keyed registry behind
+/// [`WorkerPool::for_threads`].
+static REGISTRY: OnceLock<Mutex<Vec<Arc<WorkerPool>>>> = OnceLock::new();
+
+impl WorkerPool {
+    /// Build a pool of `width` threads total (the caller counts as one:
+    /// `width - 1` gang workers plus 2 overlap lanes are spawned; a
+    /// width of 1 spawns nothing and runs everything inline). Prefer
+    /// [`WorkerPool::for_threads`], which shares one pool per width for
+    /// the process lifetime; direct construction exists for tests.
+    pub fn new(width: usize) -> Self {
+        let width = width.max(1);
+        if width == 1 {
+            return Self {
+                width,
+                gang: None,
+                lanes: None,
+                scratch: Mutex::new(StageScratch::default()),
+            };
+        }
+        let shared = Arc::new(GangShared {
+            state: Mutex::new(GangState::default()),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..width - 1)
+            .map(|j| {
+                let shared = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("ddps-pool-{j}"))
+                    .spawn(move || gang_worker(shared, j))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        let lanes: Vec<Arc<Lane>> = (0..2).map(|_| Arc::new(Lane::default())).collect();
+        let lane_handles = lanes
+            .iter()
+            .enumerate()
+            .map(|(i, lane)| {
+                let lane = Arc::clone(lane);
+                thread::Builder::new()
+                    .name(format!("ddps-lane-{i}"))
+                    .spawn(move || lane_worker(lane))
+                    .expect("spawn pool lane")
+            })
+            .collect();
+        Self {
+            width,
+            gang: Some(Gang {
+                shared,
+                submit: Mutex::new(()),
+                handles,
+            }),
+            lanes: Some(LanePool {
+                lanes,
+                free: Mutex::new(vec![0, 1]),
+                freed: Condvar::new(),
+                handles: lane_handles,
+            }),
+            scratch: Mutex::new(StageScratch::default()),
+        }
+    }
+
+    /// The shared pool for `num_threads` (clamped to at least 1),
+    /// created on first use and kept for the process lifetime — the
+    /// sharded free functions fetch their pool here from the same
+    /// `num_threads` they always took, and [`EngineCore`] pins a handle
+    /// at construction.
+    ///
+    /// [`EngineCore`]: crate::ddps::EngineCore
+    pub fn for_threads(num_threads: usize) -> Arc<WorkerPool> {
+        let width = num_threads.max(1);
+        let reg = REGISTRY.get_or_init(|| Mutex::new(Vec::new()));
+        let mut pools = lock(reg);
+        if let Some(p) = pools.iter().find(|p| p.width == width) {
+            return Arc::clone(p);
+        }
+        let p = Arc::new(WorkerPool::new(width));
+        pools.push(Arc::clone(&p));
+        p
+    }
+
+    /// Total threads this pool represents, the caller included.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Run one data-parallel round: `f(0)`, `f(1)`, …, `f(n_tasks - 1)`,
+    /// each exactly once, on up to `n_tasks` threads (the caller runs
+    /// task 0). Blocks until every task finished. On a width-1 pool —
+    /// or for trivial rounds — the tasks run inline on the caller, in
+    /// ascending order. Panics in any task propagate to the caller after
+    /// the round has fully drained (borrows stay valid throughout).
+    ///
+    /// Tasks must be leaves: they may not submit rounds or join regions
+    /// on any pool. `n_tasks` may not exceed the pool width.
+    pub fn run(&self, n_tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n_tasks == 0 {
+            return;
+        }
+        let gang = match &self.gang {
+            Some(g) if n_tasks > 1 => g,
+            _ => {
+                for t in 0..n_tasks {
+                    f(t);
+                }
+                return;
+            }
+        };
+        assert!(
+            n_tasks <= self.width,
+            "gang round of {n_tasks} tasks exceeds pool width {}",
+            self.width
+        );
+        let round = lock(&gang.submit);
+        {
+            let mut st = lock(&gang.shared.state);
+            st.seq = st.seq.wrapping_add(1);
+            // Safety: this frame parks below until `active` drains, so
+            // the borrow outlives every worker's use.
+            st.job = Some(unsafe { erase(f) });
+            st.n_tasks = n_tasks;
+            st.active = n_tasks - 1;
+            st.panicked = false;
+            gang.shared.work.notify_all();
+        }
+        let res = catch_unwind(AssertUnwindSafe(|| f(0)));
+        let worker_panicked = {
+            let mut st = lock(&gang.shared.state);
+            while st.active > 0 {
+                st = wait_cv(&gang.shared.done, st);
+            }
+            st.job = None;
+            st.panicked
+        };
+        drop(round);
+        if let Err(p) = res {
+            resume_unwind(p);
+        }
+        assert!(!worker_panicked, "worker pool gang task panicked");
+    }
+
+    /// Run `a` on a lane thread while `b` runs on the caller; both done
+    /// before returning. Sequential pools run `a` then `b` inline. `b`
+    /// deliberately carries no `Send` bound — the drive loops keep their
+    /// (not necessarily `Send`) `Source` on the calling thread, exactly
+    /// as the scoped regions did.
+    pub fn join2<RA, RB>(&self, a: impl FnOnce() -> RA + Send, b: impl FnOnce() -> RB) -> (RA, RB)
+    where
+        RA: Send,
+    {
+        let Some(lanes) = &self.lanes else {
+            let ra = a();
+            let rb = b();
+            return (ra, rb);
+        };
+        let mut ra = None;
+        let mut a_opt = Some(a);
+        let mut ta = || ra = Some((a_opt.take().expect("lane job runs once"))());
+        let ids = lanes.acquire(1);
+        // Safety: this frame parks in `wait` below before the closure
+        // (and `ra`) can go out of scope.
+        lanes.start(ids[0], unsafe { erase_mut(&mut ta) });
+        let rb = catch_unwind(AssertUnwindSafe(b));
+        let pa = lanes.wait(ids[0]);
+        lanes.release(ids);
+        match rb {
+            Err(p) => resume_unwind(p),
+            Ok(rb) => {
+                assert!(!pa, "worker pool lane panicked");
+                (ra.expect("lane ran"), rb)
+            }
+        }
+    }
+
+    /// [`WorkerPool::join2`] with two lane closures: `a` and `b` each on
+    /// a lane thread, `c` on the caller. The two lanes are acquired
+    /// atomically. Sequential pools run `a`, `b`, `c` inline in order.
+    pub fn join3<RA, RB, RC>(
+        &self,
+        a: impl FnOnce() -> RA + Send,
+        b: impl FnOnce() -> RB + Send,
+        c: impl FnOnce() -> RC,
+    ) -> (RA, RB, RC)
+    where
+        RA: Send,
+        RB: Send,
+    {
+        let Some(lanes) = &self.lanes else {
+            let ra = a();
+            let rb = b();
+            let rc = c();
+            return (ra, rb, rc);
+        };
+        let mut ra = None;
+        let mut a_opt = Some(a);
+        let mut ta = || ra = Some((a_opt.take().expect("lane job runs once"))());
+        let mut rb = None;
+        let mut b_opt = Some(b);
+        let mut tb = || rb = Some((b_opt.take().expect("lane job runs once"))());
+        let ids = lanes.acquire(2);
+        // Safety: as in `join2` — both lanes are waited on below.
+        lanes.start(ids[0], unsafe { erase_mut(&mut ta) });
+        lanes.start(ids[1], unsafe { erase_mut(&mut tb) });
+        let rc = catch_unwind(AssertUnwindSafe(c));
+        let pa = lanes.wait(ids[0]);
+        let pb = lanes.wait(ids[1]);
+        lanes.release(ids);
+        match rc {
+            Err(p) => resume_unwind(p),
+            Ok(rc) => {
+                assert!(!pa && !pb, "worker pool lane panicked");
+                (ra.expect("lane ran"), rb.expect("lane ran"), rc)
+            }
+        }
+    }
+
+    /// Take a recycled routing buffer from the arena (or a fresh empty
+    /// one). Return it with [`WorkerPool::put_routed`] after the stage.
+    pub fn take_routed(&self) -> RoutedBatch {
+        lock(&self.scratch).routed.pop().unwrap_or_default()
+    }
+
+    /// Return a routing buffer to the arena for the next interval;
+    /// capacity is retained, contents are rewritten by the next
+    /// [`route_into`](super::parallel::route_into).
+    pub fn put_routed(&self, routed: RoutedBatch) {
+        let mut s = lock(&self.scratch);
+        if s.routed.len() < SCRATCH_CAP {
+            s.routed.push(routed);
+        }
+    }
+
+    /// Take a recycled batch buffer (the drive loops' double buffers).
+    pub fn take_batch_buf(&self) -> Vec<Record> {
+        lock(&self.scratch).batch_bufs.pop().unwrap_or_default()
+    }
+
+    /// Return a batch buffer to the arena; cleared here, capacity kept.
+    pub fn put_batch_buf(&self, mut buf: Vec<Record>) {
+        buf.clear();
+        let mut s = lock(&self.scratch);
+        if s.batch_bufs.len() < SCRATCH_CAP {
+            s.batch_bufs.push(buf);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        if let Some(gang) = self.gang.take() {
+            {
+                let mut st = lock(&gang.shared.state);
+                st.shutdown = true;
+                gang.shared.work.notify_all();
+            }
+            for h in gang.handles {
+                let _ = h.join();
+            }
+        }
+        if let Some(lanes) = self.lanes.take() {
+            for lane in &lanes.lanes {
+                let mut st = lock(&lane.state);
+                st.shutdown = true;
+                lane.cv.notify_all();
+            }
+            for h in lanes.handles {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// A `&mut [T]` sharable across one gang round, with the disjointness
+/// obligation moved to the call sites: each task may only touch the
+/// range (or single slots) it owns under the round's shard
+/// decomposition. This is what lets shard workers write their partition
+/// ranges of the *final* output buffers directly — no per-worker
+/// accumulators, no merge copy — without changing any accumulation
+/// order.
+pub(crate) struct SharedSlice<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+unsafe impl<T: Send> Send for SharedSlice<T> {}
+unsafe impl<T: Send> Sync for SharedSlice<T> {}
+
+impl<T> SharedSlice<T> {
+    pub(crate) fn new(s: &mut [T]) -> Self {
+        Self {
+            ptr: s.as_mut_ptr(),
+            len: s.len(),
+        }
+    }
+
+    /// Reborrow sub-range `r`.
+    ///
+    /// Safety: concurrent callers must hold disjoint ranges, and the
+    /// underlying slice must outlive the round (guaranteed when the
+    /// round is submitted from the frame that built `self`).
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn slice(&self, r: Range<usize>) -> &mut [T] {
+        debug_assert!(r.start <= r.end && r.end <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(r.start), r.end - r.start)
+    }
+
+    /// Write one element (no drop of the previous value — `T: Copy` at
+    /// every call site).
+    ///
+    /// Safety: as [`SharedSlice::slice`], per index.
+    pub(crate) unsafe fn write(&self, i: usize, v: T) {
+        debug_assert!(i < self.len);
+        self.ptr.add(i).write(v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_dispatches_every_task_exactly_once() {
+        let pool = WorkerPool::for_threads(4);
+        for n_tasks in 1..=4usize {
+            let hits = Mutex::new(Vec::new());
+            pool.run(n_tasks, &|t| hits.lock().unwrap().push(t));
+            let mut got = hits.into_inner().unwrap();
+            got.sort_unstable();
+            assert_eq!(got, (0..n_tasks).collect::<Vec<_>>(), "{n_tasks} tasks");
+        }
+        // disjoint writes through a SharedSlice land where they should
+        let mut out = vec![0usize; 11];
+        {
+            let sh = SharedSlice::new(&mut out);
+            pool.run(4, &|t| {
+                let start = t * 3;
+                let end = (start + 3).min(11);
+                let s = unsafe { sh.slice(start..end) };
+                for (i, o) in s.iter_mut().enumerate() {
+                    *o = start + i + 100;
+                }
+            });
+        }
+        assert_eq!(out, (100..111).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sequential_pool_runs_inline_and_in_order() {
+        let pool = WorkerPool::for_threads(1);
+        assert_eq!(pool.width(), 1);
+        let order = Mutex::new(Vec::new());
+        pool.run(3, &|t| order.lock().unwrap().push(t));
+        assert_eq!(order.into_inner().unwrap(), vec![0, 1, 2]);
+        let (a, b, c) = pool.join3(|| 1, || 2, || 3);
+        assert_eq!((a, b, c), (1, 2, 3));
+    }
+
+    #[test]
+    fn registry_shares_one_pool_per_width() {
+        let a = WorkerPool::for_threads(3);
+        let b = WorkerPool::for_threads(3);
+        assert!(Arc::ptr_eq(&a, &b));
+        let c = WorkerPool::for_threads(2);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(c.width(), 2);
+        // zero clamps to the sequential pool
+        assert_eq!(WorkerPool::for_threads(0).width(), 1);
+    }
+
+    #[test]
+    fn join_regions_return_results_and_can_nest_gang_rounds() {
+        let pool = WorkerPool::for_threads(4);
+        let xs: Vec<u64> = (0..1000).collect();
+        let (sum, max, min) = pool.join3(
+            || xs.iter().sum::<u64>(),
+            || xs.iter().copied().max().unwrap(),
+            || xs.iter().copied().min().unwrap(),
+        );
+        assert_eq!((sum, max, min), (499_500, 999, 0));
+        // a lane closure submitting gang rounds (the pipeline shape)
+        let mut out = vec![0u64; 8];
+        let probe = {
+            let sh = SharedSlice::new(&mut out);
+            let p2 = Arc::clone(&pool);
+            let (_, probe) = pool.join2(
+                move || {
+                    p2.run(4, &|t| {
+                        let s = unsafe { sh.slice(t * 2..t * 2 + 2) };
+                        s[0] = t as u64;
+                        s[1] = t as u64 + 10;
+                    });
+                },
+                || 7u32,
+            );
+            probe
+        };
+        assert_eq!(probe, 7);
+        assert_eq!(out, vec![0, 10, 1, 11, 2, 12, 3, 13]);
+    }
+
+    #[test]
+    fn panics_propagate_and_the_pool_survives() {
+        // a directly-built pool so Drop (shutdown + join) is exercised
+        let pool = WorkerPool::new(3);
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(3, &|t| {
+                if t == 1 {
+                    panic!("boom");
+                }
+            })
+        }));
+        assert!(res.is_err(), "worker panic must propagate");
+        // the pool keeps working after a panicked round
+        let hits = Mutex::new(0usize);
+        pool.run(3, &|_| *hits.lock().unwrap() += 1);
+        assert_eq!(hits.into_inner().unwrap(), 3);
+        // lane panics propagate too, and lanes are released
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            pool.join2(|| panic!("lane boom"), || 0)
+        }));
+        assert!(res.is_err());
+        let (a, b) = pool.join2(|| 5, || 6);
+        assert_eq!((a, b), (5, 6));
+    }
+
+    #[test]
+    fn scratch_arena_recycles_buffers() {
+        let pool = WorkerPool::new(1);
+        let mut buf = pool.take_batch_buf();
+        buf.reserve(1024);
+        let cap = buf.capacity();
+        pool.put_batch_buf(buf);
+        let again = pool.take_batch_buf();
+        assert!(again.is_empty());
+        assert_eq!(again.capacity(), cap, "capacity must be retained");
+        // routed buffers round-trip as well
+        let routed = pool.take_routed();
+        pool.put_routed(routed);
+        // the free list is bounded
+        for _ in 0..16 {
+            pool.put_batch_buf(Vec::new());
+        }
+        assert!(lock(&pool.scratch).batch_bufs.len() <= SCRATCH_CAP);
+    }
+}

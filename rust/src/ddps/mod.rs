@@ -21,15 +21,15 @@
 //! migration plans derive from the epoch diff. The core — and since PR 3
 //! the DRM decision point steering it ([`crate::dr::parallel`]) — runs
 //! either sequentially ([`EngineConfig::num_threads`] = 1) or sharded
-//! over scoped OS threads ([`exec::parallel`], `num_threads` > 1) with
-//! bitwise-identical reports.
+//! over a persistent worker pool ([`exec::parallel`], [`exec::pool`],
+//! `num_threads` > 1) with bitwise-identical reports.
 //!
 //! The engines themselves are driven by the unified loop in
 //! [`pipeline`]: every `run_batch` / `run_interval` / `BatchJob::run`
 //! call is one lockstep step of it, and the `run_stream` entry points
 //! pull batches from a [`Source`](crate::workload::Source), overlapping
 //! source materialization, the DRM decision point and the shuffle stage
-//! on scoped threads (same `num_threads` knob, same bitwise-identical
+//! on pool lanes (same `num_threads` knob, same bitwise-identical
 //! reports — only the measured `wall_s` / `decision_wall_s` /
 //! `source_wall_s` columns and the pipeline-occupancy ratio change).
 
@@ -44,6 +44,7 @@ pub use exec::{
     adopt_decision, adopt_swap, apply_epoch_swap, decide_and_adopt, decision_point,
     decision_point_sharded, proposal_point_sharded, tap_records, tap_records_sharded,
     DecisionOutcome, MigrationReport, Scheduling, ShuffleStage, StageReport, TapAssignment,
+    WorkerPool,
 };
 pub use microbatch::{BatchReport, MicroBatchEngine};
 pub use pipeline::{Discipline, EngineCore, StepReport};
@@ -90,9 +91,12 @@ pub struct EngineConfig {
     /// construction over ([`crate::dr::parallel`]), and that gates the
     /// [`pipeline`] drive loop's lane overlap (source prefetch ∥ decision
     /// point ∥ stage). `1` — the default — is the sequential lockstep
-    /// reference path; `> 1` runs all of them on `std::thread::scope`
-    /// workers and produces bitwise-identical reports (see
-    /// [`exec::parallel`] and DESIGN.md "Sharded DRM decision point" /
+    /// reference path; `> 1` runs all of them on a persistent
+    /// [`exec::WorkerPool`] (parked threads reused across every interval,
+    /// one pool per width for the process lifetime) and produces
+    /// bitwise-identical reports (see [`exec::parallel`], [`exec::pool`]
+    /// and DESIGN.md "Persistent worker pool and scratch arenas" /
+    /// "Sharded DRM decision point" /
     /// "Pipelined engine loop"). Virtual-time results never depend on
     /// this knob — only the measured `wall_s` / `decision_wall_s` /
     /// `source_wall_s` columns and the pipeline-occupancy ratio do.

@@ -6,8 +6,10 @@
 //! executor and the sharded decision point idled while the source
 //! materialized the next batch. The paper's DR module wins precisely by
 //! keeping the decision point *off* the critical path, so the loop here
-//! overlaps three lanes on `std::thread::scope` workers, gated by the
-//! same [`EngineConfig::num_threads`] knob that shards the executor:
+//! overlaps three lanes on the persistent worker pool's dedicated lane
+//! threads ([`exec::pool`](super::exec::pool) — parked, reused across
+//! every interval), gated by the same [`EngineConfig::num_threads`] knob
+//! that shards the executor:
 //!
 //! | lane      | interval *k* runs…                 | state it touches        |
 //! |-----------|------------------------------------|-------------------------|
@@ -51,6 +53,7 @@
 //! call [`lockstep_step`] — the same phases in lockstep order — so *all*
 //! engine traffic flows through this one loop implementation.
 
+use super::exec::pool::WorkerPool;
 use super::exec::{self, Scheduling, ShuffleStage, StageReport, TapAssignment};
 use super::{EngineConfig, EngineMetrics};
 use crate::dr::{
@@ -61,7 +64,7 @@ use crate::partitioner::{Partitioner, PartitionerEpoch};
 use crate::state::StateStore;
 use crate::util::VTime;
 use crate::workload::{Record, Source};
-use std::thread;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// The engine state the unified loop drives: the DRM and its DRWs, the
@@ -97,6 +100,14 @@ pub struct EngineCore {
     /// behind the barrier in both lockstep and pipelined drives, so
     /// verdicts are thread-count-invariant.
     pub(crate) recent_load: f64,
+    /// The persistent worker pool this engine dispatches to — pinned at
+    /// construction from [`EngineConfig::num_threads`] and shared with
+    /// every other engine of the same width
+    /// ([`WorkerPool::for_threads`]). The threads belong to the width,
+    /// not to this core's state, which is why the pool trivially
+    /// survives [`EngineCore::rescale`], checkpoint clones and
+    /// fail-restore.
+    pub(crate) pool: Arc<WorkerPool>,
 }
 
 impl EngineCore {
@@ -128,6 +139,7 @@ impl EngineCore {
             service_rates: vec![1.0; cfg.n_partitions],
             decider: DeciderState::new(dr.decider),
             recent_load: 0.0,
+            pool: WorkerPool::for_threads(cfg.num_threads),
             cfg,
             drm,
             workers,
@@ -432,12 +444,14 @@ pub fn lockstep_step(
 
 /// Drive `core` over `source` for up to `max_batches` batches of
 /// `batch_size` records. With `cfg.num_threads > 1` the loop pipelines —
-/// stage, prefetch and decision lanes run on scoped threads as described
-/// in the module docs; otherwise it degenerates to fetch + lockstep
-/// steps. Reports are bitwise-identical either way except the measured
-/// wall-clock columns. Stops early when the source exhausts; the source
-/// is never pulled past `max_batches`, so a bounded source can be resumed
-/// afterwards exactly where a lockstep driver would have left it.
+/// stage, prefetch and decision lanes run on the pool's parked lane
+/// threads as described in the module docs; otherwise it degenerates to
+/// fetch + lockstep steps. Batch buffers are recycled through the pool's
+/// scratch arena on both paths. Reports are bitwise-identical either way
+/// except the measured wall-clock columns. Stops early when the source
+/// exhausts; the source is never pulled past `max_batches`, so a bounded
+/// source can be resumed afterwards exactly where a lockstep driver
+/// would have left it.
 pub fn drive(
     core: &mut EngineCore,
     source: &mut dyn Source,
@@ -451,7 +465,7 @@ pub fn drive(
     }
     if core.cfg.num_threads <= 1 {
         let mut reports = Vec::new();
-        let mut buf = Vec::new();
+        let mut buf = core.pool.take_batch_buf();
         for _ in 0..max_batches {
             let span = Instant::now();
             if !source.next_batch_into(batch_size, &mut buf) {
@@ -460,6 +474,7 @@ pub fn drive(
             let source_wall_s = span.elapsed().as_secs_f64();
             reports.push(lockstep_step(core, &buf, disc, source_wall_s, span, after_stage));
         }
+        core.pool.put_batch_buf(buf);
         return reports;
     }
     match disc {
@@ -484,13 +499,16 @@ fn drive_microbatch(
     after_stage: &mut dyn FnMut(&[Record], &[StateStore]),
 ) -> Vec<StepReport> {
     let mut reports = Vec::new();
-    let mut cur: Vec<Record> = Vec::new();
-    let mut next: Vec<Record> = Vec::new();
+    let pool = Arc::clone(&core.pool);
+    let mut cur: Vec<Record> = pool.take_batch_buf();
+    let mut next: Vec<Record> = pool.take_batch_buf();
 
     // Prime the pipeline: materialize batch 1 and run its proposal point
     // (there is no previous stage to hide either behind).
     let mut span = Instant::now();
     if !source.next_batch_into(batch_size, &mut cur) {
+        pool.put_batch_buf(cur);
+        pool.put_batch_buf(next);
         return reports;
     }
     let mut source_wall_s = span.elapsed().as_secs_f64();
@@ -519,8 +537,7 @@ fn drive_microbatch(
         let want_next = k < max_batches;
         let mut have_next = false;
         let mut next_wall = 0.0;
-        let mut stage_res: Option<StageReport> = None;
-        {
+        let stage = {
             let EngineCore {
                 cfg,
                 drm,
@@ -535,36 +552,34 @@ fn drive_microbatch(
             let epoch_snapshot: &PartitionerEpoch = partitioner;
             let rates: &[f64] = service_rates;
             let records: &[Record] = &cur;
-            thread::scope(|s| {
-                let stage_handle = {
-                    let stores: &mut [StateStore] = stores;
-                    s.spawn(move || {
-                        ShuffleStage::new(stage_cfg, Scheduling::Wave)
-                            .with_service_rates(rates)
-                            .run(records, epoch_snapshot, Some(stores))
-                    })
-                };
-                // Prefetch lane (this thread): materialize batch k+1.
-                if want_next {
-                    let t0 = Instant::now();
-                    have_next = source.next_batch_into(batch_size, &mut next);
-                    next_wall = t0.elapsed().as_secs_f64();
-                }
-                // Decision lane — only once batch k+1 is known to exist,
-                // so the DRM/DRW state never runs ahead of lockstep. The
-                // lane computes the *proposal* only: no epoch moves off
-                // the barrier.
-                let dec_handle = if want_next && have_next {
-                    Some(s.spawn(move || exec::proposal_point_sharded(drm, workers, num_threads)))
-                } else {
-                    None
-                };
-                stage_res = Some(stage_handle.join().expect("pipeline stage worker panicked"));
-                pending =
-                    dec_handle.map(|h| h.join().expect("pipeline decision worker panicked"));
-            });
-        }
-        let stage = stage_res.expect("stage lane always runs");
+            let stores: &mut [StateStore] = stores;
+            let (stage, dec) = pool.join2(
+                move || {
+                    ShuffleStage::new(stage_cfg, Scheduling::Wave)
+                        .with_service_rates(rates)
+                        .run(records, epoch_snapshot, Some(stores))
+                },
+                || {
+                    // Prefetch lane (this thread): materialize batch k+1.
+                    if want_next {
+                        let t0 = Instant::now();
+                        have_next = source.next_batch_into(batch_size, &mut next);
+                        next_wall = t0.elapsed().as_secs_f64();
+                    }
+                    // Decision lane — only once batch k+1 is known to
+                    // exist, so the DRM/DRW state never runs ahead of
+                    // lockstep. It computes the *proposal* only: no
+                    // epoch moves off the barrier.
+                    if want_next && have_next {
+                        Some(exec::proposal_point_sharded(drm, workers, num_threads))
+                    } else {
+                        None
+                    }
+                },
+            );
+            pending = dec;
+            stage
+        };
         after_stage(&cur, &core.stores);
         reports.push(assemble(
             core,
@@ -582,6 +597,8 @@ fn drive_microbatch(
         source_wall_s = next_wall;
         span = Instant::now();
     }
+    pool.put_batch_buf(cur);
+    pool.put_batch_buf(next);
     reports
 }
 
@@ -597,11 +614,14 @@ fn drive_streaming(
     after_stage: &mut dyn FnMut(&[Record], &[StateStore]),
 ) -> Vec<StepReport> {
     let mut reports = Vec::new();
-    let mut cur: Vec<Record> = Vec::new();
-    let mut next: Vec<Record> = Vec::new();
+    let pool = Arc::clone(&core.pool);
+    let mut cur: Vec<Record> = pool.take_batch_buf();
+    let mut next: Vec<Record> = pool.take_batch_buf();
 
     let mut span = Instant::now();
     if !source.next_batch_into(batch_size, &mut cur) {
+        pool.put_batch_buf(cur);
+        pool.put_batch_buf(next);
         return reports;
     }
     let mut source_wall_s = span.elapsed().as_secs_f64();
@@ -618,9 +638,7 @@ fn drive_streaming(
         let want_next = k < max_batches;
         let mut have_next = false;
         let mut next_wall = 0.0;
-        let mut stage_res: Option<StageReport> = None;
-        let mut dec_res = None;
-        {
+        let (stage, dec_res) = {
             let EngineCore {
                 cfg,
                 drm,
@@ -635,35 +653,31 @@ fn drive_streaming(
             let epoch_snapshot: &PartitionerEpoch = partitioner;
             let rates: &[f64] = service_rates;
             let records: &[Record] = &cur;
-            thread::scope(|s| {
-                let stage_handle = {
-                    let stores: &mut [StateStore] = stores;
-                    s.spawn(move || {
-                        ShuffleStage::new(stage_cfg, Scheduling::Pinned)
-                            .with_service_rates(rates)
-                            .run(records, epoch_snapshot, Some(stores))
-                    })
-                };
-                let dec_handle =
-                    s.spawn(move || exec::proposal_point_sharded(drm, workers, num_threads));
-                if want_next {
-                    let t0 = Instant::now();
-                    have_next = source.next_batch_into(batch_size, &mut next);
-                    next_wall = t0.elapsed().as_secs_f64();
-                }
-                stage_res = Some(stage_handle.join().expect("pipeline stage worker panicked"));
-                dec_res =
-                    Some(dec_handle.join().expect("pipeline decision worker panicked"));
-            });
-        }
-        let stage = stage_res.expect("stage lane always runs");
+            let stores: &mut [StateStore] = stores;
+            let (stage, dec, ()) = pool.join3(
+                move || {
+                    ShuffleStage::new(stage_cfg, Scheduling::Pinned)
+                        .with_service_rates(rates)
+                        .run(records, epoch_snapshot, Some(stores))
+                },
+                move || exec::proposal_point_sharded(drm, workers, num_threads),
+                || {
+                    // Prefetch lane (this thread): materialize batch k+1.
+                    if want_next {
+                        let t0 = Instant::now();
+                        have_next = source.next_batch_into(batch_size, &mut next);
+                        next_wall = t0.elapsed().as_secs_f64();
+                    }
+                },
+            );
+            (stage, dec)
+        };
         // Checkpoint sees post-stage, pre-migration state, as in lockstep
         // (the lane only proposed — it touches no stores and no epoch, so
         // computing it concurrently cannot change what the snapshot
         // contains).
         after_stage(&cur, &core.stores);
-        let outcome =
-            resolve_and_adopt(core, dec_res.expect("decision lane always runs"));
+        let outcome = resolve_and_adopt(core, dec_res);
         reports.push(assemble(
             core,
             Discipline::Streaming,
@@ -680,13 +694,15 @@ fn drive_streaming(
         source_wall_s = next_wall;
         span = Instant::now();
     }
+    pool.put_batch_buf(cur);
+    pool.put_batch_buf(next);
     reports
 }
 
 /// One one-shot batch job through the shared loop: prefix tap → mid-map
 /// decision ([`exec::decide_and_adopt`], stateless — the already-evicted
 /// prefix is priced as *replay*) → full-input wave stage. `overlap` runs
-/// on the calling thread while the stage executes on a scoped worker
+/// on the calling thread while the stage executes on a pool lane
 /// (`num_threads > 1`); [`drive_jobs`] materializes the next round's
 /// records there, standalone jobs pass a no-op.
 pub fn job_step(
@@ -735,21 +751,15 @@ pub fn job_step(
     };
 
     // Map phase part 2 + shuffle + wave reduce with the (possibly new)
-    // epoch; the caller's overlap lane runs alongside.
-    let mut stage = if cfg.num_threads > 1 {
-        let mut stage_res: Option<StageReport> = None;
+    // epoch; the caller's overlap lane runs alongside. A width-1 pool
+    // runs stage-then-overlap inline — the old sequential order.
+    let mut stage = {
+        let pool = WorkerPool::for_threads(cfg.num_threads);
         let epoch_snapshot = &partitioner;
-        thread::scope(|s| {
-            let h = s.spawn(move || {
-                ShuffleStage::new(cfg, Scheduling::Wave).run(records, epoch_snapshot, None)
-            });
-            overlap();
-            stage_res = Some(h.join().expect("pipeline stage worker panicked"));
-        });
-        stage_res.expect("stage lane always runs")
-    } else {
-        let stage = ShuffleStage::new(cfg, Scheduling::Wave).run(records, &partitioner, None);
-        overlap();
+        let (stage, ()) = pool.join2(
+            move || ShuffleStage::new(cfg, Scheduling::Wave).run(records, epoch_snapshot, None),
+            || overlap(),
+        );
         stage
     };
     stage.decision_wall_s = outcome.decision_wall_s;
@@ -801,10 +811,13 @@ pub fn drive_jobs(
     if max_jobs == 0 {
         return reports;
     }
-    let mut cur: Vec<Record> = Vec::new();
-    let mut next: Vec<Record> = Vec::new();
+    let pool = WorkerPool::for_threads(cfg.num_threads);
+    let mut cur: Vec<Record> = pool.take_batch_buf();
+    let mut next: Vec<Record> = pool.take_batch_buf();
     let mut span = Instant::now();
     if !source.next_batch_into(batch_size, &mut cur) {
+        pool.put_batch_buf(cur);
+        pool.put_batch_buf(next);
         return reports;
     }
     let mut source_wall_s = span.elapsed().as_secs_f64();
@@ -840,6 +853,8 @@ pub fn drive_jobs(
         source_wall_s = next_wall;
         span = Instant::now();
     }
+    pool.put_batch_buf(cur);
+    pool.put_batch_buf(next);
     reports
 }
 

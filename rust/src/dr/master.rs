@@ -10,7 +10,7 @@
 //! (decision → epoch bump → plan; see DESIGN.md "Epochs and the shared
 //! ShuffleStage core").
 //!
-//! The decision point runs sequentially or sharded over scoped workers
+//! The decision point runs sequentially or sharded over pool workers
 //! ([`DrMaster::decide_sharded`], backed by [`super::parallel`]); both
 //! paths are the same deterministic computation, so decisions, epochs and
 //! migration plans are bitwise-identical at any thread count, and the
@@ -430,7 +430,7 @@ impl DrMaster {
     }
 
     /// [`DrMaster::decide`] with the decision point sharded over
-    /// `num_threads` scoped workers ([`super::parallel`]): the worker
+    /// `num_threads` pool workers ([`super::parallel`]): the worker
     /// histograms merge in a parallel tree reduction whose shape depends
     /// only on their count, and the candidate's pure per-key preparation
     /// splits by key range while the order-sensitive greedy core runs

@@ -11,8 +11,8 @@
 //!   the long run"), runs the partitioner update (KIP by default, any
 //!   baseline for comparison), and decides *whether* the expected gain
 //!   justifies the replay / state-migration cost.
-//! - [`parallel`] shards the DRM decision point itself over scoped
-//!   workers — parallel tree-merge of the DRW histograms and key-range
+//! - [`parallel`] shards the DRM decision point itself over the shared
+//!   worker pool — parallel tree-merge of the DRW histograms and key-range
 //!   preparation of the candidate construction — with decisions, epochs
 //!   and migration plans bitwise-identical to the sequential path at any
 //!   thread count (DESIGN.md "Sharded DRM decision point"). The measured

@@ -8,8 +8,10 @@
 //! partitioner — to cost little compared to the stage it steers even as
 //! worker counts grow (AutoFlow and Fang et al. both stress that the
 //! rebalancing controller must scale with the workers or it becomes the
-//! new bottleneck). This module shards the two heavy steps over
-//! `std::thread::scope` workers:
+//! new bottleneck). This module shards the two heavy steps over the same
+//! persistent worker pool the stage executor dispatches to
+//! ([`ddps::exec::pool`](crate::ddps::exec::pool) — parked threads, no
+//! per-decision spawns):
 //!
 //! - **Histogram merge** ([`merge_histograms_tree`]): the DRW locals are
 //!   merged in a pairwise *tree reduction* through the existing
@@ -17,7 +19,7 @@
 //!   merge adjacent nodes `(2i, 2i+1)`, level by level — is a pure
 //!   function of the local count and **never of the thread count**; a
 //!   level's pair-merges are independent, so they are distributed over
-//!   scoped workers (each owning a disjoint, pair-aligned `&mut` slice)
+//!   pool tasks (each owning a disjoint, pair-aligned `&mut` slice)
 //!   without changing a single float operation. `num_threads = 1` runs
 //!   the same tree serially: results are bitwise-identical at any thread
 //!   count by construction.
@@ -28,10 +30,10 @@
 //!   range — are the pure per-key location reads that feed them
 //!   (line-4/line-7 lookups for KIP, current-location reads for
 //!   Readj/Scan), while KIP's host→partition bucketing (the tail
-//!   bin-packing input of lines 11–15) runs on the calling thread
-//!   concurrent with the heavy-key reads — at most `num_threads` scoped
-//!   workers ever run, the same budget the stage executor honours. The
-//!   cores then consume the precomputed tables
+//!   bin-packing input of lines 11–15) rides the submitting thread's
+//!   task concurrent with the heavy-key reads — at most `num_threads`
+//!   pool threads are ever busy, the same budget the stage executor
+//!   honours. The cores then consume the precomputed tables
 //!   through [`Kip::update_with_locations`] /
 //!   [`GedikPartitioner::update_with_locations`] in the exact sequential
 //!   operation order — decisions, epochs and migration plans are
@@ -66,10 +68,11 @@
 //! [`MergeableSketch::merge_from`]: crate::sketch::MergeableSketch::merge_from
 //! [`Mixed`]: crate::partitioner::Mixed
 
+use crate::ddps::exec::pool::{SharedSlice, WorkerPool};
 use crate::partitioner::{GedikPartitioner, GedikStrategy, Kip, Partitioner};
 use crate::sketch::{Histogram, MergeableSketch};
 use crate::workload::Key;
-use std::thread;
+use std::sync::Mutex;
 
 /// Merge worker-local histograms into the global top-`k` through a
 /// deterministic pairwise tree reduction over
@@ -78,7 +81,7 @@ use std::thread;
 /// The reduction pairs adjacent nodes `(2i, 2i+1)` level by level until
 /// one histogram remains, then re-bounds it with
 /// [`Histogram::truncate_top`]. The tree shape depends only on
-/// `locals.len()`; `num_threads` only chooses how many scoped workers a
+/// `locals.len()`; `num_threads` only chooses how many pool workers a
 /// level's independent pair-merges are spread over, so the result is
 /// bitwise-identical at any thread count (`1` runs the same tree
 /// serially). Ranking of tied counts is stable by key — guaranteed by
@@ -123,8 +126,8 @@ pub fn merge_histograms_tree_bounded(
 }
 
 /// One tree level: `nodes[2i] ← merge(nodes[2i], nodes[2i+1])` for every
-/// adjacent pair, the pair-merges spread over up to `num_threads` scoped
-/// workers on disjoint pair-aligned slices. When `bound > 0` each merged
+/// adjacent pair, the pair-merges spread over up to `num_threads` pool
+/// tasks on disjoint pair-aligned slices. When `bound > 0` each merged
 /// node is truncated back to `bound` entries — `merge_from` leaves
 /// entries count-sorted with key tie-breaks, so the truncation is a
 /// deterministic suffix drop. Which worker computes a pair cannot affect
@@ -135,7 +138,7 @@ fn merge_adjacent_pairs(nodes: &mut [Histogram], bound: usize, num_threads: usiz
         return;
     }
     // `move` so the closure captures `bound` by value and stays `Copy` —
-    // each scoped worker below takes its own copy.
+    // each pool task below takes its own copy.
     let merge_pair = move |pair: &mut [Histogram]| {
         if let [left, right] = pair {
             left.merge_from(right);
@@ -152,21 +155,24 @@ fn merge_adjacent_pairs(nodes: &mut [Histogram], bound: usize, num_threads: usiz
         return;
     }
     let pair_chunk = pairs.div_ceil(workers);
+    let n_tasks = pairs.div_ceil(pair_chunk);
+    let pool = WorkerPool::for_threads(num_threads);
     // Restrict to the paired prefix: an odd trailing node needs no merge,
-    // so it never gets (or wastes) a worker.
-    thread::scope(|s| {
-        for slice in nodes[..pairs * 2].chunks_mut(pair_chunk * 2) {
-            s.spawn(move || {
-                for pair in slice.chunks_mut(2) {
-                    merge_pair(pair);
-                }
-            });
+    // so it never gets (or wastes) a task.
+    let shared = SharedSlice::new(&mut nodes[..pairs * 2]);
+    pool.run(n_tasks, &|t| {
+        let start = t * pair_chunk * 2;
+        let end = (start + pair_chunk * 2).min(pairs * 2);
+        // Safety: tasks own disjoint pair-aligned sub-slices.
+        let slice = unsafe { shared.slice(start..end) };
+        for pair in slice.chunks_mut(2) {
+            merge_pair(pair);
         }
     });
 }
 
 /// Partition of every key in `keys` under `p`, computed over contiguous
-/// key-range chunks on up to `num_threads` scoped workers (`partition` is
+/// key-range chunks on up to `num_threads` pool tasks (`partition` is
 /// pure, so the output — in input order — is identical at any thread
 /// count).
 pub fn partitions_of(p: &dyn Partitioner, keys: &[Key], num_threads: usize) -> Vec<u32> {
@@ -178,27 +184,30 @@ pub fn partitions_of(p: &dyn Partitioner, keys: &[Key], num_threads: usize) -> V
         return out;
     }
     let chunk = keys.len().div_ceil(num_threads).max(1);
-    thread::scope(|s| {
-        for (ks, os) in keys.chunks(chunk).zip(out.chunks_mut(chunk)) {
-            s.spawn(move || {
-                for (o, &k) in os.iter_mut().zip(ks) {
-                    *o = p.partition(k) as u32;
-                }
-            });
+    let n_tasks = keys.len().div_ceil(chunk);
+    let pool = WorkerPool::for_threads(num_threads);
+    let out_sh = SharedSlice::new(&mut out);
+    pool.run(n_tasks, &|t| {
+        let start = t * chunk;
+        let end = (start + chunk).min(keys.len());
+        // Safety: tasks own disjoint contiguous output ranges.
+        let os = unsafe { out_sh.slice(start..end) };
+        for (o, &k) in os.iter_mut().zip(&keys[start..end]) {
+            *o = p.partition(k) as u32;
         }
     });
     out
 }
 
 /// KIP candidate construction with the pure preparation sharded: the
-/// keys split into `num_threads` contiguous ranges, each worker reading
-/// both the line-4 (previous) and line-7 (hash) locations for its range.
-/// The calling thread takes the first range itself, after bucketing
-/// hosts by partition for lines 11–15's tail bin-packing — so at most
-/// `num_threads` threads are ever busy (caller + `num_threads - 1`
-/// spawned workers), the same budget the stage executor honours. The
-/// greedy core runs unchanged via [`Kip::update_with_locations`], so the
-/// result is bitwise-identical to [`Kip::updated`] at any `num_threads`.
+/// keys split into `num_threads` contiguous ranges, each pool task
+/// reading both the line-4 (previous) and line-7 (hash) locations for
+/// its range. The submitting thread takes the first range itself (task
+/// 0), after bucketing hosts by partition for lines 11–15's tail
+/// bin-packing — so at most `num_threads` threads are ever busy, the
+/// same budget the stage executor honours. The greedy core runs
+/// unchanged via [`Kip::update_with_locations`], so the result is
+/// bitwise-identical to [`Kip::updated`] at any `num_threads`.
 pub fn kip_candidate(kip: &Kip, hist: &Histogram, num_threads: usize) -> Kip {
     if num_threads <= 1 || hist.len() < 2 {
         return kip.updated(hist);
@@ -209,30 +218,32 @@ pub fn kip_candidate(kip: &Kip, hist: &Histogram, num_threads: usize) -> Kip {
     let mut prev_locs = vec![0u32; keys.len()];
     let mut hash_locs = vec![0u32; keys.len()];
     let chunk = keys.len().div_ceil(num_threads).max(1);
+    let n_tasks = keys.len().div_ceil(chunk);
     let fill = |ks: &[Key], ps: &mut [u32], hs: &mut [u32]| {
         for ((&k, p), h) in ks.iter().zip(ps.iter_mut()).zip(hs.iter_mut()) {
             *p = kip.partition(k) as u32;
             *h = hash.partition(k) as u32;
         }
     };
-    let mut ranges = keys
-        .chunks(chunk)
-        .zip(prev_locs.chunks_mut(chunk))
-        .zip(hash_locs.chunks_mut(chunk));
-    let own = ranges.next();
-    let mut hosts_in = Vec::new();
-    thread::scope(|s| {
-        // Heavy-key side: both location reads per key, split by key range.
-        for ((ks, ps), hs) in ranges {
-            s.spawn(move || fill(ks, ps, hs));
+    let pool = WorkerPool::for_threads(num_threads);
+    let ps_sh = SharedSlice::new(&mut prev_locs);
+    let hs_sh = SharedSlice::new(&mut hash_locs);
+    let hosts_slot = Mutex::new(Vec::new());
+    let keys_ref = &keys[..];
+    pool.run(n_tasks, &|t| {
+        // Tail side rides task 0 — the submitting thread — concurrent
+        // with the other tasks' heavy-key reads.
+        if t == 0 {
+            *hosts_slot.lock().expect("hosts slot") = hash.hosts_by_partition();
         }
-        // Tail side and the first key range on the calling thread, while
-        // the workers run.
-        hosts_in = hash.hosts_by_partition();
-        if let Some(((ks, ps), hs)) = own {
-            fill(ks, ps, hs);
-        }
+        let start = t * chunk;
+        let end = (start + chunk).min(keys_ref.len());
+        // Safety: tasks own disjoint contiguous ranges of both tables.
+        let ps = unsafe { ps_sh.slice(start..end) };
+        let hs = unsafe { hs_sh.slice(start..end) };
+        fill(&keys_ref[start..end], ps, hs);
     });
+    let hosts_in = hosts_slot.into_inner().expect("hosts slot");
     Kip::update_with_locations(&prev_locs, &hash_locs, hosts_in, hash, hist, cfg)
 }
 

@@ -6,7 +6,7 @@
 //! counters so the next interval tracks the current distribution.
 //!
 //! DRWs share no state with each other, so the engines tap and harvest
-//! them on contiguous shards of scoped workers
+//! them on contiguous shards of persistent pool workers
 //! ([`tap_records_sharded`](crate::ddps::exec::tap_records_sharded),
 //! [`harvest_sharded`](crate::ddps::exec::parallel::harvest_sharded)) —
 //! each DRW sees its exact sequential observation sequence either way:

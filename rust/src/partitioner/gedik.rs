@@ -151,7 +151,7 @@ impl GedikPartitioner {
     /// computes them inline and hands them to
     /// [`GedikPartitioner::update_with_locations`], which the sharded
     /// decision point ([`crate::dr::parallel::gedik_candidate`]) also
-    /// drives with the same table precomputed on scoped workers split by
+    /// drives with the same table precomputed on pool workers split by
     /// key range — the greedy placement itself is identical either way.
     pub fn update(&self, hist: &Histogram) -> Self {
         let cur_locs: Vec<u32> = match self.strategy {

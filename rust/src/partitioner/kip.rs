@@ -89,7 +89,7 @@ impl Kip {
     /// bucketing (lines 11–13) are pure; this entry point computes them
     /// inline and hands them to [`Kip::update_with_locations`], which the
     /// sharded decision point ([`crate::dr::parallel::kip_candidate`])
-    /// also drives with the same tables precomputed on scoped workers —
+    /// also drives with the same tables precomputed on pool workers —
     /// so the sequential and sharded constructions are the same
     /// operation sequence, bitwise.
     pub fn update(

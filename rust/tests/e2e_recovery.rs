@@ -145,6 +145,14 @@ fn crash_restore_replay_reproduces_sharded() {
 }
 
 #[test]
+fn crash_restore_replay_reproduces_wide_pool() {
+    // a pool wider than the typical core count: the crash drops an
+    // engine mid-run while the process-wide pool lives on, and the
+    // restored engine reuses the same parked workers bitwise
+    crash_restore_roundtrip(8);
+}
+
+#[test]
 fn recovery_is_thread_count_invariant() {
     // the whole crash/restore/replay story lands on identical bits
     // whether the executor is sequential or sharded

@@ -141,7 +141,9 @@ fn microbatch_reports_identical_across_thread_counts() {
     forall(10, |g| {
         let n_partitions = g.usize(2..12);
         let n_slots = g.usize(2..12);
-        let threads = g.usize(2..6);
+        // occasionally exceed the core count: the persistent pool must be
+        // exact at wide widths too, not just small ones
+        let threads = if g.bool(0.25) { 8 } else { g.usize(2..6) };
         let (batches, seed) = gen_batches(g, 4);
         let dr = gen_dr(g);
         let mut seq =
@@ -211,8 +213,9 @@ fn pipelined_run_stream_identical_to_lockstep_for_all_engines() {
     forall(8, |g| {
         let n_partitions = g.usize(2..10);
         let n_slots = n_partitions + g.usize(0..4);
-        // 1 = sequential drive, >1 = overlapped lanes; both must pin
-        let threads = g.usize(1..6);
+        // 1 = sequential drive, >1 = overlapped lanes; both must pin.
+        // Widths up to 8 exercise the pool past the physical core count.
+        let threads = if g.bool(0.25) { 8 } else { g.usize(1..6) };
         let (batches, seed) = gen_batches(g, 4);
         let dr = gen_dr(g);
 
@@ -551,5 +554,151 @@ fn decision_wall_s_is_measured_and_threaded_through() {
             "per-report decision walls must accumulate into the metrics",
         );
         assert!(sum > 0.0, "three decision points take measurable wall time");
+    });
+}
+
+/// The pool-replaces-scope invariant (PR 9): the persistent-pool executor
+/// ([`route`] + [`shuffle_sharded`] on a shared
+/// [`WorkerPool`](dynrepart::ddps::WorkerPool)) must reproduce — bitwise —
+/// both the sequential loop and the per-call `thread::scope` executor it
+/// replaced (kept below as a test-local reference implementation), for
+/// random workloads, partition counts and thread widths.
+///
+/// [`route`]: dynrepart::ddps::exec::parallel::route
+/// [`shuffle_sharded`]: dynrepart::ddps::exec::parallel::shuffle_sharded
+#[test]
+fn pooled_executor_matches_scoped_reference_and_sequential_bitwise() {
+    use dynrepart::ddps::exec::parallel::{route, shard_ranges, shuffle_sharded};
+    use dynrepart::partitioner::{EpochedPartitioner, PartitionerEpoch, Uhp};
+    use dynrepart::state::StateStore;
+    use std::sync::Arc;
+
+    fn shard_chunk(n: usize, shards: usize) -> usize {
+        n.div_ceil(shards.max(1)).max(1)
+    }
+
+    // The pre-pool executor: fresh `thread::scope` spawns per call, with
+    // per-chunk route buckets concatenated in chunk order and per-shard
+    // accumulators copy-merged in shard order.
+    fn scoped_reference(
+        records: &[Record],
+        epoch: &PartitionerEpoch,
+        n_partitions: usize,
+        num_threads: usize,
+    ) -> (Vec<f64>, Vec<u64>, Vec<StateStore>) {
+        let rec_ranges = shard_ranges(records.len(), num_threads);
+        let part_ranges = shard_ranges(n_partitions, num_threads);
+        let n_shards = part_ranges.len();
+        let pc = shard_chunk(n_partitions, num_threads);
+        let mut routes: Vec<u32> = Vec::with_capacity(records.len());
+        let mut groups: Vec<Vec<u32>> = vec![Vec::new(); n_shards];
+        std::thread::scope(|s| {
+            let handles: Vec<_> = rec_ranges
+                .iter()
+                .cloned()
+                .map(|range| {
+                    s.spawn(move || {
+                        let mut routes = Vec::with_capacity(range.len());
+                        let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); n_shards];
+                        for i in range {
+                            let p = epoch.partition(records[i].key);
+                            routes.push(p as u32);
+                            buckets[p / pc].push(i as u32);
+                        }
+                        (routes, buckets)
+                    })
+                })
+                .collect();
+            for h in handles {
+                let (r, buckets) = h.join().expect("scoped route worker");
+                routes.extend_from_slice(&r);
+                for (group, bucket) in groups.iter_mut().zip(buckets) {
+                    group.extend_from_slice(&bucket);
+                }
+            }
+        });
+        let mut loads = vec![0.0f64; n_partitions];
+        let mut counts = vec![0u64; n_partitions];
+        let mut stores: Vec<StateStore> = Vec::with_capacity(n_partitions);
+        std::thread::scope(|s| {
+            let routes = &routes;
+            let handles: Vec<_> = part_ranges
+                .iter()
+                .cloned()
+                .enumerate()
+                .map(|(s_idx, range)| {
+                    let indices = &groups[s_idx];
+                    s.spawn(move || {
+                        let mut l = vec![0.0f64; range.len()];
+                        let mut c = vec![0u64; range.len()];
+                        let mut st: Vec<StateStore> =
+                            (0..range.len()).map(|_| StateStore::new()).collect();
+                        for &i in indices {
+                            let r = &records[i as usize];
+                            let p = routes[i as usize] as usize - range.start;
+                            l[p] += r.weight;
+                            c[p] += 1;
+                            st[p].fold_count(r.key, r.weight);
+                        }
+                        (range, l, c, st)
+                    })
+                })
+                .collect();
+            for h in handles {
+                let (range, l, c, st) = h.join().expect("scoped shuffle worker");
+                loads[range.clone()].copy_from_slice(&l);
+                counts[range].copy_from_slice(&c);
+                stores.extend(st);
+            }
+        });
+        (loads, counts, stores)
+    }
+
+    forall(8, |g| {
+        let n_partitions = g.usize(2..24);
+        let (batches, seed) = gen_batches(g, 1);
+        let records = &batches[0];
+        let epoch = EpochedPartitioner::new(Arc::new(Uhp::with_seed(n_partitions, seed))).current();
+
+        let mut loads_seq = vec![0.0f64; n_partitions];
+        let mut counts_seq = vec![0u64; n_partitions];
+        let mut stores_seq: Vec<StateStore> =
+            (0..n_partitions).map(|_| StateStore::new()).collect();
+        for r in records {
+            let p = epoch.partition(r.key);
+            loads_seq[p] += r.weight;
+            counts_seq[p] += 1;
+            stores_seq[p].fold_count(r.key, r.weight);
+        }
+
+        for threads in [2usize, 3, 8] {
+            let (loads_ref, counts_ref, stores_ref) =
+                scoped_reference(records, &epoch, n_partitions, threads);
+            let routed = route(records, &epoch, threads);
+            let mut stores: Vec<StateStore> =
+                (0..n_partitions).map(|_| StateStore::new()).collect();
+            let (loads, counts) = shuffle_sharded(
+                records,
+                &routed,
+                n_partitions,
+                Some(stores.as_mut_slice()),
+                threads,
+            );
+            let tag = format!("{threads} threads");
+            assert_eq!(counts, counts_seq, "{tag}: counts vs sequential");
+            assert_eq!(counts, counts_ref, "{tag}: counts vs scoped reference");
+            assert_vec_bits(&loads, &loads_seq, &tag);
+            assert_vec_bits(&loads, &loads_ref, &tag);
+            for ((a, b), c) in stores.iter().zip(&stores_seq).zip(&stores_ref) {
+                assert_eq!(a.n_keys(), b.n_keys(), "{tag}: state keys vs sequential");
+                assert_eq!(a.n_keys(), c.n_keys(), "{tag}: state keys vs scoped reference");
+                assert_bits(a.total_weight(), b.total_weight(), &tag);
+                assert_bits(a.total_weight(), c.total_weight(), &tag);
+                for k in b.keys() {
+                    assert_eq!(a.get(k), b.get(k), "{tag}: key {k} vs sequential");
+                    assert_eq!(a.get(k), c.get(k), "{tag}: key {k} vs scoped reference");
+                }
+            }
+        }
     });
 }

@@ -123,6 +123,27 @@ fn worker_failure_recovery_is_invisible_and_thread_invariant() {
     });
 }
 
+/// The pool-lifecycle leg (PR 9): one process-wide persistent pool per
+/// width must survive — and stay bitwise-exact through — a scenario that
+/// rescales the partition count mid-run and another that crashes and
+/// restores a worker, both at a thread width (8) past the typical core
+/// count. Pools are created once per width and reused across every
+/// interval of both runs, so any cross-interval scratch or handoff bug
+/// shows up as a report diff here.
+#[test]
+fn pool_survives_rescale_and_recovery_at_wide_thread_counts() {
+    let cfg = trimmed("scale_out_in.conf", 77);
+    let r1 = run_with_threads(cfg.clone(), 1);
+    let r8 = run_with_threads(cfg, 8);
+    assert_reports_bitwise(&r1, &r8);
+
+    let cfg = trimmed("worker_failure.conf", 78);
+    let r1 = run_with_threads(cfg.clone(), 1);
+    let r8 = run_with_threads(cfg, 8);
+    assert!(r8.recoveries_verified >= 1, "the conf must exercise mid-run fail-restore");
+    assert_reports_bitwise(&r1, &r8);
+}
+
 #[test]
 fn diurnal_microbatch_is_thread_invariant() {
     let cfg = trimmed("diurnal_microbatch.conf", 1717);
