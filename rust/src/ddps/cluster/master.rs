@@ -1,0 +1,818 @@
+//! The master process: spawn N worker processes, drive the streaming
+//! decision pipeline over their sockets, and keep every virtual-time
+//! column bitwise-identical to the in-process
+//! [`StreamingEngine`](crate::ddps::StreamingEngine) oracle.
+//!
+//! The master owns exactly the pieces the single-process engine keeps on
+//! the decision side — the [`DrMaster`], the [`DeciderState`], the
+//! routing epoch — and mirrors its interval verbatim: shuffle-fold
+//! accounting through [`exec::finish_stage_report`], proposal via
+//! [`DrMaster::propose_sharded`] over the workers' wire-shipped
+//! histograms, [`ProposalStats`] assembled from wire-summed mover
+//! weights in the same accumulation order `predicted_migration` uses,
+//! commit/decline on the decider's verdict, and an epoch swap whose op
+//! list is the global `apply_epoch_swap` plan order restricted per
+//! worker. Only the measured wall-clock columns may differ.
+//!
+//! Crash-restore: workers snapshot their shard into every `BarrierDone`;
+//! when a worker's connection drops mid-interval the master respawns it,
+//! replays the last barrier snapshot plus the retained in-flight batch,
+//! and re-reads the harvest — the run's reports and final state are
+//! bitwise those of a run that never lost the worker.
+
+use super::transport::{self, Endpoint, Listener, Stream};
+use super::wire::{
+    self, AssignWire, BarrierEndWire, FinalPartWire, HarvestWire, Message, MoverWire, OpWire,
+    RoutesWire, SnapshotWire,
+};
+use super::ClusterError;
+use crate::ddps::exec::{self, MigrationReport, Scheduling};
+use crate::ddps::{EngineConfig, EngineMetrics, IntervalReport};
+use crate::dr::{DeciderState, DrConfig, DrMaster, PartitionerChoice, ProposalStats, Verdict};
+use crate::partitioner::PartitionerEpoch;
+use crate::sketch::Histogram;
+use crate::state::StateStore;
+use crate::workload::Record;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+const ACCEPT_TIMEOUT: Duration = Duration::from_secs(20);
+const IO_TIMEOUT: Duration = Duration::from_secs(120);
+/// Revives allowed per harvest read before the error is surfaced.
+const REVIVE_ATTEMPTS: u32 = 3;
+
+/// How to stand the cluster up.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterOptions {
+    pub n_workers: usize,
+    /// Binary to spawn workers from; defaults to the current executable
+    /// (the `dynrepart worker` subcommand). Tests pass
+    /// `env!("CARGO_BIN_EXE_dynrepart")` — the test harness binary has no
+    /// `worker` subcommand.
+    pub worker_bin: Option<PathBuf>,
+    /// Directory for the master's Unix socket (defaults to the system
+    /// temp dir).
+    pub socket_dir: Option<PathBuf>,
+    /// Test hook: worker `id` exits right after receiving the batch of
+    /// `interval`, exercising the crash-restore path.
+    pub fail_at: Option<(u32, u64)>,
+}
+
+impl ClusterOptions {
+    pub fn new(n_workers: usize) -> Self {
+        Self {
+            n_workers,
+            ..Self::default()
+        }
+    }
+}
+
+/// Wire-level accounting plus the run's determinism digests.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ClusterStats {
+    /// Batch-frame bytes broadcast over the feed connections.
+    pub shuffle_bytes: u64,
+    /// Plan/mover/barrier-op bytes exchanged for state migration.
+    pub migration_bytes: u64,
+    /// Barrier-snapshot and restore bytes.
+    pub snapshot_bytes: u64,
+    /// FNV digest over every adopted migration plan (interval, epoch,
+    /// ops) — worker-count-invariant by construction.
+    pub plan_digest: u64,
+    /// [`final_digest`] of the run's final per-partition state rows (set
+    /// by [`ClusterMaster::finish`]).
+    pub state_digest: u64,
+    /// Workers respawned after a dropped connection.
+    pub worker_restores: u64,
+}
+
+/// What [`ClusterMaster::finish`] collects from the workers: one row per
+/// partition, in partition order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FinalStateSummary {
+    pub parts: Vec<FinalPartWire>,
+    /// Sum of the per-partition cached totals in partition order — the
+    /// bit pattern of the oracle's `total_state_weight()`.
+    pub total_state_weight: f64,
+    pub state_digest: u64,
+}
+
+struct WorkerLink {
+    child: Child,
+    control: Stream,
+    feed: Stream,
+    lo: usize,
+    hi: usize,
+}
+
+/// Kill-on-drop guard for the spawn window between `Command::spawn` and
+/// the links taking ownership.
+struct Pending(Vec<Child>);
+
+impl Drop for Pending {
+    fn drop(&mut self) {
+        for c in &mut self.0 {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+pub struct ClusterMaster {
+    cfg: EngineConfig,
+    dr: DrConfig,
+    seed: u64,
+    drm: DrMaster,
+    decider: DeciderState,
+    partitioner: PartitionerEpoch,
+    routes_wire: RoutesWire,
+    metrics: EngineMetrics,
+    /// Service rates are all `1.0` — the cluster models no slowdown
+    /// events — kept as a vector so the stage accounting takes the same
+    /// `Some(rates)` path the in-process engine takes.
+    rates: Vec<f64>,
+    links: Vec<WorkerLink>,
+    listener: Listener,
+    endpoint: Endpoint,
+    worker_bin: PathBuf,
+    /// Latest barrier snapshot per worker, for crash-restore.
+    snapshots: Vec<Option<SnapshotWire>>,
+    /// The in-flight batch frame, replayed to a revived worker.
+    retained_batch: Option<Vec<u8>>,
+    pending_barrier: bool,
+    interval_no: u64,
+    vtime: f64,
+    recent_load: f64,
+    stats: ClusterStats,
+}
+
+fn unexpected(expected: &str, got: &Message) -> ClusterError {
+    ClusterError::Protocol(format!("expected {expected}, got {}", got.name()))
+}
+
+fn spawn_worker(
+    bin: &Path,
+    ep: &Endpoint,
+    id: u32,
+    fail_at: Option<u64>,
+) -> Result<Child, ClusterError> {
+    let mut cmd = Command::new(bin);
+    cmd.arg("worker")
+        .arg("--connect")
+        .arg(ep.to_arg())
+        .arg("--id")
+        .arg(id.to_string());
+    if let Some(at) = fail_at {
+        cmd.arg("--fail-at").arg(at.to_string());
+    }
+    cmd.stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::inherit());
+    cmd.spawn().map_err(ClusterError::from)
+}
+
+impl ClusterMaster {
+    /// Bind a fresh socket, spawn `opts.n_workers` worker processes,
+    /// collect their hello handshakes and assign each its contiguous
+    /// partition shard. Streaming-only: slots must cover the pinned
+    /// partitions, exactly as [`StreamingEngine::new`] asserts.
+    ///
+    /// [`StreamingEngine::new`]: crate::ddps::StreamingEngine::new
+    pub fn launch(
+        cfg: EngineConfig,
+        dr: DrConfig,
+        choice: PartitionerChoice,
+        seed: u64,
+        opts: &ClusterOptions,
+    ) -> Result<Self, ClusterError> {
+        cfg.validate();
+        let w = opts.n_workers;
+        assert!(w >= 1, "need at least one worker");
+        assert!(
+            w <= cfg.n_partitions,
+            "more workers than partitions: every worker needs a shard"
+        );
+        assert!(
+            cfg.n_slots >= cfg.n_partitions,
+            "streaming tasks are pinned: need slots >= partitions"
+        );
+        let drm = DrMaster::with_sketch(dr, choice, cfg.n_partitions, seed, cfg.sketch);
+        let decider = DeciderState::new(dr.decider);
+        let partitioner = drm.handle();
+        let routes_wire =
+            RoutesWire::from_flat(partitioner.flat().ok_or(ClusterError::NotLowerable)?);
+        let endpoint = Endpoint::Unix(transport::fresh_socket_path(opts.socket_dir.as_deref()));
+        let listener = Listener::bind(&endpoint)?;
+        let worker_bin = match &opts.worker_bin {
+            Some(p) => p.clone(),
+            None => std::env::current_exe()?,
+        };
+
+        let mut pending = Pending(Vec::with_capacity(w));
+        for id in 0..w as u32 {
+            let fail_at = match opts.fail_at {
+                Some((fid, at)) if fid == id => Some(at),
+                _ => None,
+            };
+            pending.0.push(spawn_worker(&worker_bin, &endpoint, id, fail_at)?);
+        }
+
+        // Collect 2N hello-identified connections into their slots.
+        let mut controls: Vec<Option<Stream>> = (0..w).map(|_| None).collect();
+        let mut feeds: Vec<Option<Stream>> = (0..w).map(|_| None).collect();
+        let place = |slots: &mut Vec<Option<Stream>>, id: u32, s: Stream| {
+            let slot = slots
+                .get_mut(id as usize)
+                .ok_or_else(|| ClusterError::Protocol(format!("hello from unknown worker {id}")))?;
+            if slot.is_some() {
+                return Err(ClusterError::Protocol(format!(
+                    "duplicate hello from worker {id}"
+                )));
+            }
+            *slot = Some(s);
+            Ok(())
+        };
+        for _ in 0..2 * w {
+            let mut s = listener.accept_timeout(ACCEPT_TIMEOUT)?;
+            s.set_timeouts(Some(IO_TIMEOUT), Some(IO_TIMEOUT))?;
+            match wire::read_frame(&mut s)?.0 {
+                Message::HelloControl { worker_id } => place(&mut controls, worker_id, s)?,
+                Message::HelloFeed { worker_id } => place(&mut feeds, worker_id, s)?,
+                other => return Err(unexpected("a hello", &other)),
+            }
+        }
+
+        let children = std::mem::take(&mut pending.0);
+        std::mem::forget(pending);
+        let n = cfg.n_partitions;
+        let links = children
+            .into_iter()
+            .enumerate()
+            .map(|(id, child)| WorkerLink {
+                child,
+                control: controls[id].take().expect("all hellos collected"),
+                feed: feeds[id].take().expect("all hellos collected"),
+                lo: id * n / w,
+                hi: (id + 1) * n / w,
+            })
+            .collect();
+
+        let mut master = Self {
+            rates: vec![1.0; cfg.n_partitions],
+            snapshots: (0..w).map(|_| None).collect(),
+            cfg,
+            dr,
+            seed,
+            drm,
+            decider,
+            partitioner,
+            routes_wire,
+            metrics: EngineMetrics::default(),
+            links,
+            listener,
+            endpoint,
+            worker_bin,
+            retained_batch: None,
+            pending_barrier: false,
+            interval_no: 0,
+            vtime: 0.0,
+            recent_load: 0.0,
+            stats: ClusterStats::default(),
+        };
+        for id in 0..w {
+            let assign = master.make_assign(id, 1, false);
+            wire::write_frame(&mut master.links[id].control, &Message::Assign(assign))?;
+        }
+        Ok(master)
+    }
+
+    fn make_assign(&self, id: usize, next_interval: u64, restore: bool) -> AssignWire {
+        let link = &self.links[id];
+        AssignWire {
+            worker_id: id as u32,
+            n_workers: self.links.len() as u32,
+            n_partitions: self.cfg.n_partitions as u32,
+            part_lo: link.lo as u32,
+            part_hi: link.hi as u32,
+            base_seed: self.seed,
+            sample_rate_bits: self.dr.sample_rate.to_bits(),
+            counter_capacity: self.drm.worker_capacity() as u64,
+            sketch_compaction: self.cfg.sketch.compaction_interval as u64,
+            sketch_bound: self.cfg.sketch.size_boundary as u64,
+            sketch_take: self.cfg.sketch.take_top_k as u64,
+            ship_k: self.drm.ship_size() as u64,
+            next_interval,
+            epoch: self.partitioner.epoch(),
+            restore,
+            routes: self.routes_wire.clone(),
+        }
+    }
+
+    /// One decision interval over the wire — the distributed
+    /// `run_interval`. Broadcast the batch, close the previous barrier,
+    /// collect harvests (reviving any worker whose connection dropped),
+    /// run the proposal → decider → commit path on the master, derive the
+    /// migration op list, and close the interval with a `BarrierEnd`.
+    pub fn run_interval(&mut self, records: &[Record]) -> Result<IntervalReport, ClusterError> {
+        let span = Instant::now();
+        self.interval_no += 1;
+        let interval = self.interval_no;
+
+        // (1) Broadcast the batch. Workers prefetch on a dedicated
+        // thread, so these writes drain even while workers sit in the
+        // previous barrier.
+        let frame = wire::encode_frame(&Message::Batch {
+            interval,
+            records: records.to_vec(),
+        })?;
+        for link in &mut self.links {
+            link.feed.write_all(&frame)?;
+            link.feed.flush()?;
+            self.stats.shuffle_bytes += frame.len() as u64;
+        }
+        self.retained_batch = Some(frame);
+
+        // (2) Close the previous interval's barrier — overlapped behind
+        // the batch broadcast, like the pipelined in-process loop.
+        if self.pending_barrier {
+            self.await_barrier(interval - 1)?;
+            self.pending_barrier = false;
+        }
+
+        // (3) Harvests, worker by worker in shard order; a dropped
+        // connection here is the crash-restore path.
+        let stage_start = Instant::now();
+        let n = self.cfg.n_partitions;
+        let mut loads = vec![0.0f64; n];
+        let mut counts = vec![0u64; n];
+        let mut totals = vec![0.0f64; n];
+        let mut hists: Vec<Histogram> = Vec::with_capacity(n);
+        for id in 0..self.links.len() {
+            let h = self.read_harvest(id, interval)?;
+            let (lo, hi) = (self.links[id].lo, self.links[id].hi);
+            let shard = hi - lo;
+            if h.hists.len() != shard
+                || h.loads.len() != shard
+                || h.counts.len() != shard
+                || h.totals.len() != shard
+            {
+                return Err(ClusterError::Protocol(format!(
+                    "worker {id} harvested {} partitions, owns {shard}",
+                    h.hists.len()
+                )));
+            }
+            hists.extend(h.hists.iter().map(|hw| hw.to_histogram()));
+            for off in 0..shard {
+                loads[lo + off] = f64::from_bits(h.loads[off]);
+                counts[lo + off] = h.counts[off];
+                totals[lo + off] = f64::from_bits(h.totals[off]);
+            }
+        }
+        let stage_wall = stage_start.elapsed().as_secs_f64();
+
+        // (4) Stage accounting through the exact in-process code path —
+        // the workers' fold-order load sums feed the same arithmetic.
+        let mut stage = exec::finish_stage_report(
+            &self.cfg,
+            Scheduling::Pinned,
+            records.len(),
+            loads,
+            counts,
+            Some(&self.rates),
+            stage_wall,
+        );
+
+        // (5) Proposal + decider verdict, mirroring `resolve_and_adopt`:
+        // histograms concatenate in worker order == the sequential DRW
+        // harvest order, and the predicted migration sums mover weights
+        // in the global store-walk order.
+        let dwall_start = Instant::now();
+        let proposal = self.drm.propose_sharded(hists, self.cfg.num_threads);
+        let mut dwall = dwall_start.elapsed().as_secs_f64();
+
+        let resolve_start = Instant::now();
+        let total_state: f64 = totals.iter().sum();
+        let mut gathered: Option<Vec<MoverWire>> = None;
+        let (moved_pred, fraction_pred) =
+            if proposal.worth_it && self.decider.policy().prices_migration() {
+                let candidate = proposal
+                    .candidate()
+                    .expect("worthwhile proposals carry a candidate");
+                let flat = candidate.flat_routes().ok_or(ClusterError::NotLowerable)?;
+                let rw = RoutesWire::from_flat(&flat);
+                let movers = self.gather_movers(interval, &rw)?;
+                let moved: f64 = movers
+                    .iter()
+                    .map(|m| f64::from_bits(m.state.weight_bits))
+                    .sum();
+                let fraction = if total_state > 0.0 { moved / total_state } else { 0.0 };
+                gathered = Some(movers);
+                (moved, fraction)
+            } else {
+                (0.0, 0.0)
+            };
+        let pstats = ProposalStats {
+            worth_it: proposal.worth_it,
+            current_max_share: proposal.current_max_share,
+            planned_max_share: proposal.planned_max_share,
+            heavy_mass: proposal.histogram.heavy_mass(),
+            predicted_moved_weight: moved_pred,
+            predicted_migration_fraction: fraction_pred,
+            recent_load: self.recent_load,
+            reduce_cost: self.cfg.reduce_cost,
+            migration_cost: self.cfg.migration_cost,
+        };
+        let verdict = self.decider.judge(&pstats);
+        let decision = match verdict {
+            Verdict::Adopt => self.drm.commit(proposal),
+            Verdict::Defer | Verdict::Reject => self.drm.decline(proposal),
+        };
+        dwall += resolve_start.elapsed().as_secs_f64();
+
+        // (6) Adoption: derive the global op list in `apply_epoch_swap`
+        // plan order (workers in shard order, keys in slab order, Extract
+        // then Install per key) and switch the master's routing epoch.
+        let mut ops: Vec<OpWire> = Vec::new();
+        let mut barrier_swap: Option<(u64, RoutesWire)> = None;
+        let (migration, repartitioned) = if let Some(swap) = decision.swap {
+            let flat = swap
+                .to
+                .flat()
+                .cloned()
+                .ok_or(ClusterError::NotLowerable)?;
+            let rw = RoutesWire::from_flat(&flat);
+            // the priced path already gathered against the identical
+            // candidate routing; Naive/Threshold gather now
+            let movers = match gathered.take() {
+                Some(m) => m,
+                None => self.gather_movers(interval, &rw)?,
+            };
+            let mut moved = 0.0;
+            ops.reserve(movers.len() * 2);
+            for m in &movers {
+                moved += f64::from_bits(m.state.weight_bits);
+                ops.push(OpWire::Extract {
+                    part: m.part,
+                    key: m.key,
+                });
+                ops.push(OpWire::Install {
+                    part: flat.partition(m.key) as u32,
+                    key: m.key,
+                    state: m.state.clone(),
+                });
+            }
+            let fraction = if total_state > 0.0 { moved / total_state } else { 0.0 };
+            self.stats.plan_digest =
+                plan_digest_step(self.stats.plan_digest, interval, swap.to.epoch(), &ops);
+            self.partitioner = swap.to.clone();
+            self.routes_wire = rw.clone();
+            self.metrics.state_weight_migrated += moved;
+            self.metrics.repartition_count += 1;
+            barrier_swap = Some((swap.to.epoch(), rw));
+            (
+                MigrationReport {
+                    pause: moved * self.cfg.migration_cost,
+                    moved_weight: moved,
+                    migrated_fraction: fraction,
+                },
+                true,
+            )
+        } else {
+            (MigrationReport::none(), false)
+        };
+
+        // (7) Close the interval: each worker gets its shard's op
+        // subsequence (global order preserved) plus the swap, applies it,
+        // snapshots, and answers BarrierDone — which we collect at the
+        // start of the next interval.
+        for id in 0..self.links.len() {
+            let (lo, hi) = (self.links[id].lo, self.links[id].hi);
+            let be = BarrierEndWire {
+                interval,
+                swap: barrier_swap.clone(),
+                ops: ops
+                    .iter()
+                    .filter(|op| (op.part() as usize) >= lo && (op.part() as usize) < hi)
+                    .cloned()
+                    .collect(),
+            };
+            let nbytes = wire::write_frame(&mut self.links[id].control, &Message::BarrierEnd(be))?;
+            if barrier_swap.is_some() {
+                self.stats.migration_bytes += nbytes as u64;
+            }
+        }
+        self.pending_barrier = true;
+
+        // (8) Assemble, mirroring the in-process `assemble` verbatim —
+        // recent_load updates only after the stats consumed the previous
+        // interval's value.
+        stage.decision_wall_s = dwall;
+        self.recent_load = stage.loads.iter().sum();
+        let pipeline_wall_s = span.elapsed().as_secs_f64();
+        let busy = stage.wall_s + dwall;
+        let makespan = migration.pause + stage.stage_time;
+        let m = &mut self.metrics;
+        m.records_processed += records.len() as u64;
+        m.total_vtime += makespan;
+        m.reduce_vtime += stage.reduce_time;
+        m.migration_vtime += migration.pause;
+        m.wall_s += stage.wall_s;
+        m.decision_wall_s += dwall;
+        m.pipeline_wall_s += pipeline_wall_s;
+        self.vtime += makespan;
+        Ok(IntervalReport {
+            interval_no: interval,
+            elapsed: makespan,
+            wall_s: stage.wall_s,
+            decision_wall_s: dwall,
+            source_wall_s: 0.0,
+            pipeline_occupancy: if pipeline_wall_s > 0.0 {
+                busy / pipeline_wall_s
+            } else {
+                1.0
+            },
+            throughput: if makespan > 0.0 {
+                records.len() as f64 / makespan
+            } else {
+                0.0
+            },
+            imbalance: stage.imbalance,
+            migrated_fraction: migration.migrated_fraction,
+            migration_pause: migration.pause,
+            repartitioned,
+            bottleneck_ratio: stage.bottleneck_ratio,
+            epoch: self.partitioner.epoch(),
+            loads: stage.loads,
+            decisions_adopted: self.decider.adopted(),
+            decisions_deferred: self.decider.deferred(),
+        })
+    }
+
+    fn await_barrier(&mut self, interval: u64) -> Result<(), ClusterError> {
+        for id in 0..self.links.len() {
+            let (msg, nbytes) = wire::read_frame(&mut self.links[id].control)?;
+            match msg {
+                Message::BarrierDone {
+                    interval: i,
+                    snapshot,
+                } if i == interval => {
+                    self.stats.snapshot_bytes += nbytes as u64;
+                    self.snapshots[id] = Some(snapshot);
+                }
+                other => return Err(unexpected("BarrierDone", &other)),
+            }
+        }
+        Ok(())
+    }
+
+    fn read_harvest(&mut self, id: usize, interval: u64) -> Result<HarvestWire, ClusterError> {
+        let mut revives = 0;
+        loop {
+            match wire::read_frame(&mut self.links[id].control) {
+                Ok((Message::Harvest(h), _)) if h.interval == interval => return Ok(h),
+                Ok((Message::Harvest(h), _)) => {
+                    return Err(ClusterError::Protocol(format!(
+                        "worker {id} harvested interval {}, expected {interval}",
+                        h.interval
+                    )));
+                }
+                Ok((other, _)) => return Err(unexpected("Harvest", &other)),
+                Err(e @ (ClusterError::Disconnected(_) | ClusterError::Truncated(_))) => {
+                    revives += 1;
+                    if revives > REVIVE_ATTEMPTS {
+                        return Err(e);
+                    }
+                    self.revive_worker(id, interval)?;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Respawn worker `id` after a dropped connection: fresh process,
+    /// fresh handshake, the last barrier snapshot (if any — a crash in
+    /// interval 1 restores fresh empty state, which is exactly what the
+    /// worker had), and the retained in-flight batch replayed.
+    fn revive_worker(&mut self, id: usize, interval: u64) -> Result<(), ClusterError> {
+        let _ = self.links[id].child.kill();
+        let _ = self.links[id].child.wait();
+        let child = spawn_worker(&self.worker_bin, &self.endpoint, id as u32, None)?;
+        self.links[id].child = child;
+        let (control, feed) = self.accept_pair(id as u32)?;
+        self.links[id].control = control;
+        self.links[id].feed = feed;
+        let restore = self.snapshots[id].is_some();
+        let assign = self.make_assign(id, interval, restore);
+        wire::write_frame(&mut self.links[id].control, &Message::Assign(assign))?;
+        if let Some(snap) = self.snapshots[id].clone() {
+            let nbytes =
+                wire::write_frame(&mut self.links[id].control, &Message::Restore(snap))?;
+            self.stats.snapshot_bytes += nbytes as u64;
+        }
+        let frame = self
+            .retained_batch
+            .clone()
+            .expect("a batch is in flight whenever a harvest is awaited");
+        self.links[id].feed.write_all(&frame)?;
+        self.links[id].feed.flush()?;
+        self.stats.shuffle_bytes += frame.len() as u64;
+        self.stats.worker_restores += 1;
+        Ok(())
+    }
+
+    /// Accept the two hello-identified connections of one respawned
+    /// worker.
+    fn accept_pair(&mut self, expect: u32) -> Result<(Stream, Stream), ClusterError> {
+        let mut control = None;
+        let mut feed = None;
+        while control.is_none() || feed.is_none() {
+            let mut s = self.listener.accept_timeout(ACCEPT_TIMEOUT)?;
+            s.set_timeouts(Some(IO_TIMEOUT), Some(IO_TIMEOUT))?;
+            match wire::read_frame(&mut s)?.0 {
+                Message::HelloControl { worker_id } if worker_id == expect && control.is_none() => {
+                    control = Some(s);
+                }
+                Message::HelloFeed { worker_id } if worker_id == expect && feed.is_none() => {
+                    feed = Some(s);
+                }
+                other => {
+                    return Err(ClusterError::Protocol(format!(
+                        "unexpected {} while re-accepting worker {expect}",
+                        other.name()
+                    )));
+                }
+            }
+        }
+        Ok((control.expect("looped until set"), feed.expect("looped until set")))
+    }
+
+    fn gather_movers(
+        &mut self,
+        interval: u64,
+        rw: &RoutesWire,
+    ) -> Result<Vec<MoverWire>, ClusterError> {
+        let msg = Message::PlanRequest { routes: rw.clone() };
+        for id in 0..self.links.len() {
+            let nbytes = wire::write_frame(&mut self.links[id].control, &msg)?;
+            self.stats.migration_bytes += nbytes as u64;
+        }
+        let mut all = Vec::new();
+        for id in 0..self.links.len() {
+            match wire::read_frame(&mut self.links[id].control)? {
+                (Message::Movers { interval: i, movers }, nbytes) if i == interval => {
+                    self.stats.migration_bytes += nbytes as u64;
+                    all.extend(movers);
+                }
+                (other, _) => return Err(unexpected("Movers", &other)),
+            }
+        }
+        Ok(all)
+    }
+
+    /// Close the last barrier, signal end-of-feed, and collect every
+    /// worker's final per-partition state rows (partition order).
+    pub fn finish(&mut self) -> Result<FinalStateSummary, ClusterError> {
+        if self.pending_barrier {
+            self.await_barrier(self.interval_no)?;
+            self.pending_barrier = false;
+        }
+        let eof = wire::encode_frame(&Message::Eof)?;
+        for link in &mut self.links {
+            link.feed.write_all(&eof)?;
+            link.feed.flush()?;
+        }
+        for id in 0..self.links.len() {
+            wire::write_frame(&mut self.links[id].control, &Message::Finish)?;
+        }
+        let mut parts: Vec<FinalPartWire> = Vec::with_capacity(self.cfg.n_partitions);
+        for id in 0..self.links.len() {
+            match wire::read_frame(&mut self.links[id].control)?.0 {
+                Message::FinalState { parts: p } => {
+                    let shard = self.links[id].hi - self.links[id].lo;
+                    if p.len() != shard {
+                        return Err(ClusterError::Protocol(format!(
+                            "worker {id} reported {} final partitions, owns {shard}",
+                            p.len()
+                        )));
+                    }
+                    parts.extend(p);
+                }
+                other => return Err(unexpected("FinalState", &other)),
+            }
+        }
+        for link in &mut self.links {
+            let _ = link.child.wait();
+        }
+        let total_state_weight = parts.iter().map(|p| f64::from_bits(p.total_bits)).sum();
+        let state_digest = final_digest(&parts);
+        self.stats.state_digest = state_digest;
+        Ok(FinalStateSummary {
+            parts,
+            total_state_weight,
+            state_digest,
+        })
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.partitioner.epoch()
+    }
+
+    pub fn vtime(&self) -> f64 {
+        self.vtime
+    }
+
+    pub fn interval_no(&self) -> u64 {
+        self.interval_no
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn stats(&self) -> &ClusterStats {
+        &self.stats
+    }
+
+    pub fn metrics(&self) -> &EngineMetrics {
+        &self.metrics
+    }
+}
+
+impl Drop for ClusterMaster {
+    fn drop(&mut self) {
+        for link in &mut self.links {
+            let _ = link.child.kill();
+            let _ = link.child.wait();
+        }
+        if let Endpoint::Unix(path) = &self.endpoint {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+
+fn fnv(mut h: u64, x: u64) -> u64 {
+    for b in x.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Fold one adopted migration plan into the running plan digest. Covers
+/// the interval, the new epoch, and every op (tag, partition, key, and
+/// the moved weight's bits for installs) — identical op streams at any
+/// worker count produce identical digests.
+fn plan_digest_step(h: u64, interval: u64, epoch: u64, ops: &[OpWire]) -> u64 {
+    let mut h = if h == 0 { FNV_OFFSET } else { h };
+    h = fnv(h, interval);
+    h = fnv(h, epoch);
+    for op in ops {
+        match op {
+            OpWire::Extract { part, key } => {
+                h = fnv(h, 0);
+                h = fnv(h, *part as u64);
+                h = fnv(h, *key);
+            }
+            OpWire::Install { part, key, state } => {
+                h = fnv(h, 1);
+                h = fnv(h, *part as u64);
+                h = fnv(h, *key);
+                h = fnv(h, state.weight_bits);
+            }
+        }
+    }
+    h
+}
+
+/// FNV digest over final per-partition state rows — what the cluster's
+/// `state_digest` pins against the in-process oracle.
+pub fn final_digest(parts: &[FinalPartWire]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for p in parts {
+        h = fnv(h, p.part as u64);
+        h = fnv(h, p.n_keys);
+        h = fnv(h, p.fingerprint);
+        h = fnv(h, p.total_bits);
+    }
+    h
+}
+
+/// [`final_digest`] of an in-process engine's stores — the oracle side of
+/// the cluster's final-state pin.
+pub fn store_digest(stores: &[StateStore]) -> u64 {
+    let parts: Vec<FinalPartWire> = stores
+        .iter()
+        .enumerate()
+        .map(|(p, s)| FinalPartWire {
+            part: p as u32,
+            n_keys: s.n_keys() as u64,
+            fingerprint: s.fingerprint(),
+            total_bits: s.total_weight().to_bits(),
+        })
+        .collect();
+    final_digest(&parts)
+}

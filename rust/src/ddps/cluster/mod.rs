@@ -1,0 +1,108 @@
+//! Distributed multi-process engine: one master process plus N worker
+//! processes speaking a small length-prefixed binary protocol over Unix
+//! or TCP sockets.
+//!
+//! The in-process [`StreamingEngine`](crate::ddps::StreamingEngine) is
+//! the oracle: the cluster runs the *same* decision pipeline — tap →
+//! shuffle fold → DRW harvest → [`DrMaster`](crate::dr::DrMaster)
+//! proposal → [`Decider`](crate::dr::Decider) verdict → epoch swap +
+//! keyed-state migration — except that the workers own contiguous
+//! partition shards in separate processes and every cross-process edge
+//! crosses a socket. Determinism survives the wire because nothing on
+//! the wire is re-derived: per-partition load sums keep their fold
+//! order, histograms ship entry-for-entry in harvest order, and every
+//! `f64` travels as its raw bits ([`wire`]).
+//!
+//! Layout of one decision interval (master's view):
+//!
+//! ```text
+//!   Batch ──────────▶ feed(w)          broadcast, overlaps prev barrier
+//!   BarrierDone ◀──── ctrl(w)          close interval-1, keep snapshot
+//!   Harvest ◀──────── ctrl(w)          loads/counts/totals + histograms
+//!   PlanRequest ────▶ ctrl(w)          candidate routes (flat lowering)
+//!   Movers ◀───────── ctrl(w)          keys leaving their partitions
+//!   BarrierEnd ─────▶ ctrl(w)          epoch swap + per-worker op list
+//! ```
+//!
+//! Submodules: [`wire`] (versioned frame codec), [`transport`]
+//! (connect/accept/timeouts/retry), [`worker`] (the worker run loop),
+//! [`master`] (the master engine, spawn + crash-restore).
+
+pub mod master;
+pub mod transport;
+pub mod wire;
+pub mod worker;
+
+pub use master::{
+    final_digest, store_digest, ClusterMaster, ClusterOptions, ClusterStats, FinalStateSummary,
+};
+pub use transport::Endpoint;
+pub use worker::{run_worker, WorkerOptions, WorkerOutcome};
+
+use std::fmt;
+
+/// Every way the cluster layer can fail, by name — wire corruption,
+/// transport trouble and protocol violations all surface as a variant
+/// here, never as a panic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ClusterError {
+    /// The peer endpoint refused (or does not exist yet).
+    ConnectRefused(String),
+    /// A read/write/accept deadline elapsed.
+    Timeout(String),
+    /// The peer closed the connection at a frame boundary.
+    Disconnected(String),
+    /// A frame header declared a payload beyond [`wire::MAX_PAYLOAD`].
+    FrameTooLarge { len: u32 },
+    /// The stream ended (or a length prefix overran) mid-frame.
+    Truncated(String),
+    /// The frame did not start with [`wire::MAGIC`].
+    BadMagic(u32),
+    /// The frame's protocol version is not [`wire::VERSION`].
+    BadVersion(u16),
+    /// The payload failed to decode as its declared message type.
+    BadMessage(String),
+    /// A partitioner had no exact flat lowering to ship as routes.
+    NotLowerable,
+    /// A well-formed message arrived where the protocol forbids it.
+    Protocol(String),
+    /// Any other I/O error.
+    Io(String),
+}
+
+impl fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::ConnectRefused(s) => write!(f, "connection refused: {s}"),
+            Self::Timeout(s) => write!(f, "timed out: {s}"),
+            Self::Disconnected(s) => write!(f, "peer disconnected: {s}"),
+            Self::FrameTooLarge { len } => write!(f, "frame payload of {len} bytes exceeds cap"),
+            Self::Truncated(s) => write!(f, "truncated frame: {s}"),
+            Self::BadMagic(m) => write!(f, "bad frame magic {m:#010x}"),
+            Self::BadVersion(v) => write!(f, "unsupported protocol version {v}"),
+            Self::BadMessage(s) => write!(f, "malformed message: {s}"),
+            Self::NotLowerable => write!(f, "partitioner has no flat routing table to ship"),
+            Self::Protocol(s) => write!(f, "protocol violation: {s}"),
+            Self::Io(s) => write!(f, "i/o error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for ClusterError {}
+
+impl From<std::io::Error> for ClusterError {
+    fn from(e: std::io::Error) -> Self {
+        use std::io::ErrorKind;
+        match e.kind() {
+            ErrorKind::ConnectionRefused | ErrorKind::NotFound => {
+                Self::ConnectRefused(e.to_string())
+            }
+            ErrorKind::WouldBlock | ErrorKind::TimedOut => Self::Timeout(e.to_string()),
+            ErrorKind::UnexpectedEof => Self::Truncated(e.to_string()),
+            ErrorKind::ConnectionReset | ErrorKind::ConnectionAborted | ErrorKind::BrokenPipe => {
+                Self::Disconnected(e.to_string())
+            }
+            _ => Self::Io(e.to_string()),
+        }
+    }
+}

@@ -1,0 +1,427 @@
+//! Socket plumbing under the wire codec: endpoints (Unix or TCP),
+//! listeners with accept deadlines, streams with read/write timeouts,
+//! and bounded retry with exponential backoff.
+//!
+//! Failure surfaces by name, never by panic: a refused connect is
+//! [`ClusterError::ConnectRefused`], an elapsed deadline is
+//! [`ClusterError::Timeout`], a peer closing mid-frame reaches the codec
+//! as [`ClusterError::Truncated`]. Retry pacing goes through the
+//! [`Clock`] trait so tests pin the exact backoff schedule with a fake
+//! clock — no real sleeps in CI.
+
+use super::ClusterError;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Where a cluster socket lives: a Unix socket path or a TCP address.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Endpoint {
+    Unix(PathBuf),
+    Tcp(String),
+}
+
+impl Endpoint {
+    pub fn unix(path: impl Into<PathBuf>) -> Self {
+        Self::Unix(path.into())
+    }
+
+    pub fn tcp(addr: impl Into<String>) -> Self {
+        Self::Tcp(addr.into())
+    }
+
+    /// Parse the CLI form: `tcp:<addr>`, `unix:<path>`, or a bare path
+    /// (treated as a Unix socket).
+    pub fn parse(s: &str) -> Self {
+        if let Some(addr) = s.strip_prefix("tcp:") {
+            Self::Tcp(addr.to_string())
+        } else if let Some(path) = s.strip_prefix("unix:") {
+            Self::Unix(path.into())
+        } else {
+            Self::Unix(s.into())
+        }
+    }
+
+    /// The prefixed CLI form [`Endpoint::parse`] reads back.
+    pub fn to_arg(&self) -> String {
+        match self {
+            Self::Unix(p) => format!("unix:{}", p.display()),
+            Self::Tcp(a) => format!("tcp:{a}"),
+        }
+    }
+}
+
+/// A bound listening socket.
+pub enum Listener {
+    Unix(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    pub fn bind(ep: &Endpoint) -> Result<Self, ClusterError> {
+        match ep {
+            Endpoint::Unix(p) => {
+                // a stale socket file from a dead process would refuse the bind
+                let _ = std::fs::remove_file(p);
+                Ok(Self::Unix(UnixListener::bind(p)?))
+            }
+            Endpoint::Tcp(a) => Ok(Self::Tcp(TcpListener::bind(a.as_str())?)),
+        }
+    }
+
+    /// Accept one connection within `timeout`, by polling a non-blocking
+    /// accept. The returned stream is left in blocking mode.
+    pub fn accept_timeout(&self, timeout: Duration) -> Result<Stream, ClusterError> {
+        let start = Instant::now();
+        self.set_nonblocking(true)?;
+        let result = loop {
+            let attempt = match self {
+                Self::Unix(l) => l.accept().map(|(s, _)| Stream::Unix(s)),
+                Self::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+            };
+            match attempt {
+                Ok(s) => break Ok(s),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if start.elapsed() >= timeout {
+                        break Err(ClusterError::Timeout(format!(
+                            "no connection within {timeout:?}"
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => break Err(e.into()),
+            }
+        };
+        self.set_nonblocking(false)?;
+        let s = result?;
+        s.set_nonblocking(false)?;
+        Ok(s)
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> Result<(), ClusterError> {
+        match self {
+            Self::Unix(l) => l.set_nonblocking(nb)?,
+            Self::Tcp(l) => l.set_nonblocking(nb)?,
+        }
+        Ok(())
+    }
+}
+
+/// A connected stream; [`Read`]/[`Write`] delegate to the inner socket.
+pub enum Stream {
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Stream {
+    pub fn set_timeouts(
+        &self,
+        read: Option<Duration>,
+        write: Option<Duration>,
+    ) -> Result<(), ClusterError> {
+        match self {
+            Self::Unix(s) => {
+                s.set_read_timeout(read)?;
+                s.set_write_timeout(write)?;
+            }
+            Self::Tcp(s) => {
+                s.set_read_timeout(read)?;
+                s.set_write_timeout(write)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> Result<(), ClusterError> {
+        match self {
+            Self::Unix(s) => s.set_nonblocking(nb)?,
+            Self::Tcp(s) => s.set_nonblocking(nb)?,
+        }
+        Ok(())
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Self::Unix(s) => s.read(buf),
+            Self::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Self::Unix(s) => s.write(buf),
+            Self::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Self::Unix(s) => s.flush(),
+            Self::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// One connection attempt.
+pub fn connect(ep: &Endpoint) -> Result<Stream, ClusterError> {
+    match ep {
+        Endpoint::Unix(p) => Ok(Stream::Unix(UnixStream::connect(p)?)),
+        Endpoint::Tcp(a) => Ok(Stream::Tcp(TcpStream::connect(a.as_str())?)),
+    }
+}
+
+/// Injectable time source for retry pacing; production uses
+/// [`RealClock`], tests substitute a recording fake.
+pub trait Clock {
+    fn sleep(&mut self, d: Duration);
+}
+
+pub struct RealClock;
+
+impl Clock for RealClock {
+    fn sleep(&mut self, d: Duration) {
+        std::thread::sleep(d);
+    }
+}
+
+/// Is this error worth another attempt? Corruption and protocol errors
+/// are not — retrying a bad frame yields the same bad frame.
+pub fn is_retryable(e: &ClusterError) -> bool {
+    matches!(
+        e,
+        ClusterError::ConnectRefused(_) | ClusterError::Timeout(_) | ClusterError::Io(_)
+    )
+}
+
+/// Run `op` up to `attempts` times. After each failed retryable attempt
+/// except the last, sleep exactly once on `clock`, doubling from `base`
+/// and capping at `cap`. A non-retryable error aborts immediately.
+pub fn retry<T>(
+    attempts: u32,
+    base: Duration,
+    cap: Duration,
+    clock: &mut dyn Clock,
+    mut op: impl FnMut() -> Result<T, ClusterError>,
+) -> Result<T, ClusterError> {
+    assert!(attempts >= 1, "need at least one attempt");
+    let mut backoff = base.min(cap);
+    let mut last = None;
+    for attempt in 0..attempts {
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(e) if is_retryable(&e) => last = Some(e),
+            Err(e) => return Err(e),
+        }
+        if attempt + 1 < attempts {
+            clock.sleep(backoff);
+            backoff = (backoff * 2).min(cap);
+        }
+    }
+    Err(last.expect("at least one attempt ran"))
+}
+
+/// [`connect`] under [`retry`] — how workers reach a master that may
+/// still be binding its socket.
+pub fn connect_retry(
+    ep: &Endpoint,
+    attempts: u32,
+    base: Duration,
+    cap: Duration,
+    clock: &mut dyn Clock,
+) -> Result<Stream, ClusterError> {
+    retry(attempts, base, cap, clock, || connect(ep))
+}
+
+static SOCK_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A socket path under `dir` (or the system temp dir) that is unique per
+/// process and call — masters bind here, workers get the path as an arg.
+pub fn fresh_socket_path(dir: Option<&Path>) -> PathBuf {
+    let seq = SOCK_SEQ.fetch_add(1, Ordering::Relaxed);
+    let dir = dir.map(Path::to_path_buf).unwrap_or_else(std::env::temp_dir);
+    dir.join(format!("dynrepart-{}-{seq}.sock", std::process::id()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ddps::cluster::wire::{self, Message};
+
+    /// Records requested sleeps instead of performing them.
+    struct FakeClock {
+        slept: Vec<Duration>,
+    }
+
+    impl FakeClock {
+        fn new() -> Self {
+            Self { slept: Vec::new() }
+        }
+    }
+
+    impl Clock for FakeClock {
+        fn sleep(&mut self, d: Duration) {
+            self.slept.push(d);
+        }
+    }
+
+    fn ms(n: u64) -> Duration {
+        Duration::from_millis(n)
+    }
+
+    #[test]
+    fn connect_to_missing_socket_is_connect_refused() {
+        let ep = Endpoint::unix(fresh_socket_path(None));
+        assert!(matches!(
+            connect(&ep),
+            Err(ClusterError::ConnectRefused(_))
+        ));
+    }
+
+    #[test]
+    fn retry_sleeps_exactly_once_per_failed_attempt_with_backoff() {
+        let mut clock = FakeClock::new();
+        let mut calls = 0;
+        let out = retry(5, ms(10), ms(1000), &mut clock, || {
+            calls += 1;
+            if calls < 4 {
+                Err(ClusterError::ConnectRefused("not yet".into()))
+            } else {
+                Ok(calls)
+            }
+        });
+        assert_eq!(out.unwrap(), 4);
+        assert_eq!(calls, 4);
+        assert_eq!(clock.slept, vec![ms(10), ms(20), ms(40)]);
+    }
+
+    #[test]
+    fn retry_backoff_caps_and_total_failure_returns_last_error() {
+        let mut clock = FakeClock::new();
+        let mut calls = 0;
+        let out: Result<(), _> = retry(4, ms(10), ms(25), &mut clock, || {
+            calls += 1;
+            Err(ClusterError::Timeout(format!("attempt {calls}")))
+        });
+        assert_eq!(out.unwrap_err(), ClusterError::Timeout("attempt 4".into()));
+        assert_eq!(calls, 4);
+        // one sleep per failed attempt except the last, capped at 25ms
+        assert_eq!(clock.slept, vec![ms(10), ms(20), ms(25)]);
+    }
+
+    #[test]
+    fn non_retryable_error_aborts_without_sleeping() {
+        let mut clock = FakeClock::new();
+        let mut calls = 0;
+        let out: Result<(), _> = retry(5, ms(10), ms(1000), &mut clock, || {
+            calls += 1;
+            Err(ClusterError::BadMagic(7))
+        });
+        assert_eq!(out.unwrap_err(), ClusterError::BadMagic(7));
+        assert_eq!(calls, 1);
+        assert!(clock.slept.is_empty());
+    }
+
+    #[test]
+    fn connect_retry_paces_through_the_clock() {
+        let ep = Endpoint::unix(fresh_socket_path(None));
+        let mut clock = FakeClock::new();
+        let out = connect_retry(&ep, 3, ms(5), ms(100), &mut clock);
+        assert!(matches!(out, Err(ClusterError::ConnectRefused(_))));
+        assert_eq!(clock.slept, vec![ms(5), ms(10)]);
+    }
+
+    #[test]
+    fn mid_frame_disconnect_is_truncated() {
+        // a peer that writes half a frame and drops the connection
+        let (mut a, b) = UnixStream::pair().unwrap();
+        let frame = wire::encode_frame(&Message::Batch {
+            interval: 1,
+            records: vec![],
+        })
+        .unwrap();
+        a.write_all(&frame[..frame.len() - 4]).unwrap();
+        drop(a);
+        let mut s = Stream::Unix(b);
+        assert!(matches!(
+            wire::read_frame(&mut s),
+            Err(ClusterError::Truncated(_))
+        ));
+    }
+
+    #[test]
+    fn clean_close_at_frame_boundary_is_disconnected() {
+        let (a, b) = UnixStream::pair().unwrap();
+        drop(a);
+        let mut s = Stream::Unix(b);
+        assert!(matches!(
+            wire::read_frame(&mut s),
+            Err(ClusterError::Disconnected(_))
+        ));
+    }
+
+    #[test]
+    fn read_deadline_surfaces_as_timeout() {
+        let (_a, b) = UnixStream::pair().unwrap();
+        let s = Stream::Unix(b);
+        s.set_timeouts(Some(ms(30)), None).unwrap();
+        let mut s = s;
+        assert!(matches!(
+            wire::read_frame(&mut s),
+            Err(ClusterError::Timeout(_))
+        ));
+    }
+
+    #[test]
+    fn accept_deadline_surfaces_as_timeout() {
+        let ep = Endpoint::unix(fresh_socket_path(None));
+        let listener = Listener::bind(&ep).unwrap();
+        assert!(matches!(
+            listener.accept_timeout(ms(30)),
+            Err(ClusterError::Timeout(_))
+        ));
+        if let Endpoint::Unix(p) = &ep {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+
+    #[test]
+    fn accept_returns_the_connecting_stream() {
+        let ep = Endpoint::unix(fresh_socket_path(None));
+        let listener = Listener::bind(&ep).unwrap();
+        let ep2 = ep.clone();
+        let client = std::thread::spawn(move || {
+            let mut clock = RealClock;
+            let mut s = connect_retry(&ep2, 20, ms(2), ms(20), &mut clock).unwrap();
+            wire::write_frame(&mut s, &Message::HelloControl { worker_id: 9 }).unwrap();
+        });
+        let mut s = listener.accept_timeout(Duration::from_secs(5)).unwrap();
+        let (msg, _) = wire::read_frame(&mut s).unwrap();
+        assert_eq!(msg, Message::HelloControl { worker_id: 9 });
+        client.join().unwrap();
+        if let Endpoint::Unix(p) = &ep {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+
+    #[test]
+    fn endpoint_arg_forms_round_trip() {
+        for ep in [
+            Endpoint::unix("/tmp/x.sock"),
+            Endpoint::tcp("127.0.0.1:9999"),
+        ] {
+            assert_eq!(Endpoint::parse(&ep.to_arg()), ep);
+        }
+        assert_eq!(
+            Endpoint::parse("/tmp/bare.sock"),
+            Endpoint::unix("/tmp/bare.sock")
+        );
+    }
+}

@@ -1,0 +1,1279 @@
+//! Length-prefixed binary frames with a versioned header — the entire
+//! cluster protocol in one codec.
+//!
+//! Frame layout (all little-endian):
+//!
+//! ```text
+//!   magic   u32   0xD14E50A7
+//!   version u16   1
+//!   type    u16   message code (1..=13)
+//!   len     u32   payload bytes (≤ MAX_PAYLOAD)
+//!   payload [u8; len]
+//! ```
+//!
+//! Decoding is strict and total: oversized frames are rejected *before*
+//! allocation, truncated and garbage frames surface as named
+//! [`ClusterError`] variants, a decoded payload must consume every byte,
+//! and no input makes the decoder panic. Every `f64` crosses the wire as
+//! its `to_bits()` image, so weights, loads, totals and counter values
+//! arrive bit-for-bit — the invariant the cluster's bitwise oracle tests
+//! lean on.
+
+use super::ClusterError;
+use crate::partitioner::{FlatRoutes, RouteTable};
+use crate::sketch::{Histogram, HistogramEntry};
+use crate::state::KeyState;
+use crate::workload::Record;
+use std::io::{Read, Write};
+
+pub const MAGIC: u32 = 0xD14E_50A7;
+pub const VERSION: u16 = 1;
+pub const HEADER_LEN: usize = 12;
+/// Upper bound on one frame's payload; a header declaring more is
+/// rejected before any allocation happens.
+pub const MAX_PAYLOAD: u32 = 64 * 1024 * 1024;
+
+// ---------------------------------------------------------------- encoder
+
+#[derive(Default)]
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn boolean(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+
+    fn seq_len(&mut self, n: usize) {
+        debug_assert!(n <= u32::MAX as usize, "sequence too long for the wire");
+        self.u32(n as u32);
+    }
+}
+
+// ---------------------------------------------------------------- decoder
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ClusterError> {
+        if self.remaining() < n {
+            return Err(ClusterError::Truncated(format!(
+                "need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, ClusterError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, ClusterError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, ClusterError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, ClusterError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn boolean(&mut self) -> Result<bool, ClusterError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => Err(ClusterError::BadMessage(format!("bool byte {b}"))),
+        }
+    }
+
+    /// A sequence-length prefix, sanity-checked against the bytes left:
+    /// `n` elements of at least `min_elem` bytes each must fit, so a
+    /// corrupted length can never trigger an oversized allocation.
+    fn seq_len(&mut self, min_elem: usize) -> Result<usize, ClusterError> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(min_elem) > self.remaining() {
+            return Err(ClusterError::Truncated(format!(
+                "sequence of {n} elements (≥ {min_elem} B each) exceeds {} remaining bytes",
+                self.remaining()
+            )));
+        }
+        Ok(n)
+    }
+
+    fn finish(self) -> Result<(), ClusterError> {
+        if self.pos != self.buf.len() {
+            return Err(ClusterError::BadMessage(format!(
+                "{} trailing payload bytes",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------ wire structs
+
+/// A [`FlatRoutes`] snapshot on the wire: explicit pairs in ascending key
+/// order, the dense host→partition table, and the tail-hash seed. The
+/// lowering is exact, so shipping routes never changes a single routing
+/// decision.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoutesWire {
+    pub explicit: Vec<(u64, u32)>,
+    pub hosts: Vec<u32>,
+    pub seed: u64,
+}
+
+impl RoutesWire {
+    pub fn from_flat(f: &FlatRoutes) -> Self {
+        Self {
+            explicit: f.explicit().iter().collect(),
+            hosts: f.hosts().to_vec(),
+            seed: f.seed(),
+        }
+    }
+
+    pub fn to_flat(&self) -> Result<FlatRoutes, ClusterError> {
+        if self.hosts.is_empty() {
+            return Err(ClusterError::BadMessage("routes with no hosts".into()));
+        }
+        Ok(FlatRoutes::new(
+            RouteTable::from_pairs(self.explicit.clone()),
+            self.hosts.clone(),
+            self.seed,
+        ))
+    }
+
+    fn enc(&self, e: &mut Enc) {
+        e.seq_len(self.explicit.len());
+        for &(k, p) in &self.explicit {
+            e.u64(k);
+            e.u32(p);
+        }
+        e.seq_len(self.hosts.len());
+        for &h in &self.hosts {
+            e.u32(h);
+        }
+        e.u64(self.seed);
+    }
+
+    fn dec(d: &mut Dec) -> Result<Self, ClusterError> {
+        let n = d.seq_len(12)?;
+        let mut explicit = Vec::with_capacity(n);
+        for _ in 0..n {
+            explicit.push((d.u64()?, d.u32()?));
+        }
+        let n = d.seq_len(4)?;
+        let mut hosts = Vec::with_capacity(n);
+        for _ in 0..n {
+            hosts.push(d.u32()?);
+        }
+        let seed = d.u64()?;
+        Ok(Self {
+            explicit,
+            hosts,
+            seed,
+        })
+    }
+}
+
+/// One keyed [`KeyState`] on the wire, weight and values as raw bits.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KeyStateWire {
+    pub records: u64,
+    pub weight_bits: u64,
+    pub values_bits: Vec<u64>,
+}
+
+impl KeyStateWire {
+    pub fn from_state(st: &KeyState) -> Self {
+        Self {
+            records: st.records,
+            weight_bits: st.weight.to_bits(),
+            values_bits: st.values.iter().map(|v| v.to_bits()).collect(),
+        }
+    }
+
+    pub fn to_state(&self) -> KeyState {
+        let mut st = KeyState::new();
+        st.records = self.records;
+        st.weight = f64::from_bits(self.weight_bits);
+        st.values = self.values_bits.iter().map(|&b| f64::from_bits(b)).collect();
+        st
+    }
+
+    fn enc(&self, e: &mut Enc) {
+        e.u64(self.records);
+        e.u64(self.weight_bits);
+        e.seq_len(self.values_bits.len());
+        for &v in &self.values_bits {
+            e.u64(v);
+        }
+    }
+
+    fn dec(d: &mut Dec) -> Result<Self, ClusterError> {
+        let records = d.u64()?;
+        let weight_bits = d.u64()?;
+        let n = d.seq_len(8)?;
+        let mut values_bits = Vec::with_capacity(n);
+        for _ in 0..n {
+            values_bits.push(d.u64()?);
+        }
+        Ok(Self {
+            records,
+            weight_bits,
+            values_bits,
+        })
+    }
+}
+
+/// A harvested [`Histogram`] entry-for-entry: already in histogram order
+/// (descending frequency, ties by ascending key), so reconstruction is
+/// order-preserving and re-sorts nothing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramWire {
+    /// `(key, freq.to_bits())` in harvest order.
+    pub entries: Vec<(u64, u64)>,
+    pub total_bits: u64,
+}
+
+impl HistogramWire {
+    pub fn from_histogram(h: &Histogram) -> Self {
+        Self {
+            entries: h.entries().iter().map(|e| (e.key, e.freq.to_bits())).collect(),
+            total_bits: h.total_weight().to_bits(),
+        }
+    }
+
+    pub fn to_histogram(&self) -> Histogram {
+        Histogram::from_sorted_entries(
+            self.entries
+                .iter()
+                .map(|&(key, bits)| HistogramEntry {
+                    key,
+                    freq: f64::from_bits(bits),
+                })
+                .collect(),
+            f64::from_bits(self.total_bits),
+        )
+    }
+
+    fn enc(&self, e: &mut Enc) {
+        e.seq_len(self.entries.len());
+        for &(k, f) in &self.entries {
+            e.u64(k);
+            e.u64(f);
+        }
+        e.u64(self.total_bits);
+    }
+
+    fn dec(d: &mut Dec) -> Result<Self, ClusterError> {
+        let n = d.seq_len(16)?;
+        let mut entries = Vec::with_capacity(n);
+        for _ in 0..n {
+            entries.push((d.u64()?, d.u64()?));
+        }
+        let total_bits = d.u64()?;
+        Ok(Self {
+            entries,
+            total_bits,
+        })
+    }
+}
+
+/// The master's one-time worker configuration: shard bounds, DRW
+/// construction parameters (mirroring the in-process
+/// [`EngineCore`](crate::ddps) construction exactly), and the epoch in
+/// force. When `restore` is set a [`Message::Restore`] snapshot follows
+/// on the control connection.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AssignWire {
+    pub worker_id: u32,
+    pub n_workers: u32,
+    pub n_partitions: u32,
+    /// Owned contiguous partition (and DRW) range `[part_lo, part_hi)`.
+    pub part_lo: u32,
+    pub part_hi: u32,
+    pub base_seed: u64,
+    pub sample_rate_bits: u64,
+    pub counter_capacity: u64,
+    pub sketch_compaction: u64,
+    pub sketch_bound: u64,
+    pub sketch_take: u64,
+    /// Per-DRW harvest size ([`DrMaster::ship_size`](crate::dr::DrMaster)).
+    pub ship_k: u64,
+    pub next_interval: u64,
+    pub epoch: u64,
+    pub restore: bool,
+    pub routes: RoutesWire,
+}
+
+impl AssignWire {
+    fn enc(&self, e: &mut Enc) {
+        e.u32(self.worker_id);
+        e.u32(self.n_workers);
+        e.u32(self.n_partitions);
+        e.u32(self.part_lo);
+        e.u32(self.part_hi);
+        e.u64(self.base_seed);
+        e.u64(self.sample_rate_bits);
+        e.u64(self.counter_capacity);
+        e.u64(self.sketch_compaction);
+        e.u64(self.sketch_bound);
+        e.u64(self.sketch_take);
+        e.u64(self.ship_k);
+        e.u64(self.next_interval);
+        e.u64(self.epoch);
+        e.boolean(self.restore);
+        self.routes.enc(e);
+    }
+
+    fn dec(d: &mut Dec) -> Result<Self, ClusterError> {
+        Ok(Self {
+            worker_id: d.u32()?,
+            n_workers: d.u32()?,
+            n_partitions: d.u32()?,
+            part_lo: d.u32()?,
+            part_hi: d.u32()?,
+            base_seed: d.u64()?,
+            sample_rate_bits: d.u64()?,
+            counter_capacity: d.u64()?,
+            sketch_compaction: d.u64()?,
+            sketch_bound: d.u64()?,
+            sketch_take: d.u64()?,
+            ship_k: d.u64()?,
+            next_interval: d.u64()?,
+            epoch: d.u64()?,
+            restore: d.boolean()?,
+            routes: RoutesWire::dec(d)?,
+        })
+    }
+}
+
+/// A worker's barrier contribution: per-owned-partition loads, record
+/// counts and cached state totals (as bits, in partition order) plus one
+/// harvested histogram per owned DRW.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HarvestWire {
+    pub interval: u64,
+    pub hists: Vec<HistogramWire>,
+    pub loads: Vec<u64>,
+    pub counts: Vec<u64>,
+    pub totals: Vec<u64>,
+}
+
+impl HarvestWire {
+    fn enc(&self, e: &mut Enc) {
+        e.u64(self.interval);
+        e.seq_len(self.hists.len());
+        for h in &self.hists {
+            h.enc(e);
+        }
+        e.seq_len(self.loads.len());
+        for &v in &self.loads {
+            e.u64(v);
+        }
+        e.seq_len(self.counts.len());
+        for &v in &self.counts {
+            e.u64(v);
+        }
+        e.seq_len(self.totals.len());
+        for &v in &self.totals {
+            e.u64(v);
+        }
+    }
+
+    fn dec(d: &mut Dec) -> Result<Self, ClusterError> {
+        let interval = d.u64()?;
+        let n = d.seq_len(12)?;
+        let mut hists = Vec::with_capacity(n);
+        for _ in 0..n {
+            hists.push(HistogramWire::dec(d)?);
+        }
+        let mut u64_seq = |d: &mut Dec| -> Result<Vec<u64>, ClusterError> {
+            let n = d.seq_len(8)?;
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                v.push(d.u64()?);
+            }
+            Ok(v)
+        };
+        let loads = u64_seq(d)?;
+        let counts = u64_seq(d)?;
+        let totals = u64_seq(d)?;
+        Ok(Self {
+            interval,
+            hists,
+            loads,
+            counts,
+            totals,
+        })
+    }
+}
+
+/// One key leaving its partition under a candidate routing, with its
+/// full keyed state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MoverWire {
+    /// The partition currently holding the key.
+    pub part: u32,
+    pub key: u64,
+    pub state: KeyStateWire,
+}
+
+impl MoverWire {
+    fn enc(&self, e: &mut Enc) {
+        e.u32(self.part);
+        e.u64(self.key);
+        self.state.enc(e);
+    }
+
+    fn dec(d: &mut Dec) -> Result<Self, ClusterError> {
+        Ok(Self {
+            part: d.u32()?,
+            key: d.u64()?,
+            state: KeyStateWire::dec(d)?,
+        })
+    }
+}
+
+/// One migration-plan operation, in the global plan order the in-process
+/// [`apply_epoch_swap`](crate::ddps) uses; each worker receives the
+/// subsequence touching its partitions, preserving that order.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpWire {
+    Extract { part: u32, key: u64 },
+    Install { part: u32, key: u64, state: KeyStateWire },
+}
+
+impl OpWire {
+    pub fn part(&self) -> u32 {
+        match self {
+            Self::Extract { part, .. } | Self::Install { part, .. } => *part,
+        }
+    }
+
+    fn enc(&self, e: &mut Enc) {
+        match self {
+            Self::Extract { part, key } => {
+                e.u8(0);
+                e.u32(*part);
+                e.u64(*key);
+            }
+            Self::Install { part, key, state } => {
+                e.u8(1);
+                e.u32(*part);
+                e.u64(*key);
+                state.enc(e);
+            }
+        }
+    }
+
+    fn dec(d: &mut Dec) -> Result<Self, ClusterError> {
+        match d.u8()? {
+            0 => Ok(Self::Extract {
+                part: d.u32()?,
+                key: d.u64()?,
+            }),
+            1 => Ok(Self::Install {
+                part: d.u32()?,
+                key: d.u64()?,
+                state: KeyStateWire::dec(d)?,
+            }),
+            t => Err(ClusterError::BadMessage(format!("op tag {t}"))),
+        }
+    }
+}
+
+/// Close of one decision barrier: the epoch swap (if adopted) and this
+/// worker's migration-op subsequence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BarrierEndWire {
+    pub interval: u64,
+    /// `(new_epoch, new_routes)` when the decider adopted a swap.
+    pub swap: Option<(u64, RoutesWire)>,
+    pub ops: Vec<OpWire>,
+}
+
+impl BarrierEndWire {
+    fn enc(&self, e: &mut Enc) {
+        e.u64(self.interval);
+        match &self.swap {
+            Some((epoch, routes)) => {
+                e.boolean(true);
+                e.u64(*epoch);
+                routes.enc(e);
+            }
+            None => e.boolean(false),
+        }
+        e.seq_len(self.ops.len());
+        for op in &self.ops {
+            op.enc(e);
+        }
+    }
+
+    fn dec(d: &mut Dec) -> Result<Self, ClusterError> {
+        let interval = d.u64()?;
+        let swap = if d.boolean()? {
+            Some((d.u64()?, RoutesWire::dec(d)?))
+        } else {
+            None
+        };
+        let n = d.seq_len(13)?;
+        let mut ops = Vec::with_capacity(n);
+        for _ in 0..n {
+            ops.push(OpWire::dec(d)?);
+        }
+        Ok(Self {
+            interval,
+            swap,
+            ops,
+        })
+    }
+}
+
+/// One [`StateStore`](crate::state::StateStore) in slab order, with the
+/// cached running total's exact bits. Rebuilding by installing entries in
+/// order and then restoring the cached total reproduces the store —
+/// including its insertion order and total-weight bit history — exactly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoreSnapWire {
+    pub entries: Vec<(u64, KeyStateWire)>,
+    pub total_bits: u64,
+}
+
+impl StoreSnapWire {
+    fn enc(&self, e: &mut Enc) {
+        e.seq_len(self.entries.len());
+        for (k, st) in &self.entries {
+            e.u64(*k);
+            st.enc(e);
+        }
+        e.u64(self.total_bits);
+    }
+
+    fn dec(d: &mut Dec) -> Result<Self, ClusterError> {
+        let n = d.seq_len(28)?;
+        let mut entries = Vec::with_capacity(n);
+        for _ in 0..n {
+            entries.push((d.u64()?, KeyStateWire::dec(d)?));
+        }
+        let total_bits = d.u64()?;
+        Ok(Self {
+            entries,
+            total_bits,
+        })
+    }
+}
+
+/// One [`DrWorker`](crate::dr::DrWorker) snapshot: counter entries in
+/// ascending key order plus the sampling-RNG state and compaction phase,
+/// so a restored DRW observes and harvests bitwise like the lost one.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DrwSnapWire {
+    pub capacity: u64,
+    pub decay_bits: u64,
+    pub total_bits: u64,
+    /// `(key, count.to_bits())` in ascending key order.
+    pub entries: Vec<(u64, u64)>,
+    pub rng: [u64; 4],
+    pub observed: u64,
+    pub sampled: u64,
+    pub since_compaction: u64,
+}
+
+impl DrwSnapWire {
+    fn enc(&self, e: &mut Enc) {
+        e.u64(self.capacity);
+        e.u64(self.decay_bits);
+        e.u64(self.total_bits);
+        e.seq_len(self.entries.len());
+        for &(k, c) in &self.entries {
+            e.u64(k);
+            e.u64(c);
+        }
+        for &r in &self.rng {
+            e.u64(r);
+        }
+        e.u64(self.observed);
+        e.u64(self.sampled);
+        e.u64(self.since_compaction);
+    }
+
+    fn dec(d: &mut Dec) -> Result<Self, ClusterError> {
+        let capacity = d.u64()?;
+        let decay_bits = d.u64()?;
+        let total_bits = d.u64()?;
+        let n = d.seq_len(16)?;
+        let mut entries = Vec::with_capacity(n);
+        for _ in 0..n {
+            entries.push((d.u64()?, d.u64()?));
+        }
+        let rng = [d.u64()?, d.u64()?, d.u64()?, d.u64()?];
+        Ok(Self {
+            capacity,
+            decay_bits,
+            total_bits,
+            entries,
+            rng,
+            observed: d.u64()?,
+            sampled: d.u64()?,
+            since_compaction: d.u64()?,
+        })
+    }
+}
+
+/// A worker's full recovery point: its stores and DRWs at a barrier.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotWire {
+    pub stores: Vec<StoreSnapWire>,
+    pub drws: Vec<DrwSnapWire>,
+}
+
+impl SnapshotWire {
+    fn enc(&self, e: &mut Enc) {
+        e.seq_len(self.stores.len());
+        for s in &self.stores {
+            s.enc(e);
+        }
+        e.seq_len(self.drws.len());
+        for w in &self.drws {
+            w.enc(e);
+        }
+    }
+
+    fn dec(d: &mut Dec) -> Result<Self, ClusterError> {
+        let n = d.seq_len(12)?;
+        let mut stores = Vec::with_capacity(n);
+        for _ in 0..n {
+            stores.push(StoreSnapWire::dec(d)?);
+        }
+        let n = d.seq_len(60)?;
+        let mut drws = Vec::with_capacity(n);
+        for _ in 0..n {
+            drws.push(DrwSnapWire::dec(d)?);
+        }
+        Ok(Self { stores, drws })
+    }
+}
+
+/// Per-partition final-state row: key count, FNV fingerprint over the
+/// full keyed state, and the cached total's bits.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FinalPartWire {
+    pub part: u32,
+    pub n_keys: u64,
+    pub fingerprint: u64,
+    pub total_bits: u64,
+}
+
+impl FinalPartWire {
+    fn enc(&self, e: &mut Enc) {
+        e.u32(self.part);
+        e.u64(self.n_keys);
+        e.u64(self.fingerprint);
+        e.u64(self.total_bits);
+    }
+
+    fn dec(d: &mut Dec) -> Result<Self, ClusterError> {
+        Ok(Self {
+            part: d.u32()?,
+            n_keys: d.u64()?,
+            fingerprint: d.u64()?,
+            total_bits: d.u64()?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------- messages
+
+/// The complete message set. Control-connection traffic: everything
+/// except [`Message::Batch`] / [`Message::Eof`], which ride the feed.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    HelloControl { worker_id: u32 },
+    HelloFeed { worker_id: u32 },
+    Assign(AssignWire),
+    Restore(SnapshotWire),
+    Batch { interval: u64, records: Vec<Record> },
+    Eof,
+    Harvest(HarvestWire),
+    PlanRequest { routes: RoutesWire },
+    Movers { interval: u64, movers: Vec<MoverWire> },
+    BarrierEnd(BarrierEndWire),
+    BarrierDone { interval: u64, snapshot: SnapshotWire },
+    Finish,
+    FinalState { parts: Vec<FinalPartWire> },
+}
+
+impl Message {
+    fn code(&self) -> u16 {
+        match self {
+            Self::HelloControl { .. } => 1,
+            Self::HelloFeed { .. } => 2,
+            Self::Assign(_) => 3,
+            Self::Restore(_) => 4,
+            Self::Batch { .. } => 5,
+            Self::Eof => 6,
+            Self::Harvest(_) => 7,
+            Self::PlanRequest { .. } => 8,
+            Self::Movers { .. } => 9,
+            Self::BarrierEnd(_) => 10,
+            Self::BarrierDone { .. } => 11,
+            Self::Finish => 12,
+            Self::FinalState { .. } => 13,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::HelloControl { .. } => "HelloControl",
+            Self::HelloFeed { .. } => "HelloFeed",
+            Self::Assign(_) => "Assign",
+            Self::Restore(_) => "Restore",
+            Self::Batch { .. } => "Batch",
+            Self::Eof => "Eof",
+            Self::Harvest(_) => "Harvest",
+            Self::PlanRequest { .. } => "PlanRequest",
+            Self::Movers { .. } => "Movers",
+            Self::BarrierEnd(_) => "BarrierEnd",
+            Self::BarrierDone { .. } => "BarrierDone",
+            Self::Finish => "Finish",
+            Self::FinalState { .. } => "FinalState",
+        }
+    }
+
+    fn encode_payload(&self, e: &mut Enc) {
+        match self {
+            Self::HelloControl { worker_id } | Self::HelloFeed { worker_id } => {
+                e.u32(*worker_id);
+            }
+            Self::Assign(a) => a.enc(e),
+            Self::Restore(s) => s.enc(e),
+            Self::Batch { interval, records } => {
+                e.u64(*interval);
+                e.seq_len(records.len());
+                for r in records {
+                    e.u64(r.key);
+                    e.u64(r.ts);
+                    e.u64(r.weight.to_bits());
+                }
+            }
+            Self::Eof | Self::Finish => {}
+            Self::Harvest(h) => h.enc(e),
+            Self::PlanRequest { routes } => routes.enc(e),
+            Self::Movers { interval, movers } => {
+                e.u64(*interval);
+                e.seq_len(movers.len());
+                for m in movers {
+                    m.enc(e);
+                }
+            }
+            Self::BarrierEnd(b) => b.enc(e),
+            Self::BarrierDone { interval, snapshot } => {
+                e.u64(*interval);
+                snapshot.enc(e);
+            }
+            Self::FinalState { parts } => {
+                e.seq_len(parts.len());
+                for p in parts {
+                    p.enc(e);
+                }
+            }
+        }
+    }
+
+    fn decode_payload(code: u16, payload: &[u8]) -> Result<Self, ClusterError> {
+        let mut d = Dec::new(payload);
+        let msg = match code {
+            1 => Self::HelloControl { worker_id: d.u32()? },
+            2 => Self::HelloFeed { worker_id: d.u32()? },
+            3 => Self::Assign(AssignWire::dec(&mut d)?),
+            4 => Self::Restore(SnapshotWire::dec(&mut d)?),
+            5 => {
+                let interval = d.u64()?;
+                let n = d.seq_len(24)?;
+                let mut records = Vec::with_capacity(n);
+                for _ in 0..n {
+                    records.push(Record {
+                        key: d.u64()?,
+                        ts: d.u64()?,
+                        weight: f64::from_bits(d.u64()?),
+                    });
+                }
+                Self::Batch { interval, records }
+            }
+            6 => Self::Eof,
+            7 => Self::Harvest(HarvestWire::dec(&mut d)?),
+            8 => Self::PlanRequest {
+                routes: RoutesWire::dec(&mut d)?,
+            },
+            9 => {
+                let interval = d.u64()?;
+                let n = d.seq_len(32)?;
+                let mut movers = Vec::with_capacity(n);
+                for _ in 0..n {
+                    movers.push(MoverWire::dec(&mut d)?);
+                }
+                Self::Movers { interval, movers }
+            }
+            10 => Self::BarrierEnd(BarrierEndWire::dec(&mut d)?),
+            11 => Self::BarrierDone {
+                interval: d.u64()?,
+                snapshot: SnapshotWire::dec(&mut d)?,
+            },
+            12 => Self::Finish,
+            13 => {
+                let n = d.seq_len(28)?;
+                let mut parts = Vec::with_capacity(n);
+                for _ in 0..n {
+                    parts.push(FinalPartWire::dec(&mut d)?);
+                }
+                Self::FinalState { parts }
+            }
+            c => return Err(ClusterError::BadMessage(format!("unknown message type {c}"))),
+        };
+        d.finish()?;
+        Ok(msg)
+    }
+}
+
+// ------------------------------------------------------------------ frames
+
+/// Encode one full frame (header + payload) into a byte vector — the
+/// form the master retains to replay a batch to a restored worker.
+pub fn encode_frame(msg: &Message) -> Result<Vec<u8>, ClusterError> {
+    let mut e = Enc::default();
+    e.u32(MAGIC);
+    e.u16(VERSION);
+    e.u16(msg.code());
+    e.u32(0); // payload length backpatched below
+    msg.encode_payload(&mut e);
+    let len = e.buf.len() - HEADER_LEN;
+    if len > MAX_PAYLOAD as usize {
+        return Err(ClusterError::FrameTooLarge {
+            len: len.min(u32::MAX as usize) as u32,
+        });
+    }
+    let len_bytes = (len as u32).to_le_bytes();
+    e.buf[8..12].copy_from_slice(&len_bytes);
+    Ok(e.buf)
+}
+
+/// Write one frame; returns the bytes put on the wire (for the byte
+/// accounting in EXPERIMENTS.md).
+pub fn write_frame(w: &mut dyn Write, msg: &Message) -> Result<usize, ClusterError> {
+    let frame = encode_frame(msg)?;
+    w.write_all(&frame)?;
+    w.flush()?;
+    Ok(frame.len())
+}
+
+/// Read one frame; returns the message and the bytes consumed. A clean
+/// close at a frame boundary is [`ClusterError::Disconnected`]; a close
+/// mid-frame is [`ClusterError::Truncated`].
+pub fn read_frame(r: &mut dyn Read) -> Result<(Message, usize), ClusterError> {
+    let mut header = [0u8; HEADER_LEN];
+    read_full(r, &mut header, true)?;
+    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        return Err(ClusterError::BadMagic(magic));
+    }
+    let version = u16::from_le_bytes(header[4..6].try_into().unwrap());
+    if version != VERSION {
+        return Err(ClusterError::BadVersion(version));
+    }
+    let code = u16::from_le_bytes(header[6..8].try_into().unwrap());
+    let len = u32::from_le_bytes(header[8..12].try_into().unwrap());
+    if len > MAX_PAYLOAD {
+        return Err(ClusterError::FrameTooLarge { len });
+    }
+    let mut payload = vec![0u8; len as usize];
+    read_full(r, &mut payload, false)?;
+    let msg = Message::decode_payload(code, &payload)?;
+    Ok((msg, HEADER_LEN + len as usize))
+}
+
+fn read_full(r: &mut dyn Read, buf: &mut [u8], at_boundary: bool) -> Result<(), ClusterError> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                return Err(if at_boundary && got == 0 {
+                    ClusterError::Disconnected("peer closed at frame boundary".into())
+                } else {
+                    ClusterError::Truncated(format!(
+                        "stream ended after {got} of {} bytes",
+                        buf.len()
+                    ))
+                });
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Awkward f64 bit patterns the codec must carry verbatim: a NaN with
+    /// payload bits, negative zero, a subnormal, and a sum with
+    /// non-associative history.
+    fn tricky_bits() -> [u64; 4] {
+        [
+            0x7FF8_DEAD_BEEF_0001,
+            (-0.0f64).to_bits(),
+            1u64, // smallest subnormal
+            (0.1f64 + 0.2f64).to_bits(),
+        ]
+    }
+
+    fn sample_state() -> KeyStateWire {
+        KeyStateWire {
+            records: 3,
+            weight_bits: tricky_bits()[3],
+            values_bits: tricky_bits().to_vec(),
+        }
+    }
+
+    fn sample_routes() -> RoutesWire {
+        RoutesWire {
+            explicit: vec![(2, 1), (9, 0), (40, 3)],
+            hosts: vec![0, 1, 2, 3, 2, 1],
+            seed: 0x1234_5678_9ABC_DEF0,
+        }
+    }
+
+    fn sample_snapshot() -> SnapshotWire {
+        SnapshotWire {
+            stores: vec![StoreSnapWire {
+                entries: vec![(7, sample_state()), (11, sample_state())],
+                total_bits: tricky_bits()[3],
+            }],
+            drws: vec![DrwSnapWire {
+                capacity: 64,
+                decay_bits: 0.5f64.to_bits(),
+                total_bits: tricky_bits()[0],
+                entries: vec![(1, 2.0f64.to_bits()), (5, 1.0f64.to_bits())],
+                rng: [1, 2, 3, 4],
+                observed: 100,
+                sampled: 40,
+                since_compaction: 17,
+            }],
+        }
+    }
+
+    /// One of every message type, with tricky payloads.
+    fn sample_messages() -> Vec<Message> {
+        let bits = tricky_bits();
+        vec![
+            Message::HelloControl { worker_id: 3 },
+            Message::HelloFeed { worker_id: 0 },
+            Message::Assign(AssignWire {
+                worker_id: 1,
+                n_workers: 4,
+                n_partitions: 16,
+                part_lo: 4,
+                part_hi: 8,
+                base_seed: 99,
+                sample_rate_bits: 0.25f64.to_bits(),
+                counter_capacity: 128,
+                sketch_compaction: 1000,
+                sketch_bound: 64,
+                sketch_take: 8,
+                ship_k: 32,
+                next_interval: 5,
+                epoch: 2,
+                restore: true,
+                routes: sample_routes(),
+            }),
+            Message::Restore(sample_snapshot()),
+            Message::Batch {
+                interval: 7,
+                records: vec![
+                    Record {
+                        key: 42,
+                        ts: 1,
+                        weight: f64::from_bits(bits[0]),
+                    },
+                    Record {
+                        key: 0,
+                        ts: u64::MAX,
+                        weight: f64::from_bits(bits[1]),
+                    },
+                ],
+            },
+            Message::Eof,
+            Message::Harvest(HarvestWire {
+                interval: 7,
+                hists: vec![HistogramWire {
+                    entries: vec![(9, 0.6f64.to_bits()), (4, 0.4f64.to_bits())],
+                    total_bits: 1000.0f64.to_bits(),
+                }],
+                loads: bits.to_vec(),
+                counts: vec![10, 0, 3, 9],
+                totals: bits.to_vec(),
+            }),
+            Message::PlanRequest {
+                routes: sample_routes(),
+            },
+            Message::Movers {
+                interval: 7,
+                movers: vec![MoverWire {
+                    part: 2,
+                    key: 9,
+                    state: sample_state(),
+                }],
+            },
+            Message::BarrierEnd(BarrierEndWire {
+                interval: 7,
+                swap: Some((3, sample_routes())),
+                ops: vec![
+                    OpWire::Extract { part: 2, key: 9 },
+                    OpWire::Install {
+                        part: 5,
+                        key: 9,
+                        state: sample_state(),
+                    },
+                ],
+            }),
+            Message::BarrierDone {
+                interval: 7,
+                snapshot: sample_snapshot(),
+            },
+            Message::Finish,
+            Message::FinalState {
+                parts: vec![FinalPartWire {
+                    part: 6,
+                    n_keys: 12,
+                    fingerprint: 0xDEAD_BEEF,
+                    total_bits: bits[3],
+                }],
+            },
+        ]
+    }
+
+    fn decode(buf: &[u8]) -> Result<(Message, usize), ClusterError> {
+        read_frame(&mut &buf[..])
+    }
+
+    #[test]
+    fn round_trip_every_message_type() {
+        let msgs = sample_messages();
+        assert_eq!(msgs.len(), 13, "one sample per message type");
+        let mut seen = std::collections::HashSet::new();
+        for msg in &msgs {
+            assert!(seen.insert(msg.code()), "duplicate code {}", msg.code());
+            let frame = encode_frame(msg).unwrap();
+            let (back, used) = decode(&frame).unwrap();
+            assert_eq!(&back, msg, "{} did not round-trip", msg.name());
+            assert_eq!(used, frame.len());
+        }
+    }
+
+    #[test]
+    fn f64_bits_survive_the_wire_exactly() {
+        for &bits in &tricky_bits() {
+            let msg = Message::Batch {
+                interval: 1,
+                records: vec![Record {
+                    key: 1,
+                    ts: 0,
+                    weight: f64::from_bits(bits),
+                }],
+            };
+            let frame = encode_frame(&msg).unwrap();
+            match decode(&frame).unwrap().0 {
+                Message::Batch { records, .. } => {
+                    assert_eq!(records[0].weight.to_bits(), bits);
+                }
+                other => panic!("decoded {}", other.name()),
+            }
+        }
+    }
+
+    #[test]
+    fn key_state_round_trips_bitwise() {
+        let w = sample_state();
+        let st = w.to_state();
+        assert_eq!(KeyStateWire::from_state(&st), w);
+    }
+
+    #[test]
+    fn empty_input_is_disconnected() {
+        assert!(matches!(decode(&[]), Err(ClusterError::Disconnected(_))));
+    }
+
+    #[test]
+    fn partial_header_is_truncated() {
+        let frame = encode_frame(&Message::Eof).unwrap();
+        for cut in 1..HEADER_LEN {
+            assert!(
+                matches!(decode(&frame[..cut]), Err(ClusterError::Truncated(_))),
+                "cut at {cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_magic_is_named() {
+        let mut frame = encode_frame(&Message::Finish).unwrap();
+        frame[0] ^= 0xFF;
+        let bad = u32::from_le_bytes(frame[0..4].try_into().unwrap());
+        assert_eq!(decode(&frame).unwrap_err(), ClusterError::BadMagic(bad));
+    }
+
+    #[test]
+    fn bad_version_is_named() {
+        let mut frame = encode_frame(&Message::Finish).unwrap();
+        frame[4] = 9;
+        assert_eq!(decode(&frame).unwrap_err(), ClusterError::BadVersion(9));
+    }
+
+    #[test]
+    fn unknown_message_type_is_bad_message() {
+        let mut frame = encode_frame(&Message::Finish).unwrap();
+        frame[6] = 200;
+        assert!(matches!(decode(&frame), Err(ClusterError::BadMessage(_))));
+    }
+
+    #[test]
+    fn oversized_declared_payload_is_rejected_before_allocation() {
+        let mut frame = encode_frame(&Message::Finish).unwrap();
+        frame[8..12].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        assert_eq!(
+            decode(&frame).unwrap_err(),
+            ClusterError::FrameTooLarge {
+                len: MAX_PAYLOAD + 1
+            }
+        );
+    }
+
+    #[test]
+    fn truncated_payload_at_every_cut_is_an_error() {
+        for msg in sample_messages() {
+            let frame = encode_frame(&msg).unwrap();
+            for cut in HEADER_LEN..frame.len() {
+                let err = decode(&frame[..cut]).unwrap_err();
+                assert!(
+                    matches!(err, ClusterError::Truncated(_)),
+                    "{} cut at {cut}: {err}",
+                    msg.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_payload_bytes_are_bad_message() {
+        let msg = Message::HelloControl { worker_id: 7 };
+        let mut frame = encode_frame(&msg).unwrap();
+        frame.push(0xAB);
+        let len = (frame.len() - HEADER_LEN) as u32;
+        frame[8..12].copy_from_slice(&len.to_le_bytes());
+        assert!(matches!(decode(&frame), Err(ClusterError::BadMessage(_))));
+    }
+
+    #[test]
+    fn corrupt_length_prefix_cannot_force_a_huge_allocation() {
+        // claim 2^32-ish movers inside a tiny payload: the length guard
+        // must reject it from the bytes remaining, not try to allocate
+        let msg = Message::Movers {
+            interval: 1,
+            movers: vec![],
+        };
+        let mut frame = encode_frame(&msg).unwrap();
+        let off = HEADER_LEN + 8; // the movers length prefix
+        frame[off..off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(decode(&frame), Err(ClusterError::Truncated(_))));
+    }
+
+    #[test]
+    fn single_byte_corruption_never_panics() {
+        // flip every byte of every sample frame; decode must return
+        // *something* (Ok or a named error) without panicking
+        for msg in sample_messages() {
+            let frame = encode_frame(&msg).unwrap();
+            for pos in 0..frame.len() {
+                let mut bad = frame.clone();
+                bad[pos] ^= 0xFF;
+                let _ = decode(&bad);
+            }
+        }
+    }
+
+    #[test]
+    fn bad_bool_byte_is_bad_message() {
+        let msg = Message::BarrierEnd(BarrierEndWire {
+            interval: 1,
+            swap: None,
+            ops: vec![],
+        });
+        let mut frame = encode_frame(&msg).unwrap();
+        frame[HEADER_LEN + 8] = 2; // the swap presence flag
+        assert!(matches!(decode(&frame), Err(ClusterError::BadMessage(_))));
+    }
+
+    #[test]
+    fn routes_wire_lowers_back_to_identical_flat_routes() {
+        use crate::partitioner::{FlatRoutes, RouteTable};
+        let flat = FlatRoutes::new(
+            RouteTable::from_pairs(vec![(9, 2), (40, 0)]),
+            vec![0, 1, 2, 3],
+            77,
+        );
+        let wire = RoutesWire::from_flat(&flat);
+        let back = wire.to_flat().unwrap();
+        for k in 0..10_000u64 {
+            assert_eq!(back.partition(k), flat.partition(k));
+        }
+    }
+
+    #[test]
+    fn routes_with_no_hosts_are_rejected() {
+        let w = RoutesWire {
+            explicit: vec![],
+            hosts: vec![],
+            seed: 0,
+        };
+        assert!(matches!(w.to_flat(), Err(ClusterError::BadMessage(_))));
+    }
+}

@@ -1,0 +1,386 @@
+//! The worker process run loop: own a contiguous partition shard (its
+//! [`StateStore`]s and [`DrWorker`]s), fold batches from the feed
+//! connection, ship harvests/movers/snapshots to the master on the
+//! control connection, and apply migration ops at each barrier.
+//!
+//! Every per-record loop here replays the exact sequential subsequence
+//! the in-process engines produce for this shard — the round-robin tap,
+//! the record-order shuffle fold, the slab-order mover walk and the
+//! plan-order op application — so the worker's state and histograms are
+//! bitwise those of the oracle's partitions `[part_lo, part_hi)`.
+
+use super::transport::{self, Endpoint, RealClock};
+use super::wire::{
+    self, AssignWire, DrwSnapWire, FinalPartWire, HarvestWire, HistogramWire, KeyStateWire,
+    Message, MoverWire, OpWire, SnapshotWire, StoreSnapWire,
+};
+use super::ClusterError;
+use crate::ddps::exec::parallel::harvest_sharded;
+use crate::ddps::EngineConfig;
+use crate::dr::DrWorker;
+use crate::sketch::{FreqCounter, SketchConfig};
+use crate::state::StateStore;
+use crate::workload::{Record, SocketSource};
+use std::time::Duration;
+
+const CONNECT_ATTEMPTS: u32 = 50;
+const CONNECT_BASE: Duration = Duration::from_millis(5);
+const CONNECT_CAP: Duration = Duration::from_millis(100);
+const IO_TIMEOUT: Duration = Duration::from_secs(120);
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkerOptions {
+    pub endpoint: Endpoint,
+    pub worker_id: u32,
+    /// Test hook: exit right after *receiving* this interval's batch,
+    /// before processing any of it — a crash at the worst moment for
+    /// the master's restore path.
+    pub fail_at: Option<u64>,
+}
+
+/// How the run loop ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerOutcome {
+    /// Clean shutdown after `Eof` + `Finish`.
+    Finished,
+    /// The `fail_at` crash hook fired (the CLI maps this to exit 3).
+    FailInjected,
+}
+
+/// This worker's shard: stores and DRWs for partitions `[lo, hi)`.
+struct Shard {
+    lo: usize,
+    hi: usize,
+    n_partitions: usize,
+    ship_k: usize,
+    stores: Vec<StateStore>,
+    drws: Vec<DrWorker>,
+}
+
+fn sketch_of(a: &AssignWire) -> SketchConfig {
+    SketchConfig {
+        compaction_interval: a.sketch_compaction as usize,
+        size_boundary: a.sketch_bound as usize,
+        take_top_k: a.sketch_take as usize,
+    }
+}
+
+impl Shard {
+    /// A fresh shard — the exact DRW construction of the in-process
+    /// engine core, restricted to this worker's global DRW indices.
+    fn fresh(a: &AssignWire) -> Self {
+        let (lo, hi) = (a.part_lo as usize, a.part_hi as usize);
+        let sketch = sketch_of(a);
+        let stores = (lo..hi).map(|_| StateStore::new()).collect();
+        let drws = (lo..hi)
+            .map(|d| {
+                DrWorker::with_sketch(
+                    a.counter_capacity as usize,
+                    f64::from_bits(a.sample_rate_bits),
+                    a.base_seed ^ ((d as u64) << 8),
+                    sketch,
+                )
+            })
+            .collect();
+        Self {
+            lo,
+            hi,
+            n_partitions: a.n_partitions as usize,
+            ship_k: a.ship_k as usize,
+            stores,
+            drws,
+        }
+    }
+
+    /// Rebuild from a barrier snapshot: stores by in-order install (the
+    /// slab order and cached-total bits carry over verbatim), DRWs from
+    /// their counter/RNG/compaction state.
+    fn restore(a: &AssignWire, snap: &SnapshotWire) -> Result<Self, ClusterError> {
+        let (lo, hi) = (a.part_lo as usize, a.part_hi as usize);
+        if snap.stores.len() != hi - lo || snap.drws.len() != hi - lo {
+            return Err(ClusterError::Protocol(format!(
+                "snapshot has {} stores / {} drws for a shard of {}",
+                snap.stores.len(),
+                snap.drws.len(),
+                hi - lo
+            )));
+        }
+        let sketch = sketch_of(a);
+        let sample_rate = f64::from_bits(a.sample_rate_bits);
+        let stores = snap.stores.iter().map(restore_store).collect();
+        let drws = snap
+            .drws
+            .iter()
+            .map(|d| restore_drw(d, sample_rate, sketch))
+            .collect();
+        Ok(Self {
+            lo,
+            hi,
+            n_partitions: a.n_partitions as usize,
+            ship_k: a.ship_k as usize,
+            stores,
+            drws,
+        })
+    }
+
+    fn snapshot(&self) -> SnapshotWire {
+        SnapshotWire {
+            stores: self
+                .stores
+                .iter()
+                .map(|s| StoreSnapWire {
+                    entries: s
+                        .iter()
+                        .map(|(k, st)| (k, KeyStateWire::from_state(st)))
+                        .collect(),
+                    total_bits: s.total_weight().to_bits(),
+                })
+                .collect(),
+            drws: self
+                .drws
+                .iter()
+                .map(|w| DrwSnapWire {
+                    capacity: w.counter().capacity() as u64,
+                    decay_bits: w.counter().decay().to_bits(),
+                    total_bits: w.counter().total().to_bits(),
+                    entries: w
+                        .counter()
+                        .entries_sorted()
+                        .iter()
+                        .map(|&(k, c)| (k, c.to_bits()))
+                        .collect(),
+                    rng: w.rng_state(),
+                    observed: w.observed(),
+                    sampled: w.sampled(),
+                    since_compaction: w.since_compaction() as u64,
+                })
+                .collect(),
+        }
+    }
+
+    fn final_parts(&self) -> Vec<FinalPartWire> {
+        self.stores
+            .iter()
+            .enumerate()
+            .map(|(idx, s)| FinalPartWire {
+                part: (self.lo + idx) as u32,
+                n_keys: s.n_keys() as u64,
+                fingerprint: s.fingerprint(),
+                total_bits: s.total_weight().to_bits(),
+            })
+            .collect()
+    }
+}
+
+fn restore_store(s: &StoreSnapWire) -> StateStore {
+    let mut store = StateStore::new();
+    for (key, st) in &s.entries {
+        store.install(*key, st.to_state());
+    }
+    store.set_cached_total_weight(f64::from_bits(s.total_bits));
+    store
+}
+
+fn restore_drw(d: &DrwSnapWire, sample_rate: f64, sketch: SketchConfig) -> DrWorker {
+    let entries: Vec<(u64, f64)> = d
+        .entries
+        .iter()
+        .map(|&(k, b)| (k, f64::from_bits(b)))
+        .collect();
+    let counter = FreqCounter::from_parts(
+        d.capacity as usize,
+        f64::from_bits(d.decay_bits),
+        f64::from_bits(d.total_bits),
+        &entries,
+    );
+    DrWorker::from_parts(
+        counter,
+        sample_rate,
+        d.rng,
+        d.observed,
+        d.sampled,
+        sketch,
+        d.since_compaction as usize,
+    )
+}
+
+fn unexpected(expected: &str, got: &Message) -> ClusterError {
+    ClusterError::Protocol(format!("expected {expected}, got {}", got.name()))
+}
+
+/// Connect to the master, process batches until `Eof`, answer `Finish`
+/// with the final per-partition state rows.
+pub fn run_worker(opts: &WorkerOptions) -> Result<WorkerOutcome, ClusterError> {
+    let mut clock = RealClock;
+    let mut control = transport::connect_retry(
+        &opts.endpoint,
+        CONNECT_ATTEMPTS,
+        CONNECT_BASE,
+        CONNECT_CAP,
+        &mut clock,
+    )?;
+    control.set_timeouts(Some(IO_TIMEOUT), Some(IO_TIMEOUT))?;
+    wire::write_frame(
+        &mut control,
+        &Message::HelloControl {
+            worker_id: opts.worker_id,
+        },
+    )?;
+    let mut feed = transport::connect_retry(
+        &opts.endpoint,
+        CONNECT_ATTEMPTS,
+        CONNECT_BASE,
+        CONNECT_CAP,
+        &mut clock,
+    )?;
+    feed.set_timeouts(Some(IO_TIMEOUT), Some(IO_TIMEOUT))?;
+    wire::write_frame(
+        &mut feed,
+        &Message::HelloFeed {
+            worker_id: opts.worker_id,
+        },
+    )?;
+
+    let assign = match wire::read_frame(&mut control)?.0 {
+        Message::Assign(a) => a,
+        other => return Err(unexpected("Assign", &other)),
+    };
+    let mut shard = if assign.restore {
+        match wire::read_frame(&mut control)?.0 {
+            Message::Restore(snap) => Shard::restore(&assign, &snap)?,
+            other => return Err(unexpected("Restore", &other)),
+        }
+    } else {
+        Shard::fresh(&assign)
+    };
+    let mut routes = assign.routes.to_flat()?;
+    let mut source = SocketSource::from_env(feed);
+    let num_threads = EngineConfig::from_env().num_threads;
+
+    let n = shard.n_partitions;
+    let (lo, hi) = (shard.lo, shard.hi);
+    let mut interval = assign.next_interval;
+    let mut buf: Vec<Record> = Vec::new();
+    let mut loads = vec![0.0f64; hi - lo];
+    let mut counts = vec![0u64; hi - lo];
+
+    while source.try_next(&mut buf)? {
+        if source.last_interval() != interval {
+            return Err(ClusterError::Protocol(format!(
+                "expected the batch for interval {interval}, got {}",
+                source.last_interval()
+            )));
+        }
+        if opts.fail_at == Some(interval) {
+            return Ok(WorkerOutcome::FailInjected);
+        }
+
+        // DRW tap: the engines' round-robin record→DRW assignment,
+        // restricted to this shard's global DRW indices
+        for (i, r) in buf.iter().enumerate() {
+            let d = i % n;
+            if d >= lo && d < hi {
+                shard.drws[d - lo].observe(r.key, r.weight);
+            }
+        }
+
+        // shuffle fold in record order — the per-partition load sums and
+        // keyed folds accumulate exactly as in the sequential oracle
+        for l in loads.iter_mut() {
+            *l = 0.0;
+        }
+        for c in counts.iter_mut() {
+            *c = 0;
+        }
+        for r in &buf {
+            let p = routes.partition(r.key);
+            if p >= lo && p < hi {
+                loads[p - lo] += r.weight;
+                counts[p - lo] += 1;
+                shard.stores[p - lo].fold_count(r.key, r.weight);
+            }
+        }
+
+        let ship_k = shard.ship_k;
+        let hists = harvest_sharded(&mut shard.drws, ship_k, num_threads);
+        wire::write_frame(
+            &mut control,
+            &Message::Harvest(HarvestWire {
+                interval,
+                hists: hists.iter().map(HistogramWire::from_histogram).collect(),
+                loads: loads.iter().map(|l| l.to_bits()).collect(),
+                counts: counts.clone(),
+                totals: shard
+                    .stores
+                    .iter()
+                    .map(|s| s.total_weight().to_bits())
+                    .collect(),
+            }),
+        )?;
+
+        // control phase: optional plan/movers exchange, then the barrier
+        loop {
+            match wire::read_frame(&mut control)?.0 {
+                Message::PlanRequest { routes: rw } => {
+                    let candidate = rw.to_flat()?;
+                    let mut movers = Vec::new();
+                    for (idx, store) in shard.stores.iter().enumerate() {
+                        let p = lo + idx;
+                        for (key, st) in store.iter() {
+                            if candidate.partition(key) != p {
+                                movers.push(MoverWire {
+                                    part: p as u32,
+                                    key,
+                                    state: KeyStateWire::from_state(st),
+                                });
+                            }
+                        }
+                    }
+                    wire::write_frame(&mut control, &Message::Movers { interval, movers })?;
+                }
+                Message::BarrierEnd(be) => {
+                    if be.interval != interval {
+                        return Err(ClusterError::Protocol(format!(
+                            "barrier for interval {}, expected {interval}",
+                            be.interval
+                        )));
+                    }
+                    // this worker's subsequence of the global plan, in
+                    // plan order — the same per-store op sequences the
+                    // oracle's apply_epoch_swap produces
+                    for op in &be.ops {
+                        match op {
+                            OpWire::Extract { part, key } => {
+                                let _ = shard.stores[*part as usize - lo].extract(*key);
+                            }
+                            OpWire::Install { part, key, state } => {
+                                shard.stores[*part as usize - lo].install(*key, state.to_state());
+                            }
+                        }
+                    }
+                    if let Some((_epoch, rw)) = &be.swap {
+                        routes = rw.to_flat()?;
+                    }
+                    let snapshot = shard.snapshot();
+                    wire::write_frame(&mut control, &Message::BarrierDone { interval, snapshot })?;
+                    break;
+                }
+                other => return Err(unexpected("PlanRequest or BarrierEnd", &other)),
+            }
+        }
+        interval += 1;
+    }
+
+    // Eof on the feed: report final state and exit
+    match wire::read_frame(&mut control)?.0 {
+        Message::Finish => {}
+        other => return Err(unexpected("Finish", &other)),
+    }
+    wire::write_frame(
+        &mut control,
+        &Message::FinalState {
+            parts: shard.final_parts(),
+        },
+    )?;
+    Ok(WorkerOutcome::Finished)
+}

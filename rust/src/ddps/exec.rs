@@ -270,52 +270,77 @@ impl<'a> ShuffleStage<'a> {
         // O(n_partitions) bookkeeping, not sharded work.
         let wall_s = wall_start.elapsed().as_secs_f64();
 
-        if let Some(rates) = self.rates {
-            debug_assert_eq!(rates.len(), n, "service rates/partition mismatch");
-        }
-        let rate = |p: usize| self.rates.map_or(1.0, |r| r[p]);
-        let total_load: f64 = loads.iter().sum();
-        // Effective (service-rate-weighted) bottleneck: what backpressure
-        // actually gates on when a worker is slowed. Identical to the raw
-        // bottleneck when no rates are set.
-        let bottleneck = loads
-            .iter()
-            .enumerate()
-            .map(|(p, l)| l * rate(p))
-            .fold(0.0, f64::max);
-        let (map_time, reduce_time, stage_time) = match self.sched {
-            Scheduling::Wave => {
-                let per_slot = records.len().div_ceil(self.cfg.n_slots);
-                let map_time =
-                    per_slot as f64 * (self.cfg.map_cost + self.cfg.shuffle_cost);
-                let task_costs: Vec<VTime> = loads
-                    .iter()
-                    .enumerate()
-                    .map(|(p, l)| self.cfg.reduce_task_time(*l, total_load) * rate(p))
-                    .collect();
-                let reduce_time = wave_makespan(&task_costs, self.cfg.n_slots);
-                (map_time, reduce_time, map_time + reduce_time)
-            }
-            Scheduling::Pinned => {
-                let source_time = records.len() as f64 / n as f64
-                    * (self.cfg.map_cost + self.cfg.shuffle_cost);
-                let reduce_time = bottleneck * self.cfg.reduce_cost;
-                (source_time, reduce_time, source_time.max(reduce_time))
-            }
-        };
-
-        let mean_load = total_load / n as f64;
-        StageReport {
-            imbalance: load_imbalance(&loads),
-            bottleneck_ratio: if mean_load > 0.0 { bottleneck / mean_load } else { 1.0 },
+        finish_stage_report(
+            self.cfg,
+            self.sched,
+            records.len(),
             loads,
             record_counts,
-            map_time,
-            reduce_time,
-            stage_time,
+            self.rates,
             wall_s,
-            decision_wall_s: 0.0,
+        )
+    }
+}
+
+/// The virtual-time accounting half of [`ShuffleStage::run`]: turn routed
+/// per-partition loads/counts into a [`StageReport`] under the scheduling
+/// discipline. Extracted so the distributed master
+/// ([`cluster`](super::cluster)) accounts the workers' wire-shipped loads
+/// through exactly the code path the in-process stage uses — same fold
+/// orders, same f64 bits.
+pub(crate) fn finish_stage_report(
+    cfg: &EngineConfig,
+    sched: Scheduling,
+    n_records: usize,
+    loads: Vec<f64>,
+    record_counts: Vec<u64>,
+    rates: Option<&[f64]>,
+    wall_s: f64,
+) -> StageReport {
+    let n = cfg.n_partitions;
+    if let Some(rates) = rates {
+        debug_assert_eq!(rates.len(), n, "service rates/partition mismatch");
+    }
+    let rate = |p: usize| rates.map_or(1.0, |r| r[p]);
+    let total_load: f64 = loads.iter().sum();
+    // Effective (service-rate-weighted) bottleneck: what backpressure
+    // actually gates on when a worker is slowed. Identical to the raw
+    // bottleneck when no rates are set.
+    let bottleneck = loads
+        .iter()
+        .enumerate()
+        .map(|(p, l)| l * rate(p))
+        .fold(0.0, f64::max);
+    let (map_time, reduce_time, stage_time) = match sched {
+        Scheduling::Wave => {
+            let per_slot = n_records.div_ceil(cfg.n_slots);
+            let map_time = per_slot as f64 * (cfg.map_cost + cfg.shuffle_cost);
+            let task_costs: Vec<VTime> = loads
+                .iter()
+                .enumerate()
+                .map(|(p, l)| cfg.reduce_task_time(*l, total_load) * rate(p))
+                .collect();
+            let reduce_time = wave_makespan(&task_costs, cfg.n_slots);
+            (map_time, reduce_time, map_time + reduce_time)
         }
+        Scheduling::Pinned => {
+            let source_time = n_records as f64 / n as f64 * (cfg.map_cost + cfg.shuffle_cost);
+            let reduce_time = bottleneck * cfg.reduce_cost;
+            (source_time, reduce_time, source_time.max(reduce_time))
+        }
+    };
+
+    let mean_load = total_load / n as f64;
+    StageReport {
+        imbalance: load_imbalance(&loads),
+        bottleneck_ratio: if mean_load > 0.0 { bottleneck / mean_load } else { 1.0 },
+        loads,
+        record_counts,
+        map_time,
+        reduce_time,
+        stage_time,
+        wall_s,
+        decision_wall_s: 0.0,
     }
 }
 

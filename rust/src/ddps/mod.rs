@@ -34,12 +34,14 @@
 //! `source_wall_s` columns and the pipeline-occupancy ratio change).
 
 pub mod batch;
+pub mod cluster;
 pub mod exec;
 pub mod microbatch;
 pub mod pipeline;
 pub mod streaming;
 
 pub use batch::{BatchJob, JobReport};
+pub use cluster::{ClusterError, ClusterMaster, ClusterOptions, ClusterStats};
 pub use exec::{
     adopt_decision, adopt_swap, apply_epoch_swap, decide_and_adopt, decision_point,
     decision_point_sharded, proposal_point_sharded, tap_records, tap_records_sharded,

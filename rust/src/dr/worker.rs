@@ -115,6 +115,51 @@ impl DrWorker {
     pub fn footprint(&self) -> usize {
         self.counter.footprint()
     }
+
+    /// The bounded counter itself — snapshot side of the wire restore.
+    pub fn counter(&self) -> &FreqCounter {
+        &self.counter
+    }
+
+    pub fn sample_rate(&self) -> f64 {
+        self.sample_rate
+    }
+
+    /// Raw sampling-RNG state, so a restored DRW continues the exact
+    /// draw sequence (bit-relevant whenever `sample_rate < 1`).
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    pub fn since_compaction(&self) -> usize {
+        self.since_compaction
+    }
+
+    /// Rebuild a DRW from a wire snapshot: the counter carries its exact
+    /// counts/total bits, the RNG resumes mid-stream, and the compaction
+    /// phase counter keeps the bounded-sketch schedule aligned — so the
+    /// restored DRW observes/harvests bitwise like the lost one.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts(
+        counter: FreqCounter,
+        sample_rate: f64,
+        rng_state: [u64; 4],
+        observed: u64,
+        sampled: u64,
+        sketch: SketchConfig,
+        since_compaction: usize,
+    ) -> Self {
+        assert!((0.0..=1.0).contains(&sample_rate) && sample_rate > 0.0);
+        Self {
+            counter,
+            sample_rate,
+            rng: Rng::from_state(rng_state),
+            observed,
+            sampled,
+            sketch,
+            since_compaction,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -224,6 +269,45 @@ mod tests {
         let h = w.harvest(4);
         assert_eq!(h.entries()[0].key, 999);
         assert!((h.entries()[0].freq - 0.3).abs() < 0.05);
+    }
+
+    #[test]
+    fn snapshot_roundtrip_resumes_bitwise() {
+        // sampled tap + bounded sketch: the restore path must resume the
+        // RNG mid-stream and keep the compaction phase aligned
+        let sketch = SketchConfig {
+            compaction_interval: 64,
+            size_boundary: 24,
+            ..Default::default()
+        };
+        let mut orig = DrWorker::with_sketch(48, 0.4, 77, sketch);
+        for i in 0..10_000u64 {
+            orig.observe(i % 300, 1.0);
+        }
+        let counter = FreqCounter::from_parts(
+            orig.counter().capacity(),
+            orig.counter().decay(),
+            orig.counter().total(),
+            &orig.counter().entries_sorted(),
+        );
+        let mut restored = DrWorker::from_parts(
+            counter,
+            orig.sample_rate(),
+            orig.rng_state(),
+            orig.observed(),
+            orig.sampled(),
+            sketch,
+            orig.since_compaction(),
+        );
+        for i in 0..10_000u64 {
+            orig.observe(i * 7 % 500, 1.0);
+            restored.observe(i * 7 % 500, 1.0);
+        }
+        assert_eq!(orig.observed(), restored.observed());
+        assert_eq!(orig.sampled(), restored.sampled());
+        let (a, b) = (orig.harvest(8), restored.harvest(8));
+        assert_eq!(a.entries(), b.entries());
+        assert_eq!(a.total_weight().to_bits(), b.total_weight().to_bits());
     }
 
     #[test]

@@ -4,6 +4,8 @@
 //!   dynrepart bench-partitioners    micro-bench partitioner updates
 //!   dynrepart quickstart            the README demo
 //!   dynrepart scenario <conf>       run an operational scenario end to end
+//!   dynrepart master <conf>         run a cluster scenario as the master process
+//!   dynrepart worker --connect <ep> --id <n>   run one worker process (spawned by master)
 //!   dynrepart artifacts             check AOT artifacts + PJRT runtime
 
 use dynrepart::figures::*;
@@ -138,10 +140,102 @@ fn main() {
                 }
             }
         }
+        Some("master") => {
+            let Some(path) = args.get(1) else {
+                eprintln!("usage: dynrepart master <conf-path>");
+                eprintln!("  e.g.: dynrepart master scenarios/cluster_hotspot_flip.conf");
+                std::process::exit(2);
+            };
+            let conf = std::path::Path::new(path);
+            let scenario = match dynrepart::scenario::Scenario::from_file(conf) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("invalid scenario {path}: {e}");
+                    std::process::exit(2);
+                }
+            };
+            if scenario.config().cluster_workers.is_none() {
+                eprintln!("scenario {path} has no `cluster.workers` — not a cluster scenario");
+                std::process::exit(2);
+            }
+            let opts = dynrepart::scenario::ClusterRunOptions::default();
+            match scenario.run_cluster_with(&opts) {
+                Ok((report, stats)) => {
+                    let slug = format!("cluster_{}", report.name.replace('-', "_"));
+                    report.table().emit(&slug);
+                    if stats.worker_restores > 0 {
+                        println!("workers restored: {}", stats.worker_restores);
+                    }
+                    println!(
+                        "shuffle {} B  migration {} B  snapshots {} B",
+                        stats.shuffle_bytes, stats.migration_bytes, stats.snapshot_bytes
+                    );
+                    println!(
+                        "final epoch {}  total vtime {:.3}s  state weight {:.1}",
+                        report.final_epoch, report.total_vtime, report.total_state_weight
+                    );
+                }
+                Err(e) => {
+                    eprintln!("cluster scenario failed: {e}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        Some("worker") => {
+            let mut endpoint = None;
+            let mut worker_id: Option<u32> = None;
+            let mut fail_at: Option<u64> = None;
+            let mut i = 1;
+            while i < args.len() {
+                match args[i].as_str() {
+                    "--connect" if i + 1 < args.len() => {
+                        endpoint =
+                            Some(dynrepart::ddps::cluster::Endpoint::parse(&args[i + 1]));
+                        i += 2;
+                    }
+                    "--id" if i + 1 < args.len() => {
+                        worker_id = args[i + 1].parse().ok();
+                        i += 2;
+                    }
+                    "--fail-at" if i + 1 < args.len() => {
+                        fail_at = args[i + 1].parse().ok();
+                        i += 2;
+                    }
+                    other => {
+                        eprintln!("unknown worker argument: {other}");
+                        eprintln!(
+                            "usage: dynrepart worker --connect <endpoint> --id <n> [--fail-at <interval>]"
+                        );
+                        std::process::exit(2);
+                    }
+                }
+            }
+            let (Some(endpoint), Some(worker_id)) = (endpoint, worker_id) else {
+                eprintln!(
+                    "usage: dynrepart worker --connect <endpoint> --id <n> [--fail-at <interval>]"
+                );
+                std::process::exit(2);
+            };
+            let opts = dynrepart::ddps::cluster::WorkerOptions {
+                endpoint,
+                worker_id,
+                fail_at,
+            };
+            match dynrepart::ddps::cluster::run_worker(&opts) {
+                Ok(dynrepart::ddps::cluster::WorkerOutcome::Finished) => {}
+                Ok(dynrepart::ddps::cluster::WorkerOutcome::FailInjected) => {
+                    std::process::exit(3);
+                }
+                Err(e) => {
+                    eprintln!("worker {worker_id} failed: {e}");
+                    std::process::exit(1);
+                }
+            }
+        }
         _ => {
             eprintln!("dynrepart — System-aware dynamic partitioning (Zvara et al. 2021)");
             eprintln!(
-                "usage: dynrepart <fig 2..8 [scale] | artifacts | quickstart | scenario <conf>>"
+                "usage: dynrepart <fig 2..8 [scale] | artifacts | quickstart | scenario <conf> | master <conf> | worker ...>"
             );
             std::process::exit(2);
         }

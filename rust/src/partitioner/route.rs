@@ -118,6 +118,17 @@ impl FlatRoutes {
     pub fn n_hosts(&self) -> usize {
         self.host_to_partition.len()
     }
+
+    /// The dense host→partition table — the tail-hash side of the wire
+    /// form (a flat snapshot serializes as explicit pairs + this table +
+    /// the seed, and reconstructs bit-for-bit).
+    pub fn hosts(&self) -> &[u32] {
+        &self.host_to_partition
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
 }
 
 #[cfg(test)]

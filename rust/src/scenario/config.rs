@@ -123,6 +123,12 @@ pub struct ScenarioConfig {
     /// `(interval, event)` pairs, sorted by interval; each fires at the
     /// barrier before its interval.
     pub events: Vec<(u64, EventKind)>,
+    /// Run the scenario through the distributed engine
+    /// ([`crate::ddps::ClusterMaster`]) with this many worker processes.
+    /// Cluster runs are streaming-only and event-free: runtime events are
+    /// in-process engine hooks, while worker failure is exercised by the
+    /// cluster's own crash-restore path.
+    pub cluster_workers: Option<usize>,
 }
 
 impl Default for ScenarioConfig {
@@ -143,6 +149,7 @@ impl Default for ScenarioConfig {
             n_keys: 50_000,
             exponent: 1.1,
             events: Vec::new(),
+            cluster_workers: None,
         }
     }
 }
@@ -245,6 +252,7 @@ impl ScenarioConfig {
                     }
                 }
                 "engine.threads" => cfg.threads = Some(parse_usize(key, value)?),
+                "cluster.workers" => cfg.cluster_workers = Some(parse_usize(key, value)?),
                 "dr.enabled" => cfg.dr.enabled = parse_bool(key, value)?,
                 "dr.force-updates" => cfg.dr.force_updates = parse_bool(key, value)?,
                 "dr.min-gain" => cfg.dr.min_gain = parse_f64(key, value)?,
@@ -411,6 +419,33 @@ impl ScenarioConfig {
         }
         if let Some(0) = self.threads {
             return Err("engine.threads must be >= 1".into());
+        }
+        if let Some(w) = self.cluster_workers {
+            if w == 0 {
+                return Err("cluster.workers must be >= 1".into());
+            }
+            if w > self.n_partitions {
+                return Err(format!(
+                    "cluster.workers = {w} exceeds engine.partitions = {}: every worker \
+                     needs a partition shard",
+                    self.n_partitions
+                ));
+            }
+            if self.engine != EngineKind::Streaming {
+                return Err(
+                    "cluster.workers requires engine.discipline = streaming (the \
+                     distributed engine runs the checkpoint-barrier loop)"
+                        .into(),
+                );
+            }
+            if !self.events.is_empty() {
+                return Err(
+                    "cluster.workers scenarios cannot schedule events: runtime events are \
+                     in-process engine hooks; worker failure is the cluster's own \
+                     crash-restore path"
+                        .into(),
+                );
+            }
         }
         let d = &self.dr.decider;
         if !(0.0..=1.0).contains(&d.histogram_threshold) {
@@ -661,6 +696,27 @@ mod tests {
         assert!(ScenarioConfig::parse(mb).unwrap_err().contains("streaming"));
         assert!(ScenarioConfig::parse("event.3 = burst 2 0.0\n").is_err());
         assert!(ScenarioConfig::parse("event.3 = burst 2\n").is_err(), "factor is required");
+    }
+
+    #[test]
+    fn cluster_workers_parse_and_are_bounded() {
+        let cfg = ScenarioConfig::parse("engine.partitions = 8\ncluster.workers = 2\n").unwrap();
+        assert_eq!(cfg.cluster_workers, Some(2));
+        // untouched confs stay single-process
+        let plain = ScenarioConfig::parse("scenario.seed = 3\n").unwrap();
+        assert_eq!(plain.cluster_workers, None);
+        assert!(ScenarioConfig::parse("cluster.workers = 0\n").is_err());
+        assert!(ScenarioConfig::parse("cluster.workers = two\n").is_err());
+        let wide = "engine.partitions = 4\ncluster.workers = 5\n";
+        assert!(ScenarioConfig::parse(wide).unwrap_err().contains("partition shard"));
+    }
+
+    #[test]
+    fn cluster_workers_need_streaming_and_no_events() {
+        let mb = "engine.discipline = microbatch\ncluster.workers = 2\n";
+        assert!(ScenarioConfig::parse(mb).unwrap_err().contains("streaming"));
+        let ev = "scenario.intervals = 6\ncluster.workers = 2\nevent.3 = scale 10\n";
+        assert!(ScenarioConfig::parse(ev).unwrap_err().contains("events"));
     }
 
     #[test]

@@ -21,5 +21,5 @@ pub mod runner;
 pub mod script;
 
 pub use config::{EngineKind, EventKind, ScenarioConfig, WorkloadScript};
-pub use runner::{Scenario, ScenarioReport, ScenarioRow};
+pub use runner::{ClusterRunOptions, Scenario, ScenarioReport, ScenarioRow};
 pub use script::ScriptedSource;

@@ -27,12 +27,14 @@
 use super::config::{EngineKind, EventKind, ScenarioConfig};
 use super::script::ScriptedSource;
 use crate::ddps::{
-    EngineConfig, IntervalReport, MicroBatchEngine, RecoveryPoint, StreamingEngine,
+    ClusterMaster, ClusterOptions, ClusterStats, EngineConfig, IntervalReport, MicroBatchEngine,
+    RecoveryPoint, StreamingEngine,
 };
 use crate::dr::DrConfig;
 use crate::util::Table;
 use crate::workload::{Record, ReplaySource, Source};
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 
 /// One interval/batch of a scenario run — the deterministic subset of the
 /// engine reports (virtual-time model only; no measured wall-clock
@@ -133,6 +135,24 @@ impl Source for RecordingSource {
     }
 }
 
+/// Host-side knobs for a cluster scenario run — everything the conf file
+/// deliberately does *not* control (binary paths, socket placement, the
+/// crash-injection test hook). Forwarded into
+/// [`ClusterOptions`] by [`Scenario::run_cluster_with`].
+#[derive(Debug, Clone, Default)]
+pub struct ClusterRunOptions {
+    /// Binary to spawn workers from; `None` means the current executable.
+    /// Tests must pass `env!("CARGO_BIN_EXE_dynrepart")` — the test
+    /// harness binary has no `worker` subcommand.
+    pub worker_bin: Option<PathBuf>,
+    /// Directory for the master's Unix socket (defaults to the system
+    /// temp dir).
+    pub socket_dir: Option<PathBuf>,
+    /// Test hook: worker `id` crashes right after receiving the batch of
+    /// `interval`, exercising the wire-level restore path.
+    pub fail_at: Option<(u32, u64)>,
+}
+
 /// A configured scenario, ready to run.
 pub struct Scenario {
     cfg: ScenarioConfig,
@@ -186,10 +206,84 @@ impl Scenario {
     /// failed — including a fail-restore replay that did not reproduce
     /// the pre-crash run bitwise.
     pub fn run(&self) -> Result<ScenarioReport, String> {
+        if self.cfg.cluster_workers.is_some() {
+            return self
+                .run_cluster_with(&ClusterRunOptions::default())
+                .map(|(report, _)| report);
+        }
         match self.cfg.engine {
             EngineKind::Streaming => self.run_streaming(),
             EngineKind::MicroBatch => self.run_microbatch(),
         }
+    }
+
+    /// Run a `cluster.workers` scenario through the distributed engine:
+    /// launch a [`ClusterMaster`], spawn the worker processes, feed the
+    /// scripted batches over the wire one interval at a time and collect
+    /// the same deterministic rows the in-process streaming path emits —
+    /// the cluster's interval reports are bitwise-identical to
+    /// [`StreamingEngine`]'s, so the rendered table doubles as a
+    /// distributed-vs-single-process equivalence fixture
+    /// (`tests/prop_cluster.rs`).
+    pub fn run_cluster_with(
+        &self,
+        opts: &ClusterRunOptions,
+    ) -> Result<(ScenarioReport, ClusterStats), String> {
+        let cfg = &self.cfg;
+        let workers = cfg
+            .cluster_workers
+            .ok_or("scenario has no cluster.workers key")?;
+        let copts = ClusterOptions {
+            n_workers: workers,
+            worker_bin: opts.worker_bin.clone(),
+            socket_dir: opts.socket_dir.clone(),
+            fail_at: opts.fail_at,
+        };
+        let mut master = ClusterMaster::launch(
+            self.engine_config(),
+            self.dr_config(),
+            cfg.choice,
+            cfg.seed,
+            &copts,
+        )
+        .map_err(|e| format!("cluster launch failed: {e}"))?;
+        let mut src = ScriptedSource::new(cfg);
+        let mut buf: Vec<Record> = Vec::new();
+        let mut rows: Vec<ScenarioRow> = Vec::with_capacity(cfg.intervals);
+        // same runner-side backlog recurrence as the in-process path;
+        // cluster runs model no slowdowns, so every rate is 1.0
+        let mut backlog: Vec<f64> = vec![0.0; cfg.n_partitions];
+        let rates: Vec<f64> = vec![1.0; cfg.n_partitions];
+        let mut cum_migrated = 0.0f64;
+        for _ in 0..cfg.intervals {
+            if !src.next_batch_into(cfg.batch_size, &mut buf) {
+                return Err("scripted source exhausted early".into());
+            }
+            let r = master
+                .run_interval(&buf)
+                .map_err(|e| format!("cluster interval {} failed: {e}", master.interval_no()))?;
+            backlog_step(&mut backlog, &r.loads, &rates, None);
+            cum_migrated += r.migrated_fraction;
+            let mut row = streaming_row(&r, String::new());
+            row.cum_migrated = cum_migrated;
+            row.backlog = backlog.clone();
+            rows.push(row);
+        }
+        let fin = master
+            .finish()
+            .map_err(|e| format!("cluster shutdown failed: {e}"))?;
+        let stats = master.stats().clone();
+        Ok((
+            ScenarioReport {
+                name: cfg.name.clone(),
+                rows,
+                recoveries_verified: stats.worker_restores as usize,
+                final_epoch: master.epoch(),
+                total_vtime: master.vtime(),
+                total_state_weight: fin.total_state_weight,
+            },
+            stats,
+        ))
     }
 
     fn run_streaming(&self) -> Result<ScenarioReport, String> {

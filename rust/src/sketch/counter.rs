@@ -66,11 +66,41 @@ impl FreqCounter {
         self.counts.retain(|_, c| *c > floor);
     }
 
+    /// The decay factor γ this sketch was created with.
+    pub fn decay(&self) -> f64 {
+        self.decay
+    }
+
+    /// The live counters in ascending key order — the wire-snapshot form
+    /// (map iteration order never reaches the wire).
+    pub fn entries_sorted(&self) -> Vec<(Key, f64)> {
+        let mut v: Vec<(Key, f64)> = self.counts.iter().map(|(&k, &c)| (k, c)).collect();
+        v.sort_unstable_by_key(|e| e.0);
+        v
+    }
+
+    /// Rebuild a counter from a snapshot ([`FreqCounter::entries_sorted`] +
+    /// [`HeavyHitter::total`]). Value-exact: per-key counts and the total
+    /// carry their bits verbatim, and no observable behaviour depends on
+    /// map iteration order (eviction, compaction and harvest all rank
+    /// with key tie-breaks), so the rebuilt counter is indistinguishable
+    /// from the original.
+    pub fn from_parts(capacity: usize, decay: f64, total: f64, entries: &[(Key, f64)]) -> Self {
+        let mut fc = Self::new(capacity, decay);
+        fc.counts.extend(entries.iter().copied());
+        fc.total = total;
+        fc
+    }
+
+    /// Evict the minimum counter, ties broken by ascending key — the same
+    /// tie-break every other ranking in this sketch uses, so eviction is
+    /// a function of the counter values alone, never of map iteration
+    /// order (which differs between an original and a wire-rebuilt map).
     fn evict_min(&mut self) {
         if let Some((&k, _)) = self
             .counts
             .iter()
-            .min_by(|a, b| a.1.total_cmp(b.1))
+            .min_by(|a, b| a.1.total_cmp(b.1).then(a.0.cmp(b.0)))
         {
             self.counts.remove(&k);
         }
@@ -261,6 +291,57 @@ mod tests {
         eb.sort_unstable_by(|x, y| x.0.cmp(&y.0));
         assert_eq!(ea, eb);
         assert_eq!(ea.iter().map(|e| e.0).collect::<Vec<_>>(), vec![3, 5]);
+    }
+
+    #[test]
+    fn evict_min_breaks_ties_by_key() {
+        // same tied multiset observed in different orders: on overflow
+        // both counters must evict the same (lowest) key
+        let mut a = FreqCounter::with_capacity(4);
+        let mut b = FreqCounter::with_capacity(4);
+        for k in [5u64, 3, 9, 7] {
+            a.observe(k, 2.0);
+        }
+        for k in [7u64, 9, 3, 5] {
+            b.observe(k, 2.0);
+        }
+        a.observe(100, 1.0);
+        b.observe(100, 1.0);
+        let mut ea = a.estimates();
+        let mut eb = b.estimates();
+        ea.sort_unstable_by_key(|e| e.0);
+        eb.sort_unstable_by_key(|e| e.0);
+        assert_eq!(ea, eb);
+        assert!(!ea.iter().any(|e| e.0 == 3), "tied minimum must evict key 3: {ea:?}");
+    }
+
+    #[test]
+    fn from_parts_roundtrip_is_behavior_exact() {
+        let mut orig = FreqCounter::with_capacity(12);
+        let mut z = Zipf::new(2_000, 1.2, 9);
+        for _ in 0..5_000 {
+            orig.observe(z.next_record().key, 1.0);
+        }
+        orig.decay_now();
+        let mut rebuilt = FreqCounter::from_parts(
+            orig.capacity(),
+            orig.decay(),
+            orig.total(),
+            &orig.entries_sorted(),
+        );
+        assert_eq!(orig.total().to_bits(), rebuilt.total().to_bits());
+        assert_eq!(orig.entries_sorted(), rebuilt.entries_sorted());
+        // continue both with the identical suffix (forcing evictions and
+        // a decay) — harvests must stay bitwise-identical
+        for _ in 0..5_000 {
+            let k = z.next_record().key;
+            orig.observe(k, 1.0);
+            rebuilt.observe(k, 1.0);
+        }
+        let (ho, hr) = (orig.harvest(8), rebuilt.harvest(8));
+        assert_eq!(ho.entries(), hr.entries());
+        assert_eq!(ho.total_weight().to_bits(), hr.total_weight().to_bits());
+        assert_eq!(orig.entries_sorted(), rebuilt.entries_sorted());
     }
 
     #[test]

@@ -61,6 +61,25 @@ impl Histogram {
         }
     }
 
+    /// Rebuild a histogram from entries already in histogram order — the
+    /// wire-deserialization form. Unlike [`Histogram::from_freqs`] this
+    /// does **not** re-sort: `heavy_mass` and the DRM's load projections
+    /// accumulate in entry order, so a reconstructed histogram must carry
+    /// the sender's exact entry sequence (and f64 bits) to stay
+    /// bitwise-identical.
+    pub fn from_sorted_entries(entries: Vec<HistogramEntry>, total_weight: f64) -> Self {
+        debug_assert!(
+            entries.windows(2).all(|w| {
+                w[1].freq < w[0].freq || (w[1].freq == w[0].freq && w[0].key < w[1].key)
+            }),
+            "entries must already be in histogram order"
+        );
+        Self {
+            entries,
+            total_weight,
+        }
+    }
+
     /// Merge worker-local histograms into a global one, keeping top `k`.
     ///
     /// Locals carry absolute totals, so the merge weights each local's
@@ -324,6 +343,15 @@ mod tests {
         let batch = Histogram::merge(&locals, 8);
         let bkeys: Vec<Key> = batch.entries().iter().map(|e| e.key).collect();
         assert_eq!(keys, bkeys, "fold and batch merge rank differently");
+    }
+
+    #[test]
+    fn from_sorted_entries_preserves_order_and_bits() {
+        let h = Histogram::from_counts(&[(1, 10.0), (2, 30.0), (3, 20.0), (3000, 20.0)], 95.0, 4);
+        let r = Histogram::from_sorted_entries(h.entries().to_vec(), h.total_weight());
+        assert_eq!(h.entries(), r.entries());
+        assert_eq!(h.total_weight().to_bits(), r.total_weight().to_bits());
+        assert_eq!(h.heavy_mass().to_bits(), r.heavy_mass().to_bits());
     }
 
     #[test]

@@ -437,6 +437,41 @@ impl StateStore {
         self.slots.iter().map(|s| (s.key, s.state.weight)).collect()
     }
 
+    /// Overwrite the cached total weight verbatim — the wire-restore
+    /// step. A snapshot ships the cache's exact bits (its value is a
+    /// function of the store's += / −= history, which a rebuilt store
+    /// cannot replay), so restore installs the states and then sets the
+    /// cache to the sender's bits.
+    pub fn set_cached_total_weight(&mut self, w: f64) {
+        self.total_weight = w;
+    }
+
+    /// FNV-1a digest over every key's full state — (key, records, weight
+    /// bits, value bits) in slab insertion order. Two stores with the
+    /// same operation history digest identically; any divergence down to
+    /// a single f64 bit or a reordered slot changes the digest. This is
+    /// the per-partition state pin the distributed engine's final-state
+    /// check compares against the in-process oracle.
+    pub fn fingerprint(&self) -> u64 {
+        fn fnv(mut h: u64, x: u64) -> u64 {
+            for b in x.to_le_bytes() {
+                h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+            }
+            h
+        }
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for slot in &self.slots {
+            h = fnv(h, slot.key);
+            h = fnv(h, slot.state.records);
+            h = fnv(h, slot.state.weight.to_bits());
+            h = fnv(h, slot.state.values.len() as u64);
+            for v in slot.state.values.iter() {
+                h = fnv(h, v.to_bits());
+            }
+        }
+        h
+    }
+
     /// Resident bytes of this store: index table + slab capacity + any
     /// heap-promoted value vectors. The `micro_hotpath` bench divides
     /// this by `n_keys` for its bytes/key column.
@@ -606,6 +641,26 @@ mod tests {
                 assert_eq!(st.records, 1);
             }
         }
+    }
+
+    #[test]
+    fn fingerprint_pins_order_and_bits() {
+        let mut a = StateStore::new();
+        let mut b = StateStore::new();
+        for k in [9u64, 2, 40] {
+            a.fold_count(k, 1.5);
+            b.fold_count(k, 1.5);
+        }
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        // a zero-weight fold changes only the record count — still visible
+        b.fold_count(2, 0.0);
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        // same states inserted in a different slab order digest differently
+        let mut c = StateStore::new();
+        for k in [2u64, 9, 40] {
+            c.fold_count(k, 1.5);
+        }
+        assert_ne!(a.fingerprint(), c.fingerprint());
     }
 
     #[test]

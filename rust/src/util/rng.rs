@@ -119,6 +119,17 @@ impl Rng {
     pub fn fork(&mut self, stream: u64) -> Rng {
         Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15))
     }
+
+    /// The raw xoshiro256** state, for wire-level snapshots: a generator
+    /// rebuilt via [`Rng::from_state`] continues the exact draw sequence.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from a [`Rng::state`] snapshot.
+    pub fn from_state(s: [u64; 4]) -> Self {
+        Self { s }
+    }
 }
 
 #[cfg(test)]
@@ -223,6 +234,18 @@ mod tests {
             max = max.max(x);
         }
         assert!(max > 100.0, "expected a heavy tail, max={max}");
+    }
+
+    #[test]
+    fn state_snapshot_resumes_the_exact_sequence() {
+        let mut a = Rng::new(21);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        let mut b = Rng::from_state(a.state());
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
     }
 
     #[test]

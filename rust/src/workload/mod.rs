@@ -22,8 +22,11 @@
 
 pub mod lfm;
 pub mod ner;
+pub mod socket;
 pub mod webcrawl;
 pub mod zipf;
+
+pub use socket::SocketSource;
 
 /// Keys are 64-bit ids. String keys (word tokens, host names) are hashed to
 /// ids at the source with murmur3, exactly as the paper generates tokens.

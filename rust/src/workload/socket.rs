@@ -1,0 +1,209 @@
+//! [`SocketSource`] — a real asynchronous I/O source: record batches
+//! arrive on a worker's feed connection and a background prefetch thread
+//! keeps up to `prefetch_depth` decoded batches ready ahead of the
+//! consumer, so network reads overlap compute beyond plain
+//! double-buffering.
+//!
+//! The depth comes from `DYNREPART_PREFETCH` (integer ≥ 1, default 2),
+//! parsed with the same strict [`util::env`](crate::util::env)
+//! discipline as every other knob: unset/empty means the default,
+//! malformed values panic with the offending variable named. Prefetch
+//! depth changes only *when* bytes are read, never what they decode to,
+//! so results are bitwise independent of the knob.
+
+use crate::ddps::cluster::transport::Stream;
+use crate::ddps::cluster::wire::{self, Message};
+use crate::ddps::cluster::ClusterError;
+use crate::util::env::knob_from_env;
+use crate::workload::{Record, Source};
+use std::sync::mpsc::{sync_channel, Receiver};
+
+pub const PREFETCH_ENV: &str = "DYNREPART_PREFETCH";
+pub const DEFAULT_PREFETCH: usize = 2;
+
+/// `DYNREPART_PREFETCH`, strictly parsed (≥ 1; default
+/// [`DEFAULT_PREFETCH`]).
+pub fn prefetch_depth_from_env() -> usize {
+    knob_from_env(PREFETCH_ENV, 1).unwrap_or(DEFAULT_PREFETCH)
+}
+
+enum Feed {
+    Batch { interval: u64, records: Vec<Record> },
+    Eof,
+}
+
+/// Pulls [`Message::Batch`] frames from a feed connection through a
+/// bounded prefetch channel. [`Message::Eof`] ends the stream cleanly;
+/// any transport or codec error surfaces once from
+/// [`SocketSource::try_next`] and the source is exhausted after it.
+pub struct SocketSource {
+    rx: Receiver<Result<Feed, ClusterError>>,
+    last_interval: u64,
+    done: bool,
+}
+
+impl SocketSource {
+    /// Spawn the prefetch thread over `stream`, keeping up to `depth`
+    /// decoded batches in flight.
+    pub fn new(stream: Stream, depth: usize) -> Self {
+        assert!(depth >= 1, "prefetch depth must be at least 1");
+        let (tx, rx) = sync_channel(depth);
+        let mut stream = stream;
+        std::thread::spawn(move || loop {
+            let out = match wire::read_frame(&mut stream) {
+                Ok((Message::Batch { interval, records }, _)) => {
+                    Ok(Feed::Batch { interval, records })
+                }
+                Ok((Message::Eof, _)) => Ok(Feed::Eof),
+                Ok((other, _)) => Err(ClusterError::Protocol(format!(
+                    "unexpected {} on the feed connection",
+                    other.name()
+                ))),
+                Err(e) => Err(e),
+            };
+            let stop = !matches!(out, Ok(Feed::Batch { .. }));
+            if tx.send(out).is_err() || stop {
+                return;
+            }
+        });
+        Self {
+            rx,
+            last_interval: 0,
+            done: false,
+        }
+    }
+
+    /// [`SocketSource::new`] with the depth from `DYNREPART_PREFETCH`.
+    pub fn from_env(stream: Stream) -> Self {
+        Self::new(stream, prefetch_depth_from_env())
+    }
+
+    /// The interval tag of the most recently returned batch.
+    pub fn last_interval(&self) -> u64 {
+        self.last_interval
+    }
+
+    /// Fill `buf` with the next batch. `Ok(false)` is a clean
+    /// end-of-feed; errors exhaust the source.
+    pub fn try_next(&mut self, buf: &mut Vec<Record>) -> Result<bool, ClusterError> {
+        buf.clear();
+        if self.done {
+            return Ok(false);
+        }
+        match self.rx.recv() {
+            Ok(Ok(Feed::Batch { interval, records })) => {
+                self.last_interval = interval;
+                buf.extend_from_slice(&records);
+                Ok(true)
+            }
+            Ok(Ok(Feed::Eof)) => {
+                self.done = true;
+                Ok(false)
+            }
+            Ok(Err(e)) => {
+                self.done = true;
+                Err(e)
+            }
+            Err(_) => {
+                self.done = true;
+                Err(ClusterError::Disconnected(
+                    "feed prefetch thread exited".into(),
+                ))
+            }
+        }
+    }
+}
+
+impl Source for SocketSource {
+    /// Batch sizes are fixed by the sender, so `_n` is advisory here.
+    fn next_batch_into(&mut self, _n: usize, buf: &mut Vec<Record>) -> bool {
+        matches!(self.try_next(buf), Ok(true))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::os::unix::net::UnixStream;
+
+    fn batch(interval: u64, keys: &[u64]) -> Message {
+        Message::Batch {
+            interval,
+            records: keys
+                .iter()
+                .map(|&k| Record {
+                    key: k,
+                    ts: interval,
+                    weight: 0.1 + k as f64,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn batches_arrive_in_order_and_eof_ends_cleanly() {
+        let (mut tx, rx) = UnixStream::pair().unwrap();
+        tx.write_all(&wire::encode_frame(&batch(1, &[5, 6])).unwrap())
+            .unwrap();
+        tx.write_all(&wire::encode_frame(&batch(2, &[7])).unwrap())
+            .unwrap();
+        tx.write_all(&wire::encode_frame(&Message::Eof).unwrap())
+            .unwrap();
+        let mut src = SocketSource::new(Stream::Unix(rx), 2);
+        let mut buf = Vec::new();
+        assert!(src.try_next(&mut buf).unwrap());
+        assert_eq!(src.last_interval(), 1);
+        assert_eq!(buf.iter().map(|r| r.key).collect::<Vec<_>>(), vec![5, 6]);
+        assert_eq!(buf[0].weight.to_bits(), (0.1 + 5.0f64).to_bits());
+        assert!(src.try_next(&mut buf).unwrap());
+        assert_eq!(src.last_interval(), 2);
+        assert!(!src.try_next(&mut buf).unwrap());
+        assert!(buf.is_empty());
+        // exhausted stays exhausted
+        assert!(!src.try_next(&mut buf).unwrap());
+    }
+
+    #[test]
+    fn source_trait_drives_the_same_feed() {
+        let (mut tx, rx) = UnixStream::pair().unwrap();
+        tx.write_all(&wire::encode_frame(&batch(1, &[9])).unwrap())
+            .unwrap();
+        tx.write_all(&wire::encode_frame(&Message::Eof).unwrap())
+            .unwrap();
+        let mut src = SocketSource::new(Stream::Unix(rx), 1);
+        let mut buf = Vec::new();
+        assert!(Source::next_batch_into(&mut src, 999, &mut buf));
+        assert_eq!(buf.len(), 1);
+        assert!(!Source::next_batch_into(&mut src, 999, &mut buf));
+    }
+
+    #[test]
+    fn feed_disconnect_surfaces_once_then_exhausts() {
+        let (mut tx, rx) = UnixStream::pair().unwrap();
+        tx.write_all(&wire::encode_frame(&batch(1, &[3])).unwrap())
+            .unwrap();
+        drop(tx);
+        let mut src = SocketSource::new(Stream::Unix(rx), 2);
+        let mut buf = Vec::new();
+        assert!(src.try_next(&mut buf).unwrap());
+        assert!(matches!(
+            src.try_next(&mut buf),
+            Err(ClusterError::Disconnected(_))
+        ));
+        assert!(!src.try_next(&mut buf).unwrap());
+    }
+
+    #[test]
+    fn non_batch_frame_on_the_feed_is_a_protocol_error() {
+        let (mut tx, rx) = UnixStream::pair().unwrap();
+        tx.write_all(&wire::encode_frame(&Message::Finish).unwrap())
+            .unwrap();
+        let mut src = SocketSource::new(Stream::Unix(rx), 1);
+        let mut buf = Vec::new();
+        assert!(matches!(
+            src.try_next(&mut buf),
+            Err(ClusterError::Protocol(_))
+        ));
+    }
+}

@@ -1,0 +1,240 @@
+//! Distributed-engine equivalence properties: a master plus N worker
+//! *processes* — batches shuffled over Unix sockets, sketches harvested
+//! at every barrier, keyed state migrating between workers on the wire —
+//! must reproduce the single-process streaming engine **bitwise**, at
+//! every worker count, under both decider families (plan-after-commit
+//! and plan-before-judge), and straight through a mid-run worker crash
+//! and wire-level restore.
+//!
+//! Workers are spawned from the real CLI binary
+//! (`CARGO_BIN_EXE_dynrepart`) — the test harness binary has no `worker`
+//! subcommand — so these tests exercise the full process boundary:
+//! spawn, handshake, shuffle, harvest, migration, snapshot, restore.
+
+use dynrepart::ddps::cluster::store_digest;
+use dynrepart::ddps::{ClusterStats, EngineConfig, StreamingEngine};
+use dynrepart::dr::DeciderPolicy;
+use dynrepart::scenario::{
+    ClusterRunOptions, Scenario, ScenarioConfig, ScenarioReport, ScriptedSource,
+};
+use std::path::{Path, PathBuf};
+
+fn conf_dir() -> &'static Path {
+    Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/../scenarios"))
+}
+
+/// The shipped cluster conf, shrunk for test speed (same shape).
+fn trimmed() -> ScenarioConfig {
+    let mut cfg = ScenarioConfig::from_file(&conf_dir().join("cluster_hotspot_flip.conf"))
+        .expect("shipped cluster conf must parse");
+    cfg.batch_size = cfg.batch_size.min(8_000);
+    cfg.n_keys = cfg.n_keys.min(5_000);
+    cfg
+}
+
+fn worker_bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_dynrepart"))
+}
+
+fn run_cluster(mut cfg: ScenarioConfig, workers: usize) -> (ScenarioReport, ClusterStats) {
+    cfg.cluster_workers = Some(workers);
+    let opts = ClusterRunOptions {
+        worker_bin: Some(worker_bin()),
+        ..Default::default()
+    };
+    run_cluster_opts(cfg, &opts)
+}
+
+fn run_cluster_opts(cfg: ScenarioConfig, opts: &ClusterRunOptions) -> (ScenarioReport, ClusterStats) {
+    Scenario::new(cfg)
+        .expect("cluster conf must validate")
+        .run_cluster_with(opts)
+        .expect("cluster run must complete")
+}
+
+/// The single-process oracle: the identical scenario with the cluster
+/// knob cleared, run through [`StreamingEngine`] in this process.
+fn run_oracle(mut cfg: ScenarioConfig) -> ScenarioReport {
+    cfg.cluster_workers = None;
+    Scenario::new(cfg).unwrap().run().unwrap()
+}
+
+/// Every deterministic column — virtual-time floats compared by bit
+/// pattern, plus the rendered table the CLI would emit.
+#[track_caller]
+fn assert_reports_bitwise(cluster: &ScenarioReport, oracle: &ScenarioReport) {
+    assert_eq!(cluster.rows.len(), oracle.rows.len());
+    for (x, y) in cluster.rows.iter().zip(&oracle.rows) {
+        assert_eq!(x.interval, y.interval);
+        assert_eq!(x.epoch, y.epoch, "interval {}", x.interval);
+        assert_eq!(x.repartitioned, y.repartitioned, "interval {}", x.interval);
+        assert_eq!(x.adopted, y.adopted, "interval {}", x.interval);
+        assert_eq!(x.deferred, y.deferred, "interval {}", x.interval);
+        for (what, u, v) in [
+            ("migrated", x.migrated_fraction, y.migrated_fraction),
+            ("imbalance", x.imbalance, y.imbalance),
+            ("elapsed", x.elapsed, y.elapsed),
+            ("throughput", x.throughput, y.throughput),
+            ("cum_migrated", x.cum_migrated, y.cum_migrated),
+        ] {
+            assert_eq!(
+                u.to_bits(),
+                v.to_bits(),
+                "interval {}: {what} diverged ({u} vs {v})",
+                x.interval
+            );
+        }
+        assert_eq!(x.backlog.len(), y.backlog.len());
+        for (p, (u, v)) in x.backlog.iter().zip(&y.backlog).enumerate() {
+            assert_eq!(u.to_bits(), v.to_bits(), "interval {} backlog p{p}", x.interval);
+        }
+    }
+    assert_eq!(cluster.final_epoch, oracle.final_epoch);
+    assert_eq!(cluster.total_vtime.to_bits(), oracle.total_vtime.to_bits());
+    assert_eq!(
+        cluster.total_state_weight.to_bits(),
+        oracle.total_state_weight.to_bits()
+    );
+    assert_eq!(cluster.table().to_tsv(), oracle.table().to_tsv());
+}
+
+/// The tentpole property: at worker counts 1, 2 and 4 the distributed
+/// run reproduces the single-process rows bitwise, and the migration
+/// plans and final state are worker-count-invariant (same digests).
+#[test]
+fn cluster_matches_single_process_at_1_2_4_workers() {
+    let cfg = trimmed();
+    let oracle = run_oracle(cfg.clone());
+    assert!(
+        oracle.rows.last().unwrap().adopted >= 1,
+        "forced DR must repartition or the equivalence is vacuous"
+    );
+    let mut digests: Vec<(u64, u64)> = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let (rep, stats) = run_cluster(cfg.clone(), workers);
+        assert_reports_bitwise(&rep, &oracle);
+        assert_eq!(rep.recoveries_verified, 0, "no crash was injected");
+        assert!(stats.shuffle_bytes > 0, "batches must cross the wire");
+        assert!(
+            stats.migration_bytes > 0,
+            "adopted swaps must move state over the wire"
+        );
+        assert!(stats.snapshot_bytes > 0, "every barrier ships a snapshot");
+        assert_eq!(stats.worker_restores, 0);
+        digests.push((stats.plan_digest, stats.state_digest));
+    }
+    assert!(digests[0].0 != 0, "an adopting run must produce a plan digest");
+    assert!(
+        digests.windows(2).all(|w| w[0] == w[1]),
+        "plan/state digests must be worker-count-invariant: {digests:?}"
+    );
+}
+
+/// The final wire-reported state is byte-for-byte the oracle's: driving
+/// the in-process engine over the same scripted batches and digesting
+/// its stores (slab order, f64 bits) reproduces the cluster's
+/// `state_digest`.
+#[test]
+fn final_state_digest_matches_the_in_process_stores() {
+    let cfg = trimmed();
+    let (_, stats) = run_cluster(cfg.clone(), 2);
+
+    let mut ecfg = EngineConfig::from_env();
+    ecfg.n_partitions = cfg.n_partitions;
+    ecfg.n_slots = cfg.n_slots;
+    if let Some(t) = cfg.threads {
+        ecfg.num_threads = t;
+    }
+    // the shipped conf pins the decider explicitly, so cfg.dr is exactly
+    // what the cluster master ran with
+    let mut engine = StreamingEngine::new(ecfg, cfg.dr, cfg.choice, cfg.seed);
+    let mut src = ScriptedSource::new(&cfg);
+    let reports = engine.run_stream(&mut src, cfg.batch_size, cfg.intervals);
+    assert_eq!(reports.len(), cfg.intervals);
+    assert_eq!(
+        stats.state_digest,
+        store_digest(engine.stores()),
+        "the cluster's final state must be bitwise the oracle's stores"
+    );
+}
+
+/// The plan-before-judge path: a migration-pricing decider (CostModel)
+/// makes the master gather movers over the wire *before* judging, and
+/// the predicted migration fed to the decider must still match the
+/// oracle's store walk bitwise — verdicts, tallies and rows included.
+#[test]
+fn cost_model_decider_is_bitwise_identical_over_the_wire() {
+    let mut cfg = trimmed();
+    cfg.dr.decider.policy = DeciderPolicy::CostModel;
+    cfg.decider_explicit = true;
+    let oracle = run_oracle(cfg.clone());
+    let (rep, _) = run_cluster(cfg, 2);
+    assert_reports_bitwise(&rep, &oracle);
+}
+
+/// Crash-restore over the wire: worker 1 of 2 exits right after
+/// receiving the batch of interval 4; the master detects the dropped
+/// connection at harvest, respawns the worker, replays the last barrier
+/// snapshot plus the retained batch — and the run's rows remain
+/// bitwise-identical to both the uninterrupted cluster run and the
+/// single-process oracle.
+#[test]
+fn mid_run_worker_crash_restores_bitwise() {
+    let cfg = trimmed();
+    assert!(cfg.intervals >= 6, "the crash must land mid-run");
+    let oracle = run_oracle(cfg.clone());
+    let (clean, clean_stats) = run_cluster(cfg.clone(), 2);
+    let mut crashed_cfg = cfg;
+    crashed_cfg.cluster_workers = Some(2);
+    let (crashed, stats) = run_cluster_opts(
+        crashed_cfg,
+        &ClusterRunOptions {
+            worker_bin: Some(worker_bin()),
+            fail_at: Some((1, 4)),
+            ..Default::default()
+        },
+    );
+    assert_eq!(stats.worker_restores, 1, "exactly one worker must be revived");
+    assert_eq!(crashed.recoveries_verified, 1);
+    assert_reports_bitwise(&crashed, &oracle);
+    assert_reports_bitwise(&crashed, &clean);
+    assert_eq!(stats.plan_digest, clean_stats.plan_digest);
+    assert_eq!(stats.state_digest, clean_stats.state_digest);
+    assert!(
+        stats.snapshot_bytes > clean_stats.snapshot_bytes,
+        "the restore must replay a snapshot over the wire"
+    );
+}
+
+/// The CLI end of the tentpole: `dynrepart master <conf>` on the
+/// shipped cluster conf prints exactly the table the in-process cluster
+/// run renders (same environment, same binary for the workers).
+#[test]
+fn cli_master_prints_the_in_process_table() {
+    let conf = conf_dir().join("cluster_hotspot_flip.conf");
+    let scenario = Scenario::from_file(&conf).unwrap();
+    let opts = ClusterRunOptions {
+        worker_bin: Some(worker_bin()),
+        ..Default::default()
+    };
+    let (report, stats) = scenario.run_cluster_with(&opts).unwrap();
+
+    let out = std::process::Command::new(worker_bin())
+        .arg("master")
+        .arg(&conf)
+        .env_remove("DYNREPART_OUT")
+        .output()
+        .expect("the CLI master must spawn");
+    assert!(
+        out.status.success(),
+        "dynrepart master failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains(&report.table().render()),
+        "CLI table must match the in-process render; got:\n{stdout}"
+    );
+    assert!(stdout.contains("shuffle "), "wire accounting must be printed");
+    assert_eq!(stats.worker_restores, 0);
+}

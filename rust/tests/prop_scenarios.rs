@@ -7,7 +7,7 @@
 
 use dynrepart::dr::DrConfig;
 use dynrepart::prop::forall;
-use dynrepart::scenario::{EventKind, Scenario, ScenarioConfig, ScenarioReport};
+use dynrepart::scenario::{ClusterRunOptions, EventKind, Scenario, ScenarioConfig, ScenarioReport};
 use std::path::Path;
 
 fn conf_dir() -> &'static Path {
@@ -247,9 +247,22 @@ fn every_shipped_conf_parses_and_runs() {
         seen += 1;
         let name = path.file_name().unwrap().to_str().unwrap().to_string();
         let cfg = trimmed(&name, 3);
-        let report = run_with_threads(cfg, 1);
+        let report = if cfg.cluster_workers.is_some() {
+            // cluster confs spawn worker processes; the test harness
+            // binary has no `worker` subcommand, so point the master at
+            // the real CLI binary (tests/prop_cluster.rs covers the
+            // bitwise equivalence — here the conf just has to complete)
+            let opts = ClusterRunOptions {
+                worker_bin: Some(env!("CARGO_BIN_EXE_dynrepart").into()),
+                ..Default::default()
+            };
+            let (report, _) = Scenario::new(cfg).unwrap().run_cluster_with(&opts).unwrap();
+            report
+        } else {
+            run_with_threads(cfg, 1)
+        };
         assert!(!report.rows.is_empty(), "{name} produced no rows");
         assert!(report.table().n_rows() > 0);
     }
-    assert!(seen >= 9, "expected at least 9 shipped scenario configs, found {seen}");
+    assert!(seen >= 10, "expected at least 10 shipped scenario configs, found {seen}");
 }
